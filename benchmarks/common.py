@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing.
+
+BENCH_SCALE env: 'smoke' (default — minutes, subset of methods/rounds) or
+'full' (the EXPERIMENTS.md numbers — all methods, the paper's 10 rounds).
+Each table module exposes ``run(scale) -> list[Row]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def bench_scale() -> str:
+    return os.environ.get("BENCH_SCALE", "smoke")
+
+
+def methods_for(scale: str) -> List[str]:
+    if scale == "full":
+        return ["default", "human", "local", "bayesian", "random", "nsga2", "haqa"]
+    return ["default", "random", "haqa"]
+
+
+def rounds_for(scale: str) -> int:
+    return 10 if scale == "full" else 4
+
+
+def timed(fn, *args, repeat: int = 3, **kwargs):
+    fn(*args, **kwargs)                       # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6

@@ -1,0 +1,42 @@
+"""Paper Fig 4: convergence curves (best objective vs round) per HPO method
+on the kernel-tuning task — HAQA should converge faster and stabler."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, bench_scale, methods_for, rounds_for
+from repro.core import AgentConfig, HAQAgent, KernelEvaluator, get_hardware, make_policy
+from repro.core.search_space import deploy_space
+
+HW = get_hardware("tpu-v5e")
+SHAPE = {"m": 2048, "k": 2048, "n": 2048}
+
+
+def run(scale: str = None) -> List[Row]:
+    scale = scale or bench_scale()
+    rows: List[Row] = []
+    space = deploy_space("matmul")
+    n_rounds = max(rounds_for(scale), 8)
+    for method in methods_for(scale):
+        agent = HAQAgent(space, KernelEvaluator("matmul", SHAPE, HW),
+                         make_policy(method, seed=0),
+                         AgentConfig(max_rounds=n_rounds),
+                         context={"kind": "deploy"})
+        hist = agent.run()
+        best, curve = float("inf"), []
+        for t in hist.trials:
+            lat = t.metrics.get("latency_us", float("inf"))
+            best = min(best, lat)
+            curve.append(best)
+        halfway = curve[len(curve) // 2]
+        rows.append(Row(
+            name=f"fig4/matmul2048/{method}",
+            us_per_call=curve[-1],
+            derived=("curve_us=" + "|".join(f"{c:.1f}" for c in curve)
+                     + f";halfway_us={halfway:.1f}")))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,94 @@
+"""§Roofline aggregator: reads artifacts/dryrun/*.json into the
+EXPERIMENTS.md table (all 40 cells incl. noted skips)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row
+from repro.analysis.roofline import improvement_note
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
+
+
+def load_records(out_dir: str = "artifacts/dryrun", mesh: str = "16x16",
+                 scheme: str = "bf16", tag: str = "") -> Dict:
+    recs = {}
+    for f in glob.glob(os.path.join(out_dir, f"*_{mesh}_{scheme}*.json")):
+        r = json.load(open(f))
+        if r.get("tag", "") != tag:
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def run(scale: str = None) -> List[Row]:
+    recs = load_records()
+    rows: List[Row] = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if not shape_applicable(cfg, shape):
+                rows.append(Row(f"roofline/{arch}/{shape.name}", 0.0,
+                                "SKIP (full attention at 500k; DESIGN.md)"))
+                continue
+            r = recs.get((arch, shape.name))
+            if r is None:
+                rows.append(Row(f"roofline/{arch}/{shape.name}", 0.0,
+                                "MISSING artifact"))
+                continue
+            roof = r["roofline"]
+            rows.append(Row(
+                name=f"roofline/{arch}/{shape.name}",
+                us_per_call=roof["step_time_s"] * 1e6,
+                derived=(f"compute={roof['compute_s']*1e3:.1f}ms;"
+                         f"memory={roof['memory_s']*1e3:.1f}ms;"
+                         f"collective={roof['collective_s']*1e3:.1f}ms;"
+                         f"bound={roof['bottleneck']};"
+                         f"useful={roof['useful_ratio']:.2f};"
+                         f"mfu={roof['mfu']:.3f};"
+                         f"hbm_gb={r['memory']['temp_gb']:.1f}")))
+    return rows
+
+
+def markdown_table(out_dir: str = "artifacts/dryrun") -> str:
+    """Full §Roofline markdown for EXPERIMENTS.md."""
+    recs = load_records(out_dir)
+    recs_mp = load_records(out_dir, mesh="2x16x16")
+    lines = [
+        "| arch | shape | entry | compute | memory | collective | bound | "
+        "MODEL_FLOPS | useful | MFU | temp/dev | multi-pod |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if not shape_applicable(cfg, shape):
+                lines.append(f"| {arch} | {shape.name} | — | — | — | — | "
+                             f"skip | — | — | — | — | — |")
+                continue
+            r = recs.get((arch, shape.name))
+            if r is None:
+                lines.append(f"| {arch} | {shape.name} | MISSING |" + " — |" * 10)
+                continue
+            roof = r["roofline"]
+            mp = recs_mp.get((arch, shape.name))
+            mp_ok = "pass" if mp and not mp.get("skipped") else "—"
+            lines.append(
+                f"| {arch} | {shape.name} | {r['entry']} "
+                f"| {roof['compute_s']*1e3:.1f} ms "
+                f"| {roof['memory_s']*1e3:.1f} ms "
+                f"| {roof['collective_s']*1e3:.1f} ms "
+                f"| **{roof['bottleneck']}** "
+                f"| {roof['model_flops']:.2e} "
+                f"| {roof['useful_ratio']:.2f} "
+                f"| {roof['mfu']:.3f} "
+                f"| {r['memory']['temp_gb']:.1f} GB "
+                f"| {mp_ok} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,59 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale smoke|full] [--only table3]
+
+Tables map 1:1 onto the paper's artifacts (see DESIGN.md §8); 'roofline'
+aggregates the multi-pod dry-run evidence.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig4_convergence, fig5_tokenspeed, roofline_report, table1_resnet_qat,
+    table2_llm_qlora, table3_kernels, table4_adaptive, table5_memory,
+)
+
+TABLES = {
+    "table1": table1_resnet_qat,
+    "table2": table2_llm_qlora,
+    "table3": table3_kernels,
+    "table4": table4_adaptive,
+    "table5": table5_memory,
+    "fig4": fig4_convergence,
+    "fig5": fig5_tokenspeed,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default=None, choices=[None, "smoke", "full"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(TABLES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = TABLES[name].run(args.scale)
+            for r in rows:
+                print(r.csv())
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, str(e)))
+            print(f"{name}/ERROR,0,{e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} table(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Table 2/6: QLoRA fine-tuning accuracy across HPO methods.
+
+8-task synthetic suite (4 instruction transforms x 2 context lengths) stands
+in for BoolQ/RTE/...; objective = mean accuracy ("AVG" column).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, bench_scale, methods_for, rounds_for
+from repro.core import AgentConfig, FinetuneEvaluator, HAQAgent, make_policy
+from repro.core.search_space import llama_finetune_space
+from repro.quant import QuantScheme
+from repro.train.loops import Scale, TINY_SCALE, train_qlora
+
+
+def run(scale: str = None) -> List[Row]:
+    scale = scale or bench_scale()
+    sc = Scale() if scale == "full" else TINY_SCALE
+    schemes = ([QuantScheme.NF4, QuantScheme.INT8] if scale == "full"
+               else [QuantScheme.NF4])
+    space = llama_finetune_space()
+    rows: List[Row] = []
+    for scheme in schemes:
+        label = {"nf4": "INT4", "int8": "INT8"}[scheme.value]
+        for method in methods_for(scale):
+            t0 = time.time()
+
+            def train_fn(config, _s=scheme):
+                return train_qlora(config, scheme=_s, scale=sc)
+
+            ev = FinetuneEvaluator(train_fn)
+            agent = HAQAgent(space, ev, make_policy(method, seed=0),
+                             AgentConfig(max_rounds=rounds_for(scale)),
+                             context={"kind": "finetune",
+                                      "weight_bits": scheme.weight_bits})
+            hist = agent.run()
+            best = hist.best()
+            avg = best.metrics.get("avg", float("nan")) if best else float("nan")
+            per_task = ";".join(
+                f"{k}={v:.3f}" for k, v in sorted(best.metrics.items())
+                if k != "avg") if best else ""
+            rows.append(Row(
+                name=f"table2/bench-lm_{label}/{method}",
+                us_per_call=(time.time() - t0) * 1e6 / max(len(hist), 1),
+                derived=f"avg_acc={avg:.4f};{per_task}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,106 @@
+"""Paper Table 3: kernel-level latency, default vs HAQA-tuned.
+
+Latency source = the analytical TPU-v5e model (no TPU attached; constants in
+core/hardware.py).  Shapes follow the paper's kernels scaled to the TPU
+setting; speedup = default-config latency / HAQA-tuned latency.  A CPU
+wall-clock sanity column (jitted XLA reference op) accompanies each row.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, bench_scale, rounds_for, timed
+from repro.core import AgentConfig, HAQAgent, KernelEvaluator, SimulatedExpertPolicy
+from repro.core.search_space import deploy_space
+from repro.core import costmodel, get_hardware
+
+HW = get_hardware("tpu-v5e")
+
+# (kernel, label, shape) — batch dims mirror the paper's [x,1/64/128,x] rows
+CASES = [
+    ("softmax", "[4096,1]", {"rows": 1 * 32, "cols": 4096}),
+    ("softmax", "[4096,64]", {"rows": 64 * 32, "cols": 4096}),
+    ("softmax", "[4096,128]", {"rows": 128 * 32, "cols": 4096}),
+    ("swiglu", "[11008,1]", {"rows": 1, "cols": 11008}),
+    ("swiglu", "[11008,64]", {"rows": 64, "cols": 11008}),
+    ("swiglu", "[11008,128]", {"rows": 128, "cols": 11008}),
+    ("rmsnorm", "[4096,1]", {"rows": 1, "cols": 4096}),
+    ("rmsnorm", "[4096,64]", {"rows": 64, "cols": 4096}),
+    ("rmsnorm", "[4096,128]", {"rows": 128, "cols": 4096}),
+    ("rope", "[128,64]", {"tokens": 64, "heads": 32, "dim": 128}),
+    ("rope", "[128,128]", {"tokens": 128, "heads": 32, "dim": 128}),
+    ("matmul", "[2048,1,2048]", {"m": 1, "k": 2048, "n": 2048}),
+    ("matmul", "[2048,64,2048]", {"m": 64, "k": 2048, "n": 2048}),
+    ("matmul", "[2048,128,2048]", {"m": 128, "k": 2048, "n": 2048}),
+    ("matmul", "[4096,4096,4096]", {"m": 4096, "k": 4096, "n": 4096}),
+    ("attention", "[8x32,2048,128]", {"bh": 8 * 32, "s": 2048, "t": 2048, "d": 128}),
+]
+
+
+def _cpu_sanity_us(kernel: str, shape) -> float:
+    """Wall-clock of the jitted XLA reference op on the host (sanity only)."""
+    key = jax.random.PRNGKey(0)
+    try:
+        if kernel == "softmax":
+            x = jax.random.normal(key, (shape["rows"], shape["cols"]))
+            _, us = timed(jax.jit(lambda v: jax.nn.softmax(v, -1)), x)
+        elif kernel == "rmsnorm":
+            x = jax.random.normal(key, (shape["rows"], shape["cols"]))
+            from repro.kernels.rmsnorm.ref import rmsnorm_ref
+            w = jnp.ones((shape["cols"],))
+            _, us = timed(jax.jit(rmsnorm_ref), x, w)
+        elif kernel == "swiglu":
+            a = jax.random.normal(key, (shape["rows"], shape["cols"]))
+            from repro.kernels.swiglu.ref import swiglu_ref
+            _, us = timed(jax.jit(swiglu_ref), a, a)
+        elif kernel == "rope":
+            from repro.kernels.rope.ref import rope_ref
+            x = jax.random.normal(key, (1, shape["tokens"], shape["heads"],
+                                        shape["dim"]), jnp.float32)
+            pos = jnp.arange(shape["tokens"])[None]
+            _, us = timed(jax.jit(rope_ref), x, pos)
+        elif kernel == "matmul":
+            x = jax.random.normal(key, (shape["m"], shape["k"]), jnp.float32)
+            w = jax.random.normal(key, (shape["k"], shape["n"]), jnp.float32)
+            _, us = timed(jax.jit(jnp.matmul), x, w)
+        else:
+            return float("nan")
+        return us
+    except Exception:
+        return float("nan")
+
+
+def run(scale: str = None) -> List[Row]:
+    scale = scale or bench_scale()
+    cases = CASES if scale == "full" else CASES[::3]
+    rows: List[Row] = []
+    for kernel, label, shape in cases:
+        space = deploy_space(kernel)
+        default_cfg = space.defaults()
+        default_lat = costmodel.kernel_latency(kernel, shape, HW, default_cfg)
+        ev = KernelEvaluator(kernel, shape, HW)
+        agent = HAQAgent(space, ev, SimulatedExpertPolicy(),
+                         AgentConfig(max_rounds=rounds_for(scale)),
+                         context={"kind": "deploy"})
+        hist = agent.run()
+        best = hist.best()
+        tuned_us = best.metrics["latency_us"]
+        speedup = default_lat.total * 1e6 / tuned_us
+        cpu_us = _cpu_sanity_us(kernel, shape) if scale == "full" else float("nan")
+        rows.append(Row(
+            name=f"table3/{kernel}/{label}",
+            us_per_call=tuned_us,
+            derived=(f"default_us={default_lat.total*1e6:.3f};"
+                     f"speedup={speedup:.2f}x;bound={best.metrics.get('feasible')};"
+                     f"cfg={best.config};cpu_sanity_us={cpu_us:.1f}")))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

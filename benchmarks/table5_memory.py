@@ -1,0 +1,37 @@
+"""Paper Table 5: HAQA-selected quantization under memory constraints
+(LLaMA2-13B at 4/12/20/28 GB — the exact feasibility matrix)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.configs.paper_models import LLAMA2_13B
+from repro.core import costmodel, get_hardware, memory_planner
+
+PAPER_MATRIX = {
+    4: {"fp16": False, "int8": False, "int4": False},
+    12: {"fp16": False, "int8": False, "int4": True},
+    20: {"fp16": False, "int8": True, "int4": True},
+    28: {"fp16": True, "int8": True, "int4": True},
+}
+
+
+def run(scale: str = None) -> List[Row]:
+    hw = get_hardware("nvidia-a6000")
+    rows: List[Row] = []
+    matrix = memory_planner.feasibility_table(LLAMA2_13B, [4, 12, 20, 28], hw)
+    for limit, feas in matrix.items():
+        match = feas == PAPER_MATRIX[limit]
+        chosen = memory_planner.select(LLAMA2_13B, limit, hw)
+        marks = " ".join(f"{s}={'Y' if ok else 'x'}" for s, ok in feas.items())
+        rows.append(Row(
+            name=f"table5/llama2-13b/{limit}GB",
+            us_per_call=0.0,
+            derived=(f"{marks};choice={chosen.scheme if chosen else 'none'};"
+                     f"matches_paper={match}")))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

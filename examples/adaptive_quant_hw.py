@@ -1,0 +1,27 @@
+"""Hardware-adaptive quantization across four platforms (paper §4.4 + App F):
+same model, four devices, four (sometimes counter-intuitive) decisions —
+each with the agent's rationale.
+
+    PYTHONPATH=src python examples/adaptive_quant_hw.py
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.paper_models import LLAMA2_13B
+from repro.core import adaptive, costmodel, get_hardware
+
+OPENLLAMA_3B = ModelConfig(
+    name="openllama-3b", family="dense", num_layers=26, d_model=3200,
+    num_heads=32, num_kv_heads=32, head_dim=100, d_ff=8640,
+    vocab_size=32_000, tie_embeddings=False)
+
+for model, limit in [(OPENLLAMA_3B, 10), (LLAMA2_13B, 20)]:
+    print(f"### {model.name} (memory limit {limit} GB)")
+    for hw_name in ["snapdragon-8gen2", "nvidia-a6000", "tpu-v5e", "tpu-v4"]:
+        hw = get_hardware(hw_name)
+        d = adaptive.choose_quantization(model, hw, memory_limit_gb=limit)
+        flag = "  <-- counter-intuitive" if d.counterintuitive else ""
+        print(f"\n[{hw_name}] -> {d.scheme.upper()}{flag}")
+        print("  " + d.thought)
+        print("  predictions:",
+              {e.scheme: f"{e.throughput_tps:.2f} tok/s" if e.fits else "no fit"
+               for e in d.ranking})
+    print()

@@ -1,0 +1,68 @@
+"""HAQA vs every baseline on kernel deployment tuning (paper Fig 4 workflow),
+with full ReAct traces and the rendered Appendix-E-style prompts.
+
+    PYTHONPATH=src python examples/agent_kernel_tuning.py [--kernel matmul]
+"""
+import argparse
+import json
+
+from repro.core import (
+    AgentConfig, HAQAgent, KernelEvaluator, deploy_space, get_hardware,
+    make_policy, prompts,
+)
+
+SHAPES = {
+    "matmul": {"m": 2048, "k": 2048, "n": 2048},
+    "softmax": {"rows": 8192, "cols": 4096},
+    "rmsnorm": {"rows": 8192, "cols": 4096},
+    "swiglu": {"rows": 4096, "cols": 11008},
+    "rope": {"tokens": 8192, "heads": 32, "dim": 128},
+    "attention": {"bh": 256, "s": 2048, "t": 2048, "d": 128},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", default="matmul", choices=list(SHAPES))
+    ap.add_argument("--rounds", type=int, default=10)
+    args = ap.parse_args()
+
+    hw = get_hardware("tpu-v5e")
+    space = deploy_space(args.kernel)
+    shape = SHAPES[args.kernel]
+
+    # the static prompt a real-LLM deployment would send (paper Appendix E)
+    static = prompts.static_prompt(
+        task=f"deployment of the [{args.kernel}] Pallas kernel",
+        model_desc=f"a TPU-v5e kernel with shape {shape}",
+        quant_desc="bf16", hw=hw, space=space)
+    print("=== static prompt (excerpt) ===")
+    print(static[:600], "...\n")
+
+    results = {}
+    for method in ["default", "human", "local", "bayesian", "random",
+                   "nsga2", "haqa"]:
+        agent = HAQAgent(space, KernelEvaluator(args.kernel, shape, hw),
+                         make_policy(method, seed=0),
+                         AgentConfig(max_rounds=args.rounds),
+                         context={"kind": "deploy"})
+        hist = agent.run()
+        best = hist.best()
+        results[method] = best.metrics["latency_us"]
+        if method == "haqa":
+            print("=== HAQA ReAct trace ===")
+            for step in agent.react_trace:
+                print(f"[round {step['round']}]")
+                print("  Thought:", step["thought"])
+                print("  Action :", step["action"])
+                print("  Observ.:", step["observation"][:120])
+            print("\nsuggestions:", agent.suggestions(), "\n")
+
+    print(f"=== {args.kernel} {shape}: best latency per method ===")
+    for method, us in sorted(results.items(), key=lambda kv: kv[1]):
+        print(f"  {method:10s} {us:10.2f} us "
+              f"({results['default'] / us:5.2f}x vs default)")
+
+
+if __name__ == "__main__":
+    main()

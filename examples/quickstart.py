@@ -1,0 +1,53 @@
+"""Quickstart: the full HAQA workflow in one minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. HAQA picks a quantization bit-width for your hardware (paper §3.4/§4.4),
+2. the agent tunes a kernel's deployment config (paper Table 3),
+3. the model is served with the chosen quantization (paper Fig 5).
+"""
+import jax
+import numpy as np
+
+from repro.configs.paper_models import POCKET
+from repro.core import (
+    AgentConfig, HAQAgent, KernelEvaluator, SimulatedExpertPolicy,
+    adaptive, deploy_space, get_hardware,
+)
+from repro.models import transformer as tfm
+from repro.serve import ServeEngine
+
+# -- 1. adaptive bit-width selection ----------------------------------------
+hw = get_hardware("snapdragon-8gen2")      # the paper's OnePlus 11
+decision = adaptive.choose_quantization(POCKET, hw, memory_limit_gb=10)
+print("=== adaptive quantization (paper §4.4) ===")
+print(f"choice: {decision.scheme} (counterintuitive: {decision.counterintuitive})")
+print("rationale:", decision.thought, "\n")
+
+# -- 2. agent-driven kernel tuning ------------------------------------------
+tpu = get_hardware("tpu-v5e")
+space = deploy_space("matmul")
+evaluator = KernelEvaluator("matmul", {"m": 2048, "k": 2048, "n": 2048}, tpu)
+agent = HAQAgent(space, evaluator, SimulatedExpertPolicy(),
+                 AgentConfig(max_rounds=8), context={"kind": "deploy"})
+history = agent.run()
+default_us = history.trials[0].metrics["latency_us"]
+best = history.best()
+print("=== kernel tuning (paper Table 3) ===")
+print(f"default: {default_us:.1f} us -> HAQA: {best.metrics['latency_us']:.1f} us "
+      f"({default_us / best.metrics['latency_us']:.2f}x)")
+print("best config:", best.config)
+print("ReAct trace (first 2 rounds):")
+for step in agent.react_trace[:2]:
+    print("  Thought:", step["thought"][:100])
+    print("  Action :", step["action"][:100])
+print()
+
+# -- 3. quantized serving -----------------------------------------------------
+scheme = {"fp16": "bf16"}.get(decision.scheme, decision.scheme)
+params = tfm.init_params(jax.random.PRNGKey(0), POCKET)
+engine = ServeEngine(POCKET, params, scheme=scheme, max_len=64)
+prompts = np.random.default_rng(0).integers(0, POCKET.vocab_size, (2, 12)).astype(np.int32)
+out = engine.generate(prompts, max_new_tokens=8)
+print("=== quantized serving ===")
+print(f"served 2 prompts with {scheme}: {out.tolist()}")

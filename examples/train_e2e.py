@@ -1,0 +1,44 @@
+"""End-to-end driver: train the ~100M-parameter model for a few hundred
+steps with checkpoint/restart (kill it mid-run and re-run: it resumes).
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+
+Use --tiny for a fast sanity run.
+"""
+import argparse
+
+from repro.configs.paper_models import POCKET, TINY_100M
+from repro.launch.train import make_lm_loader
+from repro.train import TrainConfig, Trainer
+from repro.utils import tree_num_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="artifacts/e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = POCKET if args.tiny else TINY_100M
+    if args.tiny:
+        args.seq = 64
+    tc = TrainConfig(learning_rate=3e-4, total_steps=args.steps,
+                     num_microbatches=1, adam_state_dtype="int8",
+                     ckpt_dir=args.ckpt_dir, ckpt_every=50, remat=True)
+    trainer = Trainer(cfg, tc)
+    trainer.init_state()
+    print(f"model: {cfg.name} ({tree_num_params(trainer.params)/1e6:.1f}M params)")
+    if trainer.maybe_restore():
+        print(f"resumed from checkpoint at step {trainer.step}")
+    loader = make_lm_loader(cfg, args.batch, args.seq)
+    loader.restore(type(loader.state)(step=trainer.step))
+    losses = trainer.run(loader, args.steps - trainer.step, log_every=20)
+    if losses:
+        print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

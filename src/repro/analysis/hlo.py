@@ -1,0 +1,252 @@
+"""HLO text parser and cost walker.
+
+``cost_analysis()`` on the CPU backend counts ``while`` (scan) bodies once,
+so roofline terms would be off by the layer count.  This module parses
+``compiled.as_text()`` (the SPMD-partitioned, per-device module), extracts
+
+  * dot FLOPs (from output shapes x contracted dims),
+  * collective operand bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute),
+  * while-loop trip counts (``backend_config={"known_trip_count":...}``),
+
+and walks the call graph (entry -> fusions/calls/whiles/conditionals)
+multiplying by trip counts.  All numbers are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[^=(]*?)\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of 'f32[8,128]{1,0}' or tuple '(f32[2], s32[])'."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    # scalar like 'f32[]' — the regex above requires [..]; catch bare scalars
+    if total == 0.0:
+        m = re.match(r"\s*([a-z0-9]+)\[\]", type_str)
+        if m and m.group(1) in _DTYPE_BYTES:
+            total = _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 1
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str                           # operand list + attributes
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    op_types: Dict[str, str]            # op name -> result type string
+
+
+_HEADER_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    """Brace-depth state machine: handles multi-line computation signatures
+    (common in SPMD-partitioned modules) and nested attribute braces."""
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    header: Optional[str] = None        # computation name awaiting its '{'
+    for line in text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            if header is None:
+                m = _HEADER_START.match(stripped)
+                if m and "=" not in stripped.split("(")[0]:
+                    header = m.group(1)
+                    if stripped.endswith("{"):
+                        current = Computation(header, [], {})
+                        header = None
+                continue
+            # consuming a multi-line signature
+            if stripped.endswith("{"):
+                current = Computation(header, [], {})
+                header = None
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(stripped)
+        if m:
+            name, type_str, kind, rest = m.groups()
+            operands = _OPERAND_RE.findall(rest.split(")")[0])
+            op = Op(name, type_str, kind, rest, operands)
+            current.ops.append(op)
+            current.op_types[name] = type_str
+    return comps
+
+
+def entry_name(text: str) -> Optional[str]:
+    for line in text.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_RE.match(s)
+            if m:
+                return m.group(1)
+    return None
+
+
+@dataclasses.dataclass
+class CostSummary:
+    dot_flops: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    collective_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVE_KINDS})
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def scaled(self, k: float) -> "CostSummary":
+        return CostSummary(
+            dot_flops=self.dot_flops * k,
+            collective_bytes={n: v * k for n, v in self.collective_bytes.items()},
+            collective_count={n: int(v * k) for n, v in self.collective_count.items()},
+        )
+
+    def add(self, other: "CostSummary") -> None:
+        self.dot_flops += other.dot_flops
+        for n in COLLECTIVE_KINDS:
+            self.collective_bytes[n] += other.collective_bytes[n]
+            self.collective_count[n] += other.collective_count[n]
+
+    def as_dict(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_count": dict(self.collective_count),
+            "total_collective_bytes": self.total_collective_bytes,
+        }
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 x out_elems x contracted-dim product."""
+    out_elems = shape_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if not m or not op.operands:
+        return 2.0 * out_elems                 # degenerate
+    lhs_type = comp.op_types.get(op.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    contracted = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            contracted *= dims[int(idx)]
+    return 2.0 * out_elems * contracted
+
+
+def _operand_bytes(op: Op, comp: Computation) -> float:
+    total = 0.0
+    for name in op.operands:
+        t = comp.op_types.get(name)
+        if t:
+            total += shape_bytes(t)
+    if total == 0.0:
+        total = shape_bytes(op.type_str)       # fall back to result size
+    return total
+
+
+def walk_costs(comps: Dict[str, Computation], root: str,
+               _memo: Optional[Dict[str, CostSummary]] = None) -> CostSummary:
+    """Accumulate costs over the call graph, scaling while bodies by trip
+    count.  Per-device numbers (the module is already SPMD-partitioned)."""
+    memo = _memo if _memo is not None else {}
+    if root in memo:
+        return memo[root]
+    comp = comps.get(root)
+    summary = CostSummary()
+    if comp is None:
+        return summary
+    memo[root] = summary                        # cycle guard
+    for op in comp.ops:
+        if op.kind in ("dot", "dot-general"):
+            summary.dot_flops += _dot_flops(op, comp)
+        elif op.kind in COLLECTIVE_KINDS:
+            summary.collective_bytes[op.kind] += _operand_bytes(op, comp)
+            summary.collective_count[op.kind] += 1
+        elif op.kind == "while":
+            trips = 1
+            tm = _TRIP_RE.search(op.rest)
+            if tm:
+                trips = int(tm.group(1))
+            bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+            if bm:
+                summary.add(walk_costs(comps, bm.group(1), memo).scaled(trips))
+        elif op.kind == "conditional":
+            bm = _COND_BRANCHES_RE.search(op.rest)
+            if bm:
+                branches = _OPERAND_RE.findall(bm.group(1))
+                if branches:
+                    costs = [walk_costs(comps, b, memo) for b in branches]
+                    best = max(costs, key=lambda c: c.dot_flops +
+                               c.total_collective_bytes)
+                    summary.add(best)
+        elif op.kind in ("fusion", "call", "custom-call", "map", "reduce",
+                         "reduce-window", "scatter", "sort", "select-and-scatter"):
+            cm = _CALLED_RE.search(op.rest)
+            if cm:
+                summary.add(walk_costs(comps, cm.group(1), memo))
+    return summary
+
+
+def analyze_hlo_text(text: str) -> Dict:
+    comps = parse_module(text)
+    entry = entry_name(text)
+    if entry is None:
+        # fall back: computation with most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else ""
+    summary = walk_costs(comps, entry)
+    return {"entry": entry, "n_computations": len(comps), **summary.as_dict()}

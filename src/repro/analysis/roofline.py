@@ -1,0 +1,121 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e constants).
+
+    compute    = FLOPs_per_device / peak
+    memory     = HBM bytes_per_device / 819 GB/s
+    collective = per-link bytes / 50 GB/s ICI  (pod axis at 25 GB/s DCN)
+
+FLOPs source: the HLO walker (``analysis.hlo``) — ``cost_analysis()``
+undercounts scan bodies; both numbers are recorded so the correction is
+visible.  MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per the
+assignment; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_BF16 = 197e12          # per chip
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9               # per link
+DCN_BW = 25e9
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_device: float
+    useful_ratio: float
+    step_time_s: float
+    mfu: float
+    details: Dict
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D per the assignment (N = active params; D = tokens processed).
+
+    decode shapes process one token per sequence (2·N·D, no backward);
+    prefill processes the prompt without a backward pass (2·N·D)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch                   # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def compute_roofline(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
+                     hlo_summary: Dict, cost_analysis: Dict,
+                     memory_stats: Dict, peak: float = PEAK_BF16,
+                     multi_pod: bool = False) -> Roofline:
+    hlo_flops = float(hlo_summary.get("dot_flops", 0.0))
+    compute_s = hlo_flops / peak
+
+    # HBM traffic proxy: per-device bytes accessed from cost_analysis, plus
+    # argument re-reads are already inside it.  cost_analysis undercounts
+    # scans the same way it undercounts flops, so scale by the same factor
+    # when the HLO walker found more dot flops.
+    ca_flops = float(cost_analysis.get("flops", 0.0) or 0.0)
+    ca_bytes = float(cost_analysis.get("bytes accessed", 0.0) or 0.0)
+    scale = (hlo_flops / ca_flops) if ca_flops > 0 and hlo_flops > ca_flops else 1.0
+    hbm_bytes = ca_bytes * scale
+    memory_s = hbm_bytes / HBM_BW
+
+    coll = hlo_summary.get("collective_bytes", {})
+    total_coll = float(sum(coll.values()))
+    # per-link time: ICI for intra-pod collectives; the pod axis crosses DCN.
+    link_bw = DCN_BW if multi_pod else ICI_BW
+    collective_s = total_coll / link_bw if total_coll else 0.0
+
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(compute_s, memory_s, collective_s)
+
+    mf = model_flops(cfg, shape)
+    hlo_total = hlo_flops * n_chips
+    useful = mf / hlo_total if hlo_total > 0 else 0.0
+    mfu = (mf / n_chips / max(step_time, 1e-12)) / peak if step_time > 0 else 0.0
+
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf, hlo_flops_device=hlo_flops,
+        useful_ratio=useful, step_time_s=step_time, mfu=mfu,
+        details={
+            "hbm_bytes_device": hbm_bytes,
+            "cost_analysis_flops": ca_flops,
+            "cost_analysis_bytes": ca_bytes,
+            "scan_correction": scale,
+            "collective_bytes": coll,
+            "collective_count": hlo_summary.get("collective_count", {}),
+            "n_chips": n_chips,
+            "peak_flops": peak,
+            "per_device_hbm_gb": float(memory_stats.get("total_gb", 0.0)),
+        })
+
+
+def improvement_note(r: Roofline) -> str:
+    if r.bottleneck == "compute":
+        if r.useful_ratio < 0.6:
+            return ("compute-bound with low useful ratio — reduce remat "
+                    "recompute or redundant dequantize/gather work")
+        return "compute-bound near useful peak — only quantized MXU paths help"
+    if r.bottleneck == "memory":
+        return ("HBM-bound — quantize weights (int8/int4), fuse elementwise "
+                "chains, enlarge tiles for reuse")
+    return ("collective-bound — reshard to cut all-gathers (e.g. TP-only for "
+            "small models), overlap collectives with compute, or compress "
+            "gradients to bf16")

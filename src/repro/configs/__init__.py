@@ -1,0 +1,12 @@
+from repro.configs.base import (
+    ModelConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES, shape_applicable,
+)
+from repro.configs.registry import (
+    ASSIGNED_ARCHS, all_cells, get_config, get_shape, get_smoke_config, list_archs,
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+    "shape_applicable", "ASSIGNED_ARCHS", "all_cells", "get_config",
+    "get_shape", "get_smoke_config", "list_archs",
+]

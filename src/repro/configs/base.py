@@ -1,0 +1,172 @@
+"""Model / shape configuration dataclasses and the arch registry."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+    every: int = 1                 # MoE replaces the MLP every Nth layer
+    first_dense: int = 0           # leading dense layers (deepseek-moe style)
+    d_ff_dense: int = 0            # dense-MLP width for non-MoE layers
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0               # 0 -> ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                 # 0 for attention-free
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn_pattern: str = "global"   # global | local_global | hybrid_1_7 | none
+    window_size: int = 4096
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    rope_mode: str = "standard"    # standard | mrope
+    use_rope: bool = True          # Jamba: no positional encoding
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    frontend: str = "none"         # none | audio_frames | vision_patches
+    sub_quadratic: bool = False    # eligible for long_500k
+    kv_cache_dtype: str = "bf16"   # bf16 | int8 (quantized KV, §Perf)
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (for roofline MODEL_FLOPS)."""
+        d, L, v = self.d_model, self.num_layers, self.vocab_size
+        total = v * d                                     # embeddings
+        if not self.tie_embeddings:
+            total += v * d
+        per_layer_attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        for i in range(L):
+            kind = self.layer_kind(i)
+            if kind == "attn":
+                total += per_layer_attn
+            elif kind == "mamba":
+                s = self.ssm or SSMConfig()
+                d_in = s.expand * d
+                dt_rank = s.dt_rank or -(-d // 16)
+                total += 2 * d * d_in            # in_proj (x and z)
+                total += d_in * s.d_conv         # conv
+                total += d_in * (dt_rank + 2 * s.d_state)   # x_proj
+                total += dt_rank * d_in + d_in   # dt_proj
+                total += d_in * s.d_state + d_in  # A_log, D
+                total += d_in * d                # out_proj
+            total += self.mlp_params(i)
+            total += 2 * d                       # norms
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed top-k + shared)."""
+        d, L, v = self.d_model, self.num_layers, self.vocab_size
+        total = v * d
+        if not self.tie_embeddings:
+            total += v * d
+        per_layer_attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        for i in range(L):
+            kind = self.layer_kind(i)
+            if kind == "attn":
+                total += per_layer_attn
+            elif kind == "mamba":
+                s = self.ssm or SSMConfig()
+                d_in = s.expand * d
+                dt_rank = s.dt_rank or -(-d // 16)
+                total += 2 * d * d_in + d_in * s.d_conv
+                total += d_in * (dt_rank + 2 * s.d_state)
+                total += dt_rank * d_in + d_in + d_in * s.d_state + d_in
+                total += d_in * d
+            total += self.mlp_params(i, active_only=True)
+            total += 2 * d
+        return total
+
+    def mlp_params(self, layer_idx: int, active_only: bool = False) -> int:
+        d = self.d_model
+        if self.is_moe_layer(layer_idx):
+            m = self.moe
+            e = (m.top_k if active_only else m.num_experts) + m.num_shared
+            return e * 3 * d * m.d_ff_expert + d * m.num_experts  # + router
+        d_ff = self.d_ff
+        if self.moe and self.moe.d_ff_dense and layer_idx < self.moe.first_dense:
+            d_ff = self.moe.d_ff_dense
+        if d_ff == 0:
+            return 0
+        return 3 * d * d_ff                                       # swiglu
+
+    def layer_kind(self, i: int) -> str:
+        """'attn' | 'mamba' for layer i."""
+        if self.attn_pattern == "none":
+            return "mamba"
+        if self.attn_pattern == "hybrid_1_7":
+            # 8-layer blocks, one attention layer per block (position 7)
+            return "attn" if (i % 8) == 7 else "mamba"
+        return "attn"
+
+    def is_local_layer(self, i: int) -> bool:
+        return self.attn_pattern == "local_global" and (i % 2 == 0)
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        if i < self.moe.first_dense:
+            return False
+        return ((i - self.moe.first_dense) % self.moe.every) == (self.moe.every - 1) \
+            if self.moe.every > 1 else True
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> bool:
+    """The assignment's skip rule: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k":
+        return model.sub_quadratic
+    return True

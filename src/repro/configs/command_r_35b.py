@@ -1,0 +1,34 @@
+"""command-r-35b — dense GQA decoder, no biases, tied embeddings.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "command-r-35b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    num_layers=40,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22528,
+    vocab_size=256_000,
+    rope_theta=8_000_000.0,
+    tie_embeddings=True,
+    source="hf:CohereForAI/c4ai-command-r-v01; unverified",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=192,
+    vocab_size=512,
+    rope_theta=8_000_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,36 @@
+"""deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed top-6, first
+layer dense. [arXiv:2401.06066; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+ARCH_ID = "deepseek-moe-16b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,               # MHA
+    head_dim=128,
+    d_ff=1408,                     # expert width (fine-grained)
+    vocab_size=102_400,
+    moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408, num_shared=2,
+                  first_dense=1, d_ff_dense=10944),
+    tie_embeddings=False,
+    source="arXiv:2401.06066; hf",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="moe",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=32,
+    vocab_size=512,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32, num_shared=2,
+                  first_dense=1, d_ff_dense=96),
+    tie_embeddings=False,
+)

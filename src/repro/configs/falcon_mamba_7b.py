@@ -1,0 +1,41 @@
+"""falcon-mamba-7b — pure Mamba-1 architecture, attention-free.
+[arXiv:2410.05355; unverified]
+
+HAQA arch-applicability note (DESIGN.md §Arch-applicability): the paper's
+softmax/RoPE kernel-tuning sub-spaces do not apply (no attention); the agent
+tunes qmatmul/rmsnorm/ssm kernels and quantization bit-widths instead.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+ARCH_ID = "falcon-mamba-7b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="ssm",
+    num_layers=64,
+    d_model=4096,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,                        # mamba block only, no MLP
+    vocab_size=65_024,
+    attn_pattern="none",
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    tie_embeddings=False,
+    sub_quadratic=True,
+    source="arXiv:2410.05355; unverified",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="ssm",
+    num_layers=4,
+    d_model=64,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=512,
+    attn_pattern="none",
+    ssm=SSMConfig(d_state=8, d_conv=4, expand=2),
+    tie_embeddings=False,
+    sub_quadratic=True,
+)

@@ -1,0 +1,32 @@
+"""granite-3-2b — dense GQA decoder.
+[hf:ibm-granite/granite-3.0-2b-base; hf]"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "granite-3-2b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    num_layers=40,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=49_155,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-2b-base; hf",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=192,
+    vocab_size=387,               # deliberately non-multiple of 256 (padding path)
+    tie_embeddings=True,
+)

@@ -1,0 +1,32 @@
+"""granite-8b — llama-arch code model, GQA.
+[arXiv:2405.04324; hf]"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "granite-8b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=49_152,
+    tie_embeddings=False,          # llama-style untied head
+    source="arXiv:2405.04324; hf",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=512,
+    tie_embeddings=False,
+)

@@ -1,0 +1,42 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887 / 2408.12570; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+ARCH_ID = "jamba-1.5-large-398b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    attn_pattern="hybrid_1_7",
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=24576, every=2),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    use_rope=False,                   # Jamba uses no positional encoding
+    tie_embeddings=True,
+    sub_quadratic=True,               # 63/72 layers are Mamba -> long_500k runs
+    source="arXiv:2403.19887; hf",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="hybrid",
+    num_layers=8,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=257,
+    attn_pattern="hybrid_1_7",
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128, every=2),
+    ssm=SSMConfig(d_state=8, d_conv=4, expand=2),
+    use_rope=False,
+    tie_embeddings=True,
+    sub_quadratic=True,
+)

@@ -1,0 +1,36 @@
+"""moonshot-v1-16b-a3b (Moonlight-16B-A3B) — deepseek-style fine-grained MoE,
+64 routed top-6 + shared experts. [hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+ARCH_ID = "moonshot-v1-16b-a3b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,               # MHA
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=163_840,
+    moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408, num_shared=2,
+                  first_dense=1, d_ff_dense=11264),
+    tie_embeddings=False,
+    source="hf:moonshotai/Moonlight-16B-A3B; hf",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="moe",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=32,
+    vocab_size=640,
+    moe=MoEConfig(num_experts=8, top_k=3, d_ff_expert=32, num_shared=2,
+                  first_dense=1, d_ff_dense=96),
+    tie_embeddings=False,
+)

@@ -1,0 +1,39 @@
+"""musicgen-large — decoder-only transformer over EnCodec audio tokens.
+[arXiv:2306.05284; hf]  The EnCodec frontend is a stub: input_specs() supplies
+the token ids it would produce (see repro.models.frontends).
+
+Adaptation note: the original uses learned sinusoidal positions; we use RoPE
+as the shared backbone convention (recorded in DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "musicgen-large"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,              # MHA
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,              # EnCodec codebook
+    frontend="audio_frames",
+    tie_embeddings=True,
+    source="arXiv:2306.05284; hf",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="audio",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=128,
+    frontend="audio_frames",
+    tie_embeddings=True,
+)

@@ -1,0 +1,37 @@
+"""The paper's own evaluation models (Tables 1-5): LLaMA family + a ~100M
+example model for the end-to-end driver."""
+from repro.configs.base import ModelConfig
+
+LLAMA2_7B = ModelConfig(
+    name="llama2-7b", family="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=32, head_dim=128, d_ff=11008,
+    vocab_size=32_000, tie_embeddings=False, source="arXiv:2307.09288")
+
+LLAMA2_13B = ModelConfig(
+    name="llama2-13b", family="dense", num_layers=40, d_model=5120,
+    num_heads=40, num_kv_heads=40, head_dim=128, d_ff=13824,
+    vocab_size=32_000, tie_embeddings=False, source="arXiv:2307.09288")
+
+LLAMA3_8B = ModelConfig(
+    name="llama3-8b", family="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=8, head_dim=128, d_ff=14336,
+    vocab_size=128_256, rope_theta=500_000.0, tie_embeddings=False,
+    source="arXiv:2407.21783")
+
+LLAMA32_3B = ModelConfig(
+    name="llama3.2-3b", family="dense", num_layers=28, d_model=3072,
+    num_heads=24, num_kv_heads=8, head_dim=128, d_ff=8192,
+    vocab_size=128_256, rope_theta=500_000.0, tie_embeddings=True,
+    source="hf:meta-llama/Llama-3.2-3B")
+
+# ~100M-parameter llama-style model for the end-to-end training example
+TINY_100M = ModelConfig(
+    name="tiny-100m", family="dense", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+    vocab_size=32_000, tie_embeddings=True, source="examples")
+
+# pocket model for tests/quickstart (sub-second init on CPU)
+POCKET = ModelConfig(
+    name="pocket", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=2, head_dim=32, d_ff=384,
+    vocab_size=512, tie_embeddings=True, source="tests")

@@ -1,0 +1,41 @@
+"""qwen2-vl-72b — VLM backbone: GQA decoder with M-RoPE; the vision encoder
+is a stub (input_specs supplies precomputed patch embeddings).
+[arXiv:2409.12191; hf]"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "qwen2-vl-72b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152_064,
+    rope_mode="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    frontend="vision_patches",
+    tie_embeddings=False,
+    source="arXiv:2409.12191; hf",
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="vlm",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=512,
+    rope_mode="mrope",
+    mrope_sections=(2, 3, 3),
+    rope_theta=1_000_000.0,
+    frontend="vision_patches",
+    tie_embeddings=False,
+)

@@ -1,0 +1,76 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+
+_ARCH_MODULES = [
+    "jamba_1_5_large_398b",
+    "musicgen_large",
+    "gemma2_27b",
+    "command_r_35b",
+    "granite_3_2b",
+    "granite_8b",
+    "deepseek_moe_16b",
+    "moonshot_v1_16b_a3b",
+    "falcon_mamba_7b",
+    "qwen2_vl_72b",
+]
+
+
+def _load():
+    configs: Dict[str, ModelConfig] = {}
+    smokes: Dict[str, ModelConfig] = {}
+    for mod_name in _ARCH_MODULES:
+        mod = importlib.import_module(f"repro.configs.{mod_name}")
+        configs[mod.ARCH_ID] = mod.CONFIG
+        smokes[mod.ARCH_ID] = mod.SMOKE
+    from repro.configs import paper_models as pm
+    for cfg in [pm.LLAMA2_7B, pm.LLAMA2_13B, pm.LLAMA3_8B, pm.LLAMA32_3B,
+                pm.TINY_100M, pm.POCKET]:
+        configs[cfg.name] = cfg
+    return configs, smokes
+
+
+_CONFIGS, _SMOKES = _load()
+ASSIGNED_ARCHS: List[str] = [
+    "jamba-1.5-large-398b", "musicgen-large", "gemma2-27b", "command-r-35b",
+    "granite-3-2b", "granite-8b", "deepseek-moe-16b", "moonshot-v1-16b-a3b",
+    "falcon-mamba-7b", "qwen2-vl-72b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _CONFIGS:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_CONFIGS)}")
+    return _CONFIGS[arch_id]
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _SMOKES:
+        raise KeyError(f"no smoke config for '{arch_id}'")
+    return _SMOKES[arch_id]
+
+
+def get_shape(shape_id: str) -> ShapeConfig:
+    if shape_id not in SHAPES:
+        raise KeyError(f"unknown shape '{shape_id}'; known: {sorted(SHAPES)}")
+    return SHAPES[shape_id]
+
+
+def list_archs() -> List[str]:
+    return sorted(_CONFIGS)
+
+
+def all_cells(include_skips: bool = False):
+    """All (arch, shape) dry-run cells; skipped ones flagged."""
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok = shape_applicable(cfg, shape)
+            if ok or include_skips:
+                cells.append((arch, shape.name, ok))
+    return cells

@@ -1,0 +1,31 @@
+from repro.core.agent import AgentConfig, EvalResult, HAQAgent, JointAgent
+from repro.core.history import History, Trial
+from repro.core.policies import (
+    ALL_BASELINES, BayesianGPPolicy, DefaultPolicy, FormatError,
+    HumanHeuristicPolicy, LLMBackend, LocalSearchPolicy, NSGA2Policy,
+    Policy, Proposal, RandomSearchPolicy, SimulatedExpertPolicy,
+    extract_json_config, make_policy,
+)
+from repro.core.search_space import (
+    Categorical, SearchSpace, UniformFloat, UniformInt,
+    bitwidth_space, deploy_space, llama_finetune_space, resnet_finetune_space,
+)
+from repro.core.hardware import REGISTRY as HARDWARE_REGISTRY, HardwareSpec, Support, get_hardware
+from repro.core import adaptive, costmodel, memory_planner, prompts
+from repro.core.evaluator import (
+    DecodeEvaluator, FaultInjection, FinetuneEvaluator, KernelEvaluator,
+)
+
+__all__ = [
+    "AgentConfig", "EvalResult", "HAQAgent", "JointAgent", "History", "Trial",
+    "ALL_BASELINES", "BayesianGPPolicy", "DefaultPolicy", "FormatError",
+    "HumanHeuristicPolicy", "LLMBackend", "LocalSearchPolicy", "NSGA2Policy",
+    "Policy", "Proposal", "RandomSearchPolicy", "SimulatedExpertPolicy",
+    "extract_json_config", "make_policy",
+    "Categorical", "SearchSpace", "UniformFloat", "UniformInt",
+    "bitwidth_space", "deploy_space", "llama_finetune_space",
+    "resnet_finetune_space",
+    "HARDWARE_REGISTRY", "HardwareSpec", "Support", "get_hardware",
+    "adaptive", "costmodel", "memory_planner", "prompts",
+    "DecodeEvaluator", "FaultInjection", "FinetuneEvaluator", "KernelEvaluator",
+]

@@ -1,0 +1,90 @@
+"""Adaptive quantization strategy selection (paper §3.4/§4.4, Appendix F).
+
+Combines the hardware descriptor (dtype support levels, accelerator notes)
+with the cost model's predicted throughput, and emits the decision *with the
+reasoning trace* — including the counter-intuitive cases: INT8 over INT4 on
+devices whose int4 path is emulated (OnePlus 11 / Adreno 740 in the paper;
+natively reproduced by the TPU's missing int4 MXU path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import costmodel, memory_planner
+from repro.core.hardware import HardwareSpec, Support
+
+
+@dataclasses.dataclass
+class Decision:
+    scheme: str
+    throughput_tps: float
+    footprint_gb: float
+    counterintuitive: bool
+    thought: str
+    ranking: List[memory_planner.PlanEntry]
+
+
+def choose_quantization(cfg: ModelConfig, hw: HardwareSpec,
+                        memory_limit_gb: Optional[float] = None,
+                        batch: int = 1, context: int = 2048,
+                        workload: str = "decode") -> Decision:
+    limit = memory_limit_gb if memory_limit_gb is not None else hw.memory_gb
+    entries = memory_planner.plan(cfg, limit, hw, batch, context)
+    feasible = [e for e in entries if e.fits]
+    if not feasible:
+        return Decision("none", 0.0, 0.0, False,
+                        thought=(f"No quantization type fits the {limit} GB "
+                                 f"limit for {cfg.name}; the smallest footprint "
+                                 f"is {min(e.footprint_gb for e in entries):.1f} GB (int4). "
+                                 "Reject deployment on this device."),
+                        ranking=entries)
+
+    if workload == "prefill":
+        scored = [(e, 1.0 / max(costmodel.prefill_latency(
+            cfg, batch, context, hw, e.scheme).total, 1e-9)) for e in feasible]
+        best, _ = max(scored, key=lambda p: p[1])
+    else:
+        best = max(feasible, key=lambda e: e.throughput_tps)
+
+    naive = min(feasible, key=lambda e: {"int4": 0, "int8": 1, "fp16": 2}[e.scheme])
+    counterintuitive = best.scheme != naive.scheme
+
+    thought = _narrate(cfg, hw, best, naive, counterintuitive, workload)
+    return Decision(best.scheme, best.throughput_tps, best.footprint_gb,
+                    counterintuitive, thought, entries)
+
+
+def _narrate(cfg, hw, best, naive, counterintuitive, workload) -> str:
+    lines = [f"For {cfg.name} on {hw.name} ({workload}):"]
+    int4_sup = hw.supports("int4")
+    int8_sup = hw.supports("int8")
+    if counterintuitive and naive.scheme == "int4":
+        if int4_sup != Support.NATIVE:
+            lines.append(
+                "Although INT4 has the smallest footprint and is generally "
+                "assumed fastest, this device does not natively support INT4 "
+                f"({hw.notes}). INT4 values must be unpacked with extra "
+                "bitwise operations and converted before the matrix unit, so "
+                "INT4 fails to trigger the optimized execution path and falls "
+                "back to general-purpose computation.")
+        lines.append(
+            f"The best choice is {best.scheme.upper()}: predicted "
+            f"{best.throughput_tps:.2f} tok/s vs {naive.throughput_tps:.2f} "
+            f"tok/s for {naive.scheme.upper()}.")
+    else:
+        if best.scheme == "int4":
+            lines.append(
+                "Decode is memory-bandwidth-bound: INT4 halves weight traffic "
+                "relative to INT8, and the unpack cost stays hidden under the "
+                "HBM transfers, so INT4 gives the highest generation speed.")
+        elif best.scheme == "int8" and int8_sup == Support.NATIVE:
+            lines.append(
+                "INT8 is natively accelerated here (matrix unit consumes int8 "
+                "directly at double throughput), giving the best "
+                "speed/accuracy/memory balance.")
+        lines.append(f"Selected {best.scheme.upper()} at predicted "
+                     f"{best.throughput_tps:.2f} tok/s, "
+                     f"{best.footprint_gb:.1f} GB.")
+    return " ".join(lines)

@@ -1,0 +1,182 @@
+"""HAQAgent — the paper's Fig 3 optimization loop.
+
+Per round: render prompt → policy proposes (Thought/Action) → validate the
+configuration against the search space (handling the paper's §3.2 failure
+modes: bad format, constraint violations, irrelevant keys — with bounded
+retries, then clamping) → run the trial (Observation) → update the bounded
+history → repeat until the round budget or the target is reached.
+
+Joint mode tunes a fine-tuning space and a deployment space in the same
+conversation (Fig 1b: "jointly tunes all settings").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.history import History, Trial
+from repro.core.policies import FormatError, Policy, Proposal
+from repro.core.search_space import SearchSpace
+from repro.core import prompts as prompt_lib
+
+
+@dataclasses.dataclass
+class AgentConfig:
+    max_rounds: int = 10                 # the paper's budget
+    max_retries: int = 2                 # format/constraint retry budget
+    history_len: int = 10                # §3.3 bounded history
+    target_objective: Optional[float] = None
+    verbose: bool = False
+
+
+@dataclasses.dataclass
+class EvalResult:
+    metrics: Dict[str, float]
+    objective: float
+    observation: str = ""
+    losses: List[float] = dataclasses.field(default_factory=list)
+    failed: bool = False
+    feedback: Optional[Dict] = None      # structured diagnosis (deploy mode)
+
+
+Evaluator = Callable[[Dict[str, Any]], EvalResult]
+
+
+class HAQAgent:
+    def __init__(self, space: SearchSpace, evaluator: Evaluator,
+                 policy: Policy, config: Optional[AgentConfig] = None,
+                 context: Optional[Dict] = None,
+                 static_prompt_text: str = ""):
+        self.space = space
+        self.evaluator = evaluator
+        self.policy = policy
+        self.config = config or AgentConfig()
+        self.context = dict(context or {})
+        self.history = History(max_len=self.config.history_len)
+        self.static_prompt_text = static_prompt_text
+        self.react_trace: List[Dict[str, str]] = []
+        self.validation_events: List[str] = []
+
+    # -- single round -----------------------------------------------------
+
+    def step(self, round_idx: int) -> Trial:
+        rounds_left = self.config.max_rounds - round_idx
+        ctx = dict(self.context)
+        ctx["rounds_left"] = rounds_left
+        last = self.history.last()
+        if last is not None:
+            ctx["losses"] = last.losses
+            ctx["feedback"] = last.metrics if last.metrics.get("feasible") is not None else ctx.get("feedback")
+
+        proposal = self._propose_validated(ctx)
+        t0 = time.time()
+        try:
+            result = self.evaluator(proposal.config)
+        except Exception as e:  # evaluator crash = failed trial, not agent crash
+            result = EvalResult(metrics={}, objective=float("-inf"),
+                                observation=f"trial crashed: {e}", failed=True)
+        wall = time.time() - t0
+
+        trial = Trial(round=round_idx, config=proposal.config,
+                      metrics=result.metrics, objective=result.objective,
+                      thought=proposal.thought, observation=result.observation,
+                      losses=result.losses, wall_s=wall, failed=result.failed)
+        self.history.append(trial)
+        if result.feedback is not None:
+            self.context["feedback"] = result.feedback
+        self.react_trace.append({
+            "round": str(round_idx),
+            "thought": proposal.thought,
+            "action": str(proposal.config),
+            "observation": result.observation or str(result.metrics),
+        })
+        if self.config.verbose:
+            print(f"[haqa:{self.policy.name}] round {round_idx}: "
+                  f"obj={result.objective:.4f} {proposal.config}")
+        return trial
+
+    def _propose_validated(self, ctx) -> Proposal:
+        """Paper §3.2: retry on format errors / constraint violations /
+        irrelevant keys; clamp as the final fallback."""
+        errors: List[str] = []
+        for attempt in range(self.config.max_retries + 1):
+            try:
+                proposal = self.policy.propose(self.space, self.history, ctx)
+            except FormatError as e:
+                errors.append(f"format error: {e}")
+                self.validation_events.append(errors[-1])
+                ctx = {**ctx, "validation_errors": list(errors)}
+                continue
+            violations = self.space.validate(proposal.config)
+            if not violations:
+                return proposal
+            errors.extend(violations)
+            self.validation_events.append(
+                f"attempt {attempt}: {'; '.join(violations)}")
+            ctx = {**ctx, "validation_errors": list(errors)}
+        # final fallback: clamp into range and strip irrelevant keys
+        clamped = self.space.clamp(proposal.config if 'proposal' in locals()
+                                   else {})
+        self.validation_events.append("clamped out-of-range proposal")
+        return Proposal(clamped, thought=(getattr(proposal, "thought", "")
+                                          + " [clamped to constraints]"))
+
+    # -- full run -----------------------------------------------------------
+
+    def run(self) -> History:
+        self.policy.reset()
+        for r in range(self.config.max_rounds):
+            trial = self.step(r)
+            tgt = self.config.target_objective
+            if tgt is not None and trial.objective >= tgt:
+                break
+        return self.history
+
+    def best_config(self) -> Dict[str, Any]:
+        best = self.history.best()
+        return best.config if best else self.space.defaults()
+
+    def suggestions(self) -> str:
+        """§3.3: optimization suggestions surfaced to the user."""
+        best = self.history.best()
+        if best is None:
+            return "No successful trial yet; consider widening the search space."
+        lines = [f"Best objective {best.objective:.4f} at round {best.round} "
+                 f"with {best.config}."]
+        objs = self.history.objectives()
+        if len(objs) >= 3 and max(objs[-2:]) <= max(objs[:-2]):
+            lines.append("Recent rounds plateaued — consider narrowing ranges "
+                         "around the best configuration or adding rounds.")
+        return " ".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# joint fine-tune + deployment agent (Fig 1b)
+# ---------------------------------------------------------------------------
+
+class JointAgent:
+    """One conversation optimizing both spaces: each round proposes a
+    fine-tune config and a deployment config, mirrored on the paper's
+    Llama2-7b Appendix-E transcript."""
+
+    def __init__(self, ft_space: SearchSpace, ft_eval: Evaluator,
+                 deploy_space: SearchSpace, deploy_eval: Evaluator,
+                 policy_factory: Callable[[], Policy],
+                 config: Optional[AgentConfig] = None,
+                 ft_context: Optional[Dict] = None,
+                 deploy_context: Optional[Dict] = None):
+        cfg = config or AgentConfig()
+        self.ft = HAQAgent(ft_space, ft_eval, policy_factory(), cfg,
+                           {**(ft_context or {}), "kind": "finetune"})
+        self.deploy = HAQAgent(deploy_space, deploy_eval, policy_factory(), cfg,
+                               {**(deploy_context or {}), "kind": "deploy"})
+        self.config = cfg
+
+    def run(self):
+        self.ft.policy.reset()
+        self.deploy.policy.reset()
+        for r in range(self.config.max_rounds):
+            self.ft.step(r)
+            self.deploy.step(r)
+        return self.ft.history, self.deploy.history

@@ -1,0 +1,152 @@
+"""Trial evaluators: the Observation half of the HAQA loop.
+
+``KernelEvaluator``   — kernel deployment configs scored by the analytical
+                        TPU cost model (lower latency = higher objective).
+``DecodeEvaluator``   — end-to-end decode throughput for bit-width selection.
+``FinetuneEvaluator`` — wraps a real (small-scale) training function.
+
+All evaluators support straggler/failure injection (timeout_prob) with
+bounded retries — the fault-tolerance path a 1000-node fleet needs when an
+agent round's trial lands on a bad host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import costmodel
+from repro.core.agent import EvalResult
+from repro.core.hardware import HardwareSpec
+
+
+@dataclasses.dataclass
+class FaultInjection:
+    timeout_prob: float = 0.0       # chance a trial "straggles"/fails
+    max_retries: int = 2
+    seed: int = 1234
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+
+
+def _with_retries(fn, fault: Optional[FaultInjection]):
+    if fault is None or fault.timeout_prob <= 0:
+        return fn(), 0
+    for attempt in range(fault.max_retries + 1):
+        if fault.rng.random() >= fault.timeout_prob:
+            return fn(), attempt
+    raise TimeoutError("trial exceeded straggler deadline after retries")
+
+
+class KernelEvaluator:
+    """Score a kernel config: objective = -log(latency)."""
+
+    def __init__(self, kernel: str, shape: Dict, hw: HardwareSpec,
+                 scheme: str = "bf16", fault: Optional[FaultInjection] = None):
+        self.kernel = kernel
+        self.shape = shape
+        self.hw = hw
+        self.scheme = scheme
+        self.fault = fault
+
+    def __call__(self, config: Dict[str, Any]) -> EvalResult:
+        cfg = dict(config)
+        if isinstance(cfg.get("dimension_semantics"), list):
+            cfg["dimension_semantics"] = tuple(cfg["dimension_semantics"])
+
+        def run():
+            return costmodel.kernel_latency(self.kernel, self.shape, self.hw,
+                                            cfg, self.scheme)
+
+        lat, retries = _with_retries(run, self.fault)
+        if not lat.feasible:
+            return EvalResult(
+                metrics={"latency_us": float("inf"), "feasible": 0.0},
+                objective=float("-inf"),
+                observation=lat.notes or "infeasible configuration",
+                failed=False,
+                feedback={"feasible": False, "bound": lat.bound,
+                          "notes": lat.notes})
+        us = lat.total * 1e6
+        obs = (f"Latency: {us:.3f} us ({lat.bound}-bound; compute "
+               f"{lat.compute*1e6:.2f} us, memory {lat.memory*1e6:.2f} us, "
+               f"overhead {lat.overhead*1e6:.2f} us"
+               + (f", emulation {lat.emulation*1e6:.2f} us" if lat.emulation else "")
+               + (f"). {lat.notes}" if lat.notes else ")."))
+        return EvalResult(
+            metrics={"latency_us": us, "feasible": 1.0,
+                     "retries": float(retries)},
+            objective=-float(np.log(max(us, 1e-6))),
+            observation=obs,
+            feedback={"feasible": True, "bound": lat.bound, "notes": lat.notes})
+
+
+class DecodeEvaluator:
+    """Score a {'quant_scheme': ...} config by decode throughput under a
+    memory limit (bit-width selection)."""
+
+    def __init__(self, cfg: ModelConfig, hw: HardwareSpec, batch: int = 1,
+                 context: int = 2048, memory_limit_gb: Optional[float] = None,
+                 fault: Optional[FaultInjection] = None):
+        self.cfg = cfg
+        self.hw = hw
+        self.batch = batch
+        self.context = context
+        self.limit = memory_limit_gb if memory_limit_gb is not None else hw.memory_gb
+        self.fault = fault
+
+    def __call__(self, config: Dict[str, Any]) -> EvalResult:
+        scheme = config.get("quant_scheme", "fp16")
+        gb = costmodel.model_memory_gb(self.cfg, scheme, self.batch, self.context)
+        if gb > self.limit:
+            return EvalResult(
+                metrics={"footprint_gb": gb, "fits": 0.0},
+                objective=float("-inf"),
+                observation=(f"{scheme} needs {gb:.1f} GB, exceeding the "
+                             f"{self.limit} GB limit — rejected."))
+
+        def run():
+            return costmodel.decode_throughput(self.cfg, self.batch,
+                                               self.context, self.hw, scheme)
+
+        tput, retries = _with_retries(run, self.fault)
+        lat = costmodel.decode_latency(self.cfg, self.batch, self.context,
+                                       self.hw, scheme)
+        return EvalResult(
+            metrics={"throughput_tps": tput, "footprint_gb": gb, "fits": 1.0,
+                     "latency_us": lat.total * 1e6},
+            objective=tput,
+            observation=(f"{scheme}: {tput:.2f} tok/s, {gb:.1f} GB "
+                         f"({lat.bound}-bound). {lat.notes}"))
+
+
+class FinetuneEvaluator:
+    """Wraps a real training run: ``train_fn(config) -> (metrics, losses)``.
+
+    metrics must contain task accuracies; objective = their mean ("AVG" in
+    the paper's Table 2).
+    """
+
+    def __init__(self, train_fn: Callable[[Dict], Any],
+                 fault: Optional[FaultInjection] = None):
+        self.train_fn = train_fn
+        self.fault = fault
+
+    def __call__(self, config: Dict[str, Any]) -> EvalResult:
+        def run():
+            return self.train_fn(config)
+
+        (metrics, losses), retries = _with_retries(run, self.fault)
+        finite = [v for v in metrics.values() if np.isfinite(v)]
+        if not finite or any(not np.isfinite(l) for l in losses):
+            return EvalResult(metrics=metrics, objective=float("-inf"),
+                              observation="training diverged (non-finite loss)",
+                              losses=list(losses), failed=True)
+        avg = float(np.mean(finite))
+        obs = "Evaluation Result: " + ", ".join(
+            f"{k}: {v:.4f}" for k, v in metrics.items())
+        return EvalResult(metrics={**metrics, "avg": avg}, objective=avg,
+                          observation=obs, losses=list(losses))

@@ -1,0 +1,147 @@
+"""Hardware descriptor registry — the knowledge HAQA's adaptive quantization
+reasons over (§3.4/§4.4).
+
+Each spec records per-dtype peak throughput and *support level*: NATIVE means
+the matrix unit consumes the dtype directly; EMULATED means values must be
+converted/unpacked first (the paper's OnePlus INT4 case — and, natively on
+TPU, int4 which has no MXU path).  The cost model charges emulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Optional
+
+
+class Support(str, enum.Enum):
+    NATIVE = "native"
+    EMULATED = "emulated"
+    UNSUPPORTED = "unsupported"
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    vendor: str
+    kind: str                       # tpu | gpu | mobile_soc | cpu
+    memory_gb: float                # device memory (HBM / unified)
+    mem_bw: float                   # bytes/s
+    fast_mem_bytes: int             # VMEM / shared memory per core
+    link_bw: float                  # ICI / NVLink bytes/s per link
+    dcn_bw: float                   # inter-pod bytes/s
+    peak_flops: Dict[str, float]    # dtype -> flop/s (matrix unit)
+    support: Dict[str, Support]     # dtype -> support level
+    vector_ops: float               # scalar/vector unit ops/s (emulation cost)
+    grid_step_overhead_s: float     # per grid-step launch/pipeline bubble
+    notes: str = ""
+    # achievable fraction of peak for the batch-1 decode matvec path, per
+    # deployment scheme.  Calibrated so the model reproduces the paper's
+    # measured orderings (Table 4 mobile: int8 marginally > fp16 > int4;
+    # Fig 5 A6000: int4 > int8 > fp16).  TPUs sustain high matvec fractions
+    # when weights stream through VMEM.
+    matvec_eff: Optional[Dict[str, float]] = None
+
+    def decode_eff(self, scheme: str) -> float:
+        if not self.matvec_eff:
+            return 0.8
+        return self.matvec_eff.get(scheme, 0.5)
+
+    def peak(self, dtype: str) -> float:
+        if dtype not in self.peak_flops:
+            # emulated dtypes run at the precision they convert to
+            conv = {"int4": "fp16", "int8": "fp16", "fp16": "fp16"}
+            return self.peak_flops.get(conv.get(dtype, "fp16"), 1e12)
+        return self.peak_flops[dtype]
+
+    def supports(self, dtype: str) -> Support:
+        return self.support.get(dtype, Support.UNSUPPORTED)
+
+    def prompt_text(self) -> str:
+        """Render as the paper's static-prompt hardware block."""
+        sup = {d: s.value for d, s in self.support.items()}
+        peaks = {d: f"{v/1e12:.0f} TFLOPS" for d, v in self.peak_flops.items()}
+        return (f'{{"Device": "{self.name}", "Vendor": "{self.vendor}", '
+                f'"Kind": "{self.kind}", "Memory": "{self.memory_gb} GB", '
+                f'"Memory Bandwidth": "{self.mem_bw/1e9:.0f} GB/s", '
+                f'"Peak throughput": {peaks}, "Dtype support": {sup}, '
+                f'"Notes": "{self.notes}"}}')
+
+
+# --- registry ---------------------------------------------------------------
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e", vendor="Google", kind="tpu",
+    memory_gb=16.0, mem_bw=819e9, fast_mem_bytes=16 * 2**20,
+    link_bw=50e9, dcn_bw=25e9,
+    peak_flops={"bf16": 197e12, "fp16": 197e12, "fp32": 49e12, "int8": 394e12},
+    support={"fp32": Support.NATIVE, "bf16": Support.NATIVE,
+             "fp16": Support.NATIVE, "int8": Support.NATIVE,
+             "int4": Support.EMULATED},
+    vector_ops=6e12, grid_step_overhead_s=1.0e-6,
+    matvec_eff={"fp16": 0.8, "bf16": 0.8, "int8": 0.8, "w8a8": 0.8, "int4": 0.7},
+    notes="MXU 128x128 systolic; int8 native at 2x bf16; no int4 MXU path "
+          "(weights must be unpacked to int8/bf16 on the VPU first)")
+
+TPU_V4 = HardwareSpec(
+    name="tpu-v4", vendor="Google", kind="tpu",
+    memory_gb=32.0, mem_bw=1228e9, fast_mem_bytes=16 * 2**20,
+    link_bw=50e9, dcn_bw=25e9,
+    peak_flops={"bf16": 275e12, "fp16": 275e12, "fp32": 69e12},
+    support={"fp32": Support.NATIVE, "bf16": Support.NATIVE,
+             "fp16": Support.NATIVE, "int8": Support.EMULATED,
+             "int4": Support.EMULATED},
+    vector_ops=8e12, grid_step_overhead_s=1.0e-6,
+    matvec_eff={"fp16": 0.8, "bf16": 0.8, "int8": 0.7, "w8a8": 0.55, "int4": 0.6},
+    notes="no int8 MXU: int8/int4 weights convert to bf16 before the MXU "
+          "(weight-only quantization still saves HBM bandwidth)")
+
+NVIDIA_A6000 = HardwareSpec(
+    name="nvidia-a6000", vendor="NVIDIA", kind="gpu",
+    memory_gb=48.0, mem_bw=768e9, fast_mem_bytes=100 * 1024,
+    link_bw=56e9, dcn_bw=12.5e9,
+    peak_flops={"fp16": 309e12, "bf16": 309e12, "fp32": 38.7e12,
+                "int8": 618e12, "int4": 1236e12},
+    support={"fp32": Support.NATIVE, "fp16": Support.NATIVE,
+             "bf16": Support.NATIVE, "int8": Support.NATIVE,
+             "int4": Support.NATIVE},
+    vector_ops=19e12, grid_step_overhead_s=3.0e-6,
+    matvec_eff={"fp16": 0.45, "bf16": 0.45, "int8": 0.5, "w8a8": 0.5, "int4": 0.5},
+    notes="Ampere, 10752 CUDA cores, 336 3rd-gen Tensor Cores; IMMA int4/int8 "
+          "with fp32 accumulate")
+
+SNAPDRAGON_8GEN2 = HardwareSpec(
+    name="snapdragon-8gen2", vendor="Qualcomm", kind="mobile_soc",
+    memory_gb=16.0, mem_bw=67e9, fast_mem_bytes=64 * 1024,
+    link_bw=0.0, dcn_bw=0.0,
+    peak_flops={"fp16": 8e12, "int8": 10e12},
+    support={"fp32": Support.NATIVE, "fp16": Support.NATIVE,
+             "int8": Support.NATIVE, "int4": Support.EMULATED},
+    vector_ops=1e12, grid_step_overhead_s=10.0e-6,
+    # llama.cpp-on-Adreno achievable rates (calibrated to the paper's
+    # Table 4: ~5 tok/s for a 3B fp16 model; int8 marginally faster; int4
+    # falls off the optimized path entirely)
+    matvec_eff={"fp16": 0.0040, "int8": 0.0043, "w8a8": 0.0043, "int4": 0.0028},
+    notes="Adreno 740 (768 ALUs) + Hexagon accelerators; int4 not natively "
+          "supported — emulated via int8/fp16 with bitwise unpack (paper §4.4)")
+
+CPU_HOST = HardwareSpec(
+    name="cpu-host", vendor="generic", kind="cpu",
+    memory_gb=32.0, mem_bw=40e9, fast_mem_bytes=1 * 2**20,
+    link_bw=0.0, dcn_bw=0.0,
+    peak_flops={"fp32": 0.2e12, "bf16": 0.2e12, "fp16": 0.2e12,
+                "int8": 0.4e12},
+    support={"fp32": Support.NATIVE, "bf16": Support.EMULATED,
+             "fp16": Support.EMULATED, "int8": Support.NATIVE,
+             "int4": Support.EMULATED},
+    vector_ops=0.1e12, grid_step_overhead_s=0.2e-6,
+    notes="validation host (interpret mode)")
+
+REGISTRY: Dict[str, HardwareSpec] = {
+    h.name: h for h in [TPU_V5E, TPU_V4, NVIDIA_A6000, SNAPDRAGON_8GEN2, CPU_HOST]
+}
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown hardware '{name}'; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

@@ -1,0 +1,80 @@
+"""Trial history with the paper's §3.3 user-friendliness mechanics:
+bounded length (context-overflow protection), task logs, best-trial tracking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Trial:
+    round: int
+    config: Dict[str, Any]
+    metrics: Dict[str, float]            # e.g. {"accuracy": .., "latency_us": ..}
+    objective: float                     # scalar the optimizer maximizes
+    thought: str = ""                    # agent's ReAct reasoning
+    observation: str = ""                # evaluator feedback text
+    losses: List[float] = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+    failed: bool = False
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class History:
+    """Bounded trial log.
+
+    Truncation keeps the most recent ``max_len`` trials plus the best trial —
+    mirroring the paper's dynamic history-length control that prevents the
+    agent's context from overflowing mid-run.
+    """
+
+    def __init__(self, max_len: int = 10):
+        self.max_len = max_len
+        self._trials: List[Trial] = []
+        self.task_log: List[str] = []
+
+    def append(self, trial: Trial) -> None:
+        self._trials.append(trial)
+        self.task_log.append(
+            f"[round {trial.round}] config={json.dumps(trial.config, default=str)} "
+            f"-> objective={trial.objective:.4f} metrics={json.dumps(trial.metrics)}")
+
+    @property
+    def trials(self) -> List[Trial]:
+        return list(self._trials)
+
+    def window(self) -> List[Trial]:
+        """The bounded view the agent actually sees."""
+        if len(self._trials) <= self.max_len:
+            return list(self._trials)
+        recent = self._trials[-self.max_len:]
+        best = self.best()
+        if best is not None and best not in recent:
+            return [best] + recent[1:]
+        return recent
+
+    def best(self) -> Optional[Trial]:
+        ok = [t for t in self._trials if not t.failed]
+        return max(ok, key=lambda t: t.objective) if ok else None
+
+    def last(self) -> Optional[Trial]:
+        return self._trials[-1] if self._trials else None
+
+    def __len__(self) -> int:
+        return len(self._trials)
+
+    def objectives(self) -> List[float]:
+        return [t.objective for t in self._trials if not t.failed]
+
+    def to_json(self) -> List[Dict]:
+        return [t.to_json() for t in self._trials]
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"trials": self.to_json(), "task_log": self.task_log}, f,
+                      indent=2, default=str)

@@ -1,0 +1,56 @@
+"""Memory-constrained quantization feasibility (paper Table 5).
+
+Given a model, a hardware platform and a memory limit, compute the deployment
+footprint of each quantization type and reject configurations that do not
+fit — the check HAQA runs before proposing a bit-width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import costmodel
+from repro.core.hardware import HardwareSpec
+
+SCHEMES = ("fp16", "int8", "int4")
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    scheme: str
+    footprint_gb: float
+    fits: bool
+    throughput_tps: float
+    rationale: str
+
+
+def plan(cfg: ModelConfig, memory_limit_gb: float, hw: HardwareSpec,
+         batch: int = 1, context: int = 2048) -> List[PlanEntry]:
+    entries = []
+    for scheme in SCHEMES:
+        gb = costmodel.model_memory_gb(cfg, scheme, batch, context)
+        fits = gb <= memory_limit_gb
+        tput = costmodel.decode_throughput(cfg, batch, context, hw, scheme) if fits else 0.0
+        if fits:
+            rationale = (f"{scheme} needs {gb:.1f} GB <= {memory_limit_gb} GB; "
+                         f"predicted {tput:.2f} tok/s on {hw.name}")
+        else:
+            rationale = (f"rejected: {scheme} needs {gb:.1f} GB "
+                         f"> {memory_limit_gb} GB limit")
+        entries.append(PlanEntry(scheme, gb, fits, tput, rationale))
+    return entries
+
+
+def feasibility_table(cfg: ModelConfig, limits_gb, hw: HardwareSpec
+                      ) -> Dict[float, Dict[str, bool]]:
+    """The paper's Table 5 matrix: limit -> {scheme: fits}."""
+    return {lim: {e.scheme: e.fits for e in plan(cfg, lim, hw)}
+            for lim in limits_gb}
+
+
+def select(cfg: ModelConfig, memory_limit_gb: float, hw: HardwareSpec,
+           batch: int = 1, context: int = 2048) -> Optional[PlanEntry]:
+    """Best feasible scheme by predicted throughput (HAQA's choice)."""
+    feasible = [e for e in plan(cfg, memory_limit_gb, hw, batch, context) if e.fits]
+    return max(feasible, key=lambda e: e.throughput_tps) if feasible else None

@@ -1,0 +1,106 @@
+"""HAQA prompt assembly — faithful to the paper's Fig 2 / Appendix E design.
+
+Static prompt  = hardware block + objective block(s) + search space + ReAct
+                 preamble (unchanged across rounds).
+Dynamic prompt = rounds-remaining note + current config + evaluation feedback
+                 + bounded history (updated every round).
+
+These strings are what an ``LLMBackend`` would send to a real model; the
+``SimulatedExpertPolicy`` consumes the same structured content.  Rendering
+them even in simulated mode keeps the workflow (and its logs) faithful.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.core.hardware import HardwareSpec
+from repro.core.history import History
+from repro.core.search_space import SearchSpace
+
+REACT_PREAMBLE = (
+    "Before making a decision, always generate a reasoning step (Thought) to "
+    "analyze the current context, considering previous results and constraints. "
+    "Then, take an appropriate action (Action) based on your reasoning. After "
+    "the action, observe (Observation) the outcomes we feedback to you and "
+    "adjust your approach accordingly. Identify missing information, potential "
+    "errors, and formulate a strategy before taking any action. Each trial's "
+    "configuration and results should be taken into account for a "
+    "**comprehensive** analysis of the optimization process. Please review the "
+    "history and consider your next steps before proceeding.\n"
+    "**Make sure that all hyperparameters remain within the defined range**. "
+    "For the **first round**, it is recommended to use the **default "
+    "parameters**. Please provide the configuration in **JSON format**.")
+
+SYSTEM_PROMPT = (
+    "You are an expert assistant specialized in optimizing hyperparameters for "
+    "both fine-tuning and deployment of a certain neural network. Your goal is "
+    "to help improve the accuracy and inference speed of the network by "
+    "providing optimized hyperparameter configurations and code.")
+
+
+def static_prompt(task: str, model_desc: str, quant_desc: str,
+                  hw: Optional[HardwareSpec], space: SearchSpace,
+                  memory_limit_gb: Optional[float] = None,
+                  core_code_refs: Optional[List[str]] = None,
+                  extra: str = "") -> str:
+    parts = [f"You are helping optimize the hyperparameters of {task} for "
+             f"{model_desc}. Using [{quant_desc}] quantization."]
+    if hw is not None:
+        parts.append(
+            "I plan to deploy the model on the following hardware. Here's more "
+            f"details about the hardware:\n{hw.prompt_text()}")
+        if memory_limit_gb is not None:
+            parts.append(
+                f"The memory limit is {memory_limit_gb} GB. Please choose an "
+                "appropriate quantization bit width that satisfies the memory "
+                "limitations and achieves better performance on such hardware.")
+    parts.append("Here is the hyperparameter search space:\n" + space.prompt_text())
+    if core_code_refs:
+        parts.append("Core code for the task: " + ", ".join(core_code_refs))
+    if extra:
+        parts.append(extra)
+    parts.append(REACT_PREAMBLE)
+    example = json.dumps({n: "x" for n in space.names})
+    parts.append(f"For example: {example}")
+    return "\n\n".join(parts)
+
+
+def dynamic_prompt(history: History, rounds_left: int,
+                   losses: Optional[List[float]] = None) -> str:
+    parts = [f"Note that there are {rounds_left} rounds left, please try to "
+             "make effective attempts. Finishing tasks with interleaving "
+             "Thought, Action, Observation steps."]
+    last = history.last()
+    if last is not None:
+        parts.append("The current configuration is: "
+                     + json.dumps(last.config, default=str))
+        parts.append("The result based on this configuration: "
+                     + json.dumps(last.metrics))
+        if last.observation:
+            parts.append("Observation: " + last.observation)
+    if losses:
+        shown = [round(x, 4) for x in losses[-16:]]
+        parts.append(f"List of recent training losses (avg per epoch): {shown}")
+    window = history.window()
+    if len(window) > 1:
+        hist_lines = [
+            {"round": t.round, "config": t.config,
+             "objective": round(t.objective, 4)}
+            for t in window[:-1]
+        ]
+        parts.append("History: " + json.dumps(hist_lines, default=str))
+    parts.append("Please check the history and think about your next plan "
+                 "before action. Please optimize and provide a set of "
+                 "optimized configurations.")
+    return "\n".join(parts)
+
+
+def full_prompt(static: str, history: History, rounds_left: int,
+                losses=None) -> List[Dict[str, str]]:
+    """The messages array an OpenAI-style API would receive (Appendix E)."""
+    return [
+        {"role": "system", "content": SYSTEM_PROMPT},
+        {"role": "user", "content": static},
+        {"role": "user", "content": dynamic_prompt(history, rounds_left, losses)},
+    ]

@@ -1,0 +1,259 @@
+"""Typed hyperparameter search spaces (paper Appendix C/D).
+
+A ``SearchSpace`` is an ordered dict of parameter specs.  It can sample,
+validate, clamp, normalize (for the GP baseline) and render itself as the
+paper's prompt text ("Type: UniformFloat, Range: [...], Default: ..., Log
+scale").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformFloat:
+    name: str
+    lo: float
+    hi: float
+    default: float
+    log: bool = False
+    doc: str = ""
+
+    def sample(self, rng: np.random.Generator) -> float:
+        if self.log:
+            return float(np.exp(rng.uniform(math.log(self.lo), math.log(self.hi))))
+        return float(rng.uniform(self.lo, self.hi))
+
+    def clamp(self, v) -> float:
+        return float(min(max(float(v), self.lo), self.hi))
+
+    def valid(self, v) -> bool:
+        try:
+            return self.lo <= float(v) <= self.hi
+        except (TypeError, ValueError):
+            return False
+
+    def normalize(self, v) -> float:
+        if self.log:
+            return (math.log(float(v)) - math.log(self.lo)) / (math.log(self.hi) - math.log(self.lo))
+        return (float(v) - self.lo) / (self.hi - self.lo)
+
+    def denormalize(self, u: float) -> float:
+        u = min(max(u, 0.0), 1.0)
+        if self.log:
+            return float(math.exp(math.log(self.lo) + u * (math.log(self.hi) - math.log(self.lo))))
+        return float(self.lo + u * (self.hi - self.lo))
+
+    def prompt_line(self) -> str:
+        log = ", Log scale" if self.log else ""
+        return (f"'{self.name}': {self.doc} Type: UniformFloat, "
+                f"Range: [{self.lo}, {self.hi}], Default: {self.default}{log}.")
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformInt:
+    name: str
+    lo: int
+    hi: int
+    default: int
+    log: bool = False
+    doc: str = ""
+
+    def sample(self, rng: np.random.Generator) -> int:
+        if self.log:
+            return int(round(np.exp(rng.uniform(math.log(self.lo), math.log(self.hi)))))
+        return int(rng.integers(self.lo, self.hi + 1))
+
+    def clamp(self, v) -> int:
+        return int(min(max(int(round(float(v))), self.lo), self.hi))
+
+    def valid(self, v) -> bool:
+        try:
+            return self.lo <= int(v) <= self.hi and float(v) == int(v)
+        except (TypeError, ValueError):
+            return False
+
+    def normalize(self, v) -> float:
+        if self.log:
+            return (math.log(float(v)) - math.log(self.lo)) / (math.log(self.hi) - math.log(self.lo))
+        return (float(v) - self.lo) / max(self.hi - self.lo, 1)
+
+    def denormalize(self, u: float) -> int:
+        u = min(max(u, 0.0), 1.0)
+        if self.log:
+            return int(round(math.exp(math.log(self.lo) + u * (math.log(self.hi) - math.log(self.lo)))))
+        return int(round(self.lo + u * (self.hi - self.lo)))
+
+    def prompt_line(self) -> str:
+        log = ", Log scale" if self.log else ""
+        return (f"'{self.name}': {self.doc} Type: UniformInteger, "
+                f"Range: [{self.lo}, {self.hi}], Default: {self.default}{log}.")
+
+
+@dataclasses.dataclass(frozen=True)
+class Categorical:
+    name: str
+    choices: Tuple[Any, ...]
+    default: Any
+    doc: str = ""
+
+    def sample(self, rng: np.random.Generator):
+        return self.choices[int(rng.integers(0, len(self.choices)))]
+
+    def clamp(self, v):
+        if v in self.choices:
+            return v
+        # snap numeric values to the nearest choice
+        try:
+            fv = float(v)
+            return min(self.choices, key=lambda c: abs(float(c) - fv))
+        except (TypeError, ValueError):
+            return self.default
+
+    def valid(self, v) -> bool:
+        return v in self.choices or (isinstance(v, list) and tuple(v) in self.choices)
+
+    def normalize(self, v) -> float:
+        try:
+            return self.choices.index(v) / max(len(self.choices) - 1, 1)
+        except ValueError:
+            return 0.0
+
+    def denormalize(self, u: float):
+        idx = int(round(min(max(u, 0.0), 1.0) * (len(self.choices) - 1)))
+        return self.choices[idx]
+
+    def prompt_line(self) -> str:
+        return (f"'{self.name}': {self.doc} Type: Categorical, "
+                f"Choices: {list(self.choices)}, Default: {self.default}.")
+
+
+ParamSpec = Any  # UniformFloat | UniformInt | Categorical
+
+
+class SearchSpace:
+    def __init__(self, specs: Sequence[ParamSpec], name: str = "space"):
+        self.name = name
+        self.specs: Dict[str, ParamSpec] = {s.name: s for s in specs}
+
+    @property
+    def names(self) -> List[str]:
+        return list(self.specs)
+
+    def defaults(self) -> Dict[str, Any]:
+        return {n: s.default for n, s in self.specs.items()}
+
+    def sample(self, rng: np.random.Generator) -> Dict[str, Any]:
+        return {n: s.sample(rng) for n, s in self.specs.items()}
+
+    def validate(self, config: Dict[str, Any]) -> List[str]:
+        """Returns list of violation messages (paper §3.2 issues 2 & 3)."""
+        errs = []
+        for n in config:
+            if n not in self.specs:
+                errs.append(f"unknown parameter '{n}' (irrelevant to the task)")
+        for n, s in self.specs.items():
+            if n not in config:
+                errs.append(f"missing parameter '{n}'")
+            elif not s.valid(config[n]):
+                errs.append(f"'{n}'={config[n]!r} outside range")
+        return errs
+
+    def clamp(self, config: Dict[str, Any]) -> Dict[str, Any]:
+        out = {}
+        for n, s in self.specs.items():
+            out[n] = s.clamp(config[n]) if n in config else s.default
+        return out
+
+    def normalize(self, config: Dict[str, Any]) -> np.ndarray:
+        return np.array([self.specs[n].normalize(config[n]) for n in self.names])
+
+    def denormalize(self, u: np.ndarray) -> Dict[str, Any]:
+        return {n: self.specs[n].denormalize(float(u[i]))
+                for i, n in enumerate(self.names)}
+
+    def prompt_text(self) -> str:
+        return "\n".join(s.prompt_line() for s in self.specs.values())
+
+    def size_estimate(self) -> float:
+        """log10 of the Cartesian-product cardinality (continuous ~ 100 steps)."""
+        total = 0.0
+        for s in self.specs.values():
+            if isinstance(s, Categorical):
+                total += math.log10(len(s.choices))
+            elif isinstance(s, UniformInt):
+                total += math.log10(max(s.hi - s.lo + 1, 1))
+            else:
+                total += 2.0
+        return total
+
+
+# ---------------------------------------------------------------------------
+# the paper's spaces (Appendix C/D + prompt samples)
+# ---------------------------------------------------------------------------
+
+def llama_finetune_space() -> SearchSpace:
+    return SearchSpace([
+        UniformFloat("learning_rate", 1e-5, 1e-3, 4e-4, log=True,
+                     doc="Learning rate for the optimizer."),
+        UniformInt("per_device_train_batch_size", 4, 16, 8,
+                   doc="Batch size for per-device training."),
+        UniformInt("gradient_accumulation_steps", 4, 32, 8,
+                   doc="Number of steps for gradient accumulation."),
+        UniformFloat("weight_decay", 1e-3, 1e-1, 1e-2, log=True,
+                     doc="L2 regularization coefficient."),
+        UniformInt("max_steps", 200, 1000, 400,
+                   doc="Maximum number of steps for training."),
+        UniformFloat("max_grad_norm", 0.1, 1.0, 0.3,
+                     doc="Maximum norm for gradient clipping."),
+        UniformInt("lora_r", 8, 64, 16, doc="Rank parameter for LoRA."),
+        UniformInt("lora_alpha", 4, 32, 8, doc="Alpha parameter for LoRA."),
+        UniformFloat("lora_dropout", 0.0, 0.3, 0.05,
+                     doc="Dropout probability for LoRA."),
+        UniformFloat("warmup_ratio", 0.0, 0.08, 0.03, doc="warmup_ratio."),
+    ], name="llama_qlora_finetune")
+
+
+def resnet_finetune_space() -> SearchSpace:
+    return SearchSpace([
+        UniformFloat("learning_rate", 1e-5, 0.2, 0.01, log=True,
+                     doc="The learning rate for the optimizer."),
+        UniformInt("batch_size", 32, 256, 128, log=True,
+                   doc="The number of samples per batch of input data."),
+        UniformFloat("weight_decay", 1e-6, 0.1, 5e-4, log=True,
+                     doc="The L2 regularization coefficient."),
+        UniformFloat("momentum", 0.5, 0.99, 0.9,
+                     doc="The momentum for the SGD optimizer."),
+        UniformInt("num_epochs", 8, 12, 12,
+                   doc="The number of training epochs."),
+    ], name="resnet_dorefa_qat")
+
+
+def deploy_space(kernel: str) -> SearchSpace:
+    """Deployment space for one kernel (TPU analogue of App D's end-to-end
+    deployment search: tiles/parallelization/unroll/layout)."""
+    from repro.kernels import registry as kreg
+    info = kreg.KERNELS[kernel]
+    specs = []
+    for field, choices in info.space.items():
+        if field == "dimension_semantics":
+            specs.append(Categorical("dimension_semantics", tuple(choices),
+                                     choices[0],
+                                     doc="Mosaic grid-dimension semantics "
+                                         "(pipelining/parallelization)."))
+        else:
+            specs.append(Categorical(field, tuple(choices),
+                                     getattr(info.config_cls(), field),
+                                     doc=f"{kernel} {field} tile."))
+    return SearchSpace(specs, name=f"deploy_{kernel}")
+
+
+def bitwidth_space() -> SearchSpace:
+    return SearchSpace([
+        Categorical("quant_scheme", ("fp16", "int8", "int4"), "int8",
+                    doc="Deployment quantization bit-width."),
+    ], name="bitwidth")

@@ -1,0 +1,12 @@
+from repro.data.loader import LoaderState, StatelessLoader
+from repro.data.tokens import (
+    BigramLM, EVAL_TASKS, EvalTask, alpaca_like, eval_batch,
+    BOS, NO, PAD, SEP, YES,
+)
+from repro.data.vision_data import SyntheticCifar
+
+__all__ = [
+    "LoaderState", "StatelessLoader", "BigramLM", "EVAL_TASKS", "EvalTask",
+    "alpaca_like", "eval_batch", "SyntheticCifar",
+    "BOS", "NO", "PAD", "SEP", "YES",
+]

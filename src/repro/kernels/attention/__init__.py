@@ -1,0 +1,3 @@
+from repro.kernels.attention import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

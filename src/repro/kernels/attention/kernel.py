@@ -1,0 +1,105 @@
+"""Pallas flash attention (causal, windowed, softcapped) for TPU.
+
+Online-softmax over key blocks: grid (BH, S/bq, T/bk) with the key dim
+sequential; running (max, denom, accum) live in VMEM scratch.  Fully-masked
+key blocks are skipped with ``pl.when`` — for causal masks that halves the
+work, and for sliding windows it makes cost O(S·W) instead of O(S²), which is
+exactly why the Gemma-2 local layers are cheap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import AttentionConfig
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, bq, bk, scale, cap, window, causal):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = i * bq
+    k_lo = j * bk
+    needed = True
+    if causal:
+        needed = k_lo <= q_lo + bq - 1          # block not entirely future
+    if window and window > 0:
+        needed = jnp.logical_and(needed, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)         # (bq, d)
+        k = k_ref[0].astype(jnp.float32)         # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if cap and cap > 0:
+            s = cap * jnp.tanh(s / cap)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window and window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_old = m_ref[:, :1]                     # (bq, 1)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.maximum(m_new, -0.5e30)
+        p = jnp.exp(s - m_safe)
+        corr = jnp.exp(jnp.maximum(m_old, -0.5e30) - m_safe)  # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, cfg: AttentionConfig, *, causal: bool = True,
+                    window: int = 0, cap: float = 0.0,
+                    interpret: bool = False):
+    """q: (BH, S, D); k/v: (BH, T, D)."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    bq = min(cfg.block_q, s)
+    bk = min(cfg.block_k, t)
+    assert s % bq == 0 and t % bk == 0
+    grid = (bh, s // bq, t // bk)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=d ** -0.5,
+                          cap=cap, window=window, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

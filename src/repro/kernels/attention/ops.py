@@ -1,0 +1,37 @@
+"""jit'd wrapper for flash attention: GQA expansion + (B,S,H,D) layout."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import AttentionConfig
+from repro.kernels.attention import kernel as K
+
+_DEFAULT_CFG = AttentionConfig()
+
+
+def set_default_config(cfg: AttentionConfig) -> None:
+    global _DEFAULT_CFG
+    cfg.validate()
+    _DEFAULT_CFG = cfg
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                    cfg: Optional[AttentionConfig] = None,
+                    interpret: bool = False):
+    """q: (B, S, H, D); k/v: (B, T, KV, D) with H % KV == 0."""
+    cfg = cfg or _DEFAULT_CFG
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    if kv != h:                                  # GQA -> expand kv heads
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    out = K.flash_attention(qf, kf, vf, cfg, causal=causal, window=window,
+                            cap=cap, interpret=interpret)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
+    """q,k,v: (BH, S, D) — MHA layout (GQA expanded by the ops wrapper)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    if cap and cap > 0:
+        logits = cap * jnp.tanh(logits / cap)
+    s, t = logits.shape[-2:]
+    qpos = jnp.arange(s)
+    kpos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window and window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32)).astype(q.dtype)

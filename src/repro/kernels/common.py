@@ -1,0 +1,87 @@
+"""Shared kernel plumbing: tunable configs, padding helpers, TPU alignment.
+
+Every kernel exposes a ``*Config`` dataclass whose fields are exactly the
+knobs HAQA's deployment loop tunes (the TPU analogue of the paper's
+gridDim/blockDim/tiling/unroll space — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# TPU v5e tile granularities
+LANE = 128          # last-dim tile granularity (VPU lanes / MXU cols)
+SUBLANE = 8         # second-to-last granularity for f32
+MXU = 128           # systolic array dim
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad_to(x, m_rows: int, m_cols: int):
+    """Pad a 2-D array up to multiples of (m_rows, m_cols)."""
+    r, c = x.shape
+    rp, cp = round_up(r, m_rows), round_up(c, m_cols)
+    if (rp, cp) == (r, c):
+        return x, (r, c)
+    return jnp.pad(x, ((0, rp - r), (0, cp - c))), (r, c)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulConfig:
+    """qmatmul tunables — HAQA's deployment search space for MatMul."""
+    bm: int = 128
+    bn: int = 128
+    bk: int = 512
+    # 'parallel' grid dims let Mosaic pipeline independent tiles;
+    # the K dim must stay 'arbitrary' (sequential accumulation).
+    dimension_semantics: Tuple[str, str, str] = ("parallel", "parallel", "arbitrary")
+    accum_dtype: str = "float32"    # "float32" | "int32" (w8a8)
+
+    def validate(self):
+        assert self.bm % SUBLANE == 0 and self.bn % LANE == 0
+        assert self.bk % LANE == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RowBlockConfig:
+    """softmax / rmsnorm tunables: rows per grid step."""
+    block_rows: int = 256
+
+    def validate(self):
+        assert self.block_rows % SUBLANE == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class EltwiseConfig:
+    """swiglu tunables."""
+    block_rows: int = 256
+    block_cols: int = 512
+
+    def validate(self):
+        assert self.block_rows % SUBLANE == 0
+        assert self.block_cols % LANE == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RopeConfig:
+    """rope tunables: tokens per grid step."""
+    block_tokens: int = 128
+
+    def validate(self):
+        assert self.block_tokens % SUBLANE == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    """flash-attention tunables."""
+    block_q: int = 128
+    block_k: int = 128
+
+    def validate(self):
+        assert self.block_q % SUBLANE == 0
+        assert self.block_k % LANE == 0

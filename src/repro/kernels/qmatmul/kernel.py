@@ -1,0 +1,220 @@
+"""Pallas TPU quantized matmul kernels.
+
+Three variants, mirroring the deployment paths the paper tunes on llama.cpp:
+
+* ``bf16_matmul``  — full/half precision MXU matmul (FP16 path),
+* ``w8a8_matmul``  — int8 activations x int8 weights, int32 MXU accumulate
+                     (the TPU-native INT8 path: 2x bf16 peak),
+* ``wo_matmul``    — weight-only int8/int4: weights are dequantized in-VMEM
+                     per tile, then bf16 MXU matmul.  The int4 path pays an
+                     explicit unpack (shift/and) — exactly the emulation
+                     overhead HAQA reasons about in §4.4 of the paper.
+
+All grids are (M/bm, N/bn, K/bk) with a VMEM accumulator scratch; tile sizes
+come from ``MatmulConfig`` (the agent's search space).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import MatmulConfig
+
+
+# ---------------------------------------------------------------------------
+# bf16 / fp32 matmul
+# ---------------------------------------------------------------------------
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bf16_matmul(x, w, cfg: MatmulConfig, interpret: bool = False):
+    m, kk = x.shape
+    _, n = w.shape
+    grid = (m // cfg.bm, n // cfg.bn, kk // cfg.bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.bm, cfg.bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((cfg.bk, cfg.bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=cfg.dimension_semantics),
+        interpret=interpret,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# W8A8: int8 x int8 -> int32
+# ---------------------------------------------------------------------------
+
+def _w8a8_kernel(xq_ref, sx_ref, wq_ref, sw_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        xq_ref[...], wq_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        deq = acc_ref[...].astype(jnp.float32) * sx_ref[...] * sw_ref[...]
+        o_ref[...] = deq.astype(o_ref.dtype)
+
+
+def w8a8_matmul(xq, sx, wq, sw, cfg: MatmulConfig, out_dtype=jnp.bfloat16,
+                interpret: bool = False):
+    """xq (M,K) int8, sx (M,1) f32, wq (K,N) int8, sw (1,N) f32."""
+    m, kk = xq.shape
+    _, n = wq.shape
+    grid = (m // cfg.bm, n // cfg.bn, kk // cfg.bk)
+    return pl.pallas_call(
+        _w8a8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.bm, cfg.bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((cfg.bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((cfg.bk, cfg.bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, cfg.bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=cfg.dimension_semantics),
+        interpret=interpret,
+    )(xq, sx, wq, sw)
+
+
+# ---------------------------------------------------------------------------
+# weight-only int8 / int4 (packed) x bf16
+# ---------------------------------------------------------------------------
+
+def _wo8_kernel(x_ref, wq_ref, sw_ref, o_ref, acc_ref, *, groups_per_tile):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    wtile = wq_ref[...].astype(jnp.float32)                    # (bk, bn)
+    bk, bn = wtile.shape
+    if groups_per_tile >= 1:
+        g = groups_per_tile
+        w = wtile.reshape(g, bk // g, bn) * sw_ref[...].reshape(g, 1, bn)
+        w = w.reshape(bk, bn)
+    else:                                                      # per-channel
+        w = wtile * sw_ref[...]
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def wo8_matmul(x, wq, sw, cfg: MatmulConfig, group_size: int = -1,
+               interpret: bool = False):
+    """Weight-only int8: x (M,K) bf16, wq (K,N) int8,
+    sw (1,N) per-channel or (K/group, N) per-group."""
+    m, kk = x.shape
+    _, n = wq.shape
+    grid = (m // cfg.bm, n // cfg.bn, kk // cfg.bk)
+    if group_size > 0:
+        assert cfg.bk % group_size == 0, (cfg.bk, group_size)
+        gpt = cfg.bk // group_size
+        sw_spec = pl.BlockSpec((gpt, cfg.bn), lambda i, j, k: (k, j))
+    else:
+        gpt = 0
+        sw_spec = pl.BlockSpec((1, cfg.bn), lambda i, j, k: (0, j))
+    return pl.pallas_call(
+        functools.partial(_wo8_kernel, groups_per_tile=gpt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.bm, cfg.bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((cfg.bk, cfg.bn), lambda i, j, k: (k, j)),
+            sw_spec,
+        ],
+        out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=cfg.dimension_semantics),
+        interpret=interpret,
+    )(x, wq, sw)
+
+
+def _wo4_kernel(x_ref, wp_ref, sw_ref, o_ref, acc_ref, *, groups_per_tile):
+    """int4 path: wp holds two nibbles per byte along K (packed rows)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = wp_ref[...].astype(jnp.int32)                     # (bk//2, bn)
+    bk2, bn = packed.shape
+    # sign-extending nibble unpack — the "emulation overhead" of int4
+    lo = (packed << 28) >> 28
+    hi = (packed << 24) >> 28
+    w = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn).astype(jnp.float32)
+    g = groups_per_tile
+    w = w.reshape(g, (bk2 * 2) // g, bn) * sw_ref[...].reshape(g, 1, bn)
+    w = w.reshape(bk2 * 2, bn)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def wo4_matmul(x, wp, sw, cfg: MatmulConfig, group_size: int,
+               interpret: bool = False):
+    """Weight-only packed int4: x (M,K) bf16, wp (K//2,N) int8 (two nibbles
+    per byte along K), sw (K/group, N) f32 per-group scales."""
+    m, kk = x.shape
+    kp, n = wp.shape
+    assert kp * 2 == kk
+    assert cfg.bk % group_size == 0 and cfg.bk % 2 == 0
+    gpt = cfg.bk // group_size
+    grid = (m // cfg.bm, n // cfg.bn, kk // cfg.bk)
+    return pl.pallas_call(
+        functools.partial(_wo4_kernel, groups_per_tile=gpt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.bm, cfg.bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((cfg.bk // 2, cfg.bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((gpt, cfg.bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=cfg.dimension_semantics),
+        interpret=interpret,
+    )(x, wp, sw)

@@ -1,0 +1,119 @@
+"""jit'd wrappers for the quantized matmul kernels.
+
+Handles leading batch dims, padding to tile multiples, QTensor scheme
+dispatch, and the interpret/XLA fallbacks.  This is the function
+``repro.models.layers.dense`` calls when the impl mode is pallas/interpret.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import MatmulConfig, round_up
+from repro.kernels.qmatmul import kernel as K
+from repro.kernels.qmatmul import ref as R
+from repro.quant.qtypes import QTensor, QuantScheme, normalize_qtensor
+from repro.quant import quantizers
+
+# the deployment configuration HAQA tunes; ops read the current default
+_DEFAULT_CFG = MatmulConfig()
+
+
+def set_default_config(cfg: MatmulConfig) -> None:
+    global _DEFAULT_CFG
+    cfg.validate()
+    _DEFAULT_CFG = cfg
+
+
+def get_default_config() -> MatmulConfig:
+    return _DEFAULT_CFG
+
+
+def _flatten(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _fit_cfg(cfg: MatmulConfig, m: int, k: int, n: int,
+             group_size: int = -1) -> Optional[MatmulConfig]:
+    """Shrink tile sizes to divide the (padded) problem; None if impossible."""
+    bm = min(cfg.bm, round_up(m, 8))
+    bn = cfg.bn
+    bk = cfg.bk
+    while bn > n and bn > 128:
+        bn //= 2
+    while bk > k and bk > 128:
+        bk //= 2
+    if group_size > 0:
+        while bk % group_size != 0 and bk < k:
+            bk *= 2
+        if bk % group_size != 0:
+            return None
+    if n % bn != 0 or k % bk != 0:
+        return None
+    return MatmulConfig(bm=bm, bn=bn, bk=bk,
+                        dimension_semantics=cfg.dimension_semantics,
+                        accum_dtype=cfg.accum_dtype)
+
+
+def qmatmul(x: jax.Array, w, cfg: Optional[MatmulConfig] = None,
+            interpret: bool = False) -> jax.Array:
+    """x @ w for raw arrays or QTensors, via the Pallas kernels."""
+    cfg = cfg or _DEFAULT_CFG
+    x2, lead = _flatten(x)
+    m, k = x2.shape
+
+    if isinstance(w, QTensor):
+        w = normalize_qtensor(w)
+        n = w.shape[-1]
+        out = _q_dispatch(x2, w, cfg, interpret)
+    else:
+        n = w.shape[-1]
+        fc = _fit_cfg(cfg, m, k, n)
+        if fc is None:
+            out = R.matmul_ref(x2, w)
+        else:
+            xp = _pad_rows(x2, fc.bm)
+            out = K.bf16_matmul(xp, w, fc, interpret=interpret)[:m]
+    return out.reshape(lead + (n,))
+
+
+def _pad_rows(x, bm):
+    m = x.shape[0]
+    mp = round_up(m, bm)
+    if mp == m:
+        return x
+    return jnp.pad(x, ((0, mp - m), (0, 0)))
+
+
+def _q_dispatch(x2, qt: QTensor, cfg: MatmulConfig, interpret: bool):
+    m, k = x2.shape
+    n = qt.shape[-1]
+    scheme = qt.scheme
+
+    if scheme in (QuantScheme.INT8, QuantScheme.W8A8):
+        fc = _fit_cfg(cfg, m, k, n)
+        if fc is None:
+            return R.wo_matmul_ref(x2, qt)
+        xp = _pad_rows(x2, fc.bm)
+        if scheme == QuantScheme.W8A8:
+            xq, sx = quantizers.quantize_activation(xp, bits=8, per_token=True)
+            return K.w8a8_matmul(xq, sx, qt.data, qt.scale.reshape(1, n), fc,
+                                 out_dtype=x2.dtype, interpret=interpret)[:m]
+        return K.wo8_matmul(xp, qt.data, qt.scale.reshape(1, n), fc,
+                            group_size=-1, interpret=interpret)[:m]
+
+    if scheme == QuantScheme.INT4:
+        g = qt.group_size
+        fc = _fit_cfg(cfg, m, k, n, group_size=g)
+        if fc is None:
+            return R.wo_matmul_ref(x2, qt)
+        xp = _pad_rows(x2, fc.bm)
+        return K.wo4_matmul(xp, qt.data, qt.scale, fc, group_size=g,
+                            interpret=interpret)[:m]
+
+    # NF4: codebook lookup stays outside the MXU path
+    return R.wo_matmul_ref(x2, qt)

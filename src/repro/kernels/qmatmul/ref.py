@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the quantized matmul kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QTensor
+from repro.quant import quantizers
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain bf16/f32 matmul oracle."""
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def wo_matmul_ref(x: jax.Array, qt: QTensor) -> jax.Array:
+    """Weight-only (int4/int8/nf4) oracle: dequantize then matmul."""
+    w = quantizers.dequantize(qt, jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def w8a8_matmul_ref(xq: jax.Array, sx: jax.Array, wq: jax.Array,
+                    sw: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    """int8 x int8 -> int32 oracle with per-token/per-channel dequant.
+
+    xq: (M, K) int8; sx: (M, 1) f32; wq: (K, N) int8; sw: (1, N) f32.
+    """
+    acc = jnp.dot(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * sx * sw).astype(out_dtype)

@@ -1,0 +1,75 @@
+"""Kernel registry: names, tunable search spaces, and ref/impl bindings.
+
+This is the deployment half of HAQA's joint search space — the TPU analogue
+of the paper's per-kernel execution configuration (Appendix D "End-to-end
+deployment search").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+from repro.kernels.common import (
+    AttentionConfig, EltwiseConfig, MatmulConfig, RopeConfig, RowBlockConfig,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelInfo:
+    name: str
+    config_cls: type
+    # tunable field -> candidate values (hardware-aligned)
+    space: Dict[str, Tuple]
+    paper_table3: bool          # appears in the paper's Table 3
+
+
+KERNELS: Dict[str, KernelInfo] = {
+    "matmul": KernelInfo(
+        "matmul", MatmulConfig,
+        space={
+            "bm": (64, 128, 256, 512),
+            "bn": (128, 256, 512, 1024),
+            "bk": (128, 256, 512, 1024, 2048),
+            "dimension_semantics": (
+                ("parallel", "parallel", "arbitrary"),
+                ("arbitrary", "arbitrary", "arbitrary"),
+            ),
+        },
+        paper_table3=True),
+    "softmax": KernelInfo(
+        "softmax", RowBlockConfig,
+        space={"block_rows": (8, 16, 32, 64, 128, 256, 512, 1024)},
+        paper_table3=True),
+    "rmsnorm": KernelInfo(
+        "rmsnorm", RowBlockConfig,
+        space={"block_rows": (8, 16, 32, 64, 128, 256, 512, 1024)},
+        paper_table3=True),
+    "swiglu": KernelInfo(
+        "swiglu", EltwiseConfig,
+        space={"block_rows": (8, 32, 64, 128, 256, 512),
+               "block_cols": (128, 256, 512, 1024, 2048)},
+        paper_table3=True),        # the paper's "SiLU" kernel (fused gate)
+    "rope": KernelInfo(
+        "rope", RopeConfig,
+        space={"block_tokens": (8, 16, 32, 64, 128, 256, 512)},
+        paper_table3=True),
+    "attention": KernelInfo(
+        "attention", AttentionConfig,
+        space={"block_q": (64, 128, 256, 512),
+               "block_k": (128, 256, 512, 1024)},
+        paper_table3=False),       # beyond-paper kernel
+}
+
+
+def default_config(name: str):
+    return KERNELS[name].config_cls()
+
+
+def make_config(name: str, **fields):
+    cfg = KERNELS[name].config_cls(**fields)
+    cfg.validate()
+    return cfg
+
+
+def config_space(name: str) -> Dict[str, Tuple]:
+    return dict(KERNELS[name].space)

@@ -1,0 +1,39 @@
+"""Pallas fused RMSNorm: mean-square reduce + rsqrt + scale in one VMEM pass
+(the paper's Table 3 RMSNorm kernel, TPU-tiled)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import RowBlockConfig
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    normed = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (normed * (1.0 + w_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, cfg: RowBlockConfig,
+            eps: float = 1e-6, interpret: bool = False) -> jax.Array:
+    r, c = x.shape
+    br = min(cfg.block_rows, r)
+    assert r % br == 0
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, weight.reshape(1, c))

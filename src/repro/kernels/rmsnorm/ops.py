@@ -1,0 +1,36 @@
+"""jit'd wrapper for the RMSNorm kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import RowBlockConfig, round_up
+from repro.kernels.rmsnorm import kernel as K
+from repro.kernels.rmsnorm import ref as R
+
+_DEFAULT_CFG = RowBlockConfig()
+
+
+def set_default_config(cfg: RowBlockConfig) -> None:
+    global _DEFAULT_CFG
+    cfg.validate()
+    _DEFAULT_CFG = cfg
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+            cfg: Optional[RowBlockConfig] = None,
+            interpret: bool = False) -> jax.Array:
+    cfg = cfg or _DEFAULT_CFG
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    br = min(cfg.block_rows, round_up(m, 8))
+    mp = round_up(m, br)
+    if mp != m:
+        x2 = jnp.pad(x2, ((0, mp - m), (0, 0)))
+    out = K.rmsnorm(x2, weight, RowBlockConfig(block_rows=br), eps=eps,
+                    interpret=interpret)[:m]
+    return out.reshape(lead + (c,))

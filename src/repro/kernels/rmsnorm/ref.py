@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    normed = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (normed * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,57 @@
+"""Pallas RoPE kernel: rotate (tokens, heads*dim) tiles in VMEM.
+
+Angles are computed in-kernel from the position ids (iota over the frequency
+axis), so the only HBM traffic is x in / x out + a (tokens, 1) position
+column — the memory-bound profile the paper's Table 3 RoPE rows show.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import RopeConfig
+
+
+def _rope_kernel(x_ref, pos_ref, o_ref, *, theta: float, heads: int, dim: int):
+    x = x_ref[...].astype(jnp.float32)                  # (bt, H*D)
+    bt = x.shape[0]
+    pos = pos_ref[...].astype(jnp.float32)              # (bt, 1)
+    half = dim // 2
+    k = jax.lax.broadcasted_iota(jnp.float32, (1, half), 1)
+    freqs = jnp.exp(-jnp.log(theta) * (2.0 * k / dim))  # (1, half)
+    ang = pos * freqs                                   # (bt, half)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    xh = x.reshape(bt, heads, dim)
+    x1 = xh[..., :half]
+    x2 = xh[..., half:]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    o_ref[...] = out.reshape(bt, heads * dim).astype(o_ref.dtype)
+
+
+def rope(x2: jax.Array, pos2: jax.Array, heads: int, dim: int,
+         cfg: RopeConfig, theta: float = 10_000.0,
+         interpret: bool = False) -> jax.Array:
+    """x2: (T, H*D) flattened tokens; pos2: (T, 1) int32."""
+    t, hd = x2.shape
+    bt = min(cfg.block_tokens, t)
+    assert t % bt == 0
+    return pl.pallas_call(
+        functools.partial(_rope_kernel, theta=theta, heads=heads, dim=dim),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, hd), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, hd), x2.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x2, pos2)

@@ -1,0 +1,36 @@
+"""jit'd wrapper for the RoPE kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import RopeConfig, round_up
+from repro.kernels.rope import kernel as K
+
+_DEFAULT_CFG = RopeConfig()
+
+
+def set_default_config(cfg: RopeConfig) -> None:
+    global _DEFAULT_CFG
+    cfg.validate()
+    _DEFAULT_CFG = cfg
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0,
+         cfg: Optional[RopeConfig] = None, interpret: bool = False) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S)."""
+    cfg = cfg or _DEFAULT_CFG
+    b, s, h, d = x.shape
+    t = b * s
+    x2 = x.reshape(t, h * d)
+    pos2 = positions.reshape(t, 1).astype(jnp.int32)
+    bt = min(cfg.block_tokens, round_up(t, 8))
+    tp = round_up(t, bt)
+    if tp != t:
+        x2 = jnp.pad(x2, ((0, tp - t), (0, 0)))
+        pos2 = jnp.pad(pos2, ((0, tp - t), (0, 0)))
+    out = K.rope(x2, pos2, h, d, RopeConfig(block_tokens=bt), theta=theta,
+                 interpret=interpret)[:t]
+    return out.reshape(b, s, h, d)

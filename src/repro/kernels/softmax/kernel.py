@@ -1,0 +1,42 @@
+"""Pallas row softmax with optional logit softcap (Gemma-2).
+
+Grid over row blocks; each step loads a (block_rows, C) tile into VMEM,
+reduces along lanes, writes the normalized tile.  ``block_rows`` is the
+HAQA-tunable (trades VMEM footprint against grid overhead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import RowBlockConfig
+
+
+def _softmax_kernel(x_ref, o_ref, *, cap: float):
+    x = x_ref[...].astype(jnp.float32)
+    if cap and cap > 0:
+        x = cap * jnp.tanh(x / cap)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def softmax(x: jax.Array, cfg: RowBlockConfig, cap: float = 0.0,
+            interpret: bool = False) -> jax.Array:
+    r, c = x.shape
+    br = min(cfg.block_rows, r)
+    assert r % br == 0, (r, br)
+    return pl.pallas_call(
+        functools.partial(_softmax_kernel, cap=cap),
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)

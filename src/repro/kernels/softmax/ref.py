@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the (softcapped) row softmax."""
+import jax
+import jax.numpy as jnp
+
+
+def softmax_ref(x: jax.Array, cap: float = 0.0) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cap and cap > 0:
+        xf = cap * jnp.tanh(xf / cap)
+    return jax.nn.softmax(xf, axis=-1).astype(x.dtype)

@@ -1,0 +1,36 @@
+"""Pallas fused SwiGLU: silu(a) * b elementwise over 2-D tiles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import EltwiseConfig
+
+
+def _swiglu_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = (a * jax.lax.logistic(a) * b).astype(o_ref.dtype)
+
+
+def swiglu(a: jax.Array, b: jax.Array, cfg: EltwiseConfig,
+           interpret: bool = False) -> jax.Array:
+    r, c = a.shape
+    br = min(cfg.block_rows, r)
+    bc = min(cfg.block_cols, c)
+    assert r % br == 0 and c % bc == 0
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(r // br, c // bc),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), a.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(a, b)

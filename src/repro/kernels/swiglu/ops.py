@@ -1,0 +1,37 @@
+"""jit'd wrapper for the fused SwiGLU kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import EltwiseConfig, round_up
+from repro.kernels.swiglu import kernel as K
+
+_DEFAULT_CFG = EltwiseConfig()
+
+
+def set_default_config(cfg: EltwiseConfig) -> None:
+    global _DEFAULT_CFG
+    cfg.validate()
+    _DEFAULT_CFG = cfg
+
+
+def swiglu(a: jax.Array, b: jax.Array, cfg: Optional[EltwiseConfig] = None,
+           interpret: bool = False) -> jax.Array:
+    cfg = cfg or _DEFAULT_CFG
+    lead = a.shape[:-1]
+    c = a.shape[-1]
+    a2 = a.reshape(-1, c)
+    b2 = b.reshape(-1, c)
+    m = a2.shape[0]
+    br = min(cfg.block_rows, round_up(m, 8))
+    bc = min(cfg.block_cols, round_up(c, 128))
+    mp, cp = round_up(m, br), round_up(c, bc)
+    if (mp, cp) != (m, c):
+        a2 = jnp.pad(a2, ((0, mp - m), (0, cp - c)))
+        b2 = jnp.pad(b2, ((0, mp - m), (0, cp - c)))
+    out = K.swiglu(a2, b2, EltwiseConfig(block_rows=br, block_cols=bc),
+                   interpret=interpret)[:m, :c]
+    return out.reshape(lead + (c,))

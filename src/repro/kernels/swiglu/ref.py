@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused SwiGLU gate (the paper's SiLU kernel,
+fused with the gating multiply as llama.cpp does)."""
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    af = a.astype(jnp.float32)
+    return (af * jax.nn.sigmoid(af) * b.astype(jnp.float32)).astype(a.dtype)

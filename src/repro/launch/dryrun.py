@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes and extract the roofline evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--scheme int8]
+
+Artifacts (per cell) go to ``artifacts/dryrun/``: a JSON record with
+memory_analysis / cost_analysis / parsed collective bytes, plus the gzipped
+per-device HLO for the §Roofline/§Perf analysis.
+"""
+
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as roofline_lib
+from repro.configs import SHAPES, get_config, get_shape, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.registry import ASSIGNED_ARCHS
+from repro.launch.mesh import make_production_mesh
+from repro.models import frontends, transformer as tfm
+from repro.optim import adamw, warmup_cosine
+from repro.quant import PTQConfig, QuantScheme, quantize_tree
+from repro.sharding import (batch_shardings, cache_shardings,
+                            opt_state_shardings, param_shardings)
+from repro.train.trainer import TrainConfig, make_train_step
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "vision_patches":
+            specs = frontends.vision_embed_specs(b, s, cfg.d_model)
+            if shape.kind == "prefill":
+                specs.pop("labels")
+            return specs
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    # decode: one new token against a seq_len cache
+    cache = tfm.cache_specs(cfg, b, s)
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32), "cache": cache}
+
+
+def _quantized_param_specs(cfg: ModelConfig, scheme: str):
+    """ShapeDtypeStructs of the PTQ-quantized tree (serving cells)."""
+    specs = tfm.param_specs(cfg)
+    pcfg = PTQConfig(scheme=QuantScheme(scheme), group_size=128)
+    return jax.eval_shape(lambda t: quantize_tree(t, pcfg), specs)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, scheme: str = "bf16",
+               num_microbatches: int = 1, fsdp: bool = True):
+    """Returns (fn, arg_specs, in_shardings, out_shardings, label)."""
+    from repro.sharding.specs import dp_spec
+    dp = dp_spec(mesh)
+    b = shape.global_batch
+    dp_ax = dp if b > 1 else None
+
+    if shape.kind == "train":
+        tc = TrainConfig(num_microbatches=num_microbatches,
+                         adam_state_dtype="int8", remat=True,
+                         total_steps=10_000)
+        optimizer = adamw(warmup_cosine(3e-4, 10_000), state_dtype="int8")
+        pspecs = tfm.param_specs(cfg)
+        ospecs = jax.eval_shape(optimizer.init, pspecs)
+        batch = input_specs(cfg, shape)
+        psh = param_shardings(pspecs, mesh, fsdp=fsdp)
+        step_fn = make_train_step(cfg, tc, optimizer, grad_shardings=psh)
+        osh = opt_state_shardings(ospecs, psh, mesh)
+        bsh = batch_shardings(batch, mesh)
+        args = (pspecs, ospecs, batch, jax.ShapeDtypeStruct((), jnp.int32))
+        shardings = (psh, osh, bsh, NamedSharding(mesh, P()))
+        out_sh = (psh, osh, None)     # new params/opt keep their shardings
+        return step_fn, args, shardings, out_sh, "train_step"
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        pspecs = (tfm.param_specs(cfg) if scheme == "bf16"
+                  else _quantized_param_specs(cfg, scheme))
+        psh = param_shardings(pspecs, mesh, fsdp=fsdp)
+        bsh = batch_shardings(batch, mesh)
+
+        def prefill_fn(params, batch):
+            return tfm.prefill(params, cfg,
+                               tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"),
+                               positions=batch.get("positions"),
+                               max_len=shape.seq_len)
+
+        out_specs = jax.eval_shape(prefill_fn, pspecs, batch)
+        logits_sh = NamedSharding(mesh, P(dp_ax, None, "model"))
+        cache_sh = cache_shardings(out_specs[1], mesh)
+        return (prefill_fn, (pspecs, batch), (psh, bsh),
+                (logits_sh, cache_sh), "prefill_step")
+
+    # decode
+    specs = input_specs(cfg, shape)
+    pspecs = (tfm.param_specs(cfg) if scheme == "bf16"
+              else _quantized_param_specs(cfg, scheme))
+    psh = param_shardings(pspecs, mesh, fsdp=fsdp)
+    csh = cache_shardings(specs["cache"], mesh)
+    tsh = batch_shardings({"tokens": specs["tokens"]}, mesh)["tokens"]
+
+    def serve_fn(params, cache, tokens):
+        return tfm.decode_step(params, cfg, cache, tokens=tokens)
+
+    logits_sh = NamedSharding(mesh, P(dp_ax, "model"))
+    return (serve_fn, (pspecs, specs["cache"], specs["tokens"]),
+            (psh, csh, tsh), (logits_sh, csh), "serve_step")
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool = False,
+             scheme: str = "bf16", out_dir: str = "artifacts/dryrun",
+             fsdp: bool = True, num_microbatches: int = 1,
+             save_hlo: bool = True, tag: str = "",
+             kv_dtype: str = "bf16") -> Dict:
+    cfg = get_config(arch)
+    if kv_dtype != "bf16":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    shape = get_shape(shape_id)
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_id, "skipped": True,
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(see DESIGN.md §Arch-applicability)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(len(mesh.devices.reshape(-1)))
+    from repro.models.layers import clear_activation_sharding, set_activation_sharding
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    set_activation_sharding(mesh, dp_axes if shape.global_batch > 1 else None)
+    try:
+        fn, args, shardings, out_sh, label = build_cell(cfg, shape, mesh, scheme,
+                                                        num_microbatches, fsdp)
+        t0 = time.time()
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=shardings, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+    finally:
+        clear_activation_sharding()
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_gb": ma.argument_size_in_bytes / 2**30,
+        "output_gb": ma.output_size_in_bytes / 2**30,
+        "temp_gb": ma.temp_size_in_bytes / 2**30,
+        "code_gb": ma.generated_code_size_in_bytes / 2**30,
+    }
+    mem["total_gb"] = mem["argument_gb"] + mem["temp_gb"] + mem["code_gb"]
+    print(f"[{arch} x {shape_id} x {'2x16x16' if multi_pod else '16x16'} "
+          f"({scheme})] {label}: lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    print(f"  memory_analysis: {ma}")
+    ca = compiled.cost_analysis() or {}
+    print(f"  cost_analysis: flops={ca.get('flops')} bytes={ca.get('bytes accessed')}")
+
+    text = compiled.as_text()
+    summary = hlo_lib.analyze_hlo_text(text)
+    peak = roofline_lib.PEAK_INT8 if scheme == "w8a8" else roofline_lib.PEAK_BF16
+    roof = roofline_lib.compute_roofline(
+        cfg, shape, n_chips, summary,
+        {k: ca.get(k) for k in ("flops", "bytes accessed")}, mem,
+        peak=peak, multi_pod=multi_pod)
+    print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+          f"memory={roof.memory_s*1e3:.2f}ms "
+          f"collective={roof.collective_s*1e3:.2f}ms "
+          f"-> {roof.bottleneck}-bound, useful={roof.useful_ratio:.2f} "
+          f"mfu={roof.mfu:.3f}")
+
+    record = {
+        "arch": arch, "shape": shape_id, "scheme": scheme, "tag": tag,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "entry": label, "fsdp": fsdp,
+        "num_microbatches": num_microbatches,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "memory": mem,
+        "cost_analysis": {k: ca.get(k) for k in
+                          ("flops", "bytes accessed", "transcendentals")},
+        "hlo_summary": summary,
+        "roofline": roof.as_dict(),
+        "skipped": False,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    stem = f"{arch}_{shape_id}_{record['mesh']}_{scheme}" + (f"_{tag}" if tag else "")
+    with open(os.path.join(out_dir, stem + ".json"), "w") as f:
+        json.dump(record, f, indent=2)
+    if save_hlo:
+        with gzip.open(os.path.join(out_dir, stem + ".hlo.txt.gz"), "wt") as f:
+            f.write(text)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--scheme", default="bf16",
+                    choices=["bf16", "int8", "int4", "w8a8"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape_id in SHAPES:
+                cells.append((arch, shape_id))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch, shape_id in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape_id, multi_pod=mp, scheme=args.scheme,
+                         out_dir=args.out, fsdp=not args.no_fsdp,
+                         num_microbatches=args.microbatches,
+                         save_hlo=not args.no_hlo, tag=args.tag,
+                         kv_dtype=args.kv_dtype)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape_id, mp, str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

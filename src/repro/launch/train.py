@@ -1,0 +1,62 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny-100m --steps 200
+
+Runs a real training loop on the host devices (CPU here; the same step
+function is what the dry-run lowers for the production meshes).  Supports
+checkpoint/restart out of the box: re-running the command resumes from the
+latest checkpoint in --ckpt-dir.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import BigramLM, StatelessLoader
+from repro.train import TrainConfig, Trainer
+
+
+def make_lm_loader(cfg, batch: int, seq: int, seed: int = 0):
+    gen = BigramLM(cfg.vocab_size, seed=7)
+
+    def sample(rng, b):
+        toks = gen.sample(rng, b, seq + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+
+    return StatelessLoader(sample, batch, seed=seed)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-100m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config for the arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--adam-state", default="fp32", choices=["fp32", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     num_microbatches=args.microbatches,
+                     adam_state_dtype=args.adam_state,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, tc)
+    trainer.init_state()
+    if trainer.maybe_restore():
+        print(f"resumed from step {trainer.step}")
+    loader = make_lm_loader(cfg, args.batch, args.seq)
+    loader.restore(type(loader.state)(step=trainer.step))
+    losses = trainer.run(loader, args.steps - trainer.step, log_every=10)
+    print(f"done: {len(losses)} steps, final loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

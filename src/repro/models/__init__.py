@@ -1,0 +1,7 @@
+from repro.models import attention, frontends, layers, moe, resnet, ssm, transformer
+from repro.models.layers import dense, rmsnorm, set_impl_mode, get_impl_mode
+
+__all__ = [
+    "attention", "frontends", "layers", "moe", "resnet", "ssm", "transformer",
+    "dense", "rmsnorm", "set_impl_mode", "get_impl_mode",
+]

@@ -1,0 +1,151 @@
+"""Attention: GQA, sliding windows, logit softcap, chunked (flash-style)
+prefill, and single-token decode against a KV cache.
+
+Shapes
+------
+q: (B, S, H, D)   k/v: (B, T, KV, D)   with H = KV * G (grouped queries).
+
+For long sequences ``chunked_attention`` scans over key blocks with an
+online softmax so the (S, T) score matrix is never materialized — the
+XLA-level equivalent of the Pallas flash kernel in ``repro.kernels.attention``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap
+
+NEG_INF = -1e30
+
+
+def _gqa_split(q: jax.Array, num_kv: int):
+    b, s, h, d = q.shape
+    g = h // num_kv
+    return q.reshape(b, s, num_kv, g, d)
+
+
+def full_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                   logit_cap: float = 0.0, q_offset: int = 0) -> jax.Array:
+    """Direct attention (materializes scores) — for short sequences/tests."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qg = _gqa_split(q, kvh)                                   # (B,S,KV,G,D)
+    scale = d ** -0.5
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale        # (B,KV,G,S,T)
+    logits = softcap(logits, logit_cap)
+    t = k.shape[1]
+    qpos = jnp.arange(s) + q_offset
+    kpos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window and window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    # additive (linear) masking: where-select would save a broadcast bool
+    # residual at full logits shape for the backward pass
+    logits = logits + jnp.where(mask, 0.0, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, d)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      logit_cap: float = 0.0, chunk: int = 1024,
+                      q_offset: int = 0) -> jax.Array:
+    """Flash-style attention: scan over key chunks with online softmax.
+
+    Memory is O(S * chunk) instead of O(S * T).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    if t % chunk != 0:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              logit_cap=logit_cap, q_offset=q_offset)
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = _gqa_split(q, kvh).astype(jnp.float32)               # (B,S,KV,G,D)
+    scale = d ** -0.5
+    nchunks = t // chunk
+    kc = k.reshape(b, nchunks, chunk, kvh, d)
+    vc = v.reshape(b, nchunks, chunk, kvh, d)
+    qpos = jnp.arange(s) + q_offset
+
+    class Carry(NamedTuple):
+        m: jax.Array      # running max       (B,KV,G,S)
+        l: jax.Array      # running denom     (B,KV,G,S)
+        o: jax.Array      # running numerator (B,S,KV,G,D)
+
+    init = Carry(
+        m=jnp.full((b, kvh, g, s), NEG_INF, jnp.float32),
+        l=jnp.zeros((b, kvh, g, s), jnp.float32),
+        o=jnp.zeros((b, s, kvh, g, d), jnp.float32),
+    )
+
+    def body(carry: Carry, inputs):
+        kb, vb, ci = inputs                                    # (B,chunk,KV,D)
+        kpos = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, kb.astype(jnp.float32)) * scale
+        logits = softcap(logits, logit_cap)
+        mask = jnp.ones((s, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window and window > 0:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        logits = logits + jnp.where(mask, 0.0, NEG_INF)   # additive mask
+        m_new = jnp.maximum(carry.m, jnp.max(logits, axis=-1))
+        # guard fully-masked rows: keep m finite
+        m_safe = jnp.maximum(m_new, -0.5e30)
+        p = jnp.exp(logits - m_safe[..., None])                # (B,KV,G,S,T)
+        corr = jnp.exp(jnp.maximum(carry.m, -0.5e30) - m_safe)  # (B,KV,G,S)
+        l_new = carry.l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p, vb.astype(jnp.float32))
+        o_new = carry.o * jnp.moveaxis(corr, -1, 1)[..., None] + pv
+        return Carry(m_new, l_new, o_new), None
+
+    xs = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nchunks))
+    # flash-attention semantics need the backward to RECOMPUTE the per-chunk
+    # probabilities; without checkpoint the scan saves O(S·T) residuals
+    final, _ = jax.lax.scan(jax.checkpoint(body), init, xs)
+    denom = jnp.moveaxis(final.l, -1, 1)[..., None]            # (B,S,KV,G,1)
+    out = final.o / jnp.maximum(denom, 1e-30)
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     logit_cap: float = 0.0) -> jax.Array:
+    """One-token decode: q (B,1,H,D) against cache (B,T,KV,D), valid length
+    ``cache_len`` (scalar or (B,) int) INCLUDING the current token."""
+    b, s1, h, d = q.shape
+    t = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = _gqa_split(q, kvh).astype(jnp.float32)
+    scale = d ** -0.5
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache.astype(jnp.float32)) * scale
+    logits = softcap(logits, logit_cap)                        # (B,KV,G,1,T)
+    kpos = jnp.arange(t)
+    clen = jnp.asarray(cache_len)
+    if clen.ndim == 0:
+        clen = jnp.full((b,), clen)
+    valid = kpos[None, :] < clen[:, None]                      # (B,T)
+    if window and window > 0:
+        valid &= kpos[None, :] > (clen[:, None] - 1 - window)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, s1, h, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
+              chunk_threshold: int = 2048, chunk: int = 1024,
+              q_offset: int = 0) -> jax.Array:
+    """Dispatch: direct for short sequences, chunked beyond the threshold."""
+    if q.shape[1] <= chunk_threshold and k.shape[1] <= chunk_threshold:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              logit_cap=logit_cap, q_offset=q_offset)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             logit_cap=logit_cap, chunk=chunk, q_offset=q_offset)

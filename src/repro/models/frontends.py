@@ -1,0 +1,62 @@
+"""Modality frontend STUBS (per the assignment: the transformer backbone is
+the deliverable; frontends only have to supply shape-correct inputs).
+
+* musicgen-large consumes EnCodec codebook tokens — ``audio_token_specs``
+  supplies the (B, S) int32 ids the real EnCodec encoder would emit.
+* qwen2-vl consumes interleaved text/vision embeddings with M-RoPE 3-D
+  positions — ``vision_embed_specs`` supplies precomputed patch embeddings
+  plus the (t, h, w) position streams for a synthetic image grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_token_specs(batch: int, seq: int, vocab: int = 2048):
+    """ShapeDtypeStructs for EnCodec-token input (stub of the audio tokenizer)."""
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+
+def stub_audio_tokens(key, batch: int, seq: int, vocab: int = 2048):
+    toks = jax.random.randint(key, (batch, seq), 0, vocab, jnp.int32)
+    labels = jnp.roll(toks, -1, axis=1)
+    return {"tokens": toks, "labels": labels}
+
+
+def mrope_positions_for_grid(batch: int, seq: int, grid_hw=(24, 24),
+                             n_vision: int = 0):
+    """(3, B, S) position streams: vision patches get (t=0, h, w) grid
+    positions; text tokens get shared sequential positions on all streams."""
+    n_vision = min(n_vision, seq)
+    h, w = grid_hw
+    idx = jnp.arange(seq)
+    vis = idx < n_vision
+    t_pos = jnp.where(vis, 0, idx - n_vision + 1)
+    h_pos = jnp.where(vis, (idx // w) % h, idx - n_vision + 1)
+    w_pos = jnp.where(vis, idx % w, idx - n_vision + 1)
+    pos = jnp.stack([t_pos, h_pos, w_pos])              # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq)).astype(jnp.int32)
+
+
+def vision_embed_specs(batch: int, seq: int, d_model: int):
+    """ShapeDtypeStructs for precomputed patch+text embeddings (ViT stub)."""
+    return {
+        "embeds": jax.ShapeDtypeStruct((batch, seq, d_model), jnp.bfloat16),
+        "positions": jax.ShapeDtypeStruct((3, batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+
+def stub_vision_embeds(key, batch: int, seq: int, d_model: int, vocab: int,
+                       n_vision: int = 64):
+    k1, k2 = jax.random.split(key)
+    return {
+        "embeds": (jax.random.normal(k1, (batch, seq, d_model), jnp.float32)
+                   * 0.02).astype(jnp.bfloat16),
+        "positions": mrope_positions_for_grid(batch, seq, n_vision=n_vision),
+        "labels": jax.random.randint(k2, (batch, seq), 0, vocab, jnp.int32),
+    }

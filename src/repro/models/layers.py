@@ -1,0 +1,173 @@
+"""Shared neural-net layers (pure JAX, quantization-aware).
+
+``dense`` is the single matmul entry point for the whole model zoo: it
+dispatches on the weight type (raw array vs QTensor) and the global kernel
+implementation mode (xla / pallas / interpret), so PTQ-served models,
+QLoRA-finetuned models and full-precision training all flow through the same
+model code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QTensor, QuantScheme, normalize_qtensor
+from repro.quant import ptq
+
+# global kernel dispatch mode — launch/serving code sets this; "xla" is the
+# portable path used for CPU dry-runs, "pallas" targets real TPUs,
+# "interpret" runs the Pallas kernels in Python for validation.
+_IMPL_MODE = "xla"
+
+
+def set_impl_mode(mode: str) -> None:
+    global _IMPL_MODE
+    if mode not in ("xla", "pallas", "interpret"):
+        raise ValueError(mode)
+    _IMPL_MODE = mode
+
+
+def get_impl_mode() -> str:
+    return _IMPL_MODE
+
+
+# Activation sharding constraints.  Without them XLA may propagate a weight
+# layout onto the residual stream (e.g. feature-dim sharding from the embed
+# table), which forces involuntary rematerialization and all-gather storms.
+# The launcher installs (mesh, dp_axes) before lowering; model code calls
+# ``shard_activations`` on the residual stream / logits.
+_ACT_MESH = None
+_ACT_DP = None
+
+
+def set_activation_sharding(mesh, dp_axes) -> None:
+    global _ACT_MESH, _ACT_DP
+    _ACT_MESH = mesh
+    _ACT_DP = dp_axes
+
+
+def clear_activation_sharding() -> None:
+    set_activation_sharding(None, None)
+
+
+def shard_activations(x, feature_axis=None):
+    """Constrain (B, ..., F) activations to batch-over-DP (+ optional model
+    sharding of the trailing feature axis, e.g. vocab logits)."""
+    if _ACT_MESH is None or x.ndim < 2:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = (_ACT_DP,) + (None,) * (x.ndim - 2) + (feature_axis,)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, P(*spec)))
+
+
+def dense(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """x @ w with QTensor dispatch.  x: (..., k); w: (k, n) or QTensor."""
+    out_dtype = out_dtype or x.dtype
+    if isinstance(w, QTensor):
+        w = normalize_qtensor(w)
+        if _IMPL_MODE in ("pallas", "interpret") and len(w.shape) == 2:
+            from repro.kernels.qmatmul import ops as qmm_ops
+            return qmm_ops.qmatmul(x, w, interpret=(_IMPL_MODE == "interpret")).astype(out_dtype)
+        wd = ptq.dequantize_leaf(w, jnp.bfloat16)
+        return (x @ wd.astype(x.dtype)).astype(out_dtype)
+    return (x @ w.astype(x.dtype)).astype(out_dtype)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    normed = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (normed * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Standard RoPE.  x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=(16, 24, 24)) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): three position streams (t, h, w) each own
+    a contiguous chunk of the frequency spectrum.
+
+    x: (B, S, H, D); positions: (3, B, S).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(d, theta)                       # (half,)
+    # build per-frequency position selection: first `sections[0]` freqs use
+    # the temporal stream, next sections[1] the height stream, etc.
+    sec_ids = jnp.concatenate([
+        jnp.full((sections[0],), 0, jnp.int32),
+        jnp.full((sections[1],), 1, jnp.int32),
+        jnp.full((sections[2],), 2, jnp.int32),
+    ])                                                        # (half,)
+    pos = positions.astype(jnp.float32)                       # (3, B, S)
+    # (B, S, half): pick stream per frequency
+    psel = pos[sec_ids, :, :]                                 # (half, B, S)
+    angles = jnp.moveaxis(psel, 0, -1) * freqs                # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_dispatch(x, positions, cfg) -> jax.Array:
+    """Apply the arch-appropriate rotary mode; optionally via Pallas kernel."""
+    if not getattr(cfg, "use_rope", True):
+        return x
+    if cfg.rope_mode == "mrope":
+        if positions.ndim == 2:                               # text-only: t=h=w
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    if _IMPL_MODE in ("pallas", "interpret"):
+        from repro.kernels.rope import ops as rope_ops
+        return rope_ops.rope(x, positions, theta=cfg.rope_theta,
+                             interpret=(_IMPL_MODE == "interpret"))
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x: jax.Array, p, out_dtype=None) -> jax.Array:
+    """SwiGLU: (silu(x@w1) * (x@w3)) @ w2.  p: {"w1","w3","w2"}."""
+    a = dense(x, p["w1"])
+    b = dense(x, p["w3"])
+    if _IMPL_MODE in ("pallas", "interpret"):
+        from repro.kernels.swiglu import ops as swiglu_ops
+        h = swiglu_ops.swiglu(a, b, interpret=(_IMPL_MODE == "interpret"))
+    else:
+        h = jax.nn.silu(a.astype(jnp.float32)).astype(a.dtype) * b
+    return dense(h, p["w2"], out_dtype=out_dtype)
+
+
+def init_dense(key, k, n, dtype=jnp.bfloat16, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(k))
+    return (jax.random.normal(key, (k, n), jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded scatter dispatch.
+
+Design notes
+------------
+The classic one-hot dispatch einsum (tokens, experts, capacity) costs
+O(N·E·C) = O(N²·k·cf/1) memory — prohibitive at 32k tokens/device.  We use a
+scatter/gather formulation instead:
+
+  1. top-k routing with renormalized gates,
+  2. per-expert slot ranks via cumulative one-hot counts (choice-major
+     priority, matching GShard/t5x semantics),
+  3. dispatch  : scatter tokens into an (E, C, D) buffer (mode='drop'
+     discards capacity overflow),
+  4. expert FFN: batched SwiGLU over the expert axis,
+  5. combine   : gather back (mode='fill' zeroes dropped tokens) and weight
+     by gates.
+
+Expert tensors carry a leading E axis which shards over the mesh "model"
+axis — expert parallelism.  Shared experts (DeepSeek-MoE / Moonlight style)
+are fused into one always-on dense SwiGLU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense, init_dense, swiglu_mlp
+
+
+def capacity(num_tokens: int, cfg: MoEConfig) -> int:
+    c = int(math.ceil(cfg.top_k * num_tokens / cfg.num_experts * cfg.capacity_factor))
+    # pad to a lane-friendly multiple
+    return max(8, -(-c // 8) * 8)
+
+
+def _shard_expert_buf(buf):
+    """Constrain (E, C, D) buffers to expert-parallel sharding (E over the
+    mesh model axis) when a mesh is installed."""
+    from repro.models.layers import _ACT_MESH
+    if _ACT_MESH is None or buf.shape[0] % _ACT_MESH.shape["model"] != 0:
+        return buf
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(_ACT_MESH, P("model", None, None)))
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 5)
+    e, f = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": (jax.random.normal(keys[0], (d_model, e), jnp.float32) * 0.02),
+        "w1": (jax.random.normal(keys[1], (e, d_model, f), jnp.float32) / math.sqrt(d_model)).astype(dtype),
+        "w3": (jax.random.normal(keys[2], (e, d_model, f), jnp.float32) / math.sqrt(d_model)).astype(dtype),
+        "w2": (jax.random.normal(keys[3], (e, f, d_model), jnp.float32) / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.num_shared > 0:
+        fs = cfg.num_shared * f
+        ks = jax.random.split(keys[4], 3)
+        p["shared"] = {
+            "w1": init_dense(ks[0], d_model, fs, dtype),
+            "w3": init_dense(ks[1], d_model, fs, dtype),
+            "w2": init_dense(ks[2], fs, d_model, dtype),
+        }
+    return p
+
+
+def _expert_ranks(expert_ids: jax.Array, num_experts: int) -> jax.Array:
+    """Slot rank of each (token, choice) within its expert's queue.
+
+    Choice-major priority: all k=0 assignments rank before any k=1.
+    expert_ids: (N, K) int32 -> ranks (N, K) int32.
+    """
+    n, k = expert_ids.shape
+    counts = jnp.zeros((num_experts,), jnp.int32)
+    ranks = []
+    for kk in range(k):
+        oh = jax.nn.one_hot(expert_ids[:, kk], num_experts, dtype=jnp.int32)  # (N, E)
+        pos = jnp.cumsum(oh, axis=0) - 1 + counts[None, :]
+        ranks.append(jnp.sum(pos * oh, axis=-1))
+        counts = counts + jnp.sum(oh, axis=0)
+    return jnp.stack(ranks, axis=1)
+
+
+def moe_ffn(x: jax.Array, p, cfg: MoEConfig,
+            return_aux: bool = False):
+    """Apply the MoE FFN.  x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    k = cfg.top_k
+    e = cfg.num_experts
+    c = capacity(n, cfg)
+
+    router_logits = (xf.astype(jnp.float32) @ p["router"])            # (N, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, k)                             # (N, K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    ranks = _expert_ranks(eids, e)                                    # (N, K)
+    keep = ranks < c
+    # OOB rank -> drop on scatter / zero-fill on gather
+    safe_ranks = jnp.where(keep, ranks, c)
+
+    # dispatch: (E, C, D) expert buffers.  NOTE (§Perf, refuted hypothesis):
+    # forcing expert-parallel sharding on this buffer via
+    # with_sharding_constraint makes the collective term WORSE (+18%) — XLA
+    # adds reshards without flipping the scatter's cross-device combine to
+    # an all-to-all.  The real fix is a shard_map manual all-to-all dispatch
+    # (tracked in EXPERIMENTS.md §Perf).
+    buf = jnp.zeros((e, c, d), x.dtype)
+    upd = jnp.broadcast_to(xf[:, None, :], (n, k, d))
+    buf = buf.at[eids.reshape(-1), safe_ranks.reshape(-1)].add(
+        upd.reshape(n * k, d), mode="drop")
+
+    # expert SwiGLU (batched over E; E shards over the mesh model axis)
+    h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(x.dtype))
+    h3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"].astype(x.dtype))
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype) * h3
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))        # (E, C, D)
+
+    # combine: gather each choice's output, weight by gate
+    out_choices = y.at[eids.reshape(-1), safe_ranks.reshape(-1)].get(
+        mode="fill", fill_value=0)                                    # (N*K, D)
+    out_choices = out_choices.reshape(n, k, d)
+    w = (gates * keep).astype(x.dtype)                                # (N, K)
+    out = jnp.einsum("nkd,nk->nd", out_choices, w)
+
+    if "shared" in p:
+        out = out + swiglu_mlp(xf, p["shared"]).astype(out.dtype)
+
+    out = out.reshape(b, s, d)
+    if return_aux:
+        # Switch-style load-balance loss + router stats
+        me = jnp.mean(probs, axis=0)                                  # (E,)
+        ce = jnp.mean(
+            jnp.sum(jax.nn.one_hot(eids[:, 0], e, dtype=jnp.float32), axis=0)
+        ) / n
+        frac = jnp.sum(jax.nn.one_hot(eids, e, dtype=jnp.float32), axis=(0, 1)) / (n * k)
+        lb_loss = e * jnp.sum(frac * me)
+        dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        return out, {"lb_loss": lb_loss, "dropped_frac": dropped, "ce": ce}
+    return out

@@ -1,0 +1,192 @@
+"""ResNet-20/32 (CIFAR) and ResNet-50 (ImageNet-style) with DoReFa QAT hooks.
+
+The paper's Table 1 models.  Convolutions and activations are fake-quantized
+per the DoReFa scheme (w{2,4,8}a{2,4,8}); per convention the stem conv and the
+classifier stay full-precision.  BatchNorm carries running statistics in a
+separate ``state`` tree so train/eval are both exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.dorefa import quantize_act_dorefa, quantize_weight_dorefa
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    depth: int                 # 20 | 32 | 50
+    num_classes: int = 10
+    width: int = 16            # stem width for CIFAR variants
+    wbits: int = 32
+    abits: int = 32
+    bn_momentum: float = 0.9
+
+    @property
+    def is_bottleneck(self) -> bool:
+        return self.depth >= 50
+
+
+def resnet20(wbits=32, abits=32, num_classes=10):
+    return ResNetConfig("resnet20", 20, num_classes, 16, wbits, abits)
+
+
+def resnet32(wbits=32, abits=32, num_classes=10):
+    return ResNetConfig("resnet32", 32, num_classes, 16, wbits, abits)
+
+
+def resnet50(wbits=32, abits=32, num_classes=1000, width=64):
+    return ResNetConfig("resnet50", 50, num_classes, width, wbits, abits)
+
+
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_init(c):
+    return ({"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)},
+            {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)})
+
+
+def _bn(x, p, s, train: bool, momentum: float):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mean,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    xn = (x - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xn * p["scale"] + p["bias"], new_s
+
+
+def _qconv(x, w, cfg: ResNetConfig, stride=1, quant=True):
+    if quant and cfg.wbits < 32:
+        w = quantize_weight_dorefa(w, cfg.wbits)
+    return _conv(x, w, stride)
+
+
+def _qact(x, cfg: ResNetConfig, quant=True):
+    if quant and cfg.abits < 32:
+        return quantize_act_dorefa(x, cfg.abits)
+    return jax.nn.relu(x)
+
+
+def _stage_plan(cfg: ResNetConfig):
+    if cfg.is_bottleneck:     # ResNet-50: [3,4,6,3] bottlenecks
+        return [(cfg.width, 3, 1), (cfg.width * 2, 4, 2),
+                (cfg.width * 4, 6, 2), (cfg.width * 8, 3, 2)]
+    n = (cfg.depth - 2) // 6  # CIFAR: 3 stages of n basic blocks
+    return [(cfg.width, n, 1), (cfg.width * 2, n, 2), (cfg.width * 4, n, 2)]
+
+
+def init_resnet(key, cfg: ResNetConfig):
+    params: Dict = {}
+    state: Dict = {}
+    keys = jax.random.split(key, 128)
+    ki = iter(range(128))
+
+    cin = 3
+    params["stem"] = {"w": _conv_init(keys[next(ki)], 3, 3, cin, cfg.width)}
+    params["stem"]["bn"], state["stem"] = _bn_init(cfg.width)
+    cin = cfg.width
+
+    blocks = []
+    bstate = []
+    for si, (cout, n, stride) in enumerate(_stage_plan(cfg)):
+        for bi in range(n):
+            st = stride if bi == 0 else 1
+            p: Dict = {}
+            s: Dict = {}
+            if cfg.is_bottleneck:
+                mid = cout // 4 if cout >= 4 else cout
+                p["w1"] = _conv_init(keys[next(ki)], 1, 1, cin, mid)
+                p["bn1"], s["bn1"] = _bn_init(mid)
+                p["w2"] = _conv_init(keys[next(ki)], 3, 3, mid, mid)
+                p["bn2"], s["bn2"] = _bn_init(mid)
+                p["w3"] = _conv_init(keys[next(ki)], 1, 1, mid, cout)
+                p["bn3"], s["bn3"] = _bn_init(cout)
+            else:
+                p["w1"] = _conv_init(keys[next(ki)], 3, 3, cin, cout)
+                p["bn1"], s["bn1"] = _bn_init(cout)
+                p["w2"] = _conv_init(keys[next(ki)], 3, 3, cout, cout)
+                p["bn2"], s["bn2"] = _bn_init(cout)
+            if st != 1 or cin != cout:
+                p["proj"] = _conv_init(keys[next(ki)], 1, 1, cin, cout)
+                p["bnp"], s["bnp"] = _bn_init(cout)
+            blocks.append(p)
+            bstate.append(s)
+            cin = cout
+    params["blocks"] = blocks
+    state["blocks"] = bstate
+    params["fc"] = {
+        "w": jax.random.normal(keys[next(ki)], (cin, cfg.num_classes), jnp.float32)
+        * math.sqrt(1.0 / cin),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params, state
+
+
+def block_strides(cfg: ResNetConfig):
+    """Static stride per block, derived from the stage plan."""
+    strides = []
+    for (_, n, stride) in _stage_plan(cfg):
+        strides.extend([stride] + [1] * (n - 1))
+    return strides
+
+
+def _block_fwd(x, p, s, st, cfg: ResNetConfig, train: bool):
+    ns = {}
+    identity = x
+    if cfg.is_bottleneck:
+        h = _qconv(_qact(x, cfg), p["w1"], cfg, 1)
+        h, ns["bn1"] = _bn(h, p["bn1"], s["bn1"], train, cfg.bn_momentum)
+        h = _qconv(_qact(h, cfg), p["w2"], cfg, st)
+        h, ns["bn2"] = _bn(h, p["bn2"], s["bn2"], train, cfg.bn_momentum)
+        h = _qconv(_qact(h, cfg), p["w3"], cfg, 1)
+        h, ns["bn3"] = _bn(h, p["bn3"], s["bn3"], train, cfg.bn_momentum)
+    else:
+        h = _qconv(_qact(x, cfg), p["w1"], cfg, st)
+        h, ns["bn1"] = _bn(h, p["bn1"], s["bn1"], train, cfg.bn_momentum)
+        h = _qconv(_qact(h, cfg), p["w2"], cfg, 1)
+        h, ns["bn2"] = _bn(h, p["bn2"], s["bn2"], train, cfg.bn_momentum)
+    if "proj" in p:
+        identity = _conv(x, p["proj"], st)
+        identity, ns["bnp"] = _bn(identity, p["bnp"], s["bnp"], train, cfg.bn_momentum)
+    return h + identity, ns
+
+
+def forward(params, state, cfg: ResNetConfig, images, train: bool = False):
+    """images: (B, H, W, 3) float32 in [0,1].  Returns (logits, new_state)."""
+    x = _conv(images, params["stem"]["w"])                 # stem: full precision
+    x, stem_s = _bn(x, params["stem"]["bn"], state["stem"], train, cfg.bn_momentum)
+    new_state = {"stem": stem_s, "blocks": []}
+    for p, s, st in zip(params["blocks"], state["blocks"], block_strides(cfg)):
+        x, ns = _block_fwd(x, p, s, st, cfg, train)
+        new_state["blocks"].append(ns)
+    x = jax.nn.relu(x)
+    x = jnp.mean(x, axis=(1, 2))
+    logits = x @ params["fc"]["w"] + params["fc"]["b"]     # head: full precision
+    return logits, new_state
+
+
+def loss_fn(params, state, cfg: ResNetConfig, images, labels, train=True):
+    logits, new_state = forward(params, state, cfg, images, train=train)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    return nll, (new_state, logits)

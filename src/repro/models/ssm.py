@@ -1,0 +1,172 @@
+"""Mamba-1 selective state-space mixer (Gu & Dao 2023), pure JAX.
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence (the
+recurrence h_t = a_t * h_{t-1} + b_t is associative); decode is the exact
+single-step recurrence carrying (ssm state, conv window) — O(1) per token,
+which is what makes the SSM/hybrid architectures eligible for long_500k.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense, init_dense
+
+
+def resolved_dt_rank(d_model: int, cfg: SSMConfig) -> int:
+    return cfg.dt_rank or -(-d_model // 16)
+
+
+def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16):
+    d_in = cfg.expand * d_model
+    dt_rank = resolved_dt_rank(d_model, cfg)
+    keys = jax.random.split(key, 6)
+    # S4D-real initialization of A
+    a = jnp.tile(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    # dt_proj bias init so that softplus(bias) spans [1e-3, 1e-1]
+    dt_init = jnp.exp(jax.random.uniform(keys[0], (d_in,), jnp.float32)
+                      * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": init_dense(keys[1], d_model, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(keys[2], (cfg.d_conv, d_in), jnp.float32)
+                   / math.sqrt(cfg.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": init_dense(keys[3], d_in, dt_rank + 2 * cfg.d_state, dtype),
+        "dt_proj": init_dense(keys[4], dt_rank, d_in, jnp.float32,
+                              scale=dt_rank ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_dense(keys[5], d_in, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over S.  x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_params(xc: jax.Array, p, cfg: SSMConfig, dt_rank: int):
+    """Input-dependent (dt, B, C) selective parameters."""
+    proj = dense(xc, p["x_proj"])                               # (..., R+2N)
+    delta_r = proj[..., :dt_rank]
+    b_ssm = proj[..., dt_rank:dt_rank + cfg.d_state].astype(jnp.float32)
+    c_ssm = proj[..., dt_rank + cfg.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        delta_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"])                                         # (..., d_in)
+    return dt, b_ssm, c_ssm
+
+
+def mamba_forward(x: jax.Array, p, cfg: SSMConfig, return_state: bool = False,
+                  chunk: int = 256):
+    """Full-sequence Mamba mixer.  x: (B, S, D) -> (B, S, D).
+
+    The selective scan runs in sequence chunks: the (B, S, d_in, N)
+    discretized tensors would otherwise be materialized whole (and at
+    log2(S) tree levels by associative_scan) — terabytes at d_in=16k.
+    Each chunk does a local associative scan and the inter-chunk state is
+    carried exactly; ``jax.checkpoint`` keeps the backward at O(chunk)
+    residuals.  The Pallas analogue on real TPUs fuses this per-block.
+
+    With ``return_state`` also returns the decode-ready state
+    {"h": (B, d_in, N) f32, "conv": (B, d_conv-1, d_in)} at the final step.
+    """
+    b, s, d = x.shape
+    d_in = cfg.expand * d
+    dt_rank = resolved_dt_rank(d, cfg)
+
+    xz = dense(x, p["in_proj"])                                 # (B,S,2*d_in)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+
+    a = -jnp.exp(p["A_log"])                                    # (d_in, N)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    if s % chunk != 0 or s <= chunk:
+        dt, b_ssm, c_ssm = _ssm_params(xc, p, cfg, dt_rank)
+        a_bar = jnp.exp(dt[..., None] * a)
+        bx = (dt * xc.astype(jnp.float32))[..., None] * b_ssm[:, :, None, :]
+        _, h_all = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        y = jnp.sum(h_all * c_ssm[:, :, None, :], axis=-1)
+        h_last = h_all[:, -1]
+    else:
+        nchunks = s // chunk
+        xc_c = xc.reshape(b, nchunks, chunk, d_in)
+
+        def body(h0, xck):
+            dt, b_ssm, c_ssm = _ssm_params(xck, p, cfg, dt_rank)
+            a_bar = jnp.exp(dt[..., None] * a)                  # (B,Q,d_in,N)
+            bx = (dt * xck.astype(jnp.float32))[..., None] * b_ssm[:, :, None, :]
+            a_cum, h_loc = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+            h = a_cum * h0[:, None] + h_loc                     # exact carry-in
+            yk = jnp.sum(h * c_ssm[:, :, None, :], axis=-1)     # (B,Q,d_in)
+            return h[:, -1], yk
+
+        h0 = jnp.zeros((b, d_in, cfg.d_state), jnp.float32)
+        h_last, y_c = jax.lax.scan(jax.checkpoint(body), h0,
+                                   jnp.moveaxis(xc_c, 1, 0))
+        y = jnp.moveaxis(y_c, 0, 1).reshape(b, s, d_in)
+
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(y.astype(x.dtype), p["out_proj"])
+    if not return_state:
+        return out
+    k = cfg.d_conv
+    pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+    state = {"h": h_last.astype(jnp.float32),                   # (B, d_in, N)
+             "conv": pad[:, -(k - 1):, :]}
+    return out, state
+
+
+def mamba_decode_step(x: jax.Array, state: dict, p, cfg: SSMConfig
+                      ) -> Tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, D); state: {"h": (B,d_in,N) f32,
+    "conv": (B, d_conv-1, d_in)}."""
+    b, s1, d = x.shape
+    d_in = cfg.expand * d
+    dt_rank = resolved_dt_rank(d, cfg)
+
+    xz = dense(x[:, 0], p["in_proj"])                           # (B, 2*d_in)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    # causal conv over the rolling window
+    window = jnp.concatenate([state["conv"], xs[:, None, :]], axis=1)  # (B,K,d_in)
+    w = p["conv_w"].astype(jnp.float32)                         # (K, d_in)
+    xc = jnp.sum(window.astype(jnp.float32) * w[None], axis=1) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)                        # (B, d_in)
+    new_conv = window[:, 1:, :].astype(state["conv"].dtype)
+
+    dt, b_ssm, c_ssm = _ssm_params(xc, p, cfg, dt_rank)         # (B,d_in),(B,N),(B,N)
+    a = -jnp.exp(p["A_log"])
+    a_bar = jnp.exp(dt[..., None] * a)                          # (B,d_in,N)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_ssm[:, None, :]
+    h = a_bar * state["h"] + bx                                 # (B,d_in,N)
+    y = jnp.sum(h * c_ssm[:, None, :], axis=-1)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(y.astype(x.dtype), p["out_proj"])               # (B, D)
+    return out[:, None, :], {"h": h, "conv": new_conv}
+
+
+def init_mamba_state(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16):
+    d_in = cfg.expand * d_model
+    return {
+        "h": jnp.zeros((batch, d_in, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), dtype),
+    }

@@ -1,0 +1,468 @@
+"""Unified decoder LM covering every assigned architecture family.
+
+A ``ModelConfig`` is compiled into a *block plan*: a list of scan segments,
+each segment being ``count`` repetitions of a short heterogeneous body of
+layers (e.g. Gemma-2 = 23 x [local-attn, global-attn]; Jamba = 9 x
+[7 x mamba, attn] with MoE on odd positions).  Parameters for a segment are
+stacked along a leading axis and the forward pass is a ``lax.scan`` over the
+stack, so the lowered HLO stays compact regardless of depth (the roofline
+analyzer multiplies while-body costs by the known trip count).
+
+Entry points
+------------
+init_params / param_specs   — allocation & ShapeDtypeStruct trees
+forward                     — logits for full sequences (train / prefill)
+loss_fn                     — next-token cross-entropy
+init_cache / cache_specs    — decode caches (KV ring-buffers for local
+                              layers, SSM states for mamba layers)
+prefill                     — forward + cache population
+decode_step                 — one-token serve step
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    dense, init_dense, rmsnorm, rope_dispatch, shard_activations, softcap,
+)
+
+
+# ---------------------------------------------------------------------------
+# block plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                  # "attn" | "mamba"
+    mlp: str                    # "dense" | "moe" | "none"
+    local: bool = False
+    d_ff: int = 0               # dense-MLP width (0 -> cfg.d_ff)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    count: int
+    layers: Tuple[LayerSpec, ...]
+
+
+def block_plan(cfg: ModelConfig) -> List[Segment]:
+    L = cfg.num_layers
+    if cfg.attn_pattern == "none":                       # pure SSM
+        mlp = "none" if cfg.d_ff == 0 else "dense"
+        return [Segment(L, (LayerSpec("mamba", mlp),))]
+
+    if cfg.attn_pattern == "hybrid_1_7":                 # Jamba-style
+        assert L % 8 == 0, "hybrid_1_7 needs depth % 8 == 0"
+        specs = []
+        for j in range(8):
+            mixer = "attn" if j == 7 else "mamba"
+            mlp = "moe" if (cfg.moe is not None and j % 2 == 1) else "dense"
+            specs.append(LayerSpec(mixer, mlp))
+        return [Segment(L // 8, tuple(specs))]
+
+    if cfg.attn_pattern == "local_global":               # Gemma-2-style
+        assert L % 2 == 0
+        mlp = "moe" if (cfg.moe is not None and cfg.moe.every == 1) else "dense"
+        return [Segment(L // 2, (LayerSpec("attn", mlp, local=True),
+                                 LayerSpec("attn", mlp, local=False)))]
+
+    # global attention
+    segs: List[Segment] = []
+    if cfg.moe is not None:
+        fd = cfg.moe.first_dense
+        if fd > 0:
+            segs.append(Segment(fd, (LayerSpec("attn", "dense",
+                                               d_ff=cfg.moe.d_ff_dense or cfg.d_ff),)))
+        if cfg.moe.every == 1:
+            segs.append(Segment(L - fd, (LayerSpec("attn", "moe"),)))
+        else:
+            assert (L - fd) % cfg.moe.every == 0
+            body = tuple(
+                LayerSpec("attn", "moe" if (j % cfg.moe.every == cfg.moe.every - 1)
+                          else "dense")
+                for j in range(cfg.moe.every))
+            segs.append(Segment((L - fd) // cfg.moe.every, body))
+        return segs
+    return [Segment(L, (LayerSpec("attn", "dense"),))]
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 256) -> int:
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if spec.mixer == "attn":
+        hd = cfg.resolved_head_dim
+        p["wq"] = init_dense(keys[0], d, cfg.num_heads * hd, dtype)
+        p["wk"] = init_dense(keys[1], d, cfg.num_kv_heads * hd, dtype)
+        p["wv"] = init_dense(keys[2], d, cfg.num_kv_heads * hd, dtype)
+        p["wo"] = init_dense(keys[3], cfg.num_heads * hd, d, dtype,
+                             scale=1.0 / math.sqrt(cfg.num_heads * hd))
+    else:
+        p["mamba"] = ssm_lib.init_mamba(keys[0], d, cfg.ssm or SSMConfig(), dtype)
+    if spec.mlp == "dense":
+        d_ff = spec.d_ff or cfg.d_ff
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["mlp"] = {
+            "w1": init_dense(keys[4], d, d_ff, dtype),
+            "w3": init_dense(keys[5], d, d_ff, dtype),
+            "w2": init_dense(keys[6], d_ff, d, dtype, scale=1.0 / math.sqrt(d_ff)),
+        }
+    elif spec.mlp == "moe":
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["moe"] = moe_lib.init_moe(keys[7], d, cfg.moe, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    plan = block_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 2)
+    v = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (v, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "blocks": [],
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_dense(keys[1], cfg.d_model, v, dtype)
+    for seg, k in zip(plan, keys[2:]):
+        seg_keys = jax.random.split(k, seg.count * len(seg.layers))
+        seg_keys = seg_keys.reshape(seg.count, len(seg.layers), 2)
+
+        def init_body(body_keys, _seg=seg):
+            return {str(j): _init_layer(body_keys[j], _seg.layers[j], cfg, dtype)
+                    for j in range(len(_seg.layers))}
+
+        params["blocks"].append(jax.vmap(init_body)(seg_keys))
+    return params
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — no allocation (for the dry-run)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg, dtype),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_mix(h, p, spec: LayerSpec, cfg: ModelConfig, positions,
+              attn_chunk: int = 1024):
+    b, s, d = h.shape
+    hd = cfg.resolved_head_dim
+    q = dense(h, p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = dense(h, p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = dense(h, p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    q = rope_dispatch(q, positions, cfg)
+    k = rope_dispatch(k, positions, cfg)
+    window = cfg.window_size if spec.local else 0
+    o = attn_lib.attention(q, k, v, causal=True, window=window,
+                           logit_cap=cfg.attn_logit_softcap, chunk=attn_chunk)
+    return dense(o.reshape(b, s, cfg.num_heads * hd), p["wo"]), (k, v)
+
+
+def _apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, positions,
+                 collect_state: bool = False, attn_chunk: int = 1024):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    aux = None
+    if spec.mixer == "attn":
+        mix, aux = _attn_mix(h, p, spec, cfg, positions, attn_chunk)
+    else:
+        if collect_state:
+            mix, aux = ssm_lib.mamba_forward(h, p["mamba"],
+                                             cfg.ssm or SSMConfig(),
+                                             return_state=True)
+        else:
+            mix = ssm_lib.mamba_forward(h, p["mamba"], cfg.ssm or SSMConfig())
+    x = x + mix
+    if spec.mlp != "none":
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.mlp == "moe":
+            x = x + moe_lib.moe_ffn(h2, p["moe"], cfg.moe)
+        else:
+            from repro.models.layers import swiglu_mlp
+            x = x + swiglu_mlp(h2, p["mlp"])
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
+            remat: bool = True, attn_chunk: int = 1024):
+    """Full-sequence forward.  Returns logits (B, S, V_padded)."""
+    x, positions = _embed_inputs(params, cfg, tokens, embeds, positions)
+    x = shard_activations(x)
+    plan = block_plan(cfg)
+
+    for seg, stacked in zip(plan, params["blocks"]):
+        def body(carry, layer_params, _seg=seg):
+            xx = carry
+            for j, spec in enumerate(_seg.layers):
+                xx, _ = _apply_layer(xx, layer_params[str(j)], spec, cfg,
+                                     positions, attn_chunk=attn_chunk)
+            return shard_activations(xx), None
+
+        scan_body = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(scan_body, x, stacked)
+
+    return _logits(params, cfg, x)
+
+
+def _embed_inputs(params, cfg, tokens, embeds, positions):
+    if embeds is not None:
+        x = embeds.astype(params["embed"].dtype)
+        b, s = x.shape[:2]
+    else:
+        x = params["embed"][tokens]
+        b, s = tokens.shape
+        # gemma-style embedding scaling keeps rmsnorm statistics sane at init
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return x, positions
+
+
+def _logits(params, cfg, x):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = dense(x, jnp.swapaxes(params["embed"], 0, 1), out_dtype=jnp.float32)
+    else:
+        logits = dense(x, params["unembed"], out_dtype=jnp.float32)
+    logits = shard_activations(logits, feature_axis="model")
+    logits = softcap(logits, cfg.final_logit_softcap)
+    v = padded_vocab(cfg)
+    if v != cfg.vocab_size:                    # mask vocab padding
+        pad_mask = jnp.arange(v) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, embeds=None,
+            remat: bool = True, attn_chunk: int = 1024):
+    """Mean next-token cross-entropy; labels < 0 are masked."""
+    logits = forward(params, cfg, tokens=tokens, embeds=embeds,
+                     remat=remat, attn_chunk=attn_chunk)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+# ---------------------------------------------------------------------------
+# decode cache
+# ---------------------------------------------------------------------------
+
+def _layer_cache_spec(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      max_len: int, dtype):
+    if spec.mixer == "mamba":
+        return ssm_lib.init_mamba_state(batch, cfg.d_model, cfg.ssm or SSMConfig(),
+                                        dtype)
+    hd = cfg.resolved_head_dim
+    size = min(cfg.window_size, max_len) if spec.local else max_len
+    if cfg.kv_cache_dtype == "int8":
+        # quantized KV: per-(token, head) symmetric scales (§Perf — at 32k+
+        # contexts the KV cache, not the weights, dominates decode traffic)
+        return {
+            "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), jnp.int8),
+            "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, size, cfg.num_kv_heads, 1), jnp.float16),
+            "v_scale": jnp.zeros((batch, size, cfg.num_kv_heads, 1), jnp.float16),
+        }
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def _quantize_kv(x):
+    """x: (B, S, KV, D) -> (int8 values, (B,S,KV,1) fp16 scales)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                               keepdims=True), 1e-6)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / amax * 127.0), -127, 127)
+    return q.astype(jnp.int8), (amax / 127.0).astype(jnp.float16)
+
+
+def _dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    plan = block_plan(cfg)
+    blocks = []
+    for seg in plan:
+        body = {str(j): _layer_cache_spec(spec, cfg, batch, max_len, dtype)
+                for j, spec in enumerate(seg.layers)}
+        blocks.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (seg.count,) + a.shape).copy(), body))
+    return {"blocks": blocks, "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _attn_decode(h, p, spec, cfg, lcache, cur_len):
+    b = h.shape[0]
+    hd = cfg.resolved_head_dim
+    q = dense(h, p["wq"]).reshape(b, 1, cfg.num_heads, hd)
+    k = dense(h, p["wk"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    v = dense(h, p["wv"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    pos = jnp.broadcast_to(cur_len[None, None], (b, 1))
+    q = rope_dispatch(q, pos, cfg)
+    k = rope_dispatch(k, pos, cfg)
+    size = lcache["k"].shape[1]
+    slot = (cur_len % size) if spec.local else cur_len
+    new_cache = {}
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache["k"] = jax.lax.dynamic_update_slice(lcache["k"], kq,
+                                                      (0, slot, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(lcache["v"], vq,
+                                                      (0, slot, 0, 0))
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+            lcache["k_scale"], ks, (0, slot, 0, 0))
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+            lcache["v_scale"], vs, (0, slot, 0, 0))
+        kc = _dequantize_kv(new_cache["k"], new_cache["k_scale"])
+        vc = _dequantize_kv(new_cache["v"], new_cache["v_scale"])
+    else:
+        kc = jax.lax.dynamic_update_slice(
+            lcache["k"], k.astype(lcache["k"].dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            lcache["v"], v.astype(lcache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+    if spec.local:
+        valid = jnp.minimum(cur_len + 1, size)
+        o = attn_lib.decode_attention(q, kc, vc, valid,
+                                      logit_cap=cfg.attn_logit_softcap)
+    else:
+        o = attn_lib.decode_attention(q, kc, vc, cur_len + 1,
+                                      logit_cap=cfg.attn_logit_softcap)
+    out = dense(o.reshape(b, 1, cfg.num_heads * hd), p["wo"])
+    return out, new_cache
+
+
+def _apply_layer_decode(x, p, spec, cfg, lcache, cur_len):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix, new_cache = _attn_decode(h, p, spec, cfg, lcache, cur_len)
+    else:
+        mix, new_cache = ssm_lib.mamba_decode_step(h, lcache, p["mamba"],
+                                                   cfg.ssm or SSMConfig())
+    x = x + mix
+    if spec.mlp != "none":
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.mlp == "moe":
+            x = x + moe_lib.moe_ffn(h2, p["moe"], cfg.moe)
+        else:
+            from repro.models.layers import swiglu_mlp
+            x = x + swiglu_mlp(h2, p["mlp"])
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None):
+    """One-token decode.  tokens: (B, 1) int32 (or embeds (B, 1, D)).
+
+    Returns (logits (B, V_padded), new_cache).
+    """
+    cur_len = cache["len"]
+    if embeds is not None:
+        x = embeds.astype(params["embed"].dtype)
+    else:
+        x = params["embed"][tokens]
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = shard_activations(x)
+    plan = block_plan(cfg)
+    new_blocks = []
+    for seg, stacked, ccache in zip(plan, params["blocks"], cache["blocks"]):
+        def body(carry, xs, _seg=seg):
+            xx = carry
+            layer_params, layer_cache = xs
+            new_lc = {}
+            for j, spec in enumerate(_seg.layers):
+                xx, nc = _apply_layer_decode(xx, layer_params[str(j)], spec, cfg,
+                                             layer_cache[str(j)], cur_len)
+                new_lc[str(j)] = nc
+            return shard_activations(xx), new_lc
+
+        x, new_c = jax.lax.scan(body, x, (stacked, ccache))
+        new_blocks.append(new_c)
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"blocks": new_blocks, "len": cur_len + 1}
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
+            max_len: Optional[int] = None, attn_chunk: int = 1024):
+    """Run the prompt through the model, returning (logits, populated cache)."""
+    x, positions = _embed_inputs(params, cfg, tokens, embeds, positions)
+    x = shard_activations(x)
+    b, s = x.shape[:2]
+    max_len = max_len or s
+    plan = block_plan(cfg)
+    new_blocks = []
+
+    for seg, stacked in zip(plan, params["blocks"]):
+        def body(carry, layer_params, _seg=seg):
+            xx = carry
+            caches = {}
+            for j, spec in enumerate(_seg.layers):
+                xx, aux = _apply_layer(xx, layer_params[str(j)], spec, cfg,
+                                       positions, collect_state=True,
+                                       attn_chunk=attn_chunk)
+                caches[str(j)] = _to_cache_entry(aux, spec, cfg, b, s, max_len,
+                                                 xx.dtype)
+            return shard_activations(xx), caches
+
+        x, seg_cache = jax.lax.scan(body, x, stacked)
+        new_blocks.append(seg_cache)
+
+    logits = _logits(params, cfg, x)
+    return logits, {"blocks": new_blocks,
+                    "len": jnp.asarray(s, jnp.int32)}
+
+
+def _to_cache_entry(aux, spec, cfg, b, s, max_len, dtype):
+    if spec.mixer == "mamba":
+        # mamba_forward(return_state=True) already produced the decode state
+        return {"h": aux["h"], "conv": aux["conv"].astype(dtype)}
+    k, v = aux
+    size = min(cfg.window_size, max_len) if spec.local else max_len
+    kc = jnp.zeros((b, size, cfg.num_kv_heads, cfg.resolved_head_dim), dtype)
+    vc = jnp.zeros_like(kc)
+    if spec.local and s > size:
+        # ring-buffer semantics: token at global position p lives at slot
+        # p % size, so the trailing window must be rolled into place
+        k = jnp.roll(k[:, -size:], shift=s % size, axis=1)
+        v = jnp.roll(v[:, -size:], shift=s % size, axis=1)
+    else:
+        s_eff = min(s, size)
+        k, v = k[:, :s_eff], v[:, :s_eff]
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(dtype), (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(dtype), (0, 0, 0, 0))
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(kc)
+        vq, vs = _quantize_kv(vc)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return {"k": kc, "v": vc}

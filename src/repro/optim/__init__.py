@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer, adamw, apply_updates, clip_by_global_norm, sgd,
+    step_decay, warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer", "adamw", "apply_updates", "clip_by_global_norm", "sgd",
+    "step_decay", "warmup_cosine",
+]

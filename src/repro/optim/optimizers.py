@@ -1,0 +1,193 @@
+"""Optimizers (pure JAX, no optax): SGD-momentum, AdamW, and AdamW with
+blockwise-int8 moment states.
+
+The int8-state AdamW applies the paper's own theme to the optimizer: m and v
+are stored as int8 with per-block absmax scales (bitsandbytes-style), cutting
+optimizer memory 4x — the difference between fitting and not fitting
+jamba-398B's training state on a 16 GB v5e chip (see DESIGN.md §6).
+
+API (optax-like, minimal):
+    opt = adamw(lr_schedule, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def _resolve_lr(lr: Union[float, Schedule], step) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    gn = jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(peak_lr: float, total_steps: int, warmup_ratio: float = 0.03,
+                  final_frac: float = 0.1) -> Schedule:
+    warmup = max(int(total_steps * warmup_ratio), 1)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def step_decay(lr: float, boundaries, factor: float = 0.1) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        mult = jnp.ones(())
+        for b in boundaries:
+            mult = jnp.where(step >= b, mult * factor, mult)
+        return lr * mult
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum (the paper's ResNet/DoReFa setting)
+# ---------------------------------------------------------------------------
+
+def sgd(lr: Union[float, Schedule], momentum: float = 0.9,
+        weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr_t = _resolve_lr(lr, step)
+
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu + g
+            d = g + momentum * mu_new if nesterov else mu_new
+            return -lr_t * d, mu_new
+
+        out = jax.tree.map(upd, grads, state["mu"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (fp32 or blockwise-int8 states)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 256
+_MIN_QUANT_SIZE = 1 << 14
+
+
+def _quantizable(p) -> bool:
+    return p.size >= _MIN_QUANT_SIZE and p.shape[-1] % _BLOCK == 0
+
+
+def _q8_block(x: jax.Array):
+    """Blockwise absmax int8 over the LAST axis, preserving shape.
+
+    Keeping the parameter's shape (and therefore its sharding layout) is
+    essential: flat repacking would force a cross-layout reshard of the
+    dequantized fp32 moments — replicating terabytes at 398B scale.
+    """
+    lead, n = x.shape[:-1], x.shape[-1]
+    xb = x.reshape(lead + (n // _BLOCK, _BLOCK))
+    amax = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True), 1e-12)
+    q = jnp.clip(jnp.round(xb / amax * 127.0), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), amax[..., 0].astype(jnp.float32)
+
+
+def _dq8_block(q: jax.Array, scale: jax.Array):
+    lead, n = q.shape[:-1], q.shape[-1]
+    xb = q.reshape(lead + (n // _BLOCK, _BLOCK)).astype(jnp.float32)
+    return (xb * scale[..., None] / 127.0).reshape(q.shape)
+
+
+def adamw(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          state_dtype: str = "fp32") -> Optimizer:
+    """state_dtype: 'fp32' | 'int8' (blockwise-quantized moments; small or
+    block-unfriendly leaves stay fp32)."""
+    quantized = state_dtype == "int8"
+
+    def zi(p):
+        if quantized and _quantizable(p):
+            nb = p.shape[-1] // _BLOCK
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "s": jnp.zeros(p.shape[:-1] + (nb,), jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def init(params):
+        return {"m": jax.tree.map(zi, params), "v": jax.tree.map(zi, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        count = state["count"] + 1
+        step_t = count if step is None else step
+        lr_t = _resolve_lr(lr, step_t)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m_s, v_s, p):
+            g = g.astype(jnp.float32)
+            q8 = isinstance(m_s, dict)
+            m_old = _dq8_block(m_s["q"], m_s["s"]) if q8 else m_s
+            v_old = _dq8_block(v_s["q"], v_s["s"]) if q8 else v_s
+            m = b1 * m_old + (1 - b1) * g
+            v = b2 * v_old + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            if q8:
+                mq, ms = _q8_block(m)
+                vq, vs = _q8_block(v)
+                return u, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+            return u, m, v
+
+        is_mv = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"], is_leaf=is_mv)
+        flat_v = jax.tree_util.tree_leaves(state["v"], is_leaf=is_mv)
+        flat_p = jax.tree_util.tree_leaves(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in
+                zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+        return updates, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update)

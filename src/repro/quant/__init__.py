@@ -1,0 +1,31 @@
+from repro.quant.qtypes import QTensor, QuantScheme, is_qtensor, normalize_qtensor, NF4_CODEBOOK
+from repro.quant.quantizers import (
+    quantize_weight,
+    dequantize,
+    quantize_symmetric,
+    dequantize_symmetric,
+    quantize_activation,
+    pack_int4,
+    unpack_int4,
+    quantization_error,
+    absmax_scale,
+    int_range,
+)
+from repro.quant.ptq import PTQConfig, quantize_tree, dequantize_tree, dequantize_leaf, tree_quantized_bytes
+from repro.quant.dorefa import (
+    quantize_weight_dorefa,
+    quantize_act_dorefa,
+    quantize_k,
+    parse_wa,
+)
+from repro.quant.qlora import QLoRAConfig, quantize_base, init_adapters, lora_matmul, merge_adapters
+
+__all__ = [
+    "QTensor", "QuantScheme", "is_qtensor", "normalize_qtensor", "NF4_CODEBOOK",
+    "quantize_weight", "dequantize", "quantize_symmetric", "dequantize_symmetric",
+    "quantize_activation", "pack_int4", "unpack_int4", "quantization_error",
+    "absmax_scale", "int_range",
+    "PTQConfig", "quantize_tree", "dequantize_tree", "dequantize_leaf", "tree_quantized_bytes",
+    "quantize_weight_dorefa", "quantize_act_dorefa", "quantize_k", "parse_wa",
+    "QLoRAConfig", "quantize_base", "init_adapters", "lora_matmul", "merge_adapters",
+]

@@ -1,0 +1,53 @@
+"""DoReFa-Net fake quantization (Zhou et al. 2016) — the paper's QAT method.
+
+Used for the ResNet w{2,4,8}a{2,4,8} experiments (Table 1).  All ops are
+differentiable via the straight-through estimator (STE).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste_round(x: jax.Array) -> jax.Array:
+    """round(x) with identity gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def quantize_k(x: jax.Array, bits: int) -> jax.Array:
+    """DoReFa uniform quantizer over [0, 1] with 2^k levels (STE)."""
+    if bits >= 32:
+        return x
+    n = float(2 ** bits - 1)
+    return _ste_round(x * n) / n
+
+
+def quantize_weight_dorefa(w: jax.Array, bits: int) -> jax.Array:
+    """DoReFa weight quantization.
+
+    w -> tanh(w) / max|tanh(w)| in [-1,1], shifted to [0,1], quantized,
+    shifted back.  1-bit case uses sign * E|w| (not exercised here).
+    """
+    if bits >= 32:
+        return w
+    t = jnp.tanh(w.astype(jnp.float32))
+    t = t / (jnp.max(jnp.abs(t)) + 1e-8)
+    q = 2.0 * quantize_k(t * 0.5 + 0.5, bits) - 1.0
+    return q.astype(w.dtype)
+
+
+def quantize_act_dorefa(x: jax.Array, bits: int) -> jax.Array:
+    """DoReFa activation quantization: clip to [0,1] then quantize (STE)."""
+    if bits >= 32:
+        return x
+    xc = jnp.clip(x.astype(jnp.float32), 0.0, 1.0)
+    return quantize_k(xc, bits).astype(x.dtype)
+
+
+def parse_wa(scheme: str):
+    """'w4a4' -> (4, 4); 'w8a8' -> (8, 8)."""
+    s = scheme.lower()
+    if not (s.startswith("w") and "a" in s):
+        raise ValueError(f"not a wNaM scheme: {scheme}")
+    wbits, abits = s[1:].split("a")
+    return int(wbits), int(abits)

@@ -1,0 +1,130 @@
+"""Post-training quantization over parameter pytrees.
+
+Walks a params pytree and quantizes every eligible weight matrix into a
+``QTensor`` according to a ``PTQConfig``.  Per-path include/exclude rules let
+configs keep sensitive tensors (embeddings, norms, routers) in high precision
+— the "outlier aware" practice the paper's related work (OWQ/AWQ) motivates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QTensor, QuantScheme
+from repro.quant import quantizers
+
+
+@dataclasses.dataclass(frozen=True)
+class PTQConfig:
+    scheme: QuantScheme = QuantScheme.INT8
+    group_size: int = 128
+    # regexes over 'a/b/c' tree paths
+    include: Tuple[str, ...] = (r".*(wq|wk|wv|wo|w1|w2|w3|in_proj|out_proj|gate_proj|up_proj|down_proj|experts).*",)
+    exclude: Tuple[str, ...] = (r".*(embed|norm|ln|scale|bias|router|freq).*",)
+    min_size: int = 1 << 14   # don't quantize tiny tensors
+
+    def matches(self, path: str) -> bool:
+        if any(re.fullmatch(p, path) for p in self.exclude):
+            return False
+        return any(re.fullmatch(p, path) for p in self.include)
+
+
+def quantize_tree(params, config: PTQConfig):
+    """Quantize eligible leaves of ``params``; returns a mixed pytree where
+    quantized leaves are QTensors and the rest are unchanged arrays."""
+    if config.scheme in (QuantScheme.BF16, QuantScheme.FP16, QuantScheme.FP32):
+        return params
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_k(k) for k in path)
+        if (hasattr(leaf, "ndim") and leaf.ndim >= 2
+                and leaf.size >= config.min_size and config.matches(name)):
+            out.append(_quantize_leaf(leaf, config))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _quantize_leaf(w, config: PTQConfig) -> QTensor:
+    """Quantize a weight, preserving leading (layer-stack) axes.
+
+    Stacked weights (L, in, out) keep L as the leading axis of ``data`` and
+    ``scale`` so ``lax.scan`` can slice QTensor pytrees per layer.
+    """
+    if w.ndim == 2:
+        return quantizers.quantize_weight(w, config.scheme, config.group_size)
+    lead = w.shape[:-2]
+    k, n = w.shape[-2], w.shape[-1]
+    flat = w.reshape((-1, k, n))
+    inner = jax.vmap(lambda ww: quantizers.quantize_weight(ww, config.scheme,
+                                                           config.group_size))(flat)
+    return QTensor(
+        data=inner.data.reshape(lead + inner.data.shape[1:]),
+        scale=inner.scale.reshape(lead + inner.scale.shape[1:]),
+        zero=None,
+        scheme=inner.scheme,
+        shape=tuple(w.shape),
+        group_size=inner.group_size,
+    )
+
+
+def dequantize_leaf(qt, dtype=jnp.bfloat16):
+    """Inverse of _quantize_leaf, restoring the original leaf shape.
+    Raw arrays pass through (leaves below min_size are never quantized)."""
+    if not isinstance(qt, QTensor):
+        return qt.astype(dtype)
+    from repro.quant.qtypes import normalize_qtensor
+    qt = normalize_qtensor(qt)
+    shape = qt.shape
+    if len(shape) == 2:
+        return quantizers.dequantize(qt, dtype)
+    lead = shape[:-2]
+    k, n = shape[-2], shape[-1]
+    nlead = len(lead)
+    data = qt.data.reshape((-1,) + qt.data.shape[nlead:])
+    scale = qt.scale.reshape((-1,) + qt.scale.shape[nlead:])
+
+    def deq(d, s):
+        inner = QTensor(data=d, scale=s, zero=None, scheme=qt.scheme,
+                        shape=(k, n), group_size=qt.group_size)
+        return quantizers.dequantize(inner, dtype)
+
+    w = jax.vmap(deq)(data, scale)
+    return w.reshape(shape)
+
+
+def dequantize_tree(params, dtype=jnp.bfloat16):
+    """Replace every QTensor leaf with its dequantized array."""
+    return jax.tree.map(
+        lambda x: dequantize_leaf(x, dtype) if isinstance(x, QTensor) else x,
+        params,
+        is_leaf=lambda x: isinstance(x, QTensor),
+    )
+
+
+def tree_quantized_bytes(params) -> int:
+    """Total storage bytes, counting QTensors at their packed size."""
+    total = 0
+    for leaf in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes
+        elif hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total
+
+
+def _k(k) -> str:
+    import jax.tree_util as jtu
+    if isinstance(k, jtu.DictKey):
+        return str(k.key)
+    if isinstance(k, jtu.GetAttrKey):
+        return k.name
+    if isinstance(k, jtu.SequenceKey):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,107 @@
+"""QLoRA (Dettmers et al. 2023) — the paper's LLM fine-tuning method.
+
+The base model's weight matrices are frozen in NF4/INT4/INT8 (QTensors);
+trainable low-rank adapters (A, B) ride alongside.  The effective weight is
+
+    W_eff = dequant(W_q) + (alpha / r) * A @ B
+
+Only the adapters receive gradients, so the optimizer state is tiny — the
+property that lets QLoRA fine-tune large models on small devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QTensor, QuantScheme
+from repro.quant import ptq
+
+
+@dataclasses.dataclass(frozen=True)
+class QLoRAConfig:
+    scheme: QuantScheme = QuantScheme.NF4
+    group_size: int = 64
+    lora_r: int = 16
+    lora_alpha: int = 8
+    lora_dropout: float = 0.05
+    # which weights get adapters (paper targets attention + MLP projections)
+    target: Tuple[str, ...] = (r".*(wq|wk|wv|wo|w1|w2|w3).*",)
+
+    @property
+    def scaling(self) -> float:
+        return self.lora_alpha / max(self.lora_r, 1)
+
+
+def quantize_base(params, config: QLoRAConfig):
+    """Freeze the base model into QTensors per the QLoRA config."""
+    pcfg = ptq.PTQConfig(scheme=config.scheme, group_size=config.group_size)
+    return ptq.quantize_tree(params, pcfg)
+
+
+def init_adapters(key: jax.Array, params, config: QLoRAConfig):
+    """Create LoRA (A, B) pairs for every targeted 2-D+ weight.
+
+    A ~ N(0, 1/r) (kaiming-ish), B = 0 so training starts at the base model.
+    Returns a dict path -> {"a": (in,r), "b": (r,out)} (leading layer dims kept).
+    """
+    adapters: Dict[str, Dict[str, jax.Array]] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QTensor))
+    for path, leaf in flat:
+        name = "/".join(ptq._k(k) for k in path)
+        shape = leaf.shape if isinstance(leaf, QTensor) else getattr(leaf, "shape", ())
+        if len(shape) < 2:
+            continue
+        if not any(re.fullmatch(p, name) for p in config.target):
+            continue
+        k_in, n_out = shape[-2], shape[-1]
+        lead = tuple(shape[:-2])
+        key, ka = jax.random.split(key)
+        a = jax.random.normal(ka, lead + (k_in, config.lora_r), jnp.float32)
+        a = a / jnp.sqrt(float(config.lora_r))
+        b = jnp.zeros(lead + (config.lora_r, n_out), jnp.float32)
+        adapters[name] = {"a": a.astype(jnp.bfloat16), "b": b.astype(jnp.bfloat16)}
+    return adapters
+
+
+def lora_matmul(x: jax.Array, base_w, adapter, config: QLoRAConfig,
+                dropout_key=None, deterministic: bool = True):
+    """x @ W_eff where W_eff = dequant(base) + scaling * A@B.
+
+    Computed factored (x@A)@B — never materializes the adapter product.
+    """
+    if isinstance(base_w, QTensor):
+        w = ptq.dequantize_leaf(base_w, jnp.bfloat16)
+    else:
+        w = base_w
+    y = x @ w
+    if adapter is not None:
+        xa = x
+        if not deterministic and config.lora_dropout > 0 and dropout_key is not None:
+            keep = jax.random.bernoulli(dropout_key, 1.0 - config.lora_dropout, x.shape)
+            xa = jnp.where(keep, x / (1.0 - config.lora_dropout), 0.0).astype(x.dtype)
+        y = y + (xa @ adapter["a"].astype(x.dtype)) @ adapter["b"].astype(x.dtype) * config.scaling
+    return y
+
+
+def merge_adapters(params, adapters: Dict[str, Dict[str, jax.Array]],
+                   config: QLoRAConfig):
+    """Fold adapters into (dequantized) base weights — deployment export."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QTensor))
+    out = []
+    for path, leaf in flat:
+        name = "/".join(ptq._k(k) for k in path)
+        if name in adapters:
+            w = ptq.dequantize_leaf(leaf, jnp.float32) if isinstance(leaf, QTensor) else leaf.astype(jnp.float32)
+            ab = jnp.einsum("...kr,...rn->...kn",
+                            adapters[name]["a"].astype(jnp.float32),
+                            adapters[name]["b"].astype(jnp.float32))
+            out.append((w + config.scaling * ab).astype(jnp.bfloat16))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,141 @@
+"""Quantization type system.
+
+``QuantScheme`` names the schemes the paper exercises (FP16/INT8/INT4 for
+deployment, w{2,4,8}a{2,4,8} for DoReFa QAT, NF4 for QLoRA).  ``QTensor`` is
+the packed quantized-tensor pytree used throughout the framework: kernels,
+serving, PTQ and QLoRA all traffic in it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuantScheme(str, enum.Enum):
+    """Named quantization schemes.
+
+    Values double as config-file identifiers (``--quant int4`` etc.).
+    """
+
+    FP32 = "fp32"
+    FP16 = "fp16"       # bf16 on TPU; name kept for paper parity
+    BF16 = "bf16"
+    INT8 = "int8"       # symmetric per-channel weight + per-tensor act
+    INT4 = "int4"       # symmetric per-group weight-only (packed nibbles)
+    NF4 = "nf4"         # QLoRA normal-float-4, blockwise absmax
+    W8A8 = "w8a8"
+    W4A4 = "w4a4"
+    W2A2 = "w2a2"
+
+    @property
+    def weight_bits(self) -> int:
+        return {
+            QuantScheme.FP32: 32, QuantScheme.FP16: 16, QuantScheme.BF16: 16,
+            QuantScheme.INT8: 8, QuantScheme.INT4: 4, QuantScheme.NF4: 4,
+            QuantScheme.W8A8: 8, QuantScheme.W4A4: 4, QuantScheme.W2A2: 2,
+        }[self]
+
+    @property
+    def act_bits(self) -> int:
+        return {
+            QuantScheme.FP32: 32, QuantScheme.FP16: 16, QuantScheme.BF16: 16,
+            QuantScheme.INT8: 8, QuantScheme.INT4: 16, QuantScheme.NF4: 16,
+            QuantScheme.W8A8: 8, QuantScheme.W4A4: 4, QuantScheme.W2A2: 2,
+        }[self]
+
+    @property
+    def is_weight_only(self) -> bool:
+        return self in (QuantScheme.INT4, QuantScheme.NF4)
+
+    @property
+    def bytes_per_weight(self) -> float:
+        return self.weight_bits / 8.0
+
+
+# NF4 codebook (QLoRA, Dettmers et al. 2023): 16 quantiles of a standard
+# normal, normalized to [-1, 1].
+NF4_CODEBOOK = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    dtype=np.float32,
+)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """A quantized tensor: packed integer data + scales (+ optional zeros).
+
+    Attributes:
+      data: packed integer array.  For int8 this is the logical shape; for
+        int4/nf4 two nibbles are packed per int8 along the *last* axis, so
+        ``data.shape[-1] == shape[-1] // 2``.
+      scale: dequantization scale, broadcastable to the unpacked shape after
+        expanding ``group`` structure (see quantizers.py).
+      zero: optional zero-point (asymmetric schemes); None for symmetric.
+      scheme: static QuantScheme tag.
+      shape: static logical (unpacked) shape.
+      group_size: static group size along the contraction axis (-1 = per-channel).
+    """
+
+    data: jax.Array
+    scale: jax.Array
+    zero: Optional[jax.Array]
+    scheme: QuantScheme
+    shape: Tuple[int, ...]
+    group_size: int
+
+    def tree_flatten(self):
+        return (self.data, self.scale, self.zero), (self.scheme, self.shape, self.group_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale, zero = children
+        scheme, shape, group_size = aux
+        return cls(data=data, scale=scale, zero=zero, scheme=scheme,
+                   shape=shape, group_size=group_size)
+
+    @property
+    def logical_shape(self) -> Tuple[int, ...]:
+        return self.shape
+
+    @property
+    def nbytes(self) -> int:
+        total = 0
+        for arr in (self.data, self.scale, self.zero):
+            if arr is not None and hasattr(arr, "shape"):
+                total += int(np.prod(arr.shape)) * jnp.dtype(arr.dtype).itemsize
+        return total
+
+    def __repr__(self) -> str:  # keep pytree printing short
+        return (f"QTensor({self.scheme.value}, shape={self.shape}, "
+                f"group={self.group_size})")
+
+
+def is_qtensor(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+def normalize_qtensor(qt: QTensor) -> QTensor:
+    """Repair static ``shape`` after pytree slicing.
+
+    ``lax.scan``/vmap slice a QTensor's array leaves along leading axes but
+    leave the static aux untouched; detect the rank mismatch and drop leading
+    entries of ``shape`` accordingly (data rank always mirrors logical rank).
+    """
+    drop = len(qt.shape) - qt.data.ndim
+    if drop <= 0:
+        return qt
+    return QTensor(data=qt.data, scale=qt.scale, zero=qt.zero,
+                   scheme=qt.scheme, shape=qt.shape[drop:],
+                   group_size=qt.group_size)

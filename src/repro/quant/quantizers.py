@@ -1,0 +1,193 @@
+"""Core quantize/dequantize primitives.
+
+Symmetric absmax quantization (per-tensor / per-channel / per-group),
+int4 nibble packing, and the NF4 codebook path used by QLoRA.
+
+Conventions
+-----------
+* Weights are 2-D ``(in_features, out_features)`` — the contraction axis is 0.
+  Per-channel scales are per *output* channel; per-group scales split the
+  contraction axis into groups of ``group_size``.
+* int4 values live in [-8, 7] and are packed two-per-int8 along the
+  contraction axis (axis 0 for weights): even rows in the low nibble.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.qtypes import NF4_CODEBOOK, QTensor, QuantScheme
+
+_EPS = 1e-8
+
+
+def int_range(bits: int) -> Tuple[int, int]:
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+# ---------------------------------------------------------------------------
+# symmetric absmax quantization
+# ---------------------------------------------------------------------------
+
+def absmax_scale(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    """Symmetric scale such that x/scale fits in the signed ``bits`` range."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, _EPS) / qmax
+
+
+def quantize_symmetric(x: jax.Array, bits: int, axis=None):
+    """Round-to-nearest symmetric quantization. Returns (int values, scale)."""
+    scale = absmax_scale(x, bits, axis=axis)
+    lo, hi = int_range(bits)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), lo, hi)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_symmetric(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# int4 packing
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jax.Array, axis: int = 0) -> jax.Array:
+    """Pack int4 values ([-8,7], stored int8) two-per-byte along ``axis``."""
+    if q.shape[axis] % 2 != 0:
+        raise ValueError(f"axis {axis} (size {q.shape[axis]}) must be even to pack")
+    q = jnp.moveaxis(q, axis, 0)
+    lo = q[0::2] & 0x0F
+    hi = (q[1::2] & 0x0F) << 4
+    packed = (lo | hi).astype(jnp.int8)
+    return jnp.moveaxis(packed, 0, axis)
+
+
+def unpack_int4(packed: jax.Array, axis: int = 0) -> jax.Array:
+    """Inverse of :func:`pack_int4` (sign-extends nibbles)."""
+    p = jnp.moveaxis(packed, axis, 0)
+    lo = (p.astype(jnp.int8) << 4) >> 4          # sign-extend low nibble
+    hi = p.astype(jnp.int8) >> 4                  # arithmetic shift: high nibble
+    out = jnp.stack([lo, hi], axis=1).reshape((-1,) + p.shape[1:])
+    return jnp.moveaxis(out, 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# weight quantization entry points (produce QTensor)
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w: jax.Array, scheme: QuantScheme, group_size: int = 128) -> QTensor:
+    """Quantize a 2-D weight ``(in, out)`` into a QTensor."""
+    if w.ndim < 2:
+        raise ValueError("quantize_weight expects >=2-D weights")
+    scheme = QuantScheme(scheme)
+    if scheme in (QuantScheme.BF16, QuantScheme.FP16, QuantScheme.FP32):
+        raise ValueError("no-op schemes should not construct QTensors")
+    if scheme in (QuantScheme.INT8, QuantScheme.W8A8):
+        # per-output-channel symmetric over the contraction axis
+        q, scale = quantize_symmetric(w, 8, axis=tuple(range(w.ndim - 1)))
+        return QTensor(data=q, scale=scale, zero=None, scheme=scheme,
+                       shape=tuple(w.shape), group_size=-1)
+    if scheme == QuantScheme.INT4:
+        return _quantize_grouped_int(w, bits=4, scheme=scheme, group_size=group_size)
+    if scheme == QuantScheme.NF4:
+        return _quantize_nf4(w, group_size=group_size)
+    if scheme in (QuantScheme.W4A4, QuantScheme.W2A2):
+        bits = scheme.weight_bits
+        q, scale = quantize_symmetric(w, bits, axis=tuple(range(w.ndim - 1)))
+        return QTensor(data=q, scale=scale, zero=None, scheme=scheme,
+                       shape=tuple(w.shape), group_size=-1)
+    raise ValueError(f"unsupported scheme {scheme}")
+
+
+def _quantize_grouped_int(w: jax.Array, bits: int, scheme: QuantScheme,
+                          group_size: int) -> QTensor:
+    """Per-group symmetric int quant along contraction axis 0, packed if 4-bit."""
+    k = w.shape[0]
+    rest = w.shape[1:]
+    if group_size <= 0 or group_size > k:
+        group_size = k
+    if k % group_size != 0:
+        raise ValueError(f"in_features {k} not divisible by group_size {group_size}")
+    g = k // group_size
+    wg = w.reshape((g, group_size) + rest)
+    scale = absmax_scale(wg, bits, axis=1)                  # (g, 1, *rest)
+    lo, hi = int_range(bits)
+    q = jnp.clip(jnp.round(wg.astype(jnp.float32) / scale), lo, hi).astype(jnp.int8)
+    q = q.reshape((k,) + rest)
+    scale = scale.reshape((g,) + rest).astype(jnp.float32)  # (g, *rest)
+    data = pack_int4(q, axis=0) if bits == 4 else q
+    return QTensor(data=data, scale=scale, zero=None, scheme=scheme,
+                   shape=tuple(w.shape), group_size=group_size)
+
+
+def _quantize_nf4(w: jax.Array, group_size: int) -> QTensor:
+    """Blockwise NF4: normalize each group by absmax, snap to codebook."""
+    k = w.shape[0]
+    rest = w.shape[1:]
+    if group_size <= 0 or group_size > k:
+        group_size = k
+    if k % group_size != 0:
+        raise ValueError(f"in_features {k} not divisible by group_size {group_size}")
+    g = k // group_size
+    wg = w.reshape((g, group_size) + rest).astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(wg), axis=1, keepdims=True), _EPS)
+    normed = wg / amax                                       # in [-1, 1]
+    code = jnp.asarray(NF4_CODEBOOK)
+    idx = jnp.argmin(jnp.abs(normed[..., None] - code), axis=-1).astype(jnp.int8)
+    idx = idx.reshape((k,) + rest)
+    # store codebook *indices* (0..15) packed as nibbles; scale = group absmax
+    packed = pack_int4(jnp.where(idx > 7, idx - 16, idx).astype(jnp.int8), axis=0)
+    scale = amax.reshape((g,) + rest).astype(jnp.float32)
+    return QTensor(data=packed, scale=scale, zero=None, scheme=QuantScheme.NF4,
+                   shape=tuple(w.shape), group_size=group_size)
+
+
+def dequantize(qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    """Reconstruct the full-precision weight from a QTensor."""
+    scheme = qt.scheme
+    k = qt.shape[0]
+    rest = qt.shape[1:]
+    if scheme in (QuantScheme.INT8, QuantScheme.W8A8, QuantScheme.W4A4, QuantScheme.W2A2):
+        return (qt.data.astype(jnp.float32) * qt.scale).astype(dtype)
+    if scheme == QuantScheme.INT4:
+        q = unpack_int4(qt.data, axis=0)
+        g = qt.scale.shape[0]
+        wq = q.reshape((g, k // g) + rest).astype(jnp.float32)
+        w = wq * qt.scale[:, None]
+        return w.reshape((k,) + rest).astype(dtype)
+    if scheme == QuantScheme.NF4:
+        idx = unpack_int4(qt.data, axis=0)
+        idx = jnp.where(idx < 0, idx + 16, idx)             # back to 0..15
+        code = jnp.asarray(NF4_CODEBOOK)
+        normed = code[idx]
+        g = qt.scale.shape[0]
+        w = normed.reshape((g, k // g) + rest) * qt.scale[:, None]
+        return w.reshape((k,) + rest).astype(dtype)
+    raise ValueError(f"unsupported scheme {scheme}")
+
+
+def quantization_error(w: jax.Array, qt: QTensor) -> float:
+    """Relative Frobenius reconstruction error — used in tests & calibration."""
+    wd = dequantize(qt, dtype=jnp.float32)
+    num = jnp.linalg.norm((w.astype(jnp.float32) - wd).reshape(-1))
+    den = jnp.linalg.norm(w.astype(jnp.float32).reshape(-1)) + _EPS
+    return float(num / den)
+
+
+# ---------------------------------------------------------------------------
+# activation quantization (dynamic, per-tensor or per-token)
+# ---------------------------------------------------------------------------
+
+def quantize_activation(x: jax.Array, bits: int = 8, per_token: bool = True):
+    """Dynamic symmetric activation quantization; returns (q, scale)."""
+    if per_token:
+        scale = absmax_scale(x, bits, axis=(x.ndim - 1,))   # (..., 1)
+    else:
+        scale = absmax_scale(x, bits, axis=None)
+    lo, hi = int_range(bits)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), lo, hi).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

@@ -1,0 +1,3 @@
+from repro.serve.engine import Request, ServeEngine, throughput_tokens_per_s
+
+__all__ = ["Request", "ServeEngine", "throughput_tokens_per_s"]

@@ -1,0 +1,134 @@
+"""Serving engine: prefill + batched decode with quantized weights.
+
+``ServeEngine`` wraps a model config + (optionally PTQ-quantized) params and
+exposes the production entry points the dry-run lowers:
+
+* ``prefill_step``  — prompt -> (logits, cache)
+* ``serve_step``    — one new token against the KV cache (decode_32k /
+                      long_500k cells)
+
+plus a host-side ``generate`` loop with greedy/temperature sampling and a
+simple continuous-batching request queue (new requests are admitted whenever
+a slot frees, standing in for the paper's llama.cpp serving layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.quant import PTQConfig, QuantScheme, quantize_tree
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    submitted_at: float = 0.0
+    tokens: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scheme: str = "bf16",
+                 max_batch: int = 8, max_len: int = 512, group_size: int = 64):
+        self.cfg = cfg
+        self.scheme = scheme
+        if scheme in ("int8", "int4", "nf4", "w8a8"):
+            params = quantize_tree(
+                params, PTQConfig(scheme=QuantScheme(scheme),
+                                  group_size=group_size, min_size=1 << 10))
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, cache, toks: tfm.decode_step(p, cfg, cache, tokens=toks))
+        self._prefill = jax.jit(
+            lambda p, toks, ml=max_len: tfm.prefill(p, cfg, tokens=toks,
+                                                    max_len=ml))
+
+    # -- low-level steps (also what the dry-run lowers) ----------------------
+
+    def prefill(self, tokens: jax.Array):
+        return self._prefill(self.params, tokens)
+
+    def serve_step(self, cache, tokens: jax.Array):
+        return self._decode(self.params, cache, tokens)
+
+    # -- generation -----------------------------------------------------------
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """Greedy/temperature batched generation.  prompts: (B, S)."""
+        b, s = prompts.shape
+        assert s + max_new_tokens <= self.max_len
+        logits, cache = self.prefill(jnp.asarray(prompts))
+        key = jax.random.PRNGKey(seed)
+        out = []
+        last = self._sample(logits[:, -1], temperature, key)
+        for i in range(max_new_tokens):
+            out.append(np.asarray(last))
+            logits, cache = self.serve_step(cache, last[:, None])
+            key, sub = jax.random.split(key)
+            last = self._sample(logits, temperature, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, temperature, key):
+        logits = logits[..., :self.cfg.vocab_size]
+        if temperature and temperature > 0:
+            return jax.random.categorical(key, logits / temperature, axis=-1)
+        return jnp.argmax(logits, axis=-1)
+
+    # -- continuous batching ---------------------------------------------------
+
+    def serve_queue(self, requests: List[Request],
+                    step_budget: int = 10_000) -> Dict[int, List[int]]:
+        """Simple continuous batcher: fixed B slots; finished slots are
+        refilled from the queue each step (per-slot caches are re-prefilled
+        on admission — slot-level paging is future work)."""
+        pending = list(requests)
+        results: Dict[int, List[int]] = {}
+        active: List[Request] = []
+        steps = 0
+        while (pending or active) and steps < step_budget:
+            # admit
+            while pending and len(active) < self.max_batch:
+                req = pending.pop(0)
+                req.tokens = []
+                active.append(req)
+            # run each active request one token (batched by padding to a
+            # common prompt length)
+            for req in list(active):
+                prompt = np.concatenate([req.prompt, np.array(req.tokens, np.int32)])
+                toks = self.generate(prompt[None, :], max_new_tokens=1,
+                                     temperature=req.temperature)
+                req.tokens.append(int(toks[0, 0]))
+                if len(req.tokens) >= req.max_new_tokens:
+                    results[req.uid] = req.tokens
+                    req.done = True
+                    active.remove(req)
+            steps += 1
+        for req in active:
+            results[req.uid] = req.tokens or []
+        return results
+
+
+def throughput_tokens_per_s(engine: ServeEngine, batch: int, prompt_len: int,
+                            new_tokens: int = 16, seed: int = 0) -> float:
+    """Measured decode throughput (used by Fig 5 / Table 4 benchmarks on CPU;
+    the TPU numbers come from the cost model)."""
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, engine.cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+    engine.generate(prompts, max_new_tokens=2)          # warmup / compile
+    t0 = time.perf_counter()
+    engine.generate(prompts, max_new_tokens=new_tokens)
+    dt = time.perf_counter() - t0
+    return batch * new_tokens / dt

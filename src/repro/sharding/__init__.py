@@ -1,0 +1,9 @@
+from repro.sharding.specs import (
+    batch_shardings, cache_shardings, dp_spec, fsdp_axes,
+    opt_state_shardings, param_spec, param_shardings,
+)
+
+__all__ = [
+    "batch_shardings", "cache_shardings", "dp_spec", "fsdp_axes",
+    "opt_state_shardings", "param_spec", "param_shardings",
+]

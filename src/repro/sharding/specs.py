@@ -1,0 +1,225 @@
+"""Partition rules: parameter/activation/cache PartitionSpecs per mesh.
+
+Policy (see DESIGN.md §6):
+  * 2-D "FSDP x TP" for parameters: contraction-side dim shards over the
+    data axis (ZeRO-3-style), feature side over the model axis.  This is the
+    only layout that fits jamba-398B's training state on 16 GB chips; XLA
+    inserts the per-layer all-gathers (and the roofline analyzer prices them).
+  * MoE expert tensors shard the expert dim over "model" (expert parallelism)
+    and the contraction dim over data.
+  * Activations: batch over ("pod","data"); KV caches: sequence over "model"
+    (context parallelism — kv-head counts are often smaller than the TP
+    degree, sequence always divides it).
+  * Optimizer int8 block states: flat block dim over all axes combined.
+
+Rules are name+rank based over tree paths, so they cover raw arrays and
+QTensor leaves (".../wq/data", ".../wq/scale") alike.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    """The data-parallel axes (used for ZeRO sharding of contractions)."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def dp_spec(mesh: Mesh) -> Tuple:
+    names = mesh.axis_names
+    return (("pod", "data") if "pod" in names else ("data",))
+
+
+def _divides(dim: int, mesh: Mesh, axes) -> bool:
+    if dim <= 0:
+        return False
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= mesh.shape[a]
+    return dim % total == 0
+
+
+# (regex over path, kind) — kind decides how trailing dims are sharded
+_IN_SIDE = re.compile(r".*(wq|wk|wv|w1|w3|in_proj|x_proj|dt_proj|unembed)(/data)?$")
+_OUT_SIDE = re.compile(r".*(wo|w2|out_proj)(/data)?$")
+_EMBED = re.compile(r".*embed$")
+_EXPERT = re.compile(r".*moe/(w1|w3|w2)(/data)?$")
+_ROUTER = re.compile(r".*router$")
+_VEC_MODEL = re.compile(r".*(conv_b|dt_bias|A_log|/D)$")
+_CONV = re.compile(r".*conv_w$")
+_SCALE = re.compile(r".*/(scale|zero)$")
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf."""
+    rank = len(shape)
+    fa = fsdp_axes(mesh) if fsdp else None
+    m = "model"
+
+    def lead(n):
+        return (None,) * n
+
+    def ok(dim, axes):
+        return axes is not None and _divides(dim, mesh, axes)
+
+    if _SCALE.search(path):
+        # quantization scales: shard feature dim over model when divisible
+        if rank >= 1 and _divides(shape[-1], mesh, m):
+            return P(*lead(rank - 1), m)
+        return P(*lead(rank))
+
+    if _EMBED.search(path) and rank == 2:
+        # vocab over model only: feature-dim sharding here would propagate
+        # onto the residual stream (activations are batch-sharded instead)
+        return P(m if _divides(shape[0], mesh, m) else None, None)
+
+    if _EXPERT.search(path):
+        # (..., E, in, out): experts over model, contraction over data
+        e_ax = m if _divides(shape[-3], mesh, m) else None
+        c_ax = fa if ok(shape[-2], fa) else None
+        return P(*lead(rank - 3), e_ax, c_ax, None)
+
+    if _ROUTER.search(path):
+        return P(*lead(rank))
+
+    if _CONV.search(path):
+        return P(*lead(rank - 1), m if _divides(shape[-1], mesh, m) else None)
+
+    if _VEC_MODEL.search(path):
+        if rank >= 2 and _divides(shape[-2], mesh, m) and shape[-1] <= 64:
+            return P(*lead(rank - 2), m, None)      # A_log (d_in, N)
+        return P(*lead(rank - 1), m if _divides(shape[-1], mesh, m) else None)
+
+    if _OUT_SIDE.search(path) and rank >= 2:
+        return P(*lead(rank - 2),
+                 m if _divides(shape[-2], mesh, m) else None,
+                 fa if ok(shape[-1], fa) else None)
+
+    if _IN_SIDE.search(path) and rank >= 2:
+        return P(*lead(rank - 2),
+                 fa if ok(shape[-2], fa) else None,
+                 m if _divides(shape[-1], mesh, m) else None)
+
+    if rank >= 2 and _divides(shape[-1], mesh, m):
+        return P(*lead(rank - 1), m)
+    return P(*lead(rank))
+
+
+def param_shardings(param_tree, mesh: Mesh, fsdp: bool = True):
+    """NamedSharding tree matching ``param_tree`` (arrays or ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        spec = param_spec(name, tuple(leaf.shape), mesh, fsdp=fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(opt_state, param_shardings_tree, mesh: Mesh):
+    """Optimizer state shardings.
+
+    fp32 moments mirror the parameter shardings exactly; int8 block states
+    keep the parameter's shape (see optim.optimizers), so ``q`` reuses the
+    parameter sharding verbatim and the per-block scales drop the last-axis
+    sharding (their trailing dim is 256x smaller and rarely divisible).
+    """
+
+    def is_block(x):
+        return isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+    pflat = jax.tree_util.tree_leaves(param_shardings_tree)
+
+    def shard_moments(tree):
+        flat, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_block)
+        out = []
+        for leaf, psh in zip(flat, pflat):
+            if is_block(leaf):
+                spec = tuple(psh.spec) + (None,) * (leaf["q"].ndim - len(psh.spec))
+                s_shape = leaf["s"].shape
+                s_spec = list(spec[:leaf["s"].ndim])
+                if s_spec:
+                    last = s_spec[-1]
+                    if last is not None and not _divides(s_shape[-1], mesh, last):
+                        s_spec[-1] = None
+                out.append({"q": NamedSharding(mesh, P(*spec)),
+                            "s": NamedSharding(mesh, P(*s_spec))})
+            else:
+                out.append(psh)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return {
+        "m": shard_moments(opt_state["m"]),
+        "v": shard_moments(opt_state["v"]),
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Inputs: batch dim over (pod, data); M-RoPE positions (3, B, S) on dim 1.
+    Batch dims that do not divide the DP degree (e.g. long-context batch=1)
+    stay replicated."""
+    dp = dp_spec(mesh)
+
+    def spec(leaf):
+        if leaf.ndim >= 2 and leaf.shape[0] == 3:        # (3, B, S) positions
+            ax = dp if _divides(leaf.shape[1], mesh, dp) else None
+            return NamedSharding(mesh, P(None, ax, *(None,) * (leaf.ndim - 2)))
+        ax = dp if _divides(leaf.shape[0], mesh, dp) else None
+        return NamedSharding(mesh, P(ax, *(None,) * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """KV caches (count, B, T, KV, HD): batch over data when divisible, else
+    sequence over model (long-context, batch=1).  SSM states
+    (count, B, d_in, N): d_in over model."""
+    dp = dp_spec(mesh)
+
+    def spec(path, leaf):
+        name = "/".join(_key_str(k) for k in path)
+        if name.endswith("len"):
+            return NamedSharding(mesh, P())
+        shape = leaf.shape
+        if name.endswith("_scale"):                      # (count, B, T, KV, 1)
+            b, t = shape[1], shape[2]
+            b_ax = dp if _divides(b, mesh, dp) else None
+            t_ax = "model" if _divides(t, mesh, "model") else None
+            return NamedSharding(mesh, P(None, b_ax, t_ax, None, None))
+        if name.endswith("/k") or name.endswith("/v"):
+            b, t = shape[1], shape[2]
+            b_ax = dp if _divides(b, mesh, dp) else None
+            t_ax = "model" if _divides(t, mesh, "model") else None
+            return NamedSharding(mesh, P(None, b_ax, t_ax, None, None))
+        if name.endswith("/h"):                          # (count, B, d_in, N)
+            d_ax = "model" if _divides(shape[2], mesh, "model") else None
+            return NamedSharding(mesh, P(None, None, d_ax, None))
+        if name.endswith("/conv"):                       # (count, B, K-1, d_in)
+            d_ax = "model" if _divides(shape[3], mesh, "model") else None
+            return NamedSharding(mesh, P(None, None, None, d_ax))
+        return NamedSharding(mesh, P(*(None,) * leaf.ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+def _key_str(k) -> str:
+    import jax.tree_util as jtu
+    if isinstance(k, jtu.DictKey):
+        return str(k.key)
+    if isinstance(k, jtu.GetAttrKey):
+        return k.name
+    if isinstance(k, jtu.SequenceKey):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,8 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import Preempted, TrainConfig, Trainer, make_train_step
+from repro.train import fault, loops
+
+__all__ = [
+    "CheckpointManager", "Preempted", "TrainConfig", "Trainer",
+    "make_train_step", "fault", "loops",
+]

@@ -1,0 +1,161 @@
+"""Fault-tolerant checkpointing.
+
+* atomic writes (tmp file + rename) so a preemption mid-write never corrupts
+  the latest checkpoint,
+* manifest with step + tree paths, validated on load,
+* keep-last-k garbage collection,
+* async (background-thread) saves so the train loop doesn't stall,
+* **elastic restore**: checkpoints store logical (unsharded) arrays; loading
+  device_puts them under the *current* mesh's shardings, so a job can resume
+  on a different topology (e.g. 256 -> 512 chips) without conversion.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_CKPT_RE = re.compile(r"^step_(\d+)$")
+
+
+import ml_dtypes
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(_key_str(k) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == _BF16:               # npz cannot store bfloat16
+            arr = arr.view(np.uint16)
+            name = name + "::bf16"
+        flat[name] = arr
+    return flat
+
+
+def _key_str(k):
+    import jax.tree_util as jtu
+    if isinstance(k, jtu.DictKey):
+        return str(k.key)
+    if isinstance(k, jtu.GetAttrKey):
+        return k.name
+    if isinstance(k, jtu.SequenceKey):
+        return str(k.idx)
+    return str(k)
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    """Rebuild ``template``'s structure with arrays from ``flat``."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        name = "/".join(_key_str(k) for k in path)
+        if name + "::bf16" in flat:
+            arr = flat[name + "::bf16"].view(_BF16)
+        elif name in flat:
+            arr = flat[name]
+        else:
+            raise KeyError(f"checkpoint missing tensor '{name}'")
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for '{name}': "
+                             f"ckpt {arr.shape} vs expected {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> str:
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, extra or {}))
+            self._thread.start()
+        else:
+            self._write(step, host_tree, extra or {})
+        return os.path.join(self.dir, f"step_{step}")
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree, extra: Dict) -> None:
+        flat = _flatten(host_tree)
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = final + f".tmp.{os.getpid()}.{int(time.time()*1e6)}"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "tensors": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                        for k, v in flat.items()},
+            "extra": extra,
+            "time": time.time(),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- load ---------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = _CKPT_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template, shardings=None) -> Tuple[Any, Dict]:
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k: data[k] for k in data.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            # elastic restore: place logical arrays under the current mesh
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree, manifest.get("extra", {})
+
+    def restore_latest(self, template, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = self.restore(step, template, shardings)
+        return step, tree, extra

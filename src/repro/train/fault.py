@@ -1,0 +1,62 @@
+"""Fault-tolerance utilities: preemption simulation and resilient run loops.
+
+On a real fleet, the scheduler SIGTERMs workers; here ``preempt_at`` raises
+``Preempted`` at a chosen step so tests can verify checkpoint/restart
+semantics exactly (same loss curve as an uninterrupted run).
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Optional
+
+from repro.train.trainer import Preempted, Trainer
+
+
+def preempt_at(step: int) -> Callable[[int], None]:
+    """Fire once: after the restart the node is healthy again."""
+    fired = {"done": False}
+
+    def hook(current: int):
+        if current == step and not fired["done"]:
+            fired["done"] = True
+            raise Preempted(f"simulated preemption at step {step}")
+    return hook
+
+
+def preempt_randomly(prob: float, seed: int = 0) -> Callable[[int], None]:
+    rng = random.Random(seed)
+
+    def hook(current: int):
+        if rng.random() < prob:
+            raise Preempted(f"simulated random preemption at step {current}")
+    return hook
+
+
+def resilient_run(trainer: Trainer, loader_factory, total_steps: int,
+                  max_restarts: int = 10,
+                  preemption_hook: Optional[Callable[[int], None]] = None):
+    """Run to ``total_steps`` surviving preemptions via restore-from-latest.
+
+    ``loader_factory()`` must return a fresh loader; the trainer fast-forwards
+    it to the checkpointed step (the loader is stateless in (seed, step)).
+    """
+    losses = []
+    restarts = 0
+    while trainer.step < total_steps:
+        loader = loader_factory()
+        if trainer.params is None:
+            trainer.init_state()
+        resumed = trainer.maybe_restore()
+        if resumed:
+            loader.restore(type(loader.state)(step=trainer.step))
+        try:
+            losses += trainer.run(loader, total_steps - trainer.step,
+                                  log_every=0, preemption_hook=preemption_hook)
+        except Preempted:
+            restarts += 1
+            trainer._jitted = None       # fresh process would re-jit anyway
+            trainer.params = None
+            if restarts > max_restarts:
+                raise RuntimeError("too many preemptions")
+            continue
+    return losses, restarts

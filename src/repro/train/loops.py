@@ -1,0 +1,372 @@
+"""Concrete fine-tuning loops for the paper's experiments.
+
+``train_resnet_qat``  — DoReFa QAT (Table 1), SGD-momentum, synthetic CIFAR.
+``train_qlora``       — QLoRA fine-tuning of a (pre-trained) tiny LLaMA-style
+                        model on instruction + task mixtures, evaluated on
+                        the paper's task suite (Table 2/6).
+
+Performance note: the agent runs hundreds of trials, so hyperparameters
+(lr, momentum, weight decay, clip, warmup) enter the jitted step functions as
+*runtime arrays* — one compilation per tensor shape, shared across every
+trial and every policy.  Only shape-changing knobs (lora_r, batch size
+bucket) trigger a re-jit, and those are bucketed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import BigramLM, SyntheticCifar, alpaca_like
+from repro.models import resnet as resnet_lib
+from repro.models import transformer as tfm
+from repro.quant import QLoRAConfig, QuantScheme, init_adapters, merge_adapters, quantize_base
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    """Workload scale for CPU benchmarking."""
+    image_size: int = 12
+    batch_cap: int = 96
+    steps_cap: int = 90          # total QAT steps (epochs x steps/epoch)
+    eval_samples: int = 512
+    lm_steps_cap: int = 150
+    lm_batch: int = 16
+    lm_seq: int = 32
+    lm_eval_batch: int = 128
+    pretrain_steps: int = 300
+
+
+TINY_SCALE = Scale(image_size=8, batch_cap=32, steps_cap=12, eval_samples=128,
+                   lm_steps_cap=10, lm_eval_batch=48, pretrain_steps=60)
+
+TINY_LM = ModelConfig(
+    name="bench-lm", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=96,
+    tie_embeddings=True)
+
+
+# ---------------------------------------------------------------------------
+# ResNet DoReFa QAT (paper Table 1)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def _resnet_step_fn(depth: int, wbits: int, abits: int):
+    """Jitted SGD-momentum QAT step with runtime hyperparameters."""
+    cfg = resnet_lib.ResNetConfig(f"resnet{depth}", depth, 10, 16, wbits, abits)
+
+    @jax.jit
+    def step(params, state, mu, imgs, labels, lr, momentum, wd):
+        (loss, (new_state, _)), grads = jax.value_and_grad(
+            resnet_lib.loss_fn, has_aux=True)(params, state, cfg, imgs, labels)
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32) + wd * p.astype(jnp.float32)
+            m_new = momentum * m + g
+            return (p - lr * m_new).astype(p.dtype), m_new
+
+        out = jax.tree.map(upd, params, grads, mu)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_state, new_mu, loss
+
+    @jax.jit
+    def evaluate(params, state, imgs, labels):
+        logits, _ = resnet_lib.forward(params, state, cfg, imgs, train=False)
+        return jnp.mean(jnp.argmax(logits, -1) == labels)
+
+    return cfg, step, evaluate
+
+
+@functools.lru_cache(maxsize=8)
+def _pretrained_resnet(depth: int, size: int, steps: int, seed: int = 0):
+    """Full-precision warm start (the paper runs QAT from pretrained)."""
+    cfg, step, _ = _resnet_step_fn(depth, 32, 32)
+    key = jax.random.PRNGKey(seed)
+    params, state = resnet_lib.init_resnet(key, cfg)
+    mu = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    data = SyntheticCifar(size=size, seed=7)
+    rng = np.random.default_rng(0)
+    for _ in range(steps):
+        imgs, labels = data.sample(rng, 64)
+        params, state, mu, _ = step(params, state, mu, jnp.asarray(imgs),
+                                    jnp.asarray(labels), jnp.asarray(0.05),
+                                    jnp.asarray(0.9), jnp.asarray(5e-4))
+    return jax.device_get(params), jax.device_get(state)
+
+
+def train_resnet_qat(config: Dict, depth: int = 20, wbits: int = 4,
+                     abits: int = 4, scale: Optional[Scale] = None,
+                     seed: int = 0) -> Tuple[Dict[str, float], List[float]]:
+    scale = scale or Scale()
+    cfg, step, evaluate = _resnet_step_fn(depth, wbits, abits)
+    params, state = _pretrained_resnet(depth, scale.image_size,
+                                       max(scale.steps_cap // 2, 10))
+    params = jax.tree.map(jnp.asarray, params)
+    state = jax.tree.map(jnp.asarray, state)
+    mu = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    lr = float(config.get("learning_rate", 0.01))
+    batch_cfg = int(config.get("batch_size", 128))
+    batch = min(max(batch_cfg, 16), scale.batch_cap)
+    wd = float(config.get("weight_decay", 5e-4))
+    momentum = float(config.get("momentum", 0.9))
+    epochs = int(config.get("num_epochs", 12))
+
+    # fixed step budget split into "epochs" (reporting granularity); the
+    # configured batch size scales the LR-noise trade-off like the original
+    total_steps = scale.steps_cap
+    steps_per_epoch = max(total_steps // max(epochs, 1), 1)
+    data = SyntheticCifar(size=scale.image_size, seed=7)
+    rng = np.random.default_rng(seed + 1)
+
+    lr_t = jnp.asarray(lr)
+    mom_t = jnp.asarray(momentum)
+    wd_t = jnp.asarray(wd)
+
+    losses: List[float] = []
+    for _ in range(epochs):
+        epoch_losses = []
+        for _ in range(steps_per_epoch):
+            imgs, labels = data.sample(rng, batch)
+            params, state, mu, loss = step(params, state, mu,
+                                           jnp.asarray(imgs),
+                                           jnp.asarray(labels),
+                                           lr_t, mom_t, wd_t)
+            epoch_losses.append(float(loss))
+        losses.append(float(np.mean(epoch_losses)))
+        if not np.isfinite(losses[-1]):
+            return {"accuracy": float("nan")}, losses
+
+    imgs, labels = data.fixed_eval(scale.eval_samples)
+    acc = float(evaluate(params, state, jnp.asarray(imgs), jnp.asarray(labels)))
+    return {"accuracy": acc}, losses
+
+
+# ---------------------------------------------------------------------------
+# QLoRA fine-tuning (paper Table 2/6)
+# ---------------------------------------------------------------------------
+
+def _transform_batch(kind: str, rng: np.random.Generator, batch: int,
+                     seq: int, vocab: int):
+    """Single-transform instruction batch (for per-task evaluation)."""
+    from repro.data.tokens import (ALPACA_ID_BASE, BOS, PAD, SEP, _RESERVED,
+                                   _TRANSFORMS)
+    half = (seq - 3) // 2
+    toks = np.full((batch, seq), PAD, np.int32)
+    labels = np.full((batch, seq), -1, np.int32)
+    for i in range(batch):
+        x = rng.integers(_RESERVED, vocab, size=half)
+        y = {"copy": x, "reverse": x[::-1], "sort": np.sort(x),
+             "shift": (x - _RESERVED + 1) % (vocab - _RESERVED) + _RESERVED}[kind]
+        row = np.concatenate([[BOS, ALPACA_ID_BASE + _TRANSFORMS.index(kind)],
+                              x, [SEP], y])[:seq]
+        toks[i, :len(row)] = row
+        start = 2 + len(x) + 1
+        for j in range(start, min(len(row), seq)):
+            labels[i, j - 1] = row[j]
+    return toks, labels
+
+
+# The paper evaluates on 8 tasks (BoolQ/RTE/...); our offline stand-ins are
+# the four instruction transforms at two context lengths — same table shape,
+# graded difficulty (copy < reverse < sort < shift; longer = harder).
+LM_EVAL_SUITE = [("copy", 32), ("reverse", 32), ("sort", 32), ("shift", 32),
+                 ("copy", 48), ("reverse", 48), ("sort", 48), ("shift", 48)]
+
+
+@functools.lru_cache(maxsize=4)
+def _lm_pretrain_step():
+    """Jitted full-model AdamW step (pretraining the bench base model)."""
+
+    @jax.jit
+    def step(params, m, v, count, toks, labels, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: tfm.loss_fn(p, TINY_LM, toks, labels, remat=False))(params)
+        count = count + 1
+        bc1 = 1 - 0.9 ** count
+        bc2 = 1 - 0.999 ** count
+
+        def upd(p, g, mm, vv):
+            g = g.astype(jnp.float32)
+            mm = 0.9 * mm + 0.1 * g
+            vv = 0.999 * vv + 0.001 * g * g
+            u = -lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + 1e-8)
+            return (p + u).astype(p.dtype), mm, vv
+
+        out = jax.tree.map(upd, params, grads, m, v)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), pick(1), pick(2), count, loss
+
+    return step
+
+
+@functools.lru_cache(maxsize=8)
+def _lm_eval_fwd(seq: int):
+    return jax.jit(lambda p, t: tfm.forward(p, TINY_LM, tokens=t, remat=False))
+
+
+def eval_lm_suite(params, n: int, seed: int = 99) -> Dict[str, float]:
+    """Per-token accuracy on each transform task."""
+    out = {}
+    for kind, seq in LM_EVAL_SUITE:
+        rng = np.random.default_rng(seed + seq)
+        toks, labels = _transform_batch(kind, rng, n, seq, TINY_LM.vocab_size)
+        logits = _lm_eval_fwd(seq)(params, jnp.asarray(toks))
+        pred = np.asarray(jnp.argmax(logits, -1))
+        mask = labels >= 0
+        out[f"{kind}_{seq}"] = float((pred[mask] == labels[mask]).mean())
+    return out
+
+
+@functools.lru_cache(maxsize=4)
+def _bigram_base(seq: int, steps: int, seed: int = 0):
+    """Bigram-LM pretrained base (the 'pretrained model' QLoRA starts from)."""
+    cfg = TINY_LM
+    params = tfm.init_params(jax.random.PRNGKey(seed), cfg, dtype=jnp.float32)
+    m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    v = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    count = jnp.zeros((), jnp.int32)
+    step = _lm_pretrain_step()
+    gen = BigramLM(cfg.vocab_size, seed=3)
+    rng = np.random.default_rng(0)
+    for i in range(steps):
+        toks = gen.sample(rng, 32, seq)
+        labels = np.roll(toks, -1, 1).copy()
+        labels[:, -1] = -1
+        params, m, v, count, _ = step(params, m, v, count, jnp.asarray(toks),
+                                      jnp.asarray(labels), jnp.asarray(3e-3))
+    return jax.device_get(params)
+
+
+@functools.lru_cache(maxsize=16)
+def _qlora_step_fn(lora_r: int, scheme_value: str, group: int):
+    """Jitted QLoRA step: NF4/int4/int8 frozen base + LoRA adapters +
+    trainable embed/final_norm (PEFT 'modules_to_save' practice — without a
+    trainable head, a 128-dim base cannot adapt its output map at all).
+    Hyperparameters are runtime args so the jit cache is shared across
+    trials/policies; only lora_r and the scheme change shapes."""
+
+    @jax.jit
+    def step(qbase, trainable, m, v, count, toks, labels, lr, wd, gnorm,
+             alpha_scale):
+        def loss_fn(tr):
+            eff = _merge_runtime(qbase, tr["adapters"], alpha_scale)
+            eff = {**eff, "embed": tr["embed"], "final_norm": tr["final_norm"]}
+            return tfm.loss_fn(eff, TINY_LM, toks, labels, remat=False)
+
+        loss, grads = jax.value_and_grad(loss_fn)(trainable)
+        leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads)]
+        gn = jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+        scale = jnp.minimum(1.0, gnorm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        count = count + 1
+        bc1 = 1 - 0.9 ** count
+        bc2 = 1 - 0.999 ** count
+
+        def upd(p, g, mm, vv):
+            g = g.astype(jnp.float32)
+            mm = 0.9 * mm + 0.1 * g
+            vv = 0.999 * vv + 0.001 * g * g
+            u = -lr * ((mm / bc1) / (jnp.sqrt(vv / bc2) + 1e-8)
+                       + wd * p.astype(jnp.float32))
+            return (p + u).astype(p.dtype), mm, vv
+
+        out = jax.tree.map(upd, trainable, grads, m, v)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), pick(1), pick(2), count, loss
+
+    return step
+
+
+def _merge_runtime(qbase, adapters, alpha_scale):
+    """merge_adapters with a runtime alpha/r scale (keeps jit cache hot)."""
+    from repro.quant import ptq
+    from repro.quant.qtypes import QTensor
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        qbase, is_leaf=lambda x: isinstance(x, QTensor))
+    out = []
+    for path, leaf in flat:
+        name = "/".join(ptq._k(k) for k in path)
+        w = (ptq.dequantize_leaf(leaf, jnp.float32)
+             if isinstance(leaf, QTensor) else leaf)
+        if name in adapters:
+            ab = jnp.einsum("...kr,...rn->...kn",
+                            adapters[name]["a"].astype(jnp.float32),
+                            adapters[name]["b"].astype(jnp.float32))
+            w = w + alpha_scale * ab
+        out.append(w)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def train_qlora(config: Dict, scheme: QuantScheme = QuantScheme.NF4,
+                scale: Optional[Scale] = None, seed: int = 0,
+                ) -> Tuple[Dict[str, float], List[float]]:
+    scale = scale or Scale()
+    seq = scale.lm_seq
+    base = jax.tree.map(jnp.asarray, _bigram_base(seq, scale.pretrain_steps))
+
+    lora_r = max(int(round(int(config.get("lora_r", 16)) / 8) * 8), 8)
+    qcfg = QLoRAConfig(scheme=scheme, group_size=32, lora_r=lora_r,
+                       lora_alpha=int(config.get("lora_alpha", 8)),
+                       lora_dropout=float(config.get("lora_dropout", 0.05)))
+    qbase = quantize_base(base, qcfg)
+    adapters = init_adapters(jax.random.PRNGKey(seed + 5), qbase, qcfg)
+    trainable = {"adapters": adapters,
+                 "embed": qbase["embed"].astype(jnp.float32),
+                 "final_norm": qbase["final_norm"].astype(jnp.float32)}
+
+    # The sandbox model is ~4 orders of magnitude smaller than LLaMA, so the
+    # paper's LR range maps onto it through a fixed x8 multiplier (the
+    # response curve keeps its optimum *inside* the searched range; the agent
+    # still reasons in the paper's units).  Documented in DESIGN.md.
+    lr = float(config.get("learning_rate", 4e-4)) * 20.0
+    accum = int(config.get("gradient_accumulation_steps", 8))
+    bsz = int(config.get("per_device_train_batch_size", 8))
+    wd = float(config.get("weight_decay", 0.01))
+    steps = min(max(int(config.get("max_steps", 400)) // 4, 20),
+                scale.lm_steps_cap)
+    gnorm = float(config.get("max_grad_norm", 0.3))
+    warmup = float(config.get("warmup_ratio", 0.03))
+    # effective batch = bsz * accum capped for CPU; enters as real batch size
+    batch = int(np.clip(bsz * accum // 4, 8, 2 * scale.lm_batch))
+
+    step = _qlora_step_fn(lora_r, qcfg.scheme.value, qcfg.group_size)
+    m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), trainable)
+    v = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), trainable)
+    count = jnp.zeros((), jnp.int32)
+    rng = np.random.default_rng(seed + 11)
+    alpha_scale = jnp.asarray(qcfg.scaling)
+
+    warm_steps = max(int(steps * max(warmup, 1e-3)), 1)
+    losses: List[float] = []
+    for i in range(steps):
+        toks, labels = alpaca_like(rng, batch, seq, TINY_LM.vocab_size)
+        if i < warm_steps:
+            lr_i = lr * (i + 1) / warm_steps
+        else:
+            prog = (i - warm_steps) / max(steps - warm_steps, 1)
+            lr_i = lr * (0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * prog)))
+        trainable, m, v, count, loss = step(
+            qbase, trainable, m, v, count, jnp.asarray(toks),
+            jnp.asarray(labels), jnp.asarray(lr_i), jnp.asarray(wd),
+            jnp.asarray(gnorm), alpha_scale)
+        losses.append(float(loss))
+        if not np.isfinite(losses[-1]):
+            return {f"{k}_{s}": float("nan") for k, s in LM_EVAL_SUITE}, losses
+
+    merged = _merge_runtime(qbase, trainable["adapters"], alpha_scale)
+    merged = {**merged, "embed": trainable["embed"],
+              "final_norm": trainable["final_norm"]}
+    metrics = eval_lm_suite(merged, scale.lm_eval_batch // 2, seed=99)
+    return metrics, losses

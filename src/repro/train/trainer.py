@@ -1,0 +1,220 @@
+"""LM trainer: pjit train loop with gradient accumulation, clipping,
+checkpoint/restart, and preemption handling.
+
+The same ``make_train_step`` is what the multi-pod dry-run lowers for the
+train_4k cells, so anything that compiles there is literally the production
+step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.optim import adamw, apply_updates, clip_by_global_norm, warmup_cosine
+from repro.sharding import batch_shardings, opt_state_shardings, param_shardings
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_ratio: float = 0.03
+    total_steps: int = 1000
+    weight_decay: float = 0.01
+    max_grad_norm: float = 1.0
+    num_microbatches: int = 1
+    adam_state_dtype: str = "fp32"      # "int8" for blockwise-quantized moments
+    remat: bool = True
+    attn_chunk: int = 1024
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    moe_aux_weight: float = 0.01
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig):
+    def loss_fn(params, batch):
+        return tfm.loss_fn(params, cfg,
+                           tokens=batch.get("tokens"),
+                           labels=batch["labels"],
+                           embeds=batch.get("embeds"),
+                           remat=tc.remat, attn_chunk=tc.attn_chunk)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, optimizer,
+                    grad_shardings=None):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``grad_shardings`` (a sharding tree matching params) pins the fp32
+    gradient accumulator of the microbatch scan — without the constraint
+    XLA replicates the accumulator per device (terabytes at 398B params).
+    """
+    loss_fn = make_loss_fn(cfg, tc)
+
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.lax.with_sharding_constraint(tree, grad_shardings)
+
+    def train_step(params, opt_state, batch, step):
+        if tc.num_microbatches > 1:
+            n = tc.num_microbatches
+
+            def reshape(x):
+                if x.ndim >= 2 and x.shape[0] == 3:      # (3, B, S) positions
+                    b = x.shape[1]
+                    r = x.reshape((3, n, b // n) + x.shape[2:])
+                    return jnp.swapaxes(r, 0, 1)
+                b = x.shape[0]
+                return x.reshape((n, b // n) + x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+            zero = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = constrain(jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n, g_acc, grads))
+                return (g_acc, l_acc + loss / n), None
+
+            (grads, loss), _ = jax.lax.scan(body, (zero, 0.0), micro)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain(grads)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.max_grad_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "step": step.astype(jnp.float32)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig,
+                 mesh: Optional[Mesh] = None, seed: int = 0):
+        self.cfg = cfg
+        self.tc = tc
+        self.mesh = mesh
+        self.seed = seed
+        lr = warmup_cosine(tc.learning_rate, tc.total_steps, tc.warmup_ratio)
+        self.optimizer = adamw(lr, weight_decay=tc.weight_decay,
+                               state_dtype=tc.adam_state_dtype)
+        self.step_fn = make_train_step(cfg, tc, self.optimizer)
+        self.ckpt = (CheckpointManager(tc.ckpt_dir, keep=tc.ckpt_keep,
+                                       async_save=tc.ckpt_async)
+                     if tc.ckpt_dir else None)
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self._jitted = None
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self):
+        key = jax.random.PRNGKey(self.seed)
+        self.params = tfm.init_params(key, self.cfg)
+        self.opt_state = self.optimizer.init(self.params)
+        if self.mesh is not None:
+            psh = param_shardings(self.params, self.mesh)
+            osh = opt_state_shardings(self.opt_state, psh, self.mesh)
+            self.params = jax.device_put(self.params, psh)
+            self.opt_state = jax.device_put(self.opt_state, osh)
+        self.step = 0
+
+    def maybe_restore(self) -> bool:
+        """Resume from the latest checkpoint if one exists (elastic: works
+        even if the mesh changed since the checkpoint was written)."""
+        if self.ckpt is None:
+            return False
+        if self.params is None:
+            self.init_state()
+        state_tmpl = {"params": self.params, "opt": self.opt_state}
+        shardings = None
+        if self.mesh is not None:
+            psh = param_shardings(self.params, self.mesh)
+            shardings = {"params": psh,
+                         "opt": opt_state_shardings(self.opt_state, psh, self.mesh)}
+        out = self.ckpt.restore_latest(state_tmpl, shardings)
+        if out is None:
+            return False
+        step, tree, extra = out
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = step
+        return True
+
+    # -- stepping -----------------------------------------------------------
+
+    def _compile(self, batch):
+        if self._jitted is not None:
+            return
+        if self.mesh is None:
+            self._jitted = jax.jit(self.step_fn)
+            return
+        psh = param_shardings(self.params, self.mesh)
+        osh = opt_state_shardings(self.opt_state, psh, self.mesh)
+        bsh = batch_shardings(batch, self.mesh)
+        self._jitted = jax.jit(
+            self.step_fn,
+            in_shardings=(psh, osh, bsh, NamedSharding(self.mesh, P())),
+            out_shardings=(psh, osh, None))
+
+    def train_step(self, batch) -> Dict[str, float]:
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        self._compile(batch)
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        with ctx:
+            self.params, self.opt_state, metrics = self._jitted(
+                self.params, self.opt_state, batch, jnp.asarray(self.step))
+        self.step += 1
+        if (self.ckpt is not None and self.step % self.tc.ckpt_every == 0):
+            self.save()
+        return {k: float(v) for k, v in metrics.items()}
+
+    def save(self):
+        if self.ckpt is not None:
+            self.ckpt.save(self.step, {"params": self.params,
+                                       "opt": self.opt_state})
+
+    def run(self, loader, steps: int, log_every: int = 10,
+            preemption_hook: Optional[Callable[[int], None]] = None):
+        losses = []
+        for _ in range(steps):
+            if preemption_hook is not None:
+                preemption_hook(self.step)          # may raise Preempted
+            batch = loader.next()
+            metrics = self.train_step(batch)
+            losses.append(metrics["loss"])
+            if log_every and self.step % log_every == 0:
+                print(f"step {self.step}: loss={metrics['loss']:.4f} "
+                      f"gnorm={metrics['grad_norm']:.3f}")
+        if self.ckpt is not None:
+            self.save()
+            self.ckpt.wait()
+        return losses
+
+
+class Preempted(Exception):
+    """Raised by preemption hooks (SIGTERM from the cluster scheduler)."""
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,17 @@
+from repro.utils.tree import (
+    pytree_dataclass,
+    tree_size_bytes,
+    tree_num_params,
+    tree_global_norm,
+    tree_cast,
+    flatten_with_paths,
+)
+
+__all__ = [
+    "pytree_dataclass",
+    "tree_size_bytes",
+    "tree_num_params",
+    "tree_global_norm",
+    "tree_cast",
+    "flatten_with_paths",
+]

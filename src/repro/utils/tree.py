@@ -1,0 +1,89 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pytree_dataclass(cls=None, *, static_fields: Tuple[str, ...] = ()):
+    """Register a dataclass as a pytree.
+
+    Fields listed in ``static_fields`` become aux data (hashable, compared by
+    equality at trace time); everything else is a child.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(c)
+        fields = [f.name for f in dataclasses.fields(c)]
+        data_fields = tuple(f for f in fields if f not in static_fields)
+        meta_fields = tuple(f for f in fields if f in static_fields)
+
+        def flatten(obj):
+            children = tuple(getattr(obj, f) for f in data_fields)
+            aux = tuple(getattr(obj, f) for f in meta_fields)
+            return children, aux
+
+        def flatten_with_keys(obj):
+            children = tuple(
+                (jax.tree_util.GetAttrKey(f), getattr(obj, f)) for f in data_fields
+            )
+            aux = tuple(getattr(obj, f) for f in meta_fields)
+            return children, aux
+
+        def unflatten(aux, children):
+            kwargs = dict(zip(data_fields, children))
+            kwargs.update(dict(zip(meta_fields, aux)))
+            return c(**kwargs)
+
+        jax.tree_util.register_pytree_with_keys(c, flatten_with_keys, unflatten, flatten)
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of all array leaves."""
+    leaves = jax.tree.leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_num_params(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return sum(int(np.prod(leaf.shape)) for leaf in leaves if hasattr(leaf, "shape"))
+
+
+def tree_global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def flatten_with_paths(tree) -> Iterator[Tuple[str, Any]]:
+    """Yield ('a/b/c', leaf) pairs for a nested pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        yield name, leaf
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return k.name
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    return str(k)

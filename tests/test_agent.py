@@ -1,0 +1,135 @@
+"""HAQA agent: loop mechanics, §3.2 failure handling, policy comparisons."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AgentConfig, EvalResult, FormatError, HAQAgent, History, KernelEvaluator,
+    LLMBackend, Policy, Proposal, SimulatedExpertPolicy, Trial,
+    deploy_space, extract_json_config, get_hardware, llama_finetune_space,
+    make_policy, resnet_finetune_space,
+)
+from repro.core import prompts as prompt_lib
+
+HW = get_hardware("tpu-v5e")
+SHAPE = {"m": 1024, "k": 1024, "n": 1024}
+
+
+def test_agent_improves_over_default():
+    space = deploy_space("matmul")
+    ev = KernelEvaluator("matmul", SHAPE, HW)
+    default_lat = ev(space.defaults()).metrics["latency_us"]
+    agent = HAQAgent(space, ev, SimulatedExpertPolicy(),
+                     AgentConfig(max_rounds=10), context={"kind": "deploy"})
+    hist = agent.run()
+    best = hist.best()
+    assert best.metrics["latency_us"] <= default_lat
+    assert len(hist) == 10
+    assert len(agent.react_trace) == 10
+    assert all(t["thought"] for t in agent.react_trace)
+
+
+@pytest.mark.parametrize("policy", ["default", "random", "local", "bayesian",
+                                    "nsga2", "human", "haqa"])
+def test_all_policies_respect_constraints(policy):
+    space = llama_finetune_space()
+
+    def ev(config):
+        errs = space.validate(config)
+        assert not errs, f"{policy} violated: {errs}"
+        return EvalResult(metrics={"acc": 0.5}, objective=0.5)
+
+    agent = HAQAgent(space, ev, make_policy(policy, seed=1),
+                     AgentConfig(max_rounds=6))
+    agent.run()
+
+
+@settings(max_examples=20, deadline=None)
+@given(lr=st.floats(-10, 10), bs=st.integers(-100, 10_000))
+def test_space_clamp_always_valid(lr, bs):
+    space = resnet_finetune_space()
+    cfg = space.clamp({"learning_rate": lr, "batch_size": bs})
+    assert not space.validate(cfg)
+
+
+def test_agent_handles_format_errors_and_violations():
+    space = deploy_space("softmax")
+    calls = {"n": 0}
+
+    def bad_llm(messages):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            return "I think we should tune things."        # no JSON
+        if calls["n"] == 2:
+            return 'Use {"block_rows": 99999, "junk": 1}'   # violations
+        return 'OK: {"block_rows": 128}'
+
+    policy = LLMBackend(complete_fn=bad_llm)
+    ev = KernelEvaluator("softmax", {"rows": 4096, "cols": 1024}, HW)
+    agent = HAQAgent(space, ev, policy, AgentConfig(max_rounds=1, max_retries=2),
+                     context={"kind": "deploy"})
+    hist = agent.run()
+    assert len(hist) == 1
+    assert not space.validate(hist.last().config)
+    assert len(agent.validation_events) >= 2      # both failure modes logged
+
+
+def test_agent_survives_evaluator_crash():
+    space = deploy_space("softmax")
+    calls = {"n": 0}
+
+    def flaky(config):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("node failure")
+        return EvalResult(metrics={"latency_us": 1.0}, objective=1.0)
+
+    agent = HAQAgent(space, flaky, SimulatedExpertPolicy(),
+                     AgentConfig(max_rounds=3), context={"kind": "deploy"})
+    hist = agent.run()
+    assert hist.trials[0].failed and not hist.trials[1].failed
+
+
+def test_history_bounded_and_keeps_best():
+    h = History(max_len=3)
+    for i in range(10):
+        h.append(Trial(round=i, config={"x": i}, metrics={},
+                       objective=1.0 if i == 2 else 0.1))
+    window = h.window()
+    assert len(window) <= 4
+    assert any(t.objective == 1.0 for t in window)   # best preserved
+    assert h.best().round == 2
+
+
+def test_extract_json_config():
+    assert extract_json_config('text {"a": 1} more') == {"a": 1}
+    assert extract_json_config("no json here") is None
+    assert extract_json_config('{"a": 1} then {"b": 2}') == {"b": 2}
+
+
+def test_prompt_rendering_matches_paper_structure():
+    space = llama_finetune_space()
+    static = prompt_lib.static_prompt(
+        "QLoRA fine-tuning and deployment", "Llama2-7b", "8-bit", HW, space,
+        memory_limit_gb=10)
+    assert "search space" in static
+    assert "learning_rate" in static and "UniformFloat" in static
+    assert "Thought" in static and "Observation" in static   # ReAct preamble
+    h = History()
+    h.append(Trial(round=0, config=space.defaults(),
+                   metrics={"acc": 0.6}, objective=0.6, losses=[1.0, 0.9]))
+    msgs = prompt_lib.full_prompt(static, h, rounds_left=7, losses=[1.0, 0.9])
+    assert msgs[0]["role"] == "system"
+    assert "7 rounds left" in msgs[2]["content"]
+    assert "training losses" in msgs[2]["content"]
+
+
+def test_fault_injection_retries():
+    from repro.core import FaultInjection
+    ev = KernelEvaluator("softmax", {"rows": 1024, "cols": 256}, HW,
+                         fault=FaultInjection(timeout_prob=0.5, max_retries=5,
+                                              seed=3))
+    res = ev({"block_rows": 128})
+    assert res.metrics["latency_us"] > 0

@@ -1,0 +1,40 @@
+"""End-to-end fine-tuning loops at tiny scale (the benchmark substrates)."""
+import numpy as np
+import pytest
+
+from repro.quant import QuantScheme
+from repro.train.loops import TINY_SCALE, train_qlora, train_resnet_qat
+
+
+def test_resnet_qat_trial():
+    m, losses = train_resnet_qat(
+        {"learning_rate": 0.02, "batch_size": 32, "weight_decay": 5e-4,
+         "momentum": 0.9, "num_epochs": 4},
+        depth=20, wbits=8, abits=8, scale=TINY_SCALE)
+    assert np.isfinite(m["accuracy"]) and 0.0 <= m["accuracy"] <= 1.0
+    assert len(losses) == 4 and all(np.isfinite(l) for l in losses)
+
+
+def test_resnet_qat_high_lr_degrades_or_diverges():
+    good, _ = train_resnet_qat(
+        {"learning_rate": 0.02, "batch_size": 32, "weight_decay": 5e-4,
+         "momentum": 0.9, "num_epochs": 4}, wbits=2, abits=2, scale=TINY_SCALE)
+    bad, _ = train_resnet_qat(
+        {"learning_rate": 0.2, "batch_size": 32, "weight_decay": 5e-4,
+         "momentum": 0.99, "num_epochs": 4}, wbits=2, abits=2, scale=TINY_SCALE)
+    assert (not np.isfinite(bad["accuracy"])) or \
+        bad["accuracy"] <= good["accuracy"] + 0.05
+
+
+@pytest.mark.parametrize("scheme", [QuantScheme.NF4, QuantScheme.INT8])
+def test_qlora_trial(scheme):
+    m, losses = train_qlora(
+        {"learning_rate": 4e-4, "per_device_train_batch_size": 8,
+         "gradient_accumulation_steps": 8, "weight_decay": 0.01,
+         "max_steps": 200, "max_grad_norm": 1.0, "lora_r": 16,
+         "lora_alpha": 8, "lora_dropout": 0.05, "warmup_ratio": 0.03},
+        scheme=scheme, scale=TINY_SCALE)
+    assert len(m) == 8                       # 8-task suite like the paper
+    assert all(np.isfinite(v) for v in m.values())
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0] + 0.5      # not diverging

@@ -1,0 +1,67 @@
+"""HLO parser/cost walker: scan trip-count handling + collective accounting."""
+import glob
+import gzip
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import hlo as H
+
+
+def _compile_scan(L):
+    def f(params, x):
+        def body(c, p):
+            return jax.nn.silu(c @ p["w1"]) @ p["w2"], None
+        out, _ = jax.lax.scan(body, x, params)
+        return jnp.sum(out)
+
+    specs = {"w1": jax.ShapeDtypeStruct((L, 64, 128), jnp.float32),
+             "w2": jax.ShapeDtypeStruct((L, 128, 64), jnp.float32)}
+    return jax.jit(f).lower(specs, jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile()
+
+
+def test_trip_count_multiplies_flops():
+    f2 = H.analyze_hlo_text(_compile_scan(2).as_text())
+    f8 = H.analyze_hlo_text(_compile_scan(8).as_text())
+    assert f2["dot_flops"] > 0
+    ratio = f8["dot_flops"] / f2["dot_flops"]
+    assert 3.5 < ratio < 4.5, f"trip scaling broken: {ratio}"
+
+
+def test_flops_magnitude_matches_analytic():
+    out = H.analyze_hlo_text(_compile_scan(4).as_text())
+    analytic = 4 * 2 * (8 * 64 * 128 + 8 * 128 * 64)
+    assert 0.9 < out["dot_flops"] / analytic < 1.3
+
+
+def test_shape_bytes():
+    assert H.shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert H.shape_bytes("bf16[2,2]") == 8
+    assert H.shape_bytes("(f32[4], s32[2])") == 24
+    assert H.shape_bytes("pred[10]") == 10
+
+
+ARTIFACTS = sorted(glob.glob("artifacts/dryrun/*_16x16_bf16.hlo.txt.gz"))
+
+
+@pytest.mark.skipif(not ARTIFACTS, reason="no dry-run artifacts present")
+def test_dryrun_artifact_collectives_counted():
+    text = gzip.open(ARTIFACTS[0], "rt").read()
+    out = H.analyze_hlo_text(text)
+    assert out["dot_flops"] > 0
+    assert out["total_collective_bytes"] > 0     # SPMD module must communicate
+
+
+@pytest.mark.skipif(not glob.glob("artifacts/dryrun/*_16x16_bf16.json"),
+                    reason="no dry-run artifacts present")
+def test_dryrun_records_have_roofline():
+    for f in glob.glob("artifacts/dryrun/*_16x16_bf16.json")[:5]:
+        rec = json.load(open(f))
+        if rec.get("skipped"):
+            continue
+        roof = rec["roofline"]
+        assert roof["bottleneck"] in ("compute", "memory", "collective")
+        assert roof["step_time_s"] > 0

@@ -1,0 +1,105 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    AttentionConfig, EltwiseConfig, MatmulConfig, RopeConfig, RowBlockConfig,
+)
+from repro.kernels.attention import ops as aops, ref as aref
+from repro.kernels.qmatmul import ops as qops, ref as qref
+from repro.kernels.rmsnorm import ops as rnops, ref as rnref
+from repro.kernels.rope import ops as rops, ref as rref
+from repro.kernels.softmax import ops as smops, ref as smref
+from repro.kernels.swiglu import ops as swops, ref as swref
+from repro.quant import QuantScheme, quantize_activation, quantize_weight
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 128, 128), (100, 256, 384), (8, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bf16_matmul_sweep(m, k, n, dtype):
+    x = jax.random.normal(KEY, (m, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(8), (k, n), jnp.float32).astype(dtype)
+    cfg = MatmulConfig(bm=64, bn=128, bk=128)
+    out = qops.qmatmul(x, w, cfg, interpret=True)
+    assert _rel_err(out, qref.matmul_ref(x, w)) < 2e-2
+
+
+@pytest.mark.parametrize("scheme", [QuantScheme.INT8, QuantScheme.INT4,
+                                    QuantScheme.W8A8, QuantScheme.NF4])
+@pytest.mark.parametrize("m,k,n", [(32, 256, 128), (70, 512, 256)])
+def test_quantized_matmul_sweep(scheme, m, k, n):
+    x = jax.random.normal(KEY, (m, k), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(9), (k, n), jnp.float32)
+    qt = quantize_weight(w, scheme, group_size=128)
+    out = qops.qmatmul(x, qt, MatmulConfig(bm=32, bn=128, bk=128), interpret=True)
+    if scheme == QuantScheme.W8A8:
+        xq, sx = quantize_activation(x, 8, per_token=True)
+        exp = qref.w8a8_matmul_ref(xq, sx, qt.data, qt.scale.reshape(1, n))
+    else:
+        exp = qref.wo_matmul_ref(x, qt)
+    assert _rel_err(out, exp) < 2e-2
+
+
+@pytest.mark.parametrize("rows,cols", [(16, 64), (37, 300), (128, 1024)])
+@pytest.mark.parametrize("cap", [0.0, 30.0])
+def test_softmax_sweep(rows, cols, cap):
+    x = jax.random.normal(KEY, (rows, cols), jnp.float32) * 20
+    out = smops.softmax(x, cap=cap, cfg=RowBlockConfig(block_rows=16),
+                        interpret=True)
+    assert _rel_err(out, smref.softmax_ref(x, cap=cap)) < 1e-4
+    assert np.allclose(np.asarray(out).sum(-1), 1.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(4, 7, 64), (2, 33, 256), (1, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(3), shape[-1:], jnp.float32) * 0.1
+    out = rnops.rmsnorm(x, w, interpret=True)
+    assert _rel_err(out, rnref.rmsnorm_ref(x, w)) < 2e-2
+
+
+@pytest.mark.parametrize("shape", [(8, 100, 256), (3, 50, 384)])
+def test_swiglu_sweep(shape):
+    a = jax.random.normal(KEY, shape, jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(4), shape, jnp.bfloat16)
+    out = swops.swiglu(a, b, cfg=EltwiseConfig(block_rows=32, block_cols=128),
+                       interpret=True)
+    assert _rel_err(out, swref.swiglu_ref(a, b)) < 2e-2
+
+
+@pytest.mark.parametrize("b,s,h,d", [(2, 33, 4, 64), (1, 128, 8, 128)])
+@pytest.mark.parametrize("theta", [10_000.0, 1_000_000.0])
+def test_rope_sweep(b, s, h, d, theta):
+    x = jax.random.normal(KEY, (b, s, h, d), jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out = rops.rope(x, pos, theta=theta, cfg=RopeConfig(block_tokens=16),
+                    interpret=True)
+    assert _rel_err(out, rref.rope_ref(x, pos, theta)) < 2e-2
+
+
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (64, 0.0), (0, 30.0)])
+def test_flash_attention_sweep(window, cap):
+    b, s, h, kv, d = 2, 256, 8, 2, 64
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(5), (b, s, kv, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(6), (b, s, kv, d), jnp.bfloat16)
+    out = aops.flash_attention(q, k, v, causal=True, window=window, cap=cap,
+                               cfg=AttentionConfig(block_q=64, block_k=128),
+                               interpret=True)
+    kr = jnp.repeat(k, h // kv, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vr = jnp.repeat(v, h // kv, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    exp = aref.attention_ref(qr, kr, vr, causal=True, window=window, cap=cap)
+    exp = exp.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    assert _rel_err(out, exp) < 3e-2

@@ -1,0 +1,109 @@
+"""Quantization substrate: round-trips, packing, DoReFa, QLoRA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    NF4_CODEBOOK, PTQConfig, QLoRAConfig, QTensor, QuantScheme,
+    dequantize_leaf, init_adapters, merge_adapters, pack_int4,
+    quantization_error, quantize_activation, quantize_base, quantize_tree,
+    quantize_weight, quantize_weight_dorefa, quantize_act_dorefa,
+    unpack_int4, normalize_qtensor,
+)
+from repro.quant.ptq import _quantize_leaf
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("scheme,tol", [
+    (QuantScheme.INT8, 0.02), (QuantScheme.INT4, 0.15), (QuantScheme.NF4, 0.12),
+])
+def test_weight_roundtrip_error(scheme, tol):
+    w = jax.random.normal(KEY, (256, 128), jnp.float32)
+    qt = quantize_weight(w, scheme, group_size=64)
+    assert quantization_error(w, qt) < tol
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 8), cols=st.integers(1, 8), seed=st.integers(0, 999))
+def test_pack_unpack_roundtrip(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-8, 8, (2 * rows, cols)), jnp.int8)
+    assert (unpack_int4(pack_int4(q, 0), 0) == q).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 99))
+def test_symmetric_quant_bounded_error(bits, seed):
+    from repro.quant import quantize_symmetric, dequantize_symmetric
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, 32))
+    q, s = quantize_symmetric(x, bits, axis=(0,))
+    xd = dequantize_symmetric(q, s)
+    # error bounded by half a quantization step per element
+    step = jnp.abs(x).max(0) / (2 ** (bits - 1) - 1)
+    assert float(jnp.max(jnp.abs(xd - x) - step / 2)) < 1e-5
+
+
+def test_stacked_qtensor_scan_sliceable():
+    w3 = jax.random.normal(KEY, (4, 64, 32), jnp.float32)
+    qt = _quantize_leaf(w3, PTQConfig(scheme=QuantScheme.INT4, group_size=32))
+    full = dequantize_leaf(qt, jnp.float32)
+
+    def body(c, layer_qt):
+        return c + jnp.sum(dequantize_leaf(layer_qt, jnp.float32)), None
+
+    tot, _ = jax.lax.scan(body, 0.0, qt)
+    assert abs(float(tot) - float(jnp.sum(full))) < 1e-2
+
+
+def test_normalize_qtensor_repairs_rank():
+    w3 = jax.random.normal(KEY, (4, 64, 32), jnp.float32)
+    qt = _quantize_leaf(w3, PTQConfig(scheme=QuantScheme.INT8))
+    sliced = QTensor(data=qt.data[0], scale=qt.scale[0], zero=None,
+                     scheme=qt.scheme, shape=qt.shape, group_size=qt.group_size)
+    fixed = normalize_qtensor(sliced)
+    assert fixed.shape == (64, 32)
+
+
+def test_ptq_tree_respects_rules():
+    params = {"wq": jax.random.normal(KEY, (128, 128)),
+              "embed": jax.random.normal(KEY, (128, 128)),
+              "ln1": jnp.ones((128,))}
+    out = quantize_tree(params, PTQConfig(scheme=QuantScheme.INT8, min_size=1))
+    assert isinstance(out["wq"], QTensor)
+    assert not isinstance(out["embed"], QTensor)     # excluded
+    assert not isinstance(out["ln1"], QTensor)
+
+
+def test_dorefa_ste_gradients():
+    w = jax.random.normal(KEY, (32, 32))
+    for bits in (2, 4, 8):
+        g = jax.grad(lambda x: jnp.sum(quantize_weight_dorefa(x, bits) ** 2))(w)
+        assert bool(jnp.isfinite(g).all()) and float(jnp.abs(g).sum()) > 0
+        qa = quantize_act_dorefa(w, bits)
+        assert float(qa.min()) >= 0.0 and float(qa.max()) <= 1.0
+        levels = np.unique(np.asarray(qa))
+        assert len(levels) <= 2 ** bits
+
+
+def test_qlora_merge_is_identity_at_init():
+    cfg = QLoRAConfig(lora_r=8)
+    params = {"wq": jax.random.normal(KEY, (256, 128))}
+    qb = quantize_base(params, cfg)
+    assert isinstance(qb["wq"], QTensor)
+    ad = init_adapters(KEY, qb, cfg)
+    merged = merge_adapters(qb, ad, cfg)
+    base = dequantize_leaf(qb["wq"], jnp.float32)
+    assert float(jnp.abs(merged["wq"].astype(jnp.float32) - base).max()) < 2e-2
+
+
+def test_activation_quant_per_token_scales():
+    x = jax.random.normal(KEY, (8, 64)) * jnp.arange(1, 9)[:, None]
+    q, s = quantize_activation(x, 8, per_token=True)
+    assert s.shape == (8, 1)
+    assert float(jnp.abs(q).max()) <= 127
+    xd = q * s
+    assert float(jnp.abs(xd - x).max() / jnp.abs(x).max()) < 0.02

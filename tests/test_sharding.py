@@ -1,0 +1,66 @@
+"""Partition rules: every leaf of every arch must get a valid (divisible)
+spec on the production meshes — checked on abstract meshes (no devices)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import transformer as tfm
+from repro.sharding.specs import param_spec, _key_str
+
+MESHES = {
+    "16x16": AbstractMesh((16, 16), ("data", "model")),
+    "2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def _check_divisible(shape, spec, mesh, name):
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        assert dim % total == 0, (
+            f"{name}: dim {dim} not divisible by {axes} ({total})")
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_divisible(arch, mesh_name):
+    mesh = MESHES[mesh_name]
+    cfg = get_config(arch)
+    specs = tfm.param_specs(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    n_sharded = 0
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        spec = param_spec(name, tuple(leaf.shape), mesh)
+        assert len(spec) <= len(leaf.shape)
+        _check_divisible(leaf.shape, spec, mesh, f"{arch}:{name}")
+        if any(e is not None for e in spec):
+            n_sharded += 1
+    # the overwhelming majority of parameters must actually shard
+    assert n_sharded / len(flat) > 0.5, f"{arch}: too few sharded leaves"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_big_weights_are_2d_sharded(arch):
+    """Memory law: every >=100M-element tensor must shard on >=2 axes
+    (pure-TP would not fit 398B params on 16 GB chips)."""
+    mesh = MESHES["16x16"]
+    cfg = get_config(arch)
+    specs = tfm.param_specs(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    for path, leaf in flat:
+        if int(np.prod(leaf.shape)) < 100_000_000:
+            continue
+        name = "/".join(_key_str(k) for k in path)
+        if name.endswith("embed"):
+            # embeddings are deliberately 1-D (vocab over model): feature
+            # sharding would poison activation layouts (specs.py), and even
+            # the 256k-vocab tables are only ~260 MB/device at 1-D
+            continue
+        spec = param_spec(name, tuple(leaf.shape), mesh)
+        sharded_axes = sum(1 for e in spec if e is not None)
+        assert sharded_axes >= 2, f"{arch}:{name} {leaf.shape} only {spec}"
