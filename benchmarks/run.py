@@ -14,8 +14,9 @@ import time
 import traceback
 
 from benchmarks import (
-    fig4_convergence, fig5_tokenspeed, roofline_report, table1_resnet_qat,
-    table2_llm_qlora, table3_kernels, table4_adaptive, table5_memory,
+    fig4_convergence, fig5_tokenspeed, roofline_report, serve_queue_bench,
+    table1_resnet_qat, table2_llm_qlora, table3_kernels, table4_adaptive,
+    table5_memory,
 )
 
 TABLES = {
@@ -27,6 +28,7 @@ TABLES = {
     "fig4": fig4_convergence,
     "fig5": fig5_tokenspeed,
     "roofline": roofline_report,
+    "serve_queue": serve_queue_bench,
 }
 
 

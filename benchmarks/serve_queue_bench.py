@@ -1,0 +1,142 @@
+"""Queue serving benchmark: continuous batcher vs the seed per-request loop.
+
+Measures, on POCKET / CPU (batch 4 slots, prompt 64, 32 new tokens):
+
+* ``queue/batched``  — the ServeEngine continuous batcher: slot-wise
+  admission prefills + ONE jitted batched decode step per iteration.
+* ``queue/seed``     — the seed ``serve_queue`` strategy, reproduced here
+  for comparison: every active request re-runs ``generate(prompt+generated,
+  max_new_tokens=1)``, i.e. a full prefill of the whole history per token
+  (and a fresh XLA compile per prompt length).  Measured on a reduced token
+  count and scaled — running it at full length takes minutes.
+* ``queue/step_flatness`` — per-decode-step wall time across the run; the
+  batcher's step time must NOT grow with generated length (the seed loop's
+  per-token cost grows linearly since it re-prefills the history).
+
+    PYTHONPATH=src:. python benchmarks/serve_queue_bench.py
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.paper_models import POCKET
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+from repro.serve.engine import queue_throughput
+
+BATCH, PROMPT_LEN, NEW_TOKENS, NUM_REQS = 4, 64, 32, 8
+SEED_BASELINE_TOKENS = 3          # per-token cost is ~constant-or-growing,
+                                  # so a short run upper-bounds its speed
+
+
+def _requests(n: int, new_tokens: int) -> List[Request]:
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, POCKET.vocab_size,
+                                        (PROMPT_LEN,)).astype(np.int32),
+                    max_new_tokens=new_tokens)
+            for i in range(n)]
+
+
+def _seed_serve_queue(engine: ServeEngine, requests: List[Request],
+                      step_budget: int = 10_000):
+    """The seed repo's serve_queue, verbatim strategy: re-prefill the full
+    prompt+generated history for every token of every active request."""
+    pending = list(requests)
+    results = {}
+    active: List[Request] = []
+    steps = 0
+    while (pending or active) and steps < step_budget:
+        while pending and len(active) < engine.max_batch:
+            req = pending.pop(0)
+            req.tokens = []
+            active.append(req)
+        for req in list(active):
+            prompt = np.concatenate([req.prompt,
+                                     np.array(req.tokens, np.int32)])
+            toks = engine.generate(prompt[None, :], max_new_tokens=1,
+                                   temperature=req.temperature)
+            req.tokens.append(int(toks[0, 0]))
+            if len(req.tokens) >= req.max_new_tokens:
+                results[req.uid] = req.tokens
+                req.done = True
+                active.remove(req)
+        steps += 1
+    for req in active:
+        results[req.uid] = req.tokens or []
+    return results
+
+
+def _step_times(engine: ServeEngine, steps: int) -> List[float]:
+    """Per-step decode latency at a fixed batch across generated length."""
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, POCKET.vocab_size,
+                           (BATCH, PROMPT_LEN)).astype(np.int32)
+    import jax.numpy as jnp
+    _, cache = engine.prefill(jnp.asarray(prompts))
+    last = jnp.zeros((BATCH, 1), jnp.int32)
+    engine.serve_step(cache, last)                       # compile
+    times = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        logits, cache = engine.serve_step(cache, last)
+        jax.block_until_ready(logits)
+        times.append(time.perf_counter() - t0)
+        last = jnp.argmax(logits[:, :POCKET.vocab_size], -1)[:, None]
+    return times
+
+
+def run(scale: str = None) -> List[Row]:
+    params = tfm.init_params(jax.random.PRNGKey(0), POCKET)
+    rows: List[Row] = []
+
+    # -- batched continuous batcher (warm up compiles, then measure) --------
+    eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=BATCH,
+                      max_len=PROMPT_LEN + NEW_TOKENS + 8)
+    queue_throughput(eng, _requests(2, 2))               # warmup/compile
+    stats = queue_throughput(eng, _requests(NUM_REQS, NEW_TOKENS))
+    batched_tps = stats["tokens_per_s"]
+    rows.append(Row(name="serve_queue/batched",
+                    us_per_call=1e6 / max(batched_tps, 1e-9),
+                    derived=f"{batched_tps:.1f} tok/s; TTFT mean "
+                            f"{stats['ttft_mean_s'] * 1e3:.0f}ms max "
+                            f"{stats['ttft_max_s'] * 1e3:.0f}ms"))
+
+    # -- seed strategy (reduced length, scaled per-token) -------------------
+    eng2 = ServeEngine(POCKET, params, scheme="bf16", max_batch=BATCH,
+                       max_len=PROMPT_LEN + NEW_TOKENS + 8)
+    seed_reqs = _requests(BATCH, SEED_BASELINE_TOKENS)
+    _seed_serve_queue(eng2, _requests(BATCH, 1))         # warmup/compile
+    t0 = time.perf_counter()
+    res = _seed_serve_queue(eng2, seed_reqs)
+    dt = time.perf_counter() - t0
+    seed_tps = sum(len(v) for v in res.values()) / dt
+    rows.append(Row(name="serve_queue/seed",
+                    us_per_call=1e6 / max(seed_tps, 1e-9),
+                    derived=f"{seed_tps:.1f} tok/s (re-prefill per token, "
+                            f"measured over {SEED_BASELINE_TOKENS} tok/req)"))
+    rows.append(Row(name="serve_queue/speedup",
+                    us_per_call=0.0,
+                    derived=f"{batched_tps / max(seed_tps, 1e-9):.1f}x "
+                            f"batched vs seed"))
+
+    # -- per-step flatness: decode cost must not scale with generated len ---
+    times = _step_times(eng, NEW_TOKENS)
+    q = max(1, len(times) // 4)
+    first, last = float(np.mean(times[:q])), float(np.mean(times[-q:]))
+    rows.append(Row(name="serve_queue/step_flatness",
+                    us_per_call=float(np.mean(times)) * 1e6,
+                    derived=f"first-quartile {first * 1e3:.2f}ms vs "
+                            f"last-quartile {last * 1e3:.2f}ms "
+                            f"(ratio {last / max(first, 1e-9):.2f})"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,11 +1,12 @@
 from repro.kernels import attention, common, qmatmul, registry, rmsnorm, rope, softmax, swiglu
 from repro.kernels.common import (
-    AttentionConfig, EltwiseConfig, MatmulConfig, RopeConfig, RowBlockConfig,
+    AttentionConfig, DecodeAttentionConfig, EltwiseConfig, MatmulConfig,
+    RopeConfig, RowBlockConfig,
 )
 
 __all__ = [
     "attention", "common", "qmatmul", "registry", "rmsnorm", "rope",
     "softmax", "swiglu",
-    "AttentionConfig", "EltwiseConfig", "MatmulConfig", "RopeConfig",
-    "RowBlockConfig",
+    "AttentionConfig", "DecodeAttentionConfig", "EltwiseConfig",
+    "MatmulConfig", "RopeConfig", "RowBlockConfig",
 ]

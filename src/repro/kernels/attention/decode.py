@@ -1,0 +1,170 @@
+"""Pallas flash-decode (split-K over cache length) with int8-KV support.
+
+One query token per sequence attends to a long KV cache.  The grid is
+(B, KV_heads, k_splits): every program owns one (batch, kv-head) pair and one
+contiguous split of the cache, streams it through VMEM in ``block_k`` tiles
+with an online softmax, and emits an *unnormalized* partial — accumulator,
+running max, running denominator.  The wrapper merges the per-split partials
+with a logsumexp combine, so decode latency scales with cache_len / k_splits
+instead of cache_len (the batch-1 decode grid is otherwise far too small to
+fill the chip — this is the "flash-decoding" trick).
+
+Quantized caches are first-class: the int8 K/V tiles and their per-(token,
+head) scales are loaded together and dequantized tile-wise *in VMEM*, so the
+bf16 cache is never materialized in HBM (the whole point of storing KV in
+int8).  GQA is handled by keeping all G query heads of a kv-head in one
+program — the (G, block_k) score tile reuses each loaded K/V tile G times.
+
+Splits that lie entirely beyond the valid cache length (or outside the
+sliding window) are skipped with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+from repro.kernels.common import DecodeAttentionConfig, round_up
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, *rest,
+                   block_k, split_len, scale, cap, window, quantized):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        o_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    length = len_ref[b]
+    k_lo = s * split_len
+    g, d = q_ref.shape[2], q_ref.shape[3]
+
+    # lower bound of the visible range (sliding window)
+    w_lo = (length - window) if window and window > 0 else 0
+    needed = k_lo < length
+    if window and window > 0:
+        needed = jnp.logical_and(needed, k_lo + split_len > w_lo)
+
+    @pl.when(jnp.logical_not(needed))
+    def _skip():
+        o_ref[0, 0, 0] = jnp.zeros_like(o_ref[0, 0, 0])
+        m_ref[0, 0, 0] = jnp.full_like(m_ref[0, 0, 0], NEG_INF)
+        l_ref[0, 0, 0] = jnp.zeros_like(l_ref[0, 0, 0])
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+
+        def body(i, carry):
+            m, l, acc = carry                                   # (G,1) (G,1) (G,D)
+            rows = pl.ds(i * block_k, block_k)
+            kb = k_ref[0, rows, 0, :].astype(jnp.float32)       # (bk, D)
+            vb = v_ref[0, rows, 0, :].astype(jnp.float32)
+            if quantized:
+                # tile-wise dequant in VMEM: int8 values x per-token scales
+                kb = kb * ks_ref[0, rows, 0][:, None]
+                vb = vb * vs_ref[0, rows, 0][:, None]
+            x = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ()))) * scale
+            if cap and cap > 0:
+                x = cap * jnp.tanh(x / cap)                     # (G, bk)
+            kpos = k_lo + i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (g, block_k), 1)
+            valid = kpos < length
+            if window and window > 0:
+                valid = jnp.logical_and(valid, kpos >= w_lo)
+            x = jnp.where(valid, x, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+            m_safe = jnp.maximum(m_new, -0.5e30)
+            p = jnp.exp(x - m_safe)
+            corr = jnp.exp(jnp.maximum(m, -0.5e30) - m_safe)
+            l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * corr + jax.lax.dot_general(
+                p, vb, (((1,), (0,)), ((), ())))
+            return m_new, l_new, acc_new
+
+        init = (jnp.full((g, 1), NEG_INF, jnp.float32),
+                jnp.zeros((g, 1), jnp.float32),
+                jnp.zeros((g, d), jnp.float32))
+        m, l, acc = jax.lax.fori_loop(0, split_len // block_k, body, init)
+        o_ref[0, 0, 0] = acc
+        m_ref[0, 0, 0] = m[:, 0]
+        l_ref[0, 0, 0] = l[:, 0]
+
+
+def flash_decode(q, k, v, lengths, k_scale=None, v_scale=None,
+                 cfg: DecodeAttentionConfig = None, *, cap: float = 0.0,
+                 window: int = 0, interpret: bool = False):
+    """q: (B, KV, G, D); k/v: (B, T, KV, D) [int8 or float]; lengths: (B,)
+    int32 valid cache length per sequence; k_scale/v_scale: (B, T, KV) f32
+    per-(token, head) dequant scales (required iff k/v are int8).
+
+    Returns (B, KV, G, D) in q.dtype.
+    """
+    cfg = cfg or DecodeAttentionConfig()
+    b, kv, g, d = q.shape
+    t = k.shape[1]
+    quantized = k_scale is not None
+
+    bk = min(cfg.block_k, round_up(t, common.SUBLANE))
+    split_len = round_up(-(-round_up(t, bk) // cfg.k_splits), bk)
+    splits = -(-round_up(t, bk) // split_len)
+    t_pad = split_len * splits
+    if t_pad != t:
+        pad = [(0, 0), (0, t_pad - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        if quantized:
+            k_scale = jnp.pad(k_scale, pad[:3])
+            v_scale = jnp.pad(v_scale, pad[:3])
+
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+
+    kv_spec = pl.BlockSpec((1, split_len, 1, d), lambda bi, h, s, *_refs: (bi, s, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bi, h, s, *_refs: (bi, h, 0, 0)),
+        kv_spec, kv_spec,
+    ]
+    args = [q, k, v]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, split_len, 1), lambda bi, h, s, *_refs: (bi, s, h))
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, splits),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d), lambda bi, h, s, *_refs: (bi, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda bi, h, s, *_refs: (bi, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda bi, h, s, *_refs: (bi, h, s, 0)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=bk, split_len=split_len,
+                          scale=d ** -0.5, cap=cap, window=window,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, splits, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, splits, g), jnp.float32),
+        ],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lengths, *args)
+
+    # split-K combine: renormalize each partial to the global running max
+    m = jnp.maximum(jnp.max(m_part, axis=2, keepdims=True), -0.5e30)
+    w = jnp.exp(jnp.maximum(m_part, -0.5e30) - m)               # (B,KV,S,G)
+    denom = jnp.sum(l_part * w, axis=2)                          # (B,KV,G)
+    out = jnp.sum(o_part * w[..., None], axis=2)                 # (B,KV,G,D)
+    out = out / jnp.maximum(denom, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,4 +1,5 @@
-"""jit'd wrapper for flash attention: GQA expansion + (B,S,H,D) layout."""
+"""jit'd wrappers for flash attention (GQA expansion + (B,S,H,D) layout) and
+flash decode (native GQA, int8-KV, per-sequence lengths)."""
 from __future__ import annotations
 
 from typing import Optional
@@ -6,16 +7,24 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import AttentionConfig
+from repro.kernels.common import AttentionConfig, DecodeAttentionConfig
+from repro.kernels.attention import decode as D
 from repro.kernels.attention import kernel as K
 
 _DEFAULT_CFG = AttentionConfig()
+_DEFAULT_DECODE_CFG = DecodeAttentionConfig()
 
 
 def set_default_config(cfg: AttentionConfig) -> None:
     global _DEFAULT_CFG
     cfg.validate()
     _DEFAULT_CFG = cfg
+
+
+def set_default_decode_config(cfg: DecodeAttentionConfig) -> None:
+    global _DEFAULT_DECODE_CFG
+    cfg.validate()
+    _DEFAULT_DECODE_CFG = cfg
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
@@ -35,3 +44,26 @@ def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
     out = K.flash_attention(qf, kf, vf, cfg, causal=causal, window=window,
                             cap=cap, interpret=interpret)
     return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def flash_decode(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
+                 *, cap=0.0, window=0,
+                 cfg: Optional[DecodeAttentionConfig] = None,
+                 interpret: bool = False):
+    """Single-token decode against a (possibly int8) KV cache.
+
+    q: (B, 1, H, D); k/v_cache: (B, T, KV, D) with H % KV == 0;
+    lengths: scalar or (B,) valid cache length INCLUDING the current token;
+    k_scale/v_scale: (B, T, KV, 1) or (B, T, KV) dequant scales for int8
+    caches.  Returns (B, 1, H, D).
+    """
+    cfg = cfg or _DEFAULT_DECODE_CFG
+    b, s1, h, d = q.shape
+    kv = k_cache.shape[2]
+    qg = q[:, 0].reshape(b, kv, h // kv, d)
+    if k_scale is not None and k_scale.ndim == 4:
+        k_scale = k_scale[..., 0]
+        v_scale = v_scale[..., 0]
+    out = D.flash_decode(qg, k_cache, v_cache, lengths, k_scale, v_scale,
+                         cfg, cap=cap, window=window, interpret=interpret)
+    return out.reshape(b, 1, h, d)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the flash-attention kernel."""
+"""Pure-jnp oracles for the flash-attention and flash-decode kernels."""
 import jax
 import jax.numpy as jnp
 
@@ -21,3 +21,27 @@ def attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, lengths, k_scale=None, v_scale=None, *,
+                     cap=0.0, window=0):
+    """Oracle for the flash-decode kernel: dequantize the whole cache, mask,
+    softmax.  q: (B, KV, G, D); k/v: (B, T, KV, D); scales: (B, T, KV)."""
+    b, kv, g, d = q.shape
+    t = k.shape[1]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    logits = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32), kf) * (d ** -0.5)
+    if cap and cap > 0:
+        logits = cap * jnp.tanh(logits / cap)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    kpos = jnp.arange(t)
+    valid = kpos[None, :] < lengths[:, None]                     # (B, T)
+    if window and window > 0:
+        valid &= kpos[None, :] >= (lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgt,bthd->bhgd", probs, vf).astype(q.dtype)

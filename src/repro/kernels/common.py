@@ -11,11 +11,17 @@ from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.pallas import tpu as pltpu
 
 # TPU v5e tile granularities
 LANE = 128          # last-dim tile granularity (VPU lanes / MXU cols)
 SUBLANE = 8         # second-to-last granularity for f32
 MXU = 128           # systolic array dim
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; every
+# kernel imports the resolved class from here so both spellings work.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
 
 
 def round_up(x: int, m: int) -> int:
@@ -85,3 +91,21 @@ class AttentionConfig:
     def validate(self):
         assert self.block_q % SUBLANE == 0
         assert self.block_k % LANE == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeAttentionConfig:
+    """flash-decode tunables: key-block tile and split-K factor.
+
+    ``k_splits`` partial results are combined with a host-side logsumexp
+    merge, so decode latency scales with cache_len / k_splits instead of
+    cache_len (the batch-1 decode grid is otherwise too small to fill the
+    chip).
+    """
+    block_k: int = 128
+    k_splits: int = 4
+
+    def validate(self):
+        assert self.block_k % SUBLANE == 0
+        assert self.k_splits >= 1 and (self.k_splits & (self.k_splits - 1)) == 0, \
+            "k_splits must be a power of two"

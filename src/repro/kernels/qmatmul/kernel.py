@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import MatmulConfig
 
 
@@ -58,7 +59,7 @@ def bf16_matmul(x, w, cfg: MatmulConfig, interpret: bool = False):
         out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=cfg.dimension_semantics),
         interpret=interpret,
     )(x, w)
@@ -104,7 +105,7 @@ def w8a8_matmul(xq, sx, wq, sw, cfg: MatmulConfig, out_dtype=jnp.bfloat16,
         out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=cfg.dimension_semantics),
         interpret=interpret,
     )(xq, sx, wq, sw)
@@ -162,7 +163,7 @@ def wo8_matmul(x, wq, sw, cfg: MatmulConfig, group_size: int = -1,
         out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=cfg.dimension_semantics),
         interpret=interpret,
     )(x, wq, sw)
@@ -214,7 +215,7 @@ def wo4_matmul(x, wp, sw, cfg: MatmulConfig, group_size: int,
         out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=cfg.dimension_semantics),
         interpret=interpret,
     )(x, wp, sw)

@@ -10,7 +10,8 @@ import dataclasses
 from typing import Any, Callable, Dict, Tuple
 
 from repro.kernels.common import (
-    AttentionConfig, EltwiseConfig, MatmulConfig, RopeConfig, RowBlockConfig,
+    AttentionConfig, DecodeAttentionConfig, EltwiseConfig, MatmulConfig,
+    RopeConfig, RowBlockConfig,
 )
 
 
@@ -58,6 +59,11 @@ KERNELS: Dict[str, KernelInfo] = {
         space={"block_q": (64, 128, 256, 512),
                "block_k": (128, 256, 512, 1024)},
         paper_table3=False),       # beyond-paper kernel
+    "flash_decode": KernelInfo(
+        "flash_decode", DecodeAttentionConfig,
+        space={"block_k": (64, 128, 256, 512, 1024),
+               "k_splits": (1, 2, 4, 8, 16)},
+        paper_table3=False),       # beyond-paper kernel (int8-KV decode)
 }
 
 

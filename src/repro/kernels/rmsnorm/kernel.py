@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import RowBlockConfig
 
 
@@ -33,7 +34,7 @@ def rmsnorm(x: jax.Array, weight: jax.Array, cfg: RowBlockConfig,
         ],
         out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, weight.reshape(1, c))

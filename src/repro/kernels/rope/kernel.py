@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import RopeConfig
 
 
@@ -51,7 +52,7 @@ def rope(x2: jax.Array, pos2: jax.Array, heads: int, dim: int,
         ],
         out_specs=pl.BlockSpec((bt, hd), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, hd), x2.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x2, pos2)

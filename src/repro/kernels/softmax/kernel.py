@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import RowBlockConfig
 
 
@@ -36,7 +37,7 @@ def softmax(x: jax.Array, cfg: RowBlockConfig, cap: float = 0.0,
         in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)

@@ -4,12 +4,19 @@
         --scheme int8 --batch 4 --new-tokens 16
 
 Instantiates a (reduced or full) model, applies HAQA's adaptive quantization
-choice (or a forced --scheme), and serves a batch of random prompts,
-reporting measured throughput.
+choice (or a forced --scheme), and either serves a batch of random prompts
+(reporting measured throughput) or — with ``--queue N`` — pushes N queued
+requests with mixed prompt lengths through the continuous batcher and
+reports queue throughput plus time-to-first-token.
+
+``--kv-dtype int8`` stores the KV cache quantized; decode then dequantizes
+tile-wise (flash-decode Pallas kernel on TPU, fused scale-folding einsum on
+CPU) instead of materializing a bf16 cache.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -17,7 +24,8 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.core import adaptive, get_hardware
 from repro.models import transformer as tfm
-from repro.serve import ServeEngine, throughput_tokens_per_s
+from repro.serve import Request, ServeEngine, throughput_tokens_per_s
+from repro.serve.engine import queue_throughput
 
 
 def main():
@@ -26,14 +34,20 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--scheme", default="auto",
                     choices=["auto", "bf16", "int8", "int4"])
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
     ap.add_argument("--hardware", default="cpu-host")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--queue", type=int, default=0,
+                    help="serve this many queued requests through the "
+                         "continuous batcher instead of one fixed batch")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.kv_dtype != "bf16":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_dtype)
     hw = get_hardware(args.hardware)
     scheme = args.scheme
     if scheme == "auto":
@@ -44,12 +58,31 @@ def main():
         print("  rationale:", decision.thought)
 
     params = tfm.init_params(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServeEngine(cfg, params, scheme=scheme,
+    engine = ServeEngine(cfg, params, scheme=scheme, max_batch=args.batch,
                          max_len=args.prompt_len + args.new_tokens + 8)
-    tput = throughput_tokens_per_s(engine, args.batch, args.prompt_len,
-                                   args.new_tokens)
-    print(f"{cfg.name} [{scheme}]: {tput:.1f} tokens/s "
-          f"(batch={args.batch}, context={args.prompt_len})")
+
+    if args.queue > 0:
+        rng = np.random.default_rng(args.seed)
+        reqs = []
+        for uid in range(args.queue):
+            plen = int(rng.integers(max(4, args.prompt_len // 2),
+                                    args.prompt_len + 1))
+            prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+            reqs.append(Request(uid=uid, prompt=prompt,
+                                max_new_tokens=args.new_tokens))
+        stats = queue_throughput(engine, reqs)
+        print(f"{cfg.name} [{scheme}, kv={args.kv_dtype}] queue: "
+              f"{stats['tokens_per_s']:.1f} tokens/s over {args.queue} "
+              f"requests ({engine.max_batch} slots), "
+              f"TTFT mean {stats['ttft_mean_s'] * 1e3:.0f} ms / "
+              f"max {stats['ttft_max_s'] * 1e3:.0f} ms")
+        print(f"  prefills={engine.stats['prefills']} (one per request), "
+              f"decode_steps={engine.stats['decode_steps']}")
+    else:
+        tput = throughput_tokens_per_s(engine, args.batch, args.prompt_len,
+                                       args.new_tokens)
+        print(f"{cfg.name} [{scheme}, kv={args.kv_dtype}]: {tput:.1f} tokens/s "
+              f"(batch={args.batch}, context={args.prompt_len})")
 
 
 if __name__ == "__main__":

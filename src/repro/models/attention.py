@@ -115,27 +115,72 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out.reshape(b, s, h, d).astype(q.dtype)
 
 
+# How decode_attention executes: "xla" is the fused einsum path (works on any
+# backend and never materializes a dequantized cache), "pallas" is the
+# flash-decode split-K kernel, "pallas_interpret" runs that kernel in
+# interpret mode (CPU tests).  "auto" picks pallas on TPU, xla elsewhere.
+_DECODE_BACKEND = "auto"
+
+
+def set_decode_backend(mode: str) -> None:
+    assert mode in ("auto", "xla", "pallas", "pallas_interpret")
+    global _DECODE_BACKEND
+    _DECODE_BACKEND = mode
+
+
+def _resolve_decode_backend(backend: Optional[str]) -> str:
+    mode = backend or _DECODE_BACKEND
+    if mode == "auto":
+        # the flash-decode kernel is validated in interpret mode only so
+        # far; keep the XLA path as the default everywhere and make pallas
+        # an explicit opt-in until it's burned in on real TPU hardware
+        # (see ROADMAP "Flash-decode on real TPU")
+        return "xla"
+    return mode
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
-                     logit_cap: float = 0.0) -> jax.Array:
+                     logit_cap: float = 0.0, k_scale=None, v_scale=None,
+                     backend: Optional[str] = None) -> jax.Array:
     """One-token decode: q (B,1,H,D) against cache (B,T,KV,D), valid length
-    ``cache_len`` (scalar or (B,) int) INCLUDING the current token."""
+    ``cache_len`` (scalar or (B,) int) INCLUDING the current token.
+
+    For int8 caches pass ``k_scale``/``v_scale`` ((B,T,KV,1) per-token-head
+    dequant scales): the scales are folded into the score/value contractions
+    so the full bf16 cache is never materialized.
+    """
     b, s1, h, d = q.shape
     t = k_cache.shape[1]
     kvh = k_cache.shape[2]
     g = h // kvh
-    qg = _gqa_split(q, kvh).astype(jnp.float32)
-    scale = d ** -0.5
-    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache.astype(jnp.float32)) * scale
-    logits = softcap(logits, logit_cap)                        # (B,KV,G,1,T)
-    kpos = jnp.arange(t)
     clen = jnp.asarray(cache_len)
     if clen.ndim == 0:
         clen = jnp.full((b,), clen)
+
+    mode = _resolve_decode_backend(backend)
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels.attention import ops as kops
+        return kops.flash_decode(q, k_cache, v_cache, clen, k_scale, v_scale,
+                                 cap=logit_cap, window=window,
+                                 interpret=(mode == "pallas_interpret"))
+
+    qg = _gqa_split(q, kvh).astype(jnp.float32)
+    scale = d ** -0.5
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache.astype(jnp.float32)) * scale
+    if k_scale is not None:
+        # fold per-(token, head) dequant scales into the logits: (B,T,KV,1)
+        # -> (B,KV,1,1,T), multiplied lazily instead of dequantizing K
+        logits = logits * k_scale.astype(jnp.float32)[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    logits = softcap(logits, logit_cap)                        # (B,KV,G,1,T)
+    kpos = jnp.arange(t)
     valid = kpos[None, :] < clen[:, None]                      # (B,T)
     if window and window > 0:
         valid &= kpos[None, :] > (clen[:, None] - 1 - window)
     logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        # fold V scales into the probabilities (same trick, other operand)
+        probs = probs * v_scale.astype(jnp.float32)[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
     out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache.astype(jnp.float32))
     return out.reshape(b, s1, h, d).astype(q.dtype)
 

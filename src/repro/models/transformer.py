@@ -299,10 +299,6 @@ def _quantize_kv(x):
     return q.astype(jnp.int8), (amax / 127.0).astype(jnp.float16)
 
 
-def _dequantize_kv(q, scale, dtype=jnp.bfloat16):
-    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
-
-
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     plan = block_plan(cfg)
     blocks = []
@@ -322,52 +318,58 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 # decode
 # ---------------------------------------------------------------------------
 
-def _attn_decode(h, p, spec, cfg, lcache, cur_len):
+def _write_rows(cache, rows, slots):
+    """Per-sequence cache write: cache (B,S,...), rows (B,1,...), slots (B,)."""
+    return jax.vmap(
+        lambda c, r, s: jax.lax.dynamic_update_slice(
+            c, r.astype(c.dtype), (s,) + (0,) * (c.ndim - 1)))(cache, rows, slots)
+
+
+def _attn_decode(h, p, spec, cfg, lcache, lens):
+    """One-token attention against the cache.  lens: (B,) int32 — the number
+    of tokens already cached per sequence (the new token is written at row
+    ``lens[b]``, so heterogeneous slot lengths batch together)."""
     b = h.shape[0]
     hd = cfg.resolved_head_dim
     q = dense(h, p["wq"]).reshape(b, 1, cfg.num_heads, hd)
     k = dense(h, p["wk"]).reshape(b, 1, cfg.num_kv_heads, hd)
     v = dense(h, p["wv"]).reshape(b, 1, cfg.num_kv_heads, hd)
-    pos = jnp.broadcast_to(cur_len[None, None], (b, 1))
+    pos = lens[:, None]
     q = rope_dispatch(q, pos, cfg)
     k = rope_dispatch(k, pos, cfg)
     size = lcache["k"].shape[1]
-    slot = (cur_len % size) if spec.local else cur_len
-    new_cache = {}
+    slots = (lens % size) if spec.local else lens
+    k_scale = v_scale = None
     if cfg.kv_cache_dtype == "int8":
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
-        new_cache["k"] = jax.lax.dynamic_update_slice(lcache["k"], kq,
-                                                      (0, slot, 0, 0))
-        new_cache["v"] = jax.lax.dynamic_update_slice(lcache["v"], vq,
-                                                      (0, slot, 0, 0))
-        new_cache["k_scale"] = jax.lax.dynamic_update_slice(
-            lcache["k_scale"], ks, (0, slot, 0, 0))
-        new_cache["v_scale"] = jax.lax.dynamic_update_slice(
-            lcache["v_scale"], vs, (0, slot, 0, 0))
-        kc = _dequantize_kv(new_cache["k"], new_cache["k_scale"])
-        vc = _dequantize_kv(new_cache["v"], new_cache["v_scale"])
+        new_cache = {
+            "k": _write_rows(lcache["k"], kq, slots),
+            "v": _write_rows(lcache["v"], vq, slots),
+            "k_scale": _write_rows(lcache["k_scale"], ks, slots),
+            "v_scale": _write_rows(lcache["v_scale"], vs, slots),
+        }
+        # scales are folded into the attention contractions (or dequantized
+        # tile-wise inside the flash-decode kernel) — the full bf16 cache is
+        # never materialized
+        kc, vc = new_cache["k"], new_cache["v"]
+        k_scale, v_scale = new_cache["k_scale"], new_cache["v_scale"]
     else:
-        kc = jax.lax.dynamic_update_slice(
-            lcache["k"], k.astype(lcache["k"].dtype), (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(
-            lcache["v"], v.astype(lcache["v"].dtype), (0, slot, 0, 0))
+        kc = _write_rows(lcache["k"], k, slots)
+        vc = _write_rows(lcache["v"], v, slots)
         new_cache = {"k": kc, "v": vc}
-    if spec.local:
-        valid = jnp.minimum(cur_len + 1, size)
-        o = attn_lib.decode_attention(q, kc, vc, valid,
-                                      logit_cap=cfg.attn_logit_softcap)
-    else:
-        o = attn_lib.decode_attention(q, kc, vc, cur_len + 1,
-                                      logit_cap=cfg.attn_logit_softcap)
+    valid = jnp.minimum(lens + 1, size) if spec.local else lens + 1
+    o = attn_lib.decode_attention(q, kc, vc, valid,
+                                  logit_cap=cfg.attn_logit_softcap,
+                                  k_scale=k_scale, v_scale=v_scale)
     out = dense(o.reshape(b, 1, cfg.num_heads * hd), p["wo"])
     return out, new_cache
 
 
-def _apply_layer_decode(x, p, spec, cfg, lcache, cur_len):
+def _apply_layer_decode(x, p, spec, cfg, lcache, lens):
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.mixer == "attn":
-        mix, new_cache = _attn_decode(h, p, spec, cfg, lcache, cur_len)
+        mix, new_cache = _attn_decode(h, p, spec, cfg, lcache, lens)
     else:
         mix, new_cache = ssm_lib.mamba_decode_step(h, lcache, p["mamba"],
                                                    cfg.ssm or SSMConfig())
@@ -385,14 +387,20 @@ def _apply_layer_decode(x, p, spec, cfg, lcache, cur_len):
 def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None):
     """One-token decode.  tokens: (B, 1) int32 (or embeds (B, 1, D)).
 
+    ``cache["len"]`` may be a scalar (homogeneous batch, as produced by
+    ``prefill``/``init_cache``) or a (B,) vector of per-sequence lengths
+    (continuous batching: each slot decodes at its own position).
+
     Returns (logits (B, V_padded), new_cache).
     """
-    cur_len = cache["len"]
+    cur_len = jnp.asarray(cache["len"])
     if embeds is not None:
         x = embeds.astype(params["embed"].dtype)
     else:
         x = params["embed"][tokens]
         x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    b = x.shape[0]
+    lens = jnp.broadcast_to(cur_len, (b,)) if cur_len.ndim == 0 else cur_len
     x = shard_activations(x)
     plan = block_plan(cfg)
     new_blocks = []
@@ -403,7 +411,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None):
             new_lc = {}
             for j, spec in enumerate(_seg.layers):
                 xx, nc = _apply_layer_decode(xx, layer_params[str(j)], spec, cfg,
-                                             layer_cache[str(j)], cur_len)
+                                             layer_cache[str(j)], lens)
                 new_lc[str(j)] = nc
             return shard_activations(xx), new_lc
 

@@ -1,4 +1,4 @@
-"""Serving engine: prefill + batched decode with quantized weights.
+"""Serving engine: prefill + continuous-batching decode with quantized weights.
 
 ``ServeEngine`` wraps a model config + (optionally PTQ-quantized) params and
 exposes the production entry points the dry-run lowers:
@@ -7,9 +7,42 @@ exposes the production entry points the dry-run lowers:
 * ``serve_step``    — one new token against the KV cache (decode_32k /
                       long_500k cells)
 
-plus a host-side ``generate`` loop with greedy/temperature sampling and a
-simple continuous-batching request queue (new requests are admitted whenever
-a slot frees, standing in for the paper's llama.cpp serving layer).
+plus a host-side ``generate`` loop and ``serve_queue``, a *true* continuous
+batcher built around three ideas:
+
+Slots
+    The engine owns ONE persistent batched KV cache with ``max_batch`` slots
+    and a (B,) vector of per-slot lengths (``cache["len"]``).  A request is
+    admitted into a free slot by a single jitted *admission* step: prefill
+    the prompt at batch 1, then write the resulting per-layer K/V (and SSM
+    state) rows directly into the shared cache at that slot.  After
+    admission a request is NEVER re-prefilled — every subsequent token costs
+    exactly one batched decode step, so per-step work is O(1) in the number
+    of already-generated tokens.
+
+Batched decode
+    Each scheduler iteration runs ONE jitted ``decode_step`` across all
+    slots.  Heterogeneous positions are handled inside the model: every slot
+    writes its new K/V row at its own ``len`` and attends to its own valid
+    prefix, so requests with different prompt lengths and different
+    ``max_new_tokens`` share the same step.  Finished slots are refilled
+    from the queue between steps; their stale rows are simply masked by the
+    per-slot length until the next admission overwrites them.
+
+Buckets
+    Admission prefills are compiled per *prompt-length bucket* (powers of
+    two up to ``max_len``), not per prompt length: prompts are right-padded
+    to the bucket and causal masking makes the padding inert.  This bounds
+    the number of XLA compilations at log2(max_len) regardless of traffic.
+    Plans where right-padding is NOT inert — local-attention ring buffers
+    (the trailing window would be laid out from the padded length) and SSM
+    layers (the recurrence would integrate pad tokens) — admit at the exact
+    prompt length instead.
+
+With ``cfg.kv_cache_dtype == "int8"`` the shared cache stores int8 values +
+per-(token, head) scales, and decode attention dequantizes tile-wise (Pallas
+flash-decode kernel on TPU, fused scale-folding einsum elsewhere) — the bf16
+cache is never materialized.
 """
 from __future__ import annotations
 
@@ -35,6 +68,18 @@ class Request:
     submitted_at: float = 0.0
     tokens: Optional[List[int]] = None
     done: bool = False
+    admitted_at: float = 0.0           # when a slot prefilled the prompt
+    first_token_at: float = 0.0        # time-to-first-token = this - submitted_at
+    finished_at: float = 0.0
+
+
+def _prompt_buckets(max_len: int, smallest: int = 16) -> List[int]:
+    buckets, b = [], smallest
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return buckets
 
 
 class ServeEngine:
@@ -49,37 +94,66 @@ class ServeEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        # Right-padding a prompt to its bucket is inert ONLY for global
+        # causal attention (pad rows are masked by the per-slot length).
+        # Local-attention ring buffers lay out the trailing window from the
+        # PADDED length (pad K/V would evict real tokens), and SSM states
+        # integrate pad tokens into the recurrence — for those plans we
+        # admit at the exact prompt length (one compile per distinct length)
+        # instead of corrupting the cache.
+        plan = tfm.block_plan(cfg)
+        self._pad_safe = all(spec.mixer == "attn" and not spec.local
+                             for seg in plan for spec in seg.layers)
+        self.buckets = _prompt_buckets(max_len)
         self._decode = jax.jit(
             lambda p, cache, toks: tfm.decode_step(p, cfg, cache, tokens=toks))
         self._prefill = jax.jit(
             lambda p, toks, ml=max_len: tfm.prefill(p, cfg, tokens=toks,
                                                     max_len=ml))
+        self._admit_fns: Dict[int, Any] = {}   # bucket -> jitted admission
+        self._sample_slots = jax.jit(self._sample_slots_impl)
+        # observability: serve_queue invariants ("no re-prefill after
+        # admission") are asserted against these counters in the tests
+        self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0}
 
     # -- low-level steps (also what the dry-run lowers) ----------------------
 
     def prefill(self, tokens: jax.Array):
+        self.stats["prefills"] += 1
         return self._prefill(self.params, tokens)
 
     def serve_step(self, cache, tokens: jax.Array):
+        self.stats["decode_steps"] += 1
         return self._decode(self.params, cache, tokens)
 
     # -- generation -----------------------------------------------------------
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
-                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
-        """Greedy/temperature batched generation.  prompts: (B, S)."""
+                 temperature: float = 0.0, seed: int = 0,
+                 return_device: bool = False):
+        """Greedy/temperature batched generation.  prompts: (B, S).
+
+        Runs prefill + exactly ``max_new_tokens - 1`` decode steps (the
+        prompt's last logits yield the first token, so a final decode whose
+        sample would be discarded is never dispatched).  Tokens stay on
+        device until the end — per-step host syncs would serialize dispatch.
+        """
         b, s = prompts.shape
         assert s + max_new_tokens <= self.max_len
         logits, cache = self.prefill(jnp.asarray(prompts))
         key = jax.random.PRNGKey(seed)
-        out = []
-        last = self._sample(logits[:, -1], temperature, key)
-        for i in range(max_new_tokens):
-            out.append(np.asarray(last))
+        key, sub = jax.random.split(key)
+        last = self._sample(logits[:, -1], temperature, sub)
+        out = [last]
+        for _ in range(max_new_tokens - 1):
             logits, cache = self.serve_step(cache, last[:, None])
             key, sub = jax.random.split(key)
             last = self._sample(logits, temperature, sub)
-        return np.stack(out, axis=1)
+            out.append(last)
+        stacked = jnp.stack(out, axis=1)
+        if return_device:
+            return stacked
+        return np.asarray(jax.block_until_ready(stacked))
 
     def _sample(self, logits, temperature, key):
         logits = logits[..., :self.cfg.vocab_size]
@@ -87,37 +161,155 @@ class ServeEngine:
             return jax.random.categorical(key, logits / temperature, axis=-1)
         return jnp.argmax(logits, axis=-1)
 
+    def _sample_slots_impl(self, logits, temps, key):
+        """Per-slot sampling: greedy where temps[b] == 0, else categorical."""
+        logits = logits[..., :self.cfg.vocab_size]
+        greedy = jnp.argmax(logits, axis=-1)
+        safe_t = jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jax.random.categorical(key, logits / safe_t, axis=-1)
+        return jnp.where(temps > 0, sampled, greedy)
+
     # -- continuous batching ---------------------------------------------------
+
+    def _bucket_for(self, prompt_len: int) -> int:
+        if prompt_len > self.max_len:
+            raise ValueError(f"prompt length {prompt_len} exceeds max_len "
+                             f"{self.max_len}")
+        if not self._pad_safe:
+            return prompt_len          # padding unsafe: admit at exact length
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(f"prompt length {prompt_len} exceeds max_len "
+                         f"{self.max_len}")
+
+    def _admit_fn(self, bucket: int):
+        """Jitted admission: prefill a (1, bucket) prompt and write its
+        per-layer cache rows into the shared cache at ``slot``.  ``slot`` and
+        ``true_len`` are traced, so one compilation serves every slot and
+        every prompt length in the bucket."""
+        if bucket in self._admit_fns:
+            return self._admit_fns[bucket]
+        cfg = self.cfg
+
+        def admit(params, cache, tokens, slot, true_len):
+            logits, small = tfm.prefill(params, cfg, tokens=tokens,
+                                        max_len=bucket)
+
+            def write(big, new):
+                # leaves are (count, B, rows, ...) vs (count, 1, rows', ...)
+                # with rows' <= rows; SSM states carry no row dim but share
+                # the (count, batch, ...) prefix, so the same write works
+                start = (0, slot) + (0,) * (big.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    big, new.astype(big.dtype), start)
+
+            new_blocks = jax.tree.map(write, cache["blocks"], small["blocks"])
+            lens = cache["len"].at[slot].set(true_len)
+            last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1,
+                                                axis=0, keepdims=False)
+            return last, {"blocks": new_blocks, "len": lens}
+
+        fn = jax.jit(admit)
+        self._admit_fns[bucket] = fn
+        return fn
+
+    def _empty_batched_cache(self):
+        cache = tfm.init_cache(self.cfg, self.max_batch, self.max_len)
+        cache["len"] = jnp.zeros((self.max_batch,), jnp.int32)
+        return cache
 
     def serve_queue(self, requests: List[Request],
                     step_budget: int = 10_000) -> Dict[int, List[int]]:
-        """Simple continuous batcher: fixed B slots; finished slots are
-        refilled from the queue each step (per-slot caches are re-prefilled
-        on admission — slot-level paging is future work)."""
+        """Continuous batcher over ``max_batch`` persistent cache slots.
+
+        Every iteration admits pending requests into free slots (one jitted
+        bucketed prefill each — the only prefill a request ever gets) and
+        then advances ALL active slots with a single batched decode step.
+        Returns {uid: generated tokens}; per-request TTFT/latency timestamps
+        are recorded on the Request objects.
+        """
+        now = time.perf_counter()
+        for req in requests:
+            if not req.submitted_at:
+                req.submitted_at = now
         pending = list(requests)
         results: Dict[int, List[int]] = {}
-        active: List[Request] = []
+        B = self.max_batch
+        cache = self._empty_batched_cache()
+        slots: List[Optional[Request]] = [None] * B
+        last_tokens = np.zeros((B, 1), np.int32)
+        temps = np.zeros((B,), np.float32)
+        key = jax.random.PRNGKey(0)
         steps = 0
-        while (pending or active) and steps < step_budget:
-            # admit
-            while pending and len(active) < self.max_batch:
+
+        def finish(b: int):
+            req = slots[b]
+            req.done = True
+            req.finished_at = time.perf_counter()
+            results[req.uid] = req.tokens
+            slots[b] = None
+
+        while (pending or any(s is not None for s in slots)) \
+                and steps < step_budget:
+            # admit into free slots: one bucketed prefill writes the prompt's
+            # K/V into the shared cache; the prompt's last logits give the
+            # first token "for free"
+            for b in range(B):
+                if slots[b] is not None or not pending:
+                    continue
                 req = pending.pop(0)
-                req.tokens = []
-                active.append(req)
-            # run each active request one token (batched by padding to a
-            # common prompt length)
-            for req in list(active):
-                prompt = np.concatenate([req.prompt, np.array(req.tokens, np.int32)])
-                toks = self.generate(prompt[None, :], max_new_tokens=1,
-                                     temperature=req.temperature)
-                req.tokens.append(int(toks[0, 0]))
+                plen = len(req.prompt)
+                assert plen + req.max_new_tokens <= self.max_len, \
+                    f"request {req.uid} needs {plen + req.max_new_tokens} " \
+                    f"rows, cache has {self.max_len}"
+                bucket = self._bucket_for(plen)
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :plen] = req.prompt
+                first_logits, cache = self._admit_fn(bucket)(
+                    self.params, cache, jnp.asarray(padded),
+                    np.int32(b), np.int32(plen))
+                self.stats["prefills"] += 1
+                self.stats["admitted"] += 1
+                req.admitted_at = time.perf_counter()
+                key, sub = jax.random.split(key)
+                tok = int(self._sample(first_logits[None],
+                                       req.temperature, sub)[0])
+                req.tokens = [tok]
+                req.first_token_at = time.perf_counter()
+                slots[b] = req
                 if len(req.tokens) >= req.max_new_tokens:
-                    results[req.uid] = req.tokens
-                    req.done = True
-                    active.remove(req)
+                    finish(b)
+                else:
+                    last_tokens[b, 0] = tok
+                    temps[b] = req.temperature
+
+            if not any(s is not None for s in slots):
+                continue
+
+            # one batched decode step across all slots (finished/empty slots
+            # decode garbage that the scheduler ignores)
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(last_tokens))
+            self.stats["decode_steps"] += 1
+            key, sub = jax.random.split(key)
+            toks = np.asarray(self._sample_slots(logits, jnp.asarray(temps),
+                                                 sub))
+            for b in range(B):
+                req = slots[b]
+                if req is None:
+                    continue
+                req.tokens.append(int(toks[b]))
+                last_tokens[b, 0] = int(toks[b])
+                if len(req.tokens) >= req.max_new_tokens:
+                    finish(b)
             steps += 1
-        for req in active:
-            results[req.uid] = req.tokens or []
+
+        for b in range(B):                     # step budget exhausted
+            if slots[b] is not None:
+                finish(b)
+        for req in pending:
+            results[req.uid] = []
         return results
 
 
@@ -129,6 +321,26 @@ def throughput_tokens_per_s(engine: ServeEngine, batch: int, prompt_len: int,
     prompts = rng.integers(0, engine.cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
     engine.generate(prompts, max_new_tokens=2)          # warmup / compile
     t0 = time.perf_counter()
-    engine.generate(prompts, max_new_tokens=new_tokens)
+    out = engine.generate(prompts, max_new_tokens=new_tokens,
+                          return_device=True)
+    jax.block_until_ready(out)   # async dispatch: sync BEFORE stopping clock
     dt = time.perf_counter() - t0
     return batch * new_tokens / dt
+
+
+def queue_throughput(engine: ServeEngine, requests: List[Request]):
+    """Run ``serve_queue`` and report aggregate + latency metrics."""
+    t0 = time.perf_counter()
+    results = engine.serve_queue(requests)
+    dt = time.perf_counter() - t0
+    total = sum(len(v) for v in results.values())
+    ttfts = [r.first_token_at - r.submitted_at for r in requests
+             if r.first_token_at]
+    return {
+        "tokens": total,
+        "seconds": dt,
+        "tokens_per_s": total / dt if dt > 0 else float("inf"),
+        "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+        "ttft_max_s": float(np.max(ttfts)) if ttfts else 0.0,
+        "results": results,
+    }

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
-    AttentionConfig, EltwiseConfig, MatmulConfig, RopeConfig, RowBlockConfig,
+    AttentionConfig, DecodeAttentionConfig, EltwiseConfig, MatmulConfig,
+    RopeConfig, RowBlockConfig,
 )
 from repro.kernels.attention import ops as aops, ref as aref
 from repro.kernels.qmatmul import ops as qops, ref as qref
@@ -103,3 +104,73 @@ def test_flash_attention_sweep(window, cap):
     exp = aref.attention_ref(qr, kr, vr, causal=True, window=window, cap=cap)
     exp = exp.reshape(b, h, s, d).transpose(0, 2, 1, 3)
     assert _rel_err(out, exp) < 3e-2
+
+
+# ---------------------------------------------------------------------------
+# flash decode (split-K over the cache, int8-KV, GQA)
+# ---------------------------------------------------------------------------
+
+def _quantize_cache(x):
+    amax = jnp.maximum(jnp.abs(x).max(-1, keepdims=True), 1e-6)
+    q = jnp.clip(jnp.round(x / amax * 127.0), -127, 127).astype(jnp.int8)
+    return q, (amax / 127.0)[..., 0].astype(jnp.float32)
+
+
+def _decode_inputs(b=3, h=8, kv=2, d=32, t=160):
+    q = jax.random.normal(KEY, (b, 1, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(11), (b, t, kv, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(12), (b, t, kv, d), jnp.float32)
+    lens = jnp.array([1, t // 2 + 1, t], jnp.int32)[:b]
+    return q, k, v, lens
+
+
+def _decode_ref(q, k, v, lens, ks=None, vs=None, **kw):
+    b, _, h, d = q.shape
+    kvh = k.shape[2]
+    qg = q[:, 0].reshape(b, kvh, h // kvh, d)
+    return aref.flash_decode_ref(qg, k, v, lens, ks, vs, **kw).reshape(q.shape)
+
+
+@pytest.mark.parametrize("block_k,k_splits", [(32, 1), (32, 4), (64, 2),
+                                              (128, 8)])
+def test_flash_decode_splitk_sweep(block_k, k_splits):
+    """Split-K partial combine must match the monolithic softmax for every
+    (block_k, k_splits) point of the registry's tunable space."""
+    q, k, v, lens = _decode_inputs()
+    cfg = DecodeAttentionConfig(block_k=block_k, k_splits=k_splits)
+    out = aops.flash_decode(q, k, v, lens, cfg=cfg, interpret=True)
+    assert _rel_err(out, _decode_ref(q, k, v, lens)) < 1e-4
+
+
+@pytest.mark.parametrize("cap,window", [(30.0, 0), (0.0, 64)])
+def test_flash_decode_cap_window(cap, window):
+    q, k, v, lens = _decode_inputs()
+    cfg = DecodeAttentionConfig(block_k=32, k_splits=4)
+    out = aops.flash_decode(q, k, v, lens, cap=cap, window=window, cfg=cfg,
+                            interpret=True)
+    exp = _decode_ref(q, k, v, lens, cap=cap, window=window)
+    assert _rel_err(out, exp) < 1e-4
+
+
+def test_flash_decode_int8_kv():
+    """int8 cache + per-(token, head) scales, dequantized tile-wise in the
+    kernel, must match the oracle's full dequantization exactly (same math)
+    and the fp cache up to quantization noise."""
+    q, k, v, lens = _decode_inputs()
+    kq, ks = _quantize_cache(k)
+    vq, vs = _quantize_cache(v)
+    cfg = DecodeAttentionConfig(block_k=32, k_splits=4)
+    out = aops.flash_decode(q, kq, vq, lens, ks, vs, cfg=cfg, interpret=True)
+    assert _rel_err(out, _decode_ref(q, kq, vq, lens, ks, vs)) < 1e-4
+    assert _rel_err(out, _decode_ref(q, k, v, lens)) < 5e-2   # quant noise
+
+
+def test_flash_decode_registry_space():
+    """flash_decode is a tunable kernel: registered space must build valid
+    configs (HAQA's deployment loop samples from it)."""
+    from repro.kernels import registry
+    space = registry.config_space("flash_decode")
+    assert set(space) == {"block_k", "k_splits"}
+    for bk in space["block_k"]:
+        for s in space["k_splits"]:
+            registry.make_config("flash_decode", block_k=bk, k_splits=s)

@@ -9,9 +9,16 @@ from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import transformer as tfm
 from repro.sharding.specs import param_spec, _key_str
 
+def _abstract_mesh(sizes, names):
+    try:                                   # jax >= 0.5: (sizes, names)
+        return AbstractMesh(sizes, names)
+    except TypeError:                      # jax 0.4.x: tuple of (name, size)
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 MESHES = {
-    "16x16": AbstractMesh((16, 16), ("data", "model")),
-    "2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "16x16": _abstract_mesh((16, 16), ("data", "model")),
+    "2x16x16": _abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 
