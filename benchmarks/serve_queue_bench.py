@@ -1,24 +1,44 @@
-"""Queue serving benchmark: continuous batcher vs the seed per-request loop.
+"""Queue serving benchmark: macro-step scheduler vs per-token schedulers.
 
-Measures, on POCKET / CPU (batch 4 slots, prompt 64, 32 new tokens):
+Measures, on POCKET / CPU (batch 8 slots, mixed prompt lengths, 32 new
+tokens per request):
 
-* ``queue/batched``  — the ServeEngine continuous batcher: slot-wise
-  admission prefills + ONE jitted batched decode step per iteration.
-* ``queue/seed``     — the seed ``serve_queue`` strategy, reproduced here
-  for comparison: every active request re-runs ``generate(prompt+generated,
-  max_new_tokens=1)``, i.e. a full prefill of the whole history per token
-  (and a fresh XLA compile per prompt length).  Measured on a reduced token
-  count and scaled — running it at full length takes minutes.
+* ``queue/pertoken_pr1`` — the PR 1 engine, reproduced verbatim: the
+  scan-based decode step (``decode_unroll=False``; PR 2 unrolled the layer
+  loop for shallow models) driven per token — one jitted decode dispatch,
+  one sampling dispatch, one device->host logits sync, and a host Python
+  loop over slots per generated token.
+* ``queue/macro_k{K}``   — the on-device decode macro-step: a jitted
+  ``lax.scan`` over K decode+sample+stop steps; the host syncs once per K
+  tokens.  Swept over K to show where dispatch overhead stops dominating.
+* ``queue/seed``         — the seed repo's strategy (re-prefill the whole
+  history per token), measured on a reduced token count and scaled.
+* ``queue/longprompt_*`` — one 8x-longer prompt injected into a short-prompt
+  queue.  Whole-prompt admission stalls every co-scheduled request for the
+  long prefill (plus a fresh XLA compile for the new length bucket — the
+  "unbounded stall"); chunked admission splits it into fixed-size chunks
+  interleaved with decode macro-steps, so TTFT-max stays within 2x
+  TTFT-mean (the ISSUE 2 acceptance bound).
 * ``queue/step_flatness`` — per-decode-step wall time across the run; the
-  batcher's step time must NOT grow with generated length (the seed loop's
-  per-token cost grows linearly since it re-prefills the history).
+  batcher's step time must NOT grow with generated length.
 
-    PYTHONPATH=src:. python benchmarks/serve_queue_bench.py
+Everything is also written machine-readably to ``benchmarks/BENCH_serve.json``
+(tokens/s, TTFT p50/p99, host_syncs/token, criteria booleans).
+
+    PYTHONPATH=src:. python benchmarks/serve_queue_bench.py [--ci]
+
+``--ci`` runs a tiny configuration and exits non-zero if host syncs per
+token exceed 1/K or the chunked-admission TTFT bound fails — the CI smoke
+for the scheduler hot path.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
 import numpy as np
@@ -26,60 +46,127 @@ import numpy as np
 from benchmarks.common import Row
 from repro.configs.paper_models import POCKET
 from repro.models import transformer as tfm
-from repro.serve import Request, ServeEngine
-from repro.serve.engine import queue_throughput
+from repro.serve import Request, ServeEngine, queue_throughput
 
-BATCH, PROMPT_LEN, NEW_TOKENS, NUM_REQS = 4, 64, 32, 8
+BATCH, PROMPT_LEN, NEW_TOKENS, NUM_REQS = 8, 64, 32, 16
+MACRO_SWEEP = (4, 8, 16)
+LONG_FACTOR = 8                   # the injected prompt is 8x the short ones
 SEED_BASELINE_TOKENS = 3          # per-token cost is ~constant-or-growing,
                                   # so a short run upper-bounds its speed
 
 
-def _requests(n: int, new_tokens: int) -> List[Request]:
+def _requests(n: int, new_tokens: int, base_len: int = PROMPT_LEN,
+              mixed: bool = True) -> List[Request]:
     rng = np.random.default_rng(0)
-    return [Request(uid=i,
-                    prompt=rng.integers(0, POCKET.vocab_size,
-                                        (PROMPT_LEN,)).astype(np.int32),
-                    max_new_tokens=new_tokens)
-            for i in range(n)]
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(max(4, base_len // 2), base_len + 1)) \
+            if mixed else base_len
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, POCKET.vocab_size, (plen,)).astype(np.int32),
+            max_new_tokens=new_tokens))
+    return reqs
 
 
-def _seed_serve_queue(engine: ServeEngine, requests: List[Request],
-                      step_budget: int = 10_000):
-    """The seed repo's serve_queue, verbatim strategy: re-prefill the full
-    prompt+generated history for every token of every active request."""
+def _warmup(engine: ServeEngine, base_len: int = PROMPT_LEN) -> None:
+    """Compile both admission buckets + the decode/macro path up front so
+    measurements compare steady-state schedulers, not compile luck."""
+    engine.serve_queue([
+        Request(uid=9_000, prompt=np.arange(base_len // 2, dtype=np.int32)
+                % POCKET.vocab_size, max_new_tokens=2),
+        Request(uid=9_001, prompt=np.arange(base_len, dtype=np.int32)
+                % POCKET.vocab_size, max_new_tokens=2),
+    ])
+
+
+def _pertoken_pr1(engine: ServeEngine, requests: List[Request],
+                  step_budget: int = 10_000) -> Dict[int, List[int]]:
+    """The PR 1 scheduler, preserved for comparison: slot admission +
+    batched decode, but ONE host round-trip (decode dispatch, sampling
+    dispatch, logits sync, Python slot loop) per generated token."""
+    import jax.numpy as jnp
+    now = time.perf_counter()
+    for req in requests:
+        if not req.submitted_at:
+            req.submitted_at = now
     pending = list(requests)
-    results = {}
-    active: List[Request] = []
+    results: Dict[int, List[int]] = {}
+    B = engine.max_batch
+    cache = engine._empty_batched_cache()
+    slots: List[Request] = [None] * B
+    last_tokens = np.zeros((B, 1), np.int32)
+    temps = np.zeros((B,), np.float32)
+    key = jax.random.PRNGKey(0)
     steps = 0
-    while (pending or active) and steps < step_budget:
-        while pending and len(active) < engine.max_batch:
+
+    def finish(b):
+        req = slots[b]
+        req.done = True
+        req.finished_at = time.perf_counter()
+        results[req.uid] = req.tokens
+        slots[b] = None
+
+    while (pending or any(s is not None for s in slots)) \
+            and steps < step_budget:
+        for b in range(B):
+            if slots[b] is not None or not pending:
+                continue
             req = pending.pop(0)
-            req.tokens = []
-            active.append(req)
-        for req in list(active):
-            prompt = np.concatenate([req.prompt,
-                                     np.array(req.tokens, np.int32)])
-            toks = engine.generate(prompt[None, :], max_new_tokens=1,
-                                   temperature=req.temperature)
-            req.tokens.append(int(toks[0, 0]))
+            plen = len(req.prompt)
+            bucket = engine._bucket_for(plen)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :plen] = req.prompt
+            key, sub = jax.random.split(key)
+            tok, _, cache = engine._admit_fn(bucket)(
+                engine.params, cache, jnp.asarray(padded),
+                np.int32(b), np.int32(plen), np.float32(req.temperature), sub)
+            engine.stats["prefills"] += 1
+            req.admitted_at = time.perf_counter()
+            req.tokens = [int(tok)]
+            engine.stats["host_syncs"] += 1
+            req.first_token_at = time.perf_counter()
+            slots[b] = req
             if len(req.tokens) >= req.max_new_tokens:
-                results[req.uid] = req.tokens
-                req.done = True
-                active.remove(req)
+                finish(b)
+            else:
+                last_tokens[b, 0] = req.tokens[0]
+                temps[b] = req.temperature
+        if not any(s is not None for s in slots):
+            continue
+        logits, cache = engine._decode(engine.params, cache,
+                                       jnp.asarray(last_tokens))
+        engine.stats["decode_steps"] += 1
+        key, sub = jax.random.split(key)
+        toks = np.asarray(engine._sample_slots(logits, jnp.asarray(temps),
+                                               sub))
+        engine.stats["host_syncs"] += 1
+        for b in range(B):
+            req = slots[b]
+            if req is None:
+                continue
+            req.tokens.append(int(toks[b]))
+            last_tokens[b, 0] = int(toks[b])
+            if len(req.tokens) >= req.max_new_tokens:
+                finish(b)
         steps += 1
-    for req in active:
-        results[req.uid] = req.tokens or []
+    for b in range(B):
+        if slots[b] is not None:
+            finish(b)
+    for req in pending:
+        results[req.uid] = []
     return results
 
 
-def _step_times(engine: ServeEngine, steps: int) -> List[float]:
+def _step_times(engine: ServeEngine, steps: int, batch: int,
+                prompt_len: int) -> List[float]:
     """Per-step decode latency at a fixed batch across generated length."""
     rng = np.random.default_rng(1)
     prompts = rng.integers(0, POCKET.vocab_size,
-                           (BATCH, PROMPT_LEN)).astype(np.int32)
+                           (batch, prompt_len)).astype(np.int32)
     import jax.numpy as jnp
     _, cache = engine.prefill(jnp.asarray(prompts))
-    last = jnp.zeros((BATCH, 1), jnp.int32)
+    last = jnp.zeros((batch, 1), jnp.int32)
     engine.serve_step(cache, last)                       # compile
     times = []
     for _ in range(steps):
@@ -91,42 +178,206 @@ def _step_times(engine: ServeEngine, steps: int) -> List[float]:
     return times
 
 
-def run(scale: str = None) -> List[Row]:
+def _longprompt_scenario(params, short_len: int, new_tokens: int,
+                         batch: int, macro_k: int, chunk: int):
+    """One LONG_FACTOR x longer prompt injected near the head of a
+    short-prompt queue, served with whole-prompt vs chunked admission.
+
+    Both engines are warmed on short-only traffic: by design the chunked
+    engine then has every shape it will ever need, while whole-prompt
+    admission meets the long prompt's length bucket cold — that compile +
+    the monolithic prefill are exactly the stall chunking removes.
+
+    The ISSUE 2 bound (TTFT-max <= 2x TTFT-mean) is measured over the
+    co-scheduled SHORT requests — the victims of the stall; the long
+    prompt's own TTFT is its fair prefill cost and is reported separately
+    (``long_ttft_s``).
+    """
+    long_len = short_len * LONG_FACTOR
+    max_len = long_len + new_tokens + 8
+    out = {}
+    for name, eng_chunk in (("whole", 0), ("chunked", chunk)):
+        eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
+                          max_len=max_len, macro_steps=macro_k,
+                          prefill_chunk=eng_chunk)
+        # warm on short traffic only; the chunked engine also pre-compiles
+        # its (one) non-final chunk shape on a 2-chunk prompt — a fixed
+        # shape, unlike the per-length buckets whole admission needs
+        warm = _requests(batch, 2, base_len=short_len, mixed=False)
+        if eng_chunk:
+            warm.append(Request(uid=9_100,
+                                prompt=np.arange(2 * chunk, dtype=np.int32)
+                                % POCKET.vocab_size,
+                                max_new_tokens=2))
+        queue_throughput(eng, warm)
+        rng = np.random.default_rng(7)
+        # batch-1 shorts + the long prompt fill the slots exactly: every
+        # TTFT then measures ADMISSION latency, not queue wait, so the
+        # max/mean bound isolates the stall the long prompt inflicts on the
+        # shorts admitted behind it
+        shorts = _requests(batch - 1, new_tokens, base_len=short_len,
+                           mixed=False)
+        long_req = Request(
+            uid=1000,
+            prompt=rng.integers(0, POCKET.vocab_size,
+                                (long_len,)).astype(np.int32),
+            max_new_tokens=new_tokens)
+        reqs = list(shorts)
+        reqs.insert(1, long_req)
+        stats = queue_throughput(eng, reqs)
+        ttfts = np.array([r.first_token_at - r.submitted_at for r in shorts])
+        out[name] = {
+            "tokens_per_s": stats["tokens_per_s"],
+            "short_ttft_mean_s": float(ttfts.mean()),
+            "short_ttft_max_s": float(ttfts.max()),
+            "short_ttft_p50_s": float(np.percentile(ttfts, 50)),
+            "short_ttft_p99_s": float(np.percentile(ttfts, 99)),
+            "long_ttft_s": long_req.first_token_at - long_req.submitted_at,
+            "chunked_prefills": eng.stats["chunked_prefills"],
+        }
+    out["chunked"]["ttft_bounded"] = bool(
+        out["chunked"]["short_ttft_max_s"]
+        <= 2.0 * out["chunked"]["short_ttft_mean_s"])
+    return out
+
+
+def run(scale: str = None, ci: bool = False) -> List[Row]:
+    batch = 4 if ci else BATCH
+    new_tokens = 16 if ci else NEW_TOKENS
+    num_reqs = 6 if ci else NUM_REQS
+    sweep = (4,) if ci else MACRO_SWEEP
     params = tfm.init_params(jax.random.PRNGKey(0), POCKET)
     rows: List[Row] = []
+    bench: Dict[str, object] = {
+        "config": {"batch": batch, "prompt_len": PROMPT_LEN,
+                   "new_tokens": new_tokens, "num_requests": num_reqs,
+                   "model": POCKET.name, "mixed_prompt_lengths": True},
+    }
 
-    # -- batched continuous batcher (warm up compiles, then measure) --------
-    eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=BATCH,
-                      max_len=PROMPT_LEN + NEW_TOKENS + 8)
-    queue_throughput(eng, _requests(2, 2))               # warmup/compile
-    stats = queue_throughput(eng, _requests(NUM_REQS, NEW_TOKENS))
-    batched_tps = stats["tokens_per_s"]
-    rows.append(Row(name="serve_queue/batched",
-                    us_per_call=1e6 / max(batched_tps, 1e-9),
-                    derived=f"{batched_tps:.1f} tok/s; TTFT mean "
-                            f"{stats['ttft_mean_s'] * 1e3:.0f}ms max "
-                            f"{stats['ttft_max_s'] * 1e3:.0f}ms"))
-
-    # -- seed strategy (reduced length, scaled per-token) -------------------
-    eng2 = ServeEngine(POCKET, params, scheme="bf16", max_batch=BATCH,
-                       max_len=PROMPT_LEN + NEW_TOKENS + 8)
-    seed_reqs = _requests(BATCH, SEED_BASELINE_TOKENS)
-    _seed_serve_queue(eng2, _requests(BATCH, 1))         # warmup/compile
+    # -- PR 1 per-token scheduler (one host round-trip per token) -----------
+    eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
+                      max_len=PROMPT_LEN + new_tokens + 8,
+                      decode_unroll=False)       # the decode step PR 1 shipped
+    _pertoken_pr1(eng, _requests(2, 2))                  # warmup/compile
+    eng.reset_stats()
+    pr1_reqs = _requests(num_reqs, new_tokens)
     t0 = time.perf_counter()
-    res = _seed_serve_queue(eng2, seed_reqs)
+    res = _pertoken_pr1(eng, pr1_reqs)
     dt = time.perf_counter() - t0
-    seed_tps = sum(len(v) for v in res.values()) / dt
-    rows.append(Row(name="serve_queue/seed",
-                    us_per_call=1e6 / max(seed_tps, 1e-9),
-                    derived=f"{seed_tps:.1f} tok/s (re-prefill per token, "
-                            f"measured over {SEED_BASELINE_TOKENS} tok/req)"))
+    pr1_tokens = sum(len(v) for v in res.values())
+    pr1_tps = pr1_tokens / dt
+    pr1_ttfts = [r.first_token_at - r.submitted_at for r in pr1_reqs]
+    pr1_syncs = eng.stats["host_syncs"] / pr1_tokens
+    rows.append(Row(name="serve_queue/pertoken_pr1",
+                    us_per_call=1e6 / max(pr1_tps, 1e-9),
+                    derived=f"{pr1_tps:.1f} tok/s; "
+                            f"{pr1_syncs:.2f} host syncs/token"))
+    bench["pertoken_pr1"] = {
+        "tokens_per_s": pr1_tps,
+        "host_syncs_per_token": pr1_syncs,
+        "ttft_p50_s": float(np.percentile(pr1_ttfts, 50)),
+        "ttft_p99_s": float(np.percentile(pr1_ttfts, 99)),
+    }
+
+    # -- decode macro-step sweep --------------------------------------------
+    best_k, best_tps = None, 0.0
+    bench["macro"] = {}
+    for k in sweep:
+        eng_k = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
+                            max_len=PROMPT_LEN + new_tokens + 8,
+                            macro_steps=k)
+        _warmup(eng_k)                                   # warmup/compile
+        eng_k.reset_stats()
+        stats = queue_throughput(eng_k, _requests(num_reqs, new_tokens))
+        tps = stats["tokens_per_s"]
+        rows.append(Row(
+            name=f"serve_queue/macro_k{k}",
+            us_per_call=1e6 / max(tps, 1e-9),
+            derived=f"{tps:.1f} tok/s ({tps / max(pr1_tps, 1e-9):.1f}x "
+                    f"pr1); {stats['host_syncs_per_token']:.3f} "
+                    f"host syncs/token; TTFT p50 "
+                    f"{stats['ttft_p50_s'] * 1e3:.0f}ms p99 "
+                    f"{stats['ttft_p99_s'] * 1e3:.0f}ms"))
+        bench["macro"][k] = {
+            "tokens_per_s": tps,
+            "speedup_vs_pertoken": tps / max(pr1_tps, 1e-9),
+            "host_syncs_per_token": stats["host_syncs_per_token"],
+            "syncs_bound_ok": bool(
+                stats["host_syncs_per_token"] <= 1.0 / k + 1e-9),
+            "ttft_p50_s": stats["ttft_p50_s"],
+            "ttft_p99_s": stats["ttft_p99_s"],
+        }
+        if tps > best_tps:
+            best_k, best_tps = k, tps
+    speedup = best_tps / max(pr1_tps, 1e-9)
     rows.append(Row(name="serve_queue/speedup",
                     us_per_call=0.0,
-                    derived=f"{batched_tps / max(seed_tps, 1e-9):.1f}x "
-                            f"batched vs seed"))
+                    derived=f"{speedup:.1f}x macro k={best_k} vs per-token "
+                            f"pr1 (target >= 2x)"))
+    bench["best_macro_k"] = best_k
+    bench["speedup_vs_pertoken"] = speedup
+
+    # -- seed strategy (reduced length, scaled per-token) -------------------
+    if not ci:
+        eng2 = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
+                           max_len=PROMPT_LEN + new_tokens + 8)
+        seed_reqs = [Request(uid=i, prompt=r.prompt,
+                             max_new_tokens=SEED_BASELINE_TOKENS)
+                     for i, r in enumerate(_requests(batch, 1))]
+
+        def seed_loop(requests):
+            pending = list(requests)
+            results = {}
+            active: List[Request] = []
+            while pending or active:
+                while pending and len(active) < eng2.max_batch:
+                    req = pending.pop(0)
+                    req.tokens = []
+                    active.append(req)
+                for req in list(active):
+                    hist = np.concatenate([req.prompt,
+                                           np.array(req.tokens, np.int32)])
+                    toks = eng2.generate(hist[None, :], max_new_tokens=1)
+                    req.tokens.append(int(toks[0, 0]))
+                    if len(req.tokens) >= req.max_new_tokens:
+                        results[req.uid] = req.tokens
+                        active.remove(req)
+            return results
+
+        seed_loop(_requests(batch, 1))                   # warmup/compile
+        t0 = time.perf_counter()
+        res = seed_loop(seed_reqs)
+        dt = time.perf_counter() - t0
+        seed_tps = sum(len(v) for v in res.values()) / dt
+        rows.append(Row(name="serve_queue/seed",
+                        us_per_call=1e6 / max(seed_tps, 1e-9),
+                        derived=f"{seed_tps:.1f} tok/s (re-prefill per "
+                                f"token, over {SEED_BASELINE_TOKENS} "
+                                f"tok/req)"))
+        bench["seed_tokens_per_s"] = seed_tps
+
+    # -- long-prompt injection: whole vs chunked admission ------------------
+    long_short = 16 if ci else PROMPT_LEN
+    longp = _longprompt_scenario(params, long_short,
+                                 8 if ci else new_tokens, batch,
+                                 macro_k=8, chunk=long_short)
+    bench["longprompt"] = longp
+    for name in ("whole", "chunked"):
+        s = longp[name]
+        ratio = s["short_ttft_max_s"] / max(s["short_ttft_mean_s"], 1e-9)
+        rows.append(Row(
+            name=f"serve_queue/longprompt_{name}",
+            us_per_call=s["short_ttft_max_s"] * 1e6,
+            derived=f"short TTFT max {s['short_ttft_max_s'] * 1e3:.0f}ms vs "
+                    f"mean {s['short_ttft_mean_s'] * 1e3:.0f}ms "
+                    f"(ratio {ratio:.1f}); long TTFT "
+                    f"{s['long_ttft_s'] * 1e3:.0f}ms; "
+                    f"{s['tokens_per_s']:.1f} tok/s"))
 
     # -- per-step flatness: decode cost must not scale with generated len ---
-    times = _step_times(eng, NEW_TOKENS)
+    # eng_k is the last (largest-k) sweep engine; new_tokens steps keep the
+    # decode inside its PROMPT_LEN + new_tokens + 8 cache capacity
+    times = _step_times(eng_k, new_tokens, batch, PROMPT_LEN)
     q = max(1, len(times) // 4)
     first, last = float(np.mean(times[:q])), float(np.mean(times[-q:]))
     rows.append(Row(name="serve_queue/step_flatness",
@@ -134,9 +385,45 @@ def run(scale: str = None) -> List[Row]:
                     derived=f"first-quartile {first * 1e3:.2f}ms vs "
                             f"last-quartile {last * 1e3:.2f}ms "
                             f"(ratio {last / max(first, 1e-9):.2f})"))
+
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="tiny config; exit non-zero unless host syncs per "
+                         "token <= 1/k and chunked TTFT-max <= 2x mean")
+    args = ap.parse_args()
+    for r in run(ci=args.ci):
         print(r.csv())
+    if args.ci:
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_serve.json")
+        with open(path) as f:
+            bench = json.load(f)
+        failures = []
+        for k, m in bench["macro"].items():
+            if not m["syncs_bound_ok"]:
+                failures.append(
+                    f"macro k={k}: {m['host_syncs_per_token']:.3f} host "
+                    f"syncs/token > 1/{k}")
+        if not bench["longprompt"]["chunked"]["ttft_bounded"]:
+            lp = bench["longprompt"]["chunked"]
+            failures.append(
+                f"chunked admission short-TTFT max "
+                f"{lp['short_ttft_max_s'] * 1e3:.0f}ms > 2x mean "
+                f"{lp['short_ttft_mean_s'] * 1e3:.0f}ms")
+        if failures:
+            print("CI smoke FAILED:\n  " + "\n  ".join(failures),
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print("CI smoke OK: host-sync and TTFT bounds hold", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

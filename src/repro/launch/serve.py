@@ -12,6 +12,12 @@ reports queue throughput plus time-to-first-token.
 ``--kv-dtype int8`` stores the KV cache quantized; decode then dequantizes
 tile-wise (flash-decode Pallas kernel on TPU, fused scale-folding einsum on
 CPU) instead of materializing a bf16 cache.
+
+``--macro-steps k`` fuses k decode steps into one jitted on-device
+macro-step (sampling + stop detection included), so the host syncs once per
+k tokens; ``--prefill-chunk c`` splits admission prefills into c-token
+chunks interleaved with decode macro-steps, bounding the TTFT jitter a long
+prompt inflicts on co-scheduled requests.
 """
 from __future__ import annotations
 
@@ -42,6 +48,12 @@ def main():
     ap.add_argument("--queue", type=int, default=0,
                     help="serve this many queued requests through the "
                          "continuous batcher instead of one fixed batch")
+    ap.add_argument("--macro-steps", type=int, default=8,
+                    help="decode steps fused per on-device macro-step "
+                         "(1 = per-token scheduling)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="admission prefill chunk size in tokens "
+                         "(0 = whole-prompt bucketed admission)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -59,7 +71,9 @@ def main():
 
     params = tfm.init_params(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine(cfg, params, scheme=scheme, max_batch=args.batch,
-                         max_len=args.prompt_len + args.new_tokens + 8)
+                         max_len=args.prompt_len + args.new_tokens + 8,
+                         macro_steps=args.macro_steps,
+                         prefill_chunk=args.prefill_chunk)
 
     if args.queue > 0:
         rng = np.random.default_rng(args.seed)
@@ -73,11 +87,17 @@ def main():
         stats = queue_throughput(engine, reqs)
         print(f"{cfg.name} [{scheme}, kv={args.kv_dtype}] queue: "
               f"{stats['tokens_per_s']:.1f} tokens/s over {args.queue} "
-              f"requests ({engine.max_batch} slots), "
+              f"requests ({engine.max_batch} slots, "
+              f"macro k={args.macro_steps}, "
+              f"prefill chunk={args.prefill_chunk or 'whole'}), "
               f"TTFT mean {stats['ttft_mean_s'] * 1e3:.0f} ms / "
+              f"p99 {stats['ttft_p99_s'] * 1e3:.0f} ms / "
               f"max {stats['ttft_max_s'] * 1e3:.0f} ms")
         print(f"  prefills={engine.stats['prefills']} (one per request), "
-              f"decode_steps={engine.stats['decode_steps']}")
+              f"chunked_prefills={engine.stats['chunked_prefills']}, "
+              f"decode_steps={engine.stats['decode_steps']}, "
+              f"useful_slot_steps={engine.stats['useful_slot_steps']}, "
+              f"host_syncs/token={stats['host_syncs_per_token']:.3f}")
     else:
         tput = throughput_tokens_per_s(engine, args.batch, args.prompt_len,
                                        args.new_tokens)

@@ -185,6 +185,49 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
     return out.reshape(b, s1, h, d).astype(q.dtype)
 
 
+def prefix_chunk_attention(q, k, v, *, q_positions, k_positions, k_valid,
+                           window: int = 0, logit_cap: float = 0.0,
+                           k_scale=None, v_scale=None) -> jax.Array:
+    """Prefix-resumed attention for chunked prefill: C query rows at global
+    positions ``q_positions`` (C,) attend over T' keys whose *global*
+    positions and validity are explicit arrays.
+
+    This covers both cache layouts with one compiled shape:
+
+    * linear prefixes — keys are ``[cache rows 0..T) | chunk keys]`` with
+      ``k_positions = [0..T) | offset+[0..C)`` and validity ``row < offset``
+      on the cache part, and
+    * local ring buffers — ring row r holds the latest global position with
+      residue r below ``offset``, so ``k_positions`` is that position and the
+      window mask works on global positions exactly as in full prefill.
+
+    q: (B, C, H, D); k/v: (B, T', KV, D).  Masking is causal on global
+    positions (``kpos <= qpos``) plus the optional sliding window.  For int8
+    caches pass per-(token, head) ``k_scale``/``v_scale`` (B, T', KV, 1);
+    they fold into the contractions like ``decode_attention`` — the bf16
+    cache is never materialized.
+    """
+    b, c, h, d = q.shape
+    kvh = k.shape[2]
+    qg = _gqa_split(q, kvh).astype(jnp.float32)                # (B,C,KV,G,D)
+    scale = d ** -0.5
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * scale
+    if k_scale is not None:
+        logits = logits * k_scale.astype(jnp.float32)[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    logits = softcap(logits, logit_cap)                        # (B,KV,G,C,T')
+    qpos = q_positions                                         # (C,)
+    kpos = k_positions                                         # (T',)
+    mask = k_valid[None, :] & (kpos[None, :] <= qpos[:, None])
+    if window and window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    logits = jnp.where(mask[None, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        probs = probs * v_scale.astype(jnp.float32)[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, c, h, d).astype(q.dtype)
+
+
 def attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
               chunk_threshold: int = 2048, chunk: int = 1024,
               q_offset: int = 0) -> jax.Array:

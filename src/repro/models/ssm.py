@@ -46,10 +46,18 @@ def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16):
     }
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
-    """Depthwise causal conv over S.  x: (B, S, C); w: (K, C)."""
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prefix: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv over S.  x: (B, S, C); w: (K, C).
+
+    ``prefix`` ((B, K-1, C), the last K-1 pre-conv inputs of an earlier
+    sequence segment) replaces the zero left-padding so a resumed chunk sees
+    exactly the context a whole-sequence pass would."""
     k = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    if prefix is not None:
+        xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    else:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
     out = jnp.zeros_like(x, dtype=jnp.float32)
     for i in range(k):
         out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
@@ -69,8 +77,13 @@ def _ssm_params(xc: jax.Array, p, cfg: SSMConfig, dt_rank: int):
 
 
 def mamba_forward(x: jax.Array, p, cfg: SSMConfig, return_state: bool = False,
-                  chunk: int = 256):
+                  chunk: int = 256, initial_state: dict = None):
     """Full-sequence Mamba mixer.  x: (B, S, D) -> (B, S, D).
+
+    ``initial_state`` (same pytree as the decode state: {"h", "conv"})
+    resumes the recurrence exactly — the SSM carry starts from ``h`` and the
+    causal conv sees ``conv`` as its left context — so a prompt can be
+    prefilled in chunks across calls and match a whole-sequence pass.
 
     The selective scan runs in sequence chunks: the (B, S, d_in, N)
     discretized tensors would otherwise be materialized whole (and at
@@ -88,7 +101,9 @@ def mamba_forward(x: jax.Array, p, cfg: SSMConfig, return_state: bool = False,
 
     xz = dense(x, p["in_proj"])                                 # (B,S,2*d_in)
     xs, z = jnp.split(xz, 2, axis=-1)
-    xc = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    conv_prefix = initial_state["conv"] if initial_state is not None else None
+    xc = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"],
+                                  prefix=conv_prefix).astype(jnp.float32)).astype(x.dtype)
 
     a = -jnp.exp(p["A_log"])                                    # (d_in, N)
 
@@ -101,7 +116,10 @@ def mamba_forward(x: jax.Array, p, cfg: SSMConfig, return_state: bool = False,
         dt, b_ssm, c_ssm = _ssm_params(xc, p, cfg, dt_rank)
         a_bar = jnp.exp(dt[..., None] * a)
         bx = (dt * xc.astype(jnp.float32))[..., None] * b_ssm[:, :, None, :]
-        _, h_all = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        a_cum, h_all = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        if initial_state is not None:
+            # exact carry-in: h_t = (prod a)·h0 + local scan
+            h_all = a_cum * initial_state["h"][:, None].astype(jnp.float32) + h_all
         y = jnp.sum(h_all * c_ssm[:, :, None, :], axis=-1)
         h_last = h_all[:, -1]
     else:
@@ -117,7 +135,8 @@ def mamba_forward(x: jax.Array, p, cfg: SSMConfig, return_state: bool = False,
             yk = jnp.sum(h * c_ssm[:, :, None, :], axis=-1)     # (B,Q,d_in)
             return h[:, -1], yk
 
-        h0 = jnp.zeros((b, d_in, cfg.d_state), jnp.float32)
+        h0 = (initial_state["h"].astype(jnp.float32) if initial_state is not None
+              else jnp.zeros((b, d_in, cfg.d_state), jnp.float32))
         h_last, y_c = jax.lax.scan(jax.checkpoint(body), h0,
                                    jnp.moveaxis(xc_c, 1, 0))
         y = jnp.moveaxis(y_c, 0, 1).reshape(b, s, d_in)
@@ -128,7 +147,10 @@ def mamba_forward(x: jax.Array, p, cfg: SSMConfig, return_state: bool = False,
     if not return_state:
         return out
     k = cfg.d_conv
-    pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+    if initial_state is not None:
+        pad = jnp.concatenate([initial_state["conv"].astype(xs.dtype), xs], axis=1)
+    else:
+        pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
     state = {"h": h_last.astype(jnp.float32),                   # (B, d_in, N)
              "conv": pad[:, -(k - 1):, :]}
     return out, state

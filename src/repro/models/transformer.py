@@ -192,15 +192,7 @@ def _apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, positions,
                                              return_state=True)
         else:
             mix = ssm_lib.mamba_forward(h, p["mamba"], cfg.ssm or SSMConfig())
-    x = x + mix
-    if spec.mlp != "none":
-        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
-        if spec.mlp == "moe":
-            x = x + moe_lib.moe_ffn(h2, p["moe"], cfg.moe)
-        else:
-            from repro.models.layers import swiglu_mlp
-            x = x + swiglu_mlp(h2, p["mlp"])
-    return x, aux
+    return _apply_mlp(x + mix, p, spec, cfg), aux
 
 
 def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
@@ -319,16 +311,22 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------------------
 
 def _write_rows(cache, rows, slots):
-    """Per-sequence cache write: cache (B,S,...), rows (B,1,...), slots (B,)."""
-    return jax.vmap(
-        lambda c, r, s: jax.lax.dynamic_update_slice(
-            c, r.astype(c.dtype), (s,) + (0,) * (c.ndim - 1)))(cache, rows, slots)
+    """Per-sequence cache write: cache (B,S,...), rows (B,1,...), slots (B,).
+
+    A scatter with ``mode="drop"``: a slot index >= S writes nothing, which
+    is how inactive slots (finished / mid-admission) are masked out of a
+    batched decode step without a select over the whole cache."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), slots].set(rows[:, 0].astype(cache.dtype),
+                                              mode="drop")
 
 
-def _attn_decode(h, p, spec, cfg, lcache, lens):
+def _attn_decode(h, p, spec, cfg, lcache, lens, active=None):
     """One-token attention against the cache.  lens: (B,) int32 — the number
     of tokens already cached per sequence (the new token is written at row
-    ``lens[b]``, so heterogeneous slot lengths batch together)."""
+    ``lens[b]``, so heterogeneous slot lengths batch together).  ``active``
+    (B,) bool masks cache writes: inactive slots write at an out-of-bounds
+    row, which the scatter drops."""
     b = h.shape[0]
     hd = cfg.resolved_head_dim
     q = dense(h, p["wq"]).reshape(b, 1, cfg.num_heads, hd)
@@ -339,6 +337,8 @@ def _attn_decode(h, p, spec, cfg, lcache, lens):
     k = rope_dispatch(k, pos, cfg)
     size = lcache["k"].shape[1]
     slots = (lens % size) if spec.local else lens
+    if active is not None:
+        slots = jnp.where(active, slots, size)      # OOB -> write dropped
     k_scale = v_scale = None
     if cfg.kv_cache_dtype == "int8":
         kq, ks = _quantize_kv(k)
@@ -366,30 +366,63 @@ def _attn_decode(h, p, spec, cfg, lcache, lens):
     return out, new_cache
 
 
-def _apply_layer_decode(x, p, spec, cfg, lcache, lens):
+def _apply_mlp(x, p, spec, cfg):
+    if spec.mlp == "none":
+        return x
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if spec.mlp == "moe":
+        return x + moe_lib.moe_ffn(h2, p["moe"], cfg.moe)
+    from repro.models.layers import swiglu_mlp
+    return x + swiglu_mlp(h2, p["mlp"])
+
+
+def _apply_layer_decode(x, p, spec, cfg, lcache, lens, active=None):
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.mixer == "attn":
-        mix, new_cache = _attn_decode(h, p, spec, cfg, lcache, lens)
+        mix, new_cache = _attn_decode(h, p, spec, cfg, lcache, lens, active)
     else:
         mix, new_cache = ssm_lib.mamba_decode_step(h, lcache, p["mamba"],
                                                    cfg.ssm or SSMConfig())
+        if active is not None:
+            # SSM states have no row structure to scatter-drop into; a
+            # per-slot select over the (small) state keeps inactive slots
+            # frozen instead
+            new_cache = jax.tree.map(
+                lambda n, o: jnp.where(
+                    active.reshape((-1,) + (1,) * (n.ndim - 1)),
+                    n, o.astype(n.dtype)),
+                new_cache, lcache)
     x = x + mix
-    if spec.mlp != "none":
-        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
-        if spec.mlp == "moe":
-            x = x + moe_lib.moe_ffn(h2, p["moe"], cfg.moe)
-        else:
-            from repro.models.layers import swiglu_mlp
-            x = x + swiglu_mlp(h2, p["mlp"])
-    return x, new_cache
+    return _apply_mlp(x, p, spec, cfg), new_cache
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None):
+# Below this depth the decode hot path python-unrolls the per-segment layer
+# scan.  A scanned decode step drags the segment's whole stacked cache
+# through while-loop slice/update ops every token (~2.4x the step latency of
+# the unrolled form for a 4-layer model on CPU); unrolling lets XLA fuse each
+# layer's row-scatter straight into the output buffers.  Deep models keep
+# the scan so the lowered HLO stays compact (and the roofline analyzer can
+# multiply while-body costs by the trip count).
+DECODE_UNROLL_MAX_LAYERS = 16
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
+                active=None, unroll=None):
     """One-token decode.  tokens: (B, 1) int32 (or embeds (B, 1, D)).
 
     ``cache["len"]`` may be a scalar (homogeneous batch, as produced by
     ``prefill``/``init_cache``) or a (B,) vector of per-sequence lengths
     (continuous batching: each slot decodes at its own position).
+
+    ``active`` ((B,) bool, optional) is the continuous batcher's slot mask:
+    inactive slots (finished requests, slots mid-admission) neither write
+    their K/V row nor advance their length, so a batched step over a
+    partially-idle batch leaves idle slots' caches bit-identical.  Their
+    logits are still produced (the batch shape is static) and must be
+    ignored by the caller.
+
+    ``unroll`` forces the layer loop unrolled (True) or scanned (False);
+    default picks by depth (see ``DECODE_UNROLL_MAX_LAYERS``).
 
     Returns (logits (B, V_padded), new_cache).
     """
@@ -401,24 +434,47 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None):
         x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
     b = x.shape[0]
     lens = jnp.broadcast_to(cur_len, (b,)) if cur_len.ndim == 0 else cur_len
+    if unroll is None:
+        unroll = cfg.num_layers <= DECODE_UNROLL_MAX_LAYERS
     x = shard_activations(x)
     plan = block_plan(cfg)
     new_blocks = []
     for seg, stacked, ccache in zip(plan, params["blocks"], cache["blocks"]):
-        def body(carry, xs, _seg=seg):
-            xx = carry
-            layer_params, layer_cache = xs
-            new_lc = {}
-            for j, spec in enumerate(_seg.layers):
-                xx, nc = _apply_layer_decode(xx, layer_params[str(j)], spec, cfg,
-                                             layer_cache[str(j)], lens)
-                new_lc[str(j)] = nc
-            return shard_activations(xx), new_lc
+        if unroll:
+            outs = []
+            for i in range(seg.count):
+                layer_params = jax.tree.map(lambda a: a[i], stacked)
+                layer_cache = jax.tree.map(lambda a: a[i], ccache)
+                new_lc = {}
+                for j, spec in enumerate(seg.layers):
+                    x, nc = _apply_layer_decode(x, layer_params[str(j)], spec,
+                                                cfg, layer_cache[str(j)],
+                                                lens, active)
+                    new_lc[str(j)] = nc
+                x = shard_activations(x)
+                outs.append(new_lc)
+            new_c = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        else:
+            def body(carry, xs, _seg=seg):
+                xx = carry
+                layer_params, layer_cache = xs
+                new_lc = {}
+                for j, spec in enumerate(_seg.layers):
+                    xx, nc = _apply_layer_decode(xx, layer_params[str(j)],
+                                                 spec, cfg,
+                                                 layer_cache[str(j)], lens,
+                                                 active)
+                    new_lc[str(j)] = nc
+                return shard_activations(xx), new_lc
 
-        x, new_c = jax.lax.scan(body, x, (stacked, ccache))
+            x, new_c = jax.lax.scan(body, x, (stacked, ccache))
         new_blocks.append(new_c)
     logits = _logits(params, cfg, x)[:, 0]
-    return logits, {"blocks": new_blocks, "len": cur_len + 1}
+    if active is not None:
+        new_len = cur_len + active.astype(cur_len.dtype)
+    else:
+        new_len = cur_len + 1
+    return logits, {"blocks": new_blocks, "len": new_len}
 
 
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
@@ -474,3 +530,148 @@ def _to_cache_entry(aux, spec, cfg, b, s, max_len, dtype):
         vq, vs = _quantize_kv(vc)
         return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
     return {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (admission chunks resuming from a cache prefix)
+# ---------------------------------------------------------------------------
+
+def hidden_to_logits(params, cfg: ModelConfig, x):
+    """Final-norm + unembed head on raw hidden states (B, S, D).
+
+    ``prefill_chunk`` returns hiddens instead of logits so non-final chunks
+    skip the unembed matmul entirely and the final chunk can project just
+    the prompt's last row."""
+    return _logits(params, cfg, x)
+
+
+def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions):
+    """Chunk attention for one slot of a batched cache, resumed at a traced
+    ``offset``: C query rows attend to the slot's cached prefix plus the
+    chunk itself, then the chunk's K/V rows are scattered into the cache.
+
+    The cached prefix is addressed by *global key positions*: a linear cache
+    row r < offset holds position r; a local ring row r holds the latest
+    position below ``offset`` with residue r.  Either way
+    ``prefix_chunk_attention`` masks causally on global positions, so one
+    code path serves global and sliding-window layers.
+    """
+    b, c, _ = h.shape                                          # b == 1
+    hd = cfg.resolved_head_dim
+    q = dense(h, p["wq"]).reshape(b, c, cfg.num_heads, hd)
+    k = dense(h, p["wk"]).reshape(b, c, cfg.num_kv_heads, hd)
+    v = dense(h, p["wv"]).reshape(b, c, cfg.num_kv_heads, hd)
+    q = rope_dispatch(q, positions, cfg)
+    k = rope_dispatch(k, positions, cfg)
+    size = lcache["k"].shape[1]
+    chunk_pos = offset + jnp.arange(c)
+    if spec.local:
+        rows = chunk_pos % size
+        r = jnp.arange(size)
+        # latest global position with residue r strictly below offset
+        # (jnp % is non-negative, so offset == 0 yields valid == nothing)
+        ctx_pos = offset - 1 - ((offset - 1 - r) % size)
+        ctx_valid = r < jnp.minimum(offset, size)
+    else:
+        rows = chunk_pos
+        ctx_pos = jnp.arange(size)
+        ctx_valid = ctx_pos < offset
+    window = cfg.window_size if spec.local else 0
+
+    def take(a):
+        return jax.lax.dynamic_index_in_dim(a, slot, axis=0, keepdims=True)
+
+    k_scale = v_scale = None
+    if cfg.kv_cache_dtype == "int8":
+        kw, ks = _quantize_kv(k)
+        vw, vs = _quantize_kv(v)
+        k_scale = jnp.concatenate([take(lcache["k_scale"]), ks], axis=1)
+        v_scale = jnp.concatenate([take(lcache["v_scale"]), vs], axis=1)
+    else:
+        kw, vw = k, v
+    k_all = jnp.concatenate([take(lcache["k"]), kw.astype(lcache["k"].dtype)],
+                            axis=1)
+    v_all = jnp.concatenate([take(lcache["v"]), vw.astype(lcache["v"].dtype)],
+                            axis=1)
+    o = attn_lib.prefix_chunk_attention(
+        q, k_all, v_all,
+        q_positions=chunk_pos,
+        k_positions=jnp.concatenate([ctx_pos, chunk_pos]),
+        k_valid=jnp.concatenate([ctx_valid, jnp.ones((c,), bool)]),
+        window=window, logit_cap=cfg.attn_logit_softcap,
+        k_scale=k_scale, v_scale=v_scale)
+
+    def put(full, vals):
+        # rows beyond the buffer (padded remainder near max_len) are dropped
+        return full.at[slot, rows].set(vals[0].astype(full.dtype), mode="drop")
+
+    new_cache = {"k": put(lcache["k"], kw), "v": put(lcache["v"], vw)}
+    if cfg.kv_cache_dtype == "int8":
+        new_cache["k_scale"] = put(lcache["k_scale"], ks)
+        new_cache["v_scale"] = put(lcache["v_scale"], vs)
+    out = dense(o.reshape(b, c, cfg.num_heads * hd), p["wo"])
+    return out, new_cache
+
+
+def _apply_layer_chunk(x, p, spec, cfg, lcache, slot, offset, positions):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix, new_cache = _attn_chunk(h, p, spec, cfg, lcache, slot, offset,
+                                     positions)
+    else:
+        # resume the slot's SSM state — but a re-admitted slot still holds
+        # the PREVIOUS request's final state (attention rows are masked by
+        # ctx_valid; the recurrence has no such mask), so the first chunk
+        # must start from zeros
+        state = jax.tree.map(
+            lambda a: jnp.where(offset > 0,
+                                jax.lax.dynamic_index_in_dim(
+                                    a, slot, axis=0, keepdims=True),
+                                0), lcache)
+        mix, new_state = ssm_lib.mamba_forward(h, p["mamba"],
+                                               cfg.ssm or SSMConfig(),
+                                               return_state=True,
+                                               initial_state=state)
+        new_cache = jax.tree.map(
+            lambda full, s: jax.lax.dynamic_update_slice(
+                full, s.astype(full.dtype), (slot,) + (0,) * (full.ndim - 1)),
+            lcache, new_state)
+    return _apply_mlp(x + mix, p, spec, cfg), new_cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens, slot, offset):
+    """Process one admission chunk: C prompt tokens at global positions
+    [offset, offset+C) for ``slot`` of a batched cache, resuming from the
+    rows/states already written for [0, offset).
+
+    ``slot`` and ``offset`` are traced, so ONE compilation serves every slot
+    and every chunk of every prompt (per chunk shape).  ``cache["len"]`` is
+    left untouched — the engine publishes the slot's true length only when
+    the final chunk lands, so interleaved decode steps keep masking the
+    half-admitted slot.
+
+    Returns (hidden (1, C, D), new_cache); project hiddens with
+    ``hidden_to_logits`` only where logits are actually needed.
+    """
+    b, c = tokens.shape
+    positions = offset + jnp.arange(c)[None, :]
+    x = params["embed"][tokens]
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = shard_activations(x)
+    plan = block_plan(cfg)
+    new_blocks = []
+    for seg, stacked, ccache in zip(plan, params["blocks"], cache["blocks"]):
+        def body(carry, xs, _seg=seg):
+            xx = carry
+            layer_params, layer_cache = xs
+            new_lc = {}
+            for j, spec in enumerate(_seg.layers):
+                xx, nc = _apply_layer_chunk(xx, layer_params[str(j)], spec,
+                                            cfg, layer_cache[str(j)], slot,
+                                            offset, positions)
+                new_lc[str(j)] = nc
+            return shard_activations(xx), new_lc
+
+        x, new_c = jax.lax.scan(body, x, (stacked, ccache))
+        new_blocks.append(new_c)
+    return x, {"blocks": new_blocks, "len": cache["len"]}

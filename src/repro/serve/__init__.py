@@ -1,3 +1,6 @@
-from repro.serve.engine import Request, ServeEngine, throughput_tokens_per_s
+from repro.serve.engine import (
+    Request, ServeEngine, queue_throughput, throughput_tokens_per_s,
+)
 
-__all__ = ["Request", "ServeEngine", "throughput_tokens_per_s"]
+__all__ = ["Request", "ServeEngine", "queue_throughput",
+           "throughput_tokens_per_s"]

@@ -1,43 +1,55 @@
 """Serving engine: prefill + continuous-batching decode with quantized weights.
 
 ``ServeEngine`` wraps a model config + (optionally PTQ-quantized) params and
-exposes the production entry points the dry-run lowers:
-
-* ``prefill_step``  — prompt -> (logits, cache)
-* ``serve_step``    — one new token against the KV cache (decode_32k /
-                      long_500k cells)
-
-plus a host-side ``generate`` loop and ``serve_queue``, a *true* continuous
-batcher built around three ideas:
+exposes the production entry points the dry-run lowers (``prefill_step``,
+``serve_step``), a host-side ``generate`` loop, and ``serve_queue`` — a
+continuous batcher whose inner loop lives ON DEVICE:
 
 Slots
     The engine owns ONE persistent batched KV cache with ``max_batch`` slots
     and a (B,) vector of per-slot lengths (``cache["len"]``).  A request is
-    admitted into a free slot by a single jitted *admission* step: prefill
-    the prompt at batch 1, then write the resulting per-layer K/V (and SSM
-    state) rows directly into the shared cache at that slot.  After
-    admission a request is NEVER re-prefilled — every subsequent token costs
-    exactly one batched decode step, so per-step work is O(1) in the number
-    of already-generated tokens.
+    admitted into a free slot by jitted admission steps that write the
+    prompt's per-layer K/V (and SSM state) rows directly into the shared
+    cache; after admission a request is NEVER re-prefilled.
 
-Batched decode
-    Each scheduler iteration runs ONE jitted ``decode_step`` across all
-    slots.  Heterogeneous positions are handled inside the model: every slot
-    writes its new K/V row at its own ``len`` and attends to its own valid
-    prefix, so requests with different prompt lengths and different
-    ``max_new_tokens`` share the same step.  Finished slots are refilled
-    from the queue between steps; their stale rows are simply masked by the
-    per-slot length until the next admission overwrites them.
+Decode macro-steps
+    The scheduler does not dispatch one decode per token.  A jitted
+    ``jax.lax.scan`` over ``macro_steps`` (k) decode steps runs — entirely
+    on device — batched ``decode_step``, per-slot sampling (greedy /
+    temperature mix, one PRNG stream per slot seeded from the request uid),
+    per-slot stop detection (token budget and EOS), and writes tokens into a
+    (B, k) output buffer with an emitted mask.  The host touches the device
+    ONCE per k tokens (``stats["host_syncs"]``) instead of once per token.
+    Finished and mid-admission slots are masked by an active-slot mask: they
+    neither write cache rows nor advance their lengths (the K/V write is a
+    scatter whose inactive rows land out of bounds and are dropped), and a
+    macro iteration whose slots have all drained skips its remaining scan
+    steps via ``lax.cond``.  ``stats["decode_steps"]`` therefore counts
+    executed batched steps and ``stats["useful_slot_steps"]`` counts tokens
+    actually emitted.
 
-Buckets
-    Admission prefills are compiled per *prompt-length bucket* (powers of
-    two up to ``max_len``), not per prompt length: prompts are right-padded
-    to the bucket and causal masking makes the padding inert.  This bounds
-    the number of XLA compilations at log2(max_len) regardless of traffic.
-    Plans where right-padding is NOT inert — local-attention ring buffers
-    (the trailing window would be laid out from the padded length) and SSM
-    layers (the recurrence would integrate pad tokens) — admit at the exact
-    prompt length instead.
+Chunked prefill admission
+    With ``prefill_chunk > 0`` admission prefills are split into fixed-size
+    chunks that resume from the slot's cache prefix at a traced offset
+    (``transformer.prefill_chunk``), one chunk per scheduler iteration,
+    interleaved with decode macro-steps.  A 500-token prompt no longer
+    stalls every co-scheduled decode for its whole prefill: TTFT jitter is
+    bounded by the chunk size, and — for pad-safe plans — ONE compiled chunk
+    shape serves every prompt length (the remainder is right-padded; causal
+    masking keeps the padding inert).  The slot's length is published only
+    when the final chunk lands, so interleaved macro-steps keep masking the
+    half-admitted slot.  Non-final chunks skip the unembed matmul entirely.
+
+Admission shapes & the compile cache
+    Whole-prompt admission (``prefill_chunk == 0``) compiles per
+    prompt-length *bucket* (powers of two).  Plans where right-padding is
+    NOT inert — local-attention ring buffers (the trailing window would be
+    laid out from the padded length) and SSM layers (the recurrence would
+    integrate pad tokens) — admit at the exact prompt length (or exact
+    remainder length when chunked).  Those exact-shape compilations are held
+    in an LRU cache bounded by ``admit_cache_size``
+    (``stats["admit_evictions"]`` counts drops), so adversarial length
+    traffic cannot grow the jit cache without limit.
 
 With ``cfg.kv_cache_dtype == "int8"`` the shared cache stores int8 values +
 per-(token, head) scales, and decode attention dequantizes tile-wise (Pallas
@@ -46,9 +58,10 @@ cache is never materialized.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +78,7 @@ class Request:
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    eos_id: Optional[int] = None       # stop after emitting this token
     submitted_at: float = 0.0
     tokens: Optional[List[int]] = None
     done: bool = False
@@ -82,9 +96,56 @@ def _prompt_buckets(max_len: int, smallest: int = 16) -> List[int]:
     return buckets
 
 
+def _sample_token(logits, temp, key, vocab):
+    """One traced sample: greedy at temp == 0, categorical otherwise.
+    Splits ``key`` and returns (token, carried key) so every admission and
+    decode step consumes exactly one split of the slot's stream."""
+    lg = logits[..., :vocab]
+    key, sub = jax.random.split(key)
+    greedy = jnp.argmax(lg, axis=-1)
+    sampled = jax.random.categorical(sub, lg / jnp.maximum(temp, 1e-6), axis=-1)
+    return jnp.where(temp > 0, sampled, greedy).astype(jnp.int32), key
+
+
+class _CompiledLRU:
+    """Bounded, recency-evicting cache of jitted admission functions.
+
+    Pad-unsafe plans compile one admission per distinct prompt (or chunk
+    remainder) length; unbounded length traffic would otherwise grow the
+    set of live XLA executables without limit.  Evicting drops our only
+    reference to the jitted callable (a re-admission at that length simply
+    re-traces) and bumps ``stats["admit_evictions"]``."""
+
+    def __init__(self, maxsize: int, stats: Dict[str, int]):
+        self.maxsize = max(1, int(maxsize))
+        self.stats = stats
+        self._fns: "collections.OrderedDict[Any, Any]" = collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def __contains__(self, key) -> bool:
+        return key in self._fns
+
+    def get(self, key, build: Callable[[], Any]):
+        fn = self._fns.get(key)
+        if fn is not None:
+            self._fns.move_to_end(key)
+            return fn
+        fn = build()
+        self._fns[key] = fn
+        if len(self._fns) > self.maxsize:
+            self._fns.popitem(last=False)
+            self.stats["admit_evictions"] += 1
+        return fn
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, scheme: str = "bf16",
-                 max_batch: int = 8, max_len: int = 512, group_size: int = 64):
+                 max_batch: int = 8, max_len: int = 512, group_size: int = 64,
+                 macro_steps: int = 8, prefill_chunk: int = 0,
+                 admit_cache_size: int = 32, seed: int = 0,
+                 decode_unroll: Optional[bool] = None):
         self.cfg = cfg
         self.scheme = scheme
         if scheme in ("int8", "int4", "nf4", "w8a8"):
@@ -94,27 +155,41 @@ class ServeEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        # Right-padding a prompt to its bucket is inert ONLY for global
-        # causal attention (pad rows are masked by the per-slot length).
-        # Local-attention ring buffers lay out the trailing window from the
-        # PADDED length (pad K/V would evict real tokens), and SSM states
-        # integrate pad tokens into the recurrence — for those plans we
-        # admit at the exact prompt length (one compile per distinct length)
-        # instead of corrupting the cache.
+        self.macro_steps = max(1, int(macro_steps))
+        self.prefill_chunk = int(prefill_chunk)
+        self.seed = seed
         plan = tfm.block_plan(cfg)
         self._pad_safe = all(spec.mixer == "attn" and not spec.local
                              for seg in plan for spec in seg.layers)
+        # a chunk must not wrap a local ring buffer onto itself (two chunk
+        # tokens sharing a ring row would collide in one scatter)
+        local_sizes = [min(cfg.window_size, max_len)
+                       for seg in plan for spec in seg.layers
+                       if spec.mixer == "attn" and spec.local]
+        self._max_chunk = min(local_sizes) if local_sizes else max_len
         self.buckets = _prompt_buckets(max_len)
+        self.decode_unroll = decode_unroll
         self._decode = jax.jit(
-            lambda p, cache, toks: tfm.decode_step(p, cfg, cache, tokens=toks))
+            lambda p, cache, toks: tfm.decode_step(p, cfg, cache, tokens=toks,
+                                                   unroll=decode_unroll))
         self._prefill = jax.jit(
             lambda p, toks, ml=max_len: tfm.prefill(p, cfg, tokens=toks,
                                                     max_len=ml))
-        self._admit_fns: Dict[int, Any] = {}   # bucket -> jitted admission
         self._sample_slots = jax.jit(self._sample_slots_impl)
         # observability: serve_queue invariants ("no re-prefill after
-        # admission") are asserted against these counters in the tests
-        self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0}
+        # admission", "<= 1/k host syncs per token") are asserted against
+        # these counters in the tests and the CI bench smoke
+        self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
+                      "host_syncs": 0, "chunked_prefills": 0,
+                      "useful_slot_steps": 0, "macro_steps": 0,
+                      "admit_evictions": 0}
+        self._admit_fns = _CompiledLRU(admit_cache_size, self.stats)
+        self._chunk_fns = _CompiledLRU(admit_cache_size, self.stats)
+        self._macro_fns: Dict[int, Any] = {}
+
+    def reset_stats(self) -> None:
+        for k in self.stats:
+            self.stats[k] = 0
 
     # -- low-level steps (also what the dry-run lowers) ----------------------
 
@@ -153,6 +228,7 @@ class ServeEngine:
         stacked = jnp.stack(out, axis=1)
         if return_device:
             return stacked
+        self.stats["host_syncs"] += 1
         return np.asarray(jax.block_until_ready(stacked))
 
     def _sample(self, logits, temperature, key):
@@ -169,7 +245,7 @@ class ServeEngine:
         sampled = jax.random.categorical(key, logits / safe_t, axis=-1)
         return jnp.where(temps > 0, sampled, greedy)
 
-    # -- continuous batching ---------------------------------------------------
+    # -- admission -------------------------------------------------------------
 
     def _bucket_for(self, prompt_len: int) -> int:
         if prompt_len > self.max_len:
@@ -184,51 +260,145 @@ class ServeEngine:
                          f"{self.max_len}")
 
     def _admit_fn(self, bucket: int):
-        """Jitted admission: prefill a (1, bucket) prompt and write its
-        per-layer cache rows into the shared cache at ``slot``.  ``slot`` and
-        ``true_len`` are traced, so one compilation serves every slot and
-        every prompt length in the bucket."""
-        if bucket in self._admit_fns:
-            return self._admit_fns[bucket]
+        """Jitted whole-prompt admission: prefill a (1, bucket) prompt, write
+        its per-layer cache rows into the shared cache at ``slot``, and
+        sample the first token from the prompt's last logits with the slot's
+        own PRNG stream.  ``slot``, ``true_len``, ``temp`` and ``key`` are
+        traced, so one compilation serves every slot, prompt length in the
+        bucket, and sampling config."""
         cfg = self.cfg
 
-        def admit(params, cache, tokens, slot, true_len):
-            logits, small = tfm.prefill(params, cfg, tokens=tokens,
-                                        max_len=bucket)
+        def build():
+            def admit(params, cache, tokens, slot, true_len, temp, key):
+                logits, small = tfm.prefill(params, cfg, tokens=tokens,
+                                            max_len=bucket)
 
-            def write(big, new):
-                # leaves are (count, B, rows, ...) vs (count, 1, rows', ...)
-                # with rows' <= rows; SSM states carry no row dim but share
-                # the (count, batch, ...) prefix, so the same write works
-                start = (0, slot) + (0,) * (big.ndim - 2)
-                return jax.lax.dynamic_update_slice(
-                    big, new.astype(big.dtype), start)
+                def write(big, new):
+                    # leaves are (count, B, rows, ...) vs (count, 1, rows', ...)
+                    # with rows' <= rows; SSM states carry no row dim but share
+                    # the (count, batch, ...) prefix, so the same write works
+                    start = (0, slot) + (0,) * (big.ndim - 2)
+                    return jax.lax.dynamic_update_slice(
+                        big, new.astype(big.dtype), start)
 
-            new_blocks = jax.tree.map(write, cache["blocks"], small["blocks"])
-            lens = cache["len"].at[slot].set(true_len)
-            last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1,
-                                                axis=0, keepdims=False)
-            return last, {"blocks": new_blocks, "len": lens}
+                new_blocks = jax.tree.map(write, cache["blocks"],
+                                          small["blocks"])
+                lens = cache["len"].at[slot].set(true_len)
+                last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1,
+                                                    axis=0, keepdims=False)
+                tok, key = _sample_token(last, temp, key, cfg.vocab_size)
+                return tok, key, {"blocks": new_blocks, "len": lens}
 
-        fn = jax.jit(admit)
-        self._admit_fns[bucket] = fn
-        return fn
+            return jax.jit(admit)
+
+        return self._admit_fns.get(bucket, build)
+
+    def _chunk_fn(self, c: int, final: bool):
+        """Jitted admission chunk at shape (1, c).  Non-final chunks only
+        append K/V rows / advance SSM state; the final chunk additionally
+        projects the prompt's last hidden row, samples the first token, and
+        publishes the slot's length."""
+        cfg = self.cfg
+
+        def build():
+            if not final:
+                def run(params, cache, tokens, slot, offset):
+                    _, cache = tfm.prefill_chunk(params, cfg, cache, tokens,
+                                                 slot, offset)
+                    return cache
+                return jax.jit(run)
+
+            def run_final(params, cache, tokens, slot, offset, last_idx,
+                          final_len, temp, key):
+                x, cache = tfm.prefill_chunk(params, cfg, cache, tokens,
+                                             slot, offset)
+                last_h = jax.lax.dynamic_index_in_dim(x[0], last_idx, axis=0,
+                                                      keepdims=False)
+                logits = tfm.hidden_to_logits(params, cfg,
+                                              last_h[None, None])[0, 0]
+                tok, key = _sample_token(logits, temp, key, cfg.vocab_size)
+                lens = cache["len"].at[slot].set(final_len)
+                return tok, key, {"blocks": cache["blocks"], "len": lens}
+
+            return jax.jit(run_final)
+
+        return self._chunk_fns.get((c, final), build)
 
     def _empty_batched_cache(self):
         cache = tfm.init_cache(self.cfg, self.max_batch, self.max_len)
         cache["len"] = jnp.zeros((self.max_batch,), jnp.int32)
         return cache
 
-    def serve_queue(self, requests: List[Request],
-                    step_budget: int = 10_000) -> Dict[int, List[int]]:
+    # -- decode macro-step -----------------------------------------------------
+
+    def _macro_fn(self, k: int):
+        """Jitted k-step decode macro-step: a ``lax.scan`` over batched
+        decode + per-slot sampling + per-slot stop detection, with tokens
+        accumulated into a (B, k) buffer on device.  Steps after every slot
+        has drained are skipped via ``lax.cond``."""
+        if k in self._macro_fns:
+            return self._macro_fns[k]
+        cfg = self.cfg
+        vocab = cfg.vocab_size
+
+        def macro(params, cache, last, temps, active, remaining, eos, keys):
+            def step(carry, _):
+                def do(op):
+                    cache, last, active, remaining, keys = op
+                    logits, cache = tfm.decode_step(params, cfg, cache,
+                                                    tokens=last, active=active,
+                                                    unroll=self.decode_unroll)
+                    # one _sample_token per slot: the same primitive (and
+                    # key-split discipline) admission uses, so macro and
+                    # per-token scheduling share one sampling definition
+                    toks, keys = jax.vmap(
+                        lambda lg, t, kk: _sample_token(lg, t, kk, vocab))(
+                            logits, temps, keys)
+                    toks = jnp.where(active, toks, last[:, 0])
+                    emitted = active
+                    remaining = remaining - active.astype(remaining.dtype)
+                    hit_eos = (eos >= 0) & (toks == eos)
+                    active = active & (remaining > 0) & ~hit_eos
+                    return ((cache, toks[:, None], active, remaining, keys),
+                            (toks, emitted, jnp.int32(1)))
+
+                def skip(op):
+                    _, last, active, _, _ = op
+                    return op, (last[:, 0], jnp.zeros_like(active),
+                                jnp.int32(0))
+
+                return jax.lax.cond(jnp.any(carry[2]), do, skip, carry)
+
+            carry = (cache, last, active, remaining, keys)
+            (cache, last, active, remaining, keys), ys = jax.lax.scan(
+                step, carry, None, length=k)
+            toks_k, emitted_k, execd = ys                      # (k, B), .., (k,)
+            return (cache, last, active, remaining, keys,
+                    toks_k.T, emitted_k.T, jnp.sum(execd))
+
+        fn = jax.jit(macro)
+        self._macro_fns[k] = fn
+        return fn
+
+    # -- continuous batching ---------------------------------------------------
+
+    def serve_queue(self, requests: List[Request], step_budget: int = 10_000,
+                    macro_steps: Optional[int] = None,
+                    prefill_chunk: Optional[int] = None) -> Dict[int, List[int]]:
         """Continuous batcher over ``max_batch`` persistent cache slots.
 
-        Every iteration admits pending requests into free slots (one jitted
-        bucketed prefill each — the only prefill a request ever gets) and
-        then advances ALL active slots with a single batched decode step.
-        Returns {uid: generated tokens}; per-request TTFT/latency timestamps
-        are recorded on the Request objects.
+        Every scheduler iteration (a) admits pending requests — one whole
+        bucketed prefill each, or one prompt *chunk* per admitting slot when
+        chunked admission is on — and (b) advances ALL active slots with a
+        single jitted k-step decode macro-step, syncing with the host once
+        per macro-step.  Returns {uid: generated tokens}; per-request
+        TTFT/latency timestamps are recorded on the Request objects.
         """
+        k = max(1, int(self.macro_steps if macro_steps is None else macro_steps))
+        chunk = int(self.prefill_chunk if prefill_chunk is None
+                    else prefill_chunk)
+        if chunk > 0:
+            chunk = min(chunk, self._max_chunk)
         now = time.perf_counter()
         for req in requests:
             if not req.submitted_at:
@@ -238,9 +408,17 @@ class ServeEngine:
         B = self.max_batch
         cache = self._empty_batched_cache()
         slots: List[Optional[Request]] = [None] * B
+        admitting = [False] * B
+        admit_off = [0] * B
+        slot_key: List[Any] = [None] * B     # device PRNG key while admitting
         last_tokens = np.zeros((B, 1), np.int32)
         temps = np.zeros((B,), np.float32)
-        key = jax.random.PRNGKey(0)
+        eos = np.full((B,), -1, np.int32)
+        active = np.zeros((B,), bool)
+        remaining = np.zeros((B,), np.int32)
+        keys = np.zeros((B, 2), np.uint32)
+        base_key = jax.random.PRNGKey(self.seed)
+        macro = self._macro_fn(k)
         steps = 0
 
         def finish(b: int):
@@ -249,64 +427,141 @@ class ServeEngine:
             req.finished_at = time.perf_counter()
             results[req.uid] = req.tokens
             slots[b] = None
+            active[b] = False
+
+        def start_slot(b: int, tok: int, key_arr):
+            """The prompt's last logits just yielded the first token."""
+            req = slots[b]
+            req.tokens = [int(tok)]
+            req.first_token_at = time.perf_counter()
+            self.stats["prefills"] += 1
+            self.stats["admitted"] += 1
+            hit_eos = req.eos_id is not None and req.tokens[0] == req.eos_id
+            if len(req.tokens) >= req.max_new_tokens or hit_eos:
+                finish(b)
+                return
+            active[b] = True
+            remaining[b] = req.max_new_tokens - 1
+            last_tokens[b, 0] = req.tokens[0]
+            temps[b] = req.temperature
+            eos[b] = -1 if req.eos_id is None else int(req.eos_id)
+            keys[b] = np.asarray(key_arr)
 
         while (pending or any(s is not None for s in slots)) \
                 and steps < step_budget:
-            # admit into free slots: one bucketed prefill writes the prompt's
-            # K/V into the shared cache; the prompt's last logits give the
-            # first token "for free"
+            progressed = False
+            # -- admission: fill free slots; advance admitting slots by one
+            #    chunk (or the whole prompt when chunking is off) ------------
             for b in range(B):
-                if slots[b] is not None or not pending:
+                if slots[b] is None and pending:
+                    req = pending.pop(0)
+                    plen = len(req.prompt)
+                    assert plen + req.max_new_tokens <= self.max_len, \
+                        f"request {req.uid} needs {plen + req.max_new_tokens}" \
+                        f" rows, cache has {self.max_len}"
+                    slots[b] = req
+                    admitting[b] = True
+                    admit_off[b] = 0
+                    # per-slot PRNG stream seeded from the request uid: one
+                    # slot's sampling can never perturb another's
+                    slot_key[b] = jax.random.fold_in(base_key, req.uid)
+                if slots[b] is None or not admitting[b]:
                     continue
-                req = pending.pop(0)
-                plen = len(req.prompt)
-                assert plen + req.max_new_tokens <= self.max_len, \
-                    f"request {req.uid} needs {plen + req.max_new_tokens} " \
-                    f"rows, cache has {self.max_len}"
-                bucket = self._bucket_for(plen)
-                padded = np.zeros((1, bucket), np.int32)
-                padded[0, :plen] = req.prompt
-                first_logits, cache = self._admit_fn(bucket)(
-                    self.params, cache, jnp.asarray(padded),
-                    np.int32(b), np.int32(plen))
-                self.stats["prefills"] += 1
-                self.stats["admitted"] += 1
-                req.admitted_at = time.perf_counter()
-                key, sub = jax.random.split(key)
-                tok = int(self._sample(first_logits[None],
-                                       req.temperature, sub)[0])
-                req.tokens = [tok]
-                req.first_token_at = time.perf_counter()
-                slots[b] = req
-                if len(req.tokens) >= req.max_new_tokens:
-                    finish(b)
-                else:
-                    last_tokens[b, 0] = tok
-                    temps[b] = req.temperature
-
-            if not any(s is not None for s in slots):
-                continue
-
-            # one batched decode step across all slots (finished/empty slots
-            # decode garbage that the scheduler ignores)
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(last_tokens))
-            self.stats["decode_steps"] += 1
-            key, sub = jax.random.split(key)
-            toks = np.asarray(self._sample_slots(logits, jnp.asarray(temps),
-                                                 sub))
-            for b in range(B):
                 req = slots[b]
-                if req is None:
-                    continue
-                req.tokens.append(int(toks[b]))
-                last_tokens[b, 0] = int(toks[b])
-                if len(req.tokens) >= req.max_new_tokens:
-                    finish(b)
-            steps += 1
+                plen = len(req.prompt)
+                # prompts that fit in one chunk take the whole-prompt
+                # bucketed admission (chunk attention would scan the full —
+                # empty — cache prefix for nothing); chunking only pays for
+                # itself on multi-chunk prompts
+                if chunk <= 0 or (admit_off[b] == 0 and plen <= chunk):
+                    bucket = self._bucket_for(plen)
+                    padded = np.zeros((1, bucket), np.int32)
+                    padded[0, :plen] = req.prompt
+                    tok, key2, cache = self._admit_fn(bucket)(
+                        self.params, cache, jnp.asarray(padded),
+                        np.int32(b), np.int32(plen),
+                        np.float32(req.temperature), slot_key[b])
+                    req.admitted_at = time.perf_counter()
+                    tok, key2 = jax.device_get((tok, key2))
+                    self.stats["host_syncs"] += 1
+                    admitting[b] = False
+                    start_slot(b, tok, key2)
+                else:
+                    off = admit_off[b]
+                    end = min(off + chunk, plen)
+                    final = end == plen
+                    if self._pad_safe:
+                        # one compiled chunk shape for ANY prompt length:
+                        # the remainder is right-padded; pad rows sit beyond
+                        # every real query position, so causal masking keeps
+                        # them inert and decode overwrites them row by row
+                        c_shape = chunk
+                        toks_np = np.zeros((1, chunk), np.int32)
+                        toks_np[0, :end - off] = req.prompt[off:end]
+                    else:
+                        c_shape = end - off
+                        toks_np = np.asarray(req.prompt[off:end],
+                                             np.int32)[None]
+                    self.stats["chunked_prefills"] += 1
+                    if final:
+                        tok, key2, cache = self._chunk_fn(c_shape, True)(
+                            self.params, cache, jnp.asarray(toks_np),
+                            np.int32(b), np.int32(off),
+                            np.int32(plen - 1 - off), np.int32(plen),
+                            np.float32(req.temperature), slot_key[b])
+                        req.admitted_at = time.perf_counter()
+                        tok, key2 = jax.device_get((tok, key2))
+                        self.stats["host_syncs"] += 1
+                        admitting[b] = False
+                        start_slot(b, tok, key2)
+                    else:
+                        cache = self._chunk_fn(c_shape, False)(
+                            self.params, cache, jnp.asarray(toks_np),
+                            np.int32(b), np.int32(off))
+                        admit_off[b] = end
+                progressed = True
 
-        for b in range(B):                     # step budget exhausted
+            # -- one decode macro-step across all active slots ---------------
+            if active.any():
+                was_active = active.copy()
+                (cache, last_d, act_d, rem_d, keys_d,
+                 toks_bk, emit_bk, execd) = macro(
+                    self.params, cache, jnp.asarray(last_tokens),
+                    jnp.asarray(temps), jnp.asarray(active),
+                    jnp.asarray(remaining), jnp.asarray(eos),
+                    jnp.asarray(keys))
+                (last_np, act_np, rem_np, keys_np,
+                 toks_np, emit_np, nexec) = jax.device_get(
+                    (last_d, act_d, rem_d, keys_d, toks_bk, emit_bk, execd))
+                self.stats["host_syncs"] += 1
+                self.stats["macro_steps"] += 1
+                self.stats["decode_steps"] += int(nexec)
+                self.stats["useful_slot_steps"] += int(emit_np.sum())
+                for b in range(B):
+                    if slots[b] is None or not was_active[b]:
+                        continue
+                    req = slots[b]
+                    for i in range(k):
+                        if emit_np[b, i]:
+                            req.tokens.append(int(toks_np[b, i]))
+                    active[b] = bool(act_np[b])
+                    remaining[b] = int(rem_np[b])
+                    last_tokens[b, 0] = int(last_np[b, 0])
+                    keys[b] = keys_np[b]
+                    if not active[b]:
+                        finish(b)
+                steps += k
+                progressed = True
+            else:
+                steps += 1
+
+            if not progressed:
+                break                                # nothing left to drive
+
+        for b in range(B):                           # step budget exhausted
             if slots[b] is not None:
+                if slots[b].tokens is None:
+                    slots[b].tokens = []
                 finish(b)
         for req in pending:
             results[req.uid] = []
@@ -328,19 +583,26 @@ def throughput_tokens_per_s(engine: ServeEngine, batch: int, prompt_len: int,
     return batch * new_tokens / dt
 
 
-def queue_throughput(engine: ServeEngine, requests: List[Request]):
-    """Run ``serve_queue`` and report aggregate + latency metrics."""
+def queue_throughput(engine: ServeEngine, requests: List[Request], **kwargs):
+    """Run ``serve_queue`` and report aggregate + latency metrics (TTFT
+    mean/max/p50/p99, host syncs per token)."""
+    stats0 = dict(engine.stats)
     t0 = time.perf_counter()
-    results = engine.serve_queue(requests)
+    results = engine.serve_queue(requests, **kwargs)
     dt = time.perf_counter() - t0
     total = sum(len(v) for v in results.values())
     ttfts = [r.first_token_at - r.submitted_at for r in requests
              if r.first_token_at]
+    syncs = engine.stats["host_syncs"] - stats0["host_syncs"]
     return {
         "tokens": total,
         "seconds": dt,
         "tokens_per_s": total / dt if dt > 0 else float("inf"),
         "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
         "ttft_max_s": float(np.max(ttfts)) if ttfts else 0.0,
+        "ttft_p50_s": float(np.percentile(ttfts, 50)) if ttfts else 0.0,
+        "ttft_p99_s": float(np.percentile(ttfts, 99)) if ttfts else 0.0,
+        "host_syncs": syncs,
+        "host_syncs_per_token": syncs / total if total else 0.0,
         "results": results,
     }

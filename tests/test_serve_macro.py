@@ -1,0 +1,312 @@
+"""Decode macro-steps + chunked prefill admission (ISSUE 2).
+
+Covers the on-device scheduler hot path: exact token parity between the
+k-step macro scheduler and per-token scheduling, per-slot PRNG isolation,
+chunked-admission parity against whole-prompt admission (global and local
+attention plans), the bounded admission compile cache, and the host-sync /
+useful-work counters.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import POCKET
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+
+PARAMS = tfm.init_params(jax.random.PRNGKey(0), POCKET)
+
+
+def _mixed_requests(n, temp=0.0, seed=11):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(3, 24))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, POCKET.vocab_size, (plen,)).astype(np.int32),
+            max_new_tokens=int(rng.integers(1, 9)),
+            temperature=temp))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# macro-step scheduler
+# ---------------------------------------------------------------------------
+
+def test_macro_greedy_parity_vs_pertoken():
+    """The k-step macro scheduler must emit EXACTLY the tokens per-token
+    scheduling emits under greedy decoding — same uids, same sequences."""
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=3, max_len=64)
+    a = eng.serve_queue(_mixed_requests(7), macro_steps=8)
+    b = eng.serve_queue(_mixed_requests(7), macro_steps=1)
+    assert a == b
+
+
+def test_macro_temperature_parity_and_isolation():
+    """Per-slot PRNG streams are seeded from the request uid, so (a) the
+    macro and per-token schedulers sample identical sequences, and (b) a
+    request draws the same tokens whether it runs alone or co-scheduled —
+    one slot's sampling never perturbs another's stream."""
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=3, max_len=64)
+    a = eng.serve_queue(_mixed_requests(6, temp=0.7), macro_steps=8)
+    b = eng.serve_queue(_mixed_requests(6, temp=0.7), macro_steps=1)
+    assert a == b
+    solo_reqs = [r for r in _mixed_requests(6, temp=0.7) if r.uid == 4]
+    solo = eng.serve_queue(solo_reqs, macro_steps=4)
+    assert solo[4] == a[4]
+
+
+def test_macro_eos_stop():
+    """EOS emitted mid-macro-step stops that slot: the sequence ends at the
+    first EOS occurrence and still counts it."""
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=2, max_len=64)
+    prompt = np.arange(9, dtype=np.int32)
+    full = eng.serve_queue([Request(uid=0, prompt=prompt,
+                                    max_new_tokens=8)])[0]
+    eos = full[3]
+    got = eng.serve_queue([Request(uid=0, prompt=prompt, max_new_tokens=8,
+                                   eos_id=int(eos))])[0]
+    cut = full.index(eos) + 1
+    assert got == full[:cut]
+
+
+def test_macro_counters_and_host_sync_bound():
+    """host_syncs is one per admission plus one per macro-step (<= 1/k per
+    decode token); useful_slot_steps counts exactly the decode-emitted
+    tokens; finished/empty slots are masked so their lengths never move."""
+    k = 4
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=3, max_len=64,
+                      macro_steps=k)
+    reqs = _mixed_requests(6)
+    res = eng.serve_queue(reqs)
+    total = sum(len(v) for v in res.values())
+    s = eng.stats
+    assert s["admitted"] == len(reqs)
+    assert s["host_syncs"] == s["admitted"] + s["macro_steps"]
+    decode_tokens = total - s["admitted"]   # first tokens come from admission
+    assert s["useful_slot_steps"] == decode_tokens
+    assert s["macro_steps"] <= np.ceil(decode_tokens / k) + len(reqs)
+    # decode work is masked to useful slots: no more executed batched steps
+    # than macro windows, and each batched step emits >= 1 token
+    assert s["decode_steps"] <= s["macro_steps"] * k
+    assert s["useful_slot_steps"] >= s["decode_steps"]
+
+
+def test_decode_step_active_mask_freezes_idle_slots():
+    """Inactive slots must neither write K/V rows nor advance their length
+    — bit-identical cache before/after a masked batched step."""
+    cache = tfm.init_cache(POCKET, 2, 32)
+    cache["len"] = jnp.array([5, 7], jnp.int32)
+    toks = jnp.array([[3], [4]], jnp.int32)
+    active = jnp.array([True, False])
+    _, new = jax.jit(lambda p, c, t, a: tfm.decode_step(
+        p, POCKET, c, tokens=t, active=a))(PARAMS, cache, toks, active)
+    assert np.array_equal(np.asarray(new["len"]), [6, 7])
+    for old_l, new_l in zip(jax.tree.leaves(cache["blocks"]),
+                            jax.tree.leaves(new["blocks"])):
+        np.testing.assert_array_equal(np.asarray(old_l)[:, 1],
+                                      np.asarray(new_l)[:, 1])
+
+
+def test_decode_step_unroll_matches_scan():
+    """The unrolled decode hot path is a perf transform only: same cache
+    rows and same greedy decisions as the scanned form (XLA may reassociate
+    the bf16 matmuls, so logits agree to rounding, not bitwise)."""
+    cache = tfm.init_cache(POCKET, 2, 32)
+    cache["len"] = jnp.array([4, 9], jnp.int32)
+    toks = jnp.array([[3], [4]], jnp.int32)
+    lg_u, c_u = jax.jit(lambda p, c, t: tfm.decode_step(
+        p, POCKET, c, tokens=t, unroll=True))(PARAMS, cache, toks)
+    lg_s, c_s = jax.jit(lambda p, c, t: tfm.decode_step(
+        p, POCKET, c, tokens=t, unroll=False))(PARAMS, cache, toks)
+    np.testing.assert_allclose(np.asarray(lg_u[:, :POCKET.vocab_size]),
+                               np.asarray(lg_s[:, :POCKET.vocab_size]),
+                               atol=5e-2)
+    assert np.array_equal(
+        np.asarray(jnp.argmax(lg_u[:, :POCKET.vocab_size], -1)),
+        np.asarray(jnp.argmax(lg_s[:, :POCKET.vocab_size], -1)))
+    for a, b in zip(jax.tree.leaves(c_u), jax.tree.leaves(c_s)):
+        np.testing.assert_allclose(np.asarray(a).astype(np.float32),
+                                   np.asarray(b).astype(np.float32),
+                                   atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill admission
+# ---------------------------------------------------------------------------
+
+def _assert_token_parity(whole, chunked, min_agreement=0.9):
+    """Chunked prefill computes the same math as whole prefill but in
+    different matmul shapes, so bf16 K/V rows can differ by an ulp and flip
+    greedy near-ties downstream: require identical request lengths + first
+    tokens and >= ``min_agreement`` token agreement overall."""
+    assert set(chunked) == set(whole)
+    agree = total = 0
+    for uid in whole:
+        assert len(chunked[uid]) == len(whole[uid]), uid
+        if whole[uid]:
+            assert chunked[uid][0] == whole[uid][0], uid
+        agree += sum(a == b for a, b in zip(whole[uid], chunked[uid]))
+        total += len(whole[uid])
+    assert total and agree / total >= min_agreement, \
+        f"token agreement {agree}/{total}"
+
+
+def test_chunked_admission_parity_global():
+    """Chunked admission (global attention, padded fixed-shape chunks) must
+    reproduce whole-prompt admission."""
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=2, max_len=64)
+    whole = eng.serve_queue(_mixed_requests(5, seed=3), prefill_chunk=0)
+    syncs0 = eng.stats["chunked_prefills"]
+    chunked = eng.serve_queue(_mixed_requests(5, seed=3), prefill_chunk=6)
+    _assert_token_parity(whole, chunked)
+    assert eng.stats["chunked_prefills"] > syncs0
+
+
+def test_chunked_admission_parity_local_attention():
+    """Ring-buffer (local_global) plans chunk at exact lengths; the resumed
+    ring writes + global-position masking must reproduce whole-prompt
+    admission exactly."""
+    cfg = dataclasses.replace(POCKET, attn_pattern="local_global",
+                              window_size=8)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, scheme="bf16", max_batch=2, max_len=64)
+    reqs = lambda: [Request(uid=i,
+                            prompt=((np.arange(21, dtype=np.int32) + 13 * i)
+                                    % cfg.vocab_size),
+                            max_new_tokens=5) for i in range(3)]
+    whole = eng.serve_queue(reqs(), prefill_chunk=0)
+    chunked = eng.serve_queue(reqs(), prefill_chunk=16)  # clamped to window=8
+    # greedy near-ties on a random-weight model amplify single-ulp bf16
+    # diffs into repeated-token runs, so the serve-level bound is loose; the
+    # ring-layout correctness proper is asserted bitwise-tolerant below
+    _assert_token_parity(whole, chunked, min_agreement=0.7)
+
+
+def test_prefill_chunk_matches_whole_prefill_ring_cache():
+    """Model-level local-attention check: chunked prefill lays out the ring
+    buffer (latest ``window`` positions at rows p % size) exactly as the
+    whole-prompt roll does, for prompts longer than the window and a
+    remainder chunk that wraps mid-ring."""
+    cfg = dataclasses.replace(POCKET, attn_pattern="local_global",
+                              window_size=8)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    L = 21                                       # chunks 8, 8, 5; ring size 8
+    toks = (np.arange(L, dtype=np.int32) % cfg.vocab_size)[None]
+    logits_w, cache_w = tfm.prefill(params, cfg, tokens=jnp.asarray(toks),
+                                    max_len=64)
+    cache = tfm.init_cache(cfg, 2, 64)
+    cache["len"] = jnp.zeros((2,), jnp.int32)
+    off = 0
+    for c in (8, 8, 5):
+        x, cache = tfm.prefill_chunk(params, cfg, cache,
+                                     jnp.asarray(toks[:, off:off + c]),
+                                     jnp.int32(1), jnp.int32(off))
+        off += c
+    lg = tfm.hidden_to_logits(params, cfg, x)[0, L - 1 - 16]
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_w[0, -1]),
+                               atol=2e-2)
+    for wl, cl in zip(jax.tree.leaves(cache_w["blocks"]),
+                      jax.tree.leaves(cache["blocks"])):
+        wl, cl = np.asarray(wl), np.asarray(cl)
+        n = min(wl.shape[2], L)                 # ring rows vs linear rows
+        np.testing.assert_allclose(wl[:, 0, :n].astype(np.float32),
+                                   cl[:, 1, :n].astype(np.float32),
+                                   atol=5e-2)
+
+
+def test_chunked_admission_hybrid_completes():
+    """SSM/hybrid plans resume the recurrence exactly in structure (state
+    carry + conv window), but splitting the associative scan reorders float
+    accumulation, so token-level parity is approximate — assert completion
+    and counter behavior."""
+    cfg = dataclasses.replace(POCKET, attn_pattern="hybrid_1_7", num_layers=8)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, scheme="bf16", max_batch=2, max_len=64)
+    reqs = [Request(uid=i, prompt=((np.arange(13, dtype=np.int32) + 7 * i)
+                                   % cfg.vocab_size),
+                    max_new_tokens=4) for i in range(3)]
+    res = eng.serve_queue(reqs, prefill_chunk=5)
+    assert all(len(res[i]) == 4 for i in range(3))
+    assert eng.stats["chunked_prefills"] > 0
+
+
+def test_chunked_admission_slot_reuse_resets_ssm_state():
+    """A re-admitted slot still holds the previous request's final SSM
+    state; the first chunk must resume from zeros, not leak it.  With one
+    slot (forced reuse) every request must decode exactly as it does in a
+    fresh queue of its own."""
+    cfg = dataclasses.replace(POCKET, attn_pattern="hybrid_1_7", num_layers=8)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, scheme="bf16", max_batch=1, max_len=64)
+    mk = lambda i: Request(uid=i, prompt=((np.arange(13, dtype=np.int32)
+                                           + 7 * i) % cfg.vocab_size),
+                           max_new_tokens=4)
+    shared = eng.serve_queue([mk(0), mk(1), mk(2)], prefill_chunk=5)
+    for i in range(3):
+        alone = eng.serve_queue([mk(i)], prefill_chunk=5)
+        assert shared[i] == alone[i], i
+
+
+def test_prefill_chunk_matches_whole_prefill_cache():
+    """Model-level: chunked prefill writes the same K/V rows into the shared
+    cache as a whole prefill, and its final hidden row projects to the same
+    logits (global attention: bitwise-stable value path)."""
+    toks = (np.arange(13, dtype=np.int32) % POCKET.vocab_size)[None]
+    logits_w, cache_w = tfm.prefill(PARAMS, POCKET,
+                                    tokens=jnp.asarray(toks), max_len=32)
+    cache = tfm.init_cache(POCKET, 2, 32)
+    cache["len"] = jnp.zeros((2,), jnp.int32)
+    off = 0
+    for c in (5, 5, 3):
+        x, cache = tfm.prefill_chunk(PARAMS, POCKET, cache,
+                                     jnp.asarray(toks[:, off:off + c]),
+                                     jnp.int32(1), jnp.int32(off))
+        off += c
+    lg = tfm.hidden_to_logits(PARAMS, POCKET, x)[0, -1]
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_w[0, -1]),
+                               atol=2e-2)
+    for wl, cl in zip(jax.tree.leaves(cache_w["blocks"]),
+                      jax.tree.leaves(cache["blocks"])):
+        wl, cl = np.asarray(wl), np.asarray(cl)
+        # bf16 rows agree to rounding (different matmul shapes reassociate)
+        np.testing.assert_allclose(wl[:, 0, :13].astype(np.float32),
+                                   cl[:, 1, :13].astype(np.float32),
+                                   atol=5e-2)
+
+
+def test_chunked_admission_int8_kv_runs():
+    """Chunked admission on a quantized KV cache: chunk attention folds the
+    prefix scales instead of materializing bf16."""
+    cfg = dataclasses.replace(POCKET, kv_cache_dtype="int8")
+    eng = ServeEngine(cfg, PARAMS, scheme="bf16", max_batch=2, max_len=64)
+    reqs = [Request(uid=i, prompt=np.arange(11, dtype=np.int32) + i,
+                    max_new_tokens=4) for i in range(3)]
+    res = eng.serve_queue(reqs, prefill_chunk=4)
+    assert all(len(res[i]) == 4 for i in range(3))
+
+
+# ---------------------------------------------------------------------------
+# bounded admission compile cache
+# ---------------------------------------------------------------------------
+
+def test_admit_compile_cache_lru_cap():
+    """Pad-unsafe plans compile one admission per distinct prompt length;
+    the LRU cap bounds live executables and counts evictions, without
+    changing results."""
+    cfg = dataclasses.replace(POCKET, attn_pattern="local_global",
+                              window_size=8)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, scheme="bf16", max_batch=2, max_len=64,
+                      admit_cache_size=2)
+    assert not eng._pad_safe
+    reqs = [Request(uid=i, prompt=np.arange(5 + 2 * i, dtype=np.int32),
+                    max_new_tokens=2) for i in range(5)]   # 5 distinct lengths
+    res = eng.serve_queue(reqs)
+    assert all(len(res[i]) == 2 for i in range(5))
+    assert len(eng._admit_fns) <= 2
+    assert eng.stats["admit_evictions"] >= 3
