@@ -19,17 +19,30 @@ tokens per request):
   "unbounded stall"); chunked admission splits it into fixed-size chunks
   interleaved with decode macro-steps, so TTFT-max stays within 2x
   TTFT-mean (the ISSUE 2 acceptance bound).
+* ``queue/spec_*`` — speculative decoding (ISSUE 3): the n-gram-draft +
+  multi-position-verify macro-step against the spec_len=0 baseline at the
+  same macro k, on (a) a high-acceptance workload — greedy decoding, whose
+  fixed-point/cycle collapse the on-device bigram table learns — and (b) a
+  near-zero-acceptance workload (temperature 1.0: near-uniform sampling
+  defeats any deterministic draft).  Reports accepted-tokens/step and
+  tokens/s; criteria: >= 1.5x decode throughput at high acceptance with
+  BIT-EXACT greedy parity, <= 1.1x slowdown at near-zero acceptance.
 * ``queue/step_flatness`` — per-decode-step wall time across the run; the
   batcher's step time must NOT grow with generated length.
+* ``queue/unroll_gap`` — scanned vs python-unrolled decode-step latency
+  (the DECODE_UNROLL_MAX_LAYERS crossover), so deep-model regressions on
+  the scanned path stay visible.
 
 Everything is also written machine-readably to ``benchmarks/BENCH_serve.json``
 (tokens/s, TTFT p50/p99, host_syncs/token, criteria booleans).
 
     PYTHONPATH=src:. python benchmarks/serve_queue_bench.py [--ci]
+        [--spec-len L] [--draft ngram]
 
 ``--ci`` runs a tiny configuration and exits non-zero if host syncs per
-token exceed 1/K or the chunked-admission TTFT bound fails — the CI smoke
-for the scheduler hot path.
+token exceed 1/K, the chunked-admission TTFT bound fails, speculative
+greedy parity breaks, or the accepted-token counter stays zero — the CI
+smoke for the scheduler hot path.
 """
 from __future__ import annotations
 
@@ -41,6 +54,7 @@ import time
 from typing import Dict, List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row
@@ -158,6 +172,181 @@ def _pertoken_pr1(engine: ServeEngine, requests: List[Request],
     return results
 
 
+def _spec_sweep(batch: int, macro_k: int, spec_len: int, bench: Dict,
+                rows: List[Row], ci: bool, draft: str = "ngram") -> None:
+    """Speculative decode vs the PR 2 macro-step baseline (spec_len == 0,
+    same k), swept over draft lengths, on two workloads:
+
+    * high acceptance — greedy decoding over a long token budget; greedy
+      generation collapses into cycles the on-device bigram table learns,
+      so the steady state accepts most drafts, and
+    * near-zero acceptance — temperature-1.0 sampling, whose near-uniform
+      draws defeat any deterministic draft; the adaptive throttle must
+      keep the slowdown within the 1.1x degradation bound.
+
+    The sweep uses f32 params: greedy parity is required BIT-EXACT, and
+    with bf16 weights the collapsed regime produces exactly-tied logits
+    whose argmax can flip under the (S, D) vs (1, D) matmul reassociation
+    — an ulp artifact of the CPU backend, not a scheduler property.  Both
+    engines see the same f32 weights, so the throughput ratios stand.
+    """
+    params32 = tfm.init_params(jax.random.PRNGKey(0), POCKET,
+                               dtype=jnp.float32)
+    new_tokens = 32 if ci else 128
+    num_reqs = batch                       # one full wave: no queue tail
+    lo_tokens = 32 if ci else 192          # long enough to amortize probes
+    out: Dict[str, object] = {"macro_k": macro_k, "ci_spec_len": spec_len,
+                              "draft": draft}
+    bench["spec"] = out
+
+    def interleaved(base_eng, spec_eng, n, nt, temp, repeats: int = 3):
+        """Alternate base/spec runs of the same queue and keep each side's
+        best-of-N: the criteria are RATIOS with ~10% margins, and on a
+        shared CPU host both single-run noise and the load drift between
+        two back-to-back measurement windows exceed that.  Stats are reset
+        before the last repeat so counters describe exactly one run; the
+        first (cold, compiling) repeat is discarded by the min."""
+        res_b = res_s = None
+        dt_b = dt_s = float("inf")
+        for i in range(repeats):
+            if i == repeats - 1:
+                base_eng.reset_stats()
+                spec_eng.reset_stats()
+            t0 = time.perf_counter()
+            res_b = base_eng.serve_queue(
+                [_with_temp(r, temp) for r in _requests(n, nt)])
+            dt_b = min(dt_b, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            res_s = spec_eng.serve_queue(
+                [_with_temp(r, temp) for r in _requests(n, nt)])
+            dt_s = min(dt_s, time.perf_counter() - t0)
+        return res_b, dt_b, res_s, dt_s
+
+    # -- high-acceptance workload: greedy, long budget ----------------------
+    base = ServeEngine(POCKET, params32, scheme="bf16", max_batch=batch,
+                       max_len=PROMPT_LEN + new_tokens + 8,
+                       macro_steps=macro_k)
+    base.serve_queue(_requests(2, 4))                    # warmup/compile
+    sweep_lens = sorted({2, 3, spec_len} - {0})
+    out["greedy"] = {"by_spec_len": {}}
+    best = None
+    for L in sweep_lens:
+        spec = ServeEngine(POCKET, params32, scheme="bf16", max_batch=batch,
+                           max_len=PROMPT_LEN + new_tokens + 8,
+                           macro_steps=macro_k, spec_len=L, draft=draft)
+        spec.serve_queue(_requests(2, 4), spec_len=L)
+        res_base, dt_base, res_spec, dt_spec = interleaved(
+            base, spec, num_reqs, new_tokens, 0.0,
+            repeats=3 if ci else 5)
+        tokens = sum(len(v) for v in res_base.values())
+        tps_base = tokens / dt_base
+        s = spec.stats
+        m = {
+            "tokens_per_s": tokens / dt_spec,
+            "baseline_tokens_per_s": tps_base,
+            "speedup_vs_macro": (tokens / dt_spec) / max(tps_base, 1e-9),
+            "acceptance_rate": s["accepted_tokens"]
+            / max(s["draft_tokens"], 1),
+            "accepted_tokens_per_step": s["accepted_tokens"]
+            / max(s["spec_steps"], 1),
+            "emitted_tokens_per_step": s["useful_slot_steps"]
+            / max(s["spec_steps"], 1),
+            "accepted_tokens": s["accepted_tokens"],
+            "draft_tokens": s["draft_tokens"],
+            "spec_steps": s["spec_steps"],
+            # greedy speculation must be a pure latency transform:
+            # identical uid -> token-sequence map, token for token
+            "parity": bool(res_spec == res_base),
+        }
+        out["greedy"]["by_spec_len"][L] = m
+        rows.append(Row(
+            name=f"serve_queue/spec_greedy_L{L}",
+            us_per_call=1e6 / max(m["tokens_per_s"], 1e-9),
+            derived=f"{m['tokens_per_s']:.1f} tok/s "
+                    f"({m['speedup_vs_macro']:.2f}x macro k={macro_k}); "
+                    f"accept {m['acceptance_rate']:.0%} "
+                    f"({m['accepted_tokens_per_step']:.1f} acc/step, "
+                    f"{m['emitted_tokens_per_step']:.1f} tok/step); "
+                    f"parity={'ok' if m['parity'] else 'FAIL'}"))
+        if best is None or m["speedup_vs_macro"] > best[1]["speedup_vs_macro"]:
+            best = (L, m)
+    out["greedy"]["best_spec_len"] = best[0]
+    out["greedy"]["best"] = best[1]
+
+    # -- near-zero acceptance: temp 1.0, adaptive throttle ------------------
+    # served at the TUNED draft length (the deployment loop would ship the
+    # greedy sweep's winner); the throttle caps the verify overhead at one
+    # probe per spec_probe_every macro-steps
+    base_lo = ServeEngine(POCKET, params32, scheme="bf16", max_batch=batch,
+                          max_len=PROMPT_LEN + lo_tokens + 8,
+                          macro_steps=macro_k)
+    spec_lo = ServeEngine(POCKET, params32, scheme="bf16", max_batch=batch,
+                          max_len=PROMPT_LEN + lo_tokens + 8,
+                          macro_steps=macro_k, spec_len=best[0], draft=draft)
+    for eng in (base_lo, spec_lo):
+        eng.serve_queue([_with_temp(r, 1.0) for r in _requests(2, 4)])
+    res_b, dt_b, res_s, dt_s = interleaved(base_lo, spec_lo, num_reqs,
+                                           lo_tokens, 1.0)
+    s = spec_lo.stats
+    lo = {
+        "tokens_per_s": sum(len(v) for v in res_s.values()) / dt_s,
+        "baseline_tokens_per_s": sum(len(v) for v in res_b.values()) / dt_b,
+        "acceptance_rate": s["accepted_tokens"] / max(s["draft_tokens"], 1),
+        "throttled_macros": s["spec_throttled_macros"],
+        "spec_steps": s["spec_steps"],
+        # sampling workloads keep lengths, not token values
+        "parity": bool(all(len(res_s[u]) == len(res_b[u]) for u in res_b)),
+    }
+    lo["speedup_vs_macro"] = (lo["tokens_per_s"]
+                              / max(lo["baseline_tokens_per_s"], 1e-9))
+    out["random_temp"] = lo
+    rows.append(Row(
+        name="serve_queue/spec_random_temp",
+        us_per_call=1e6 / max(lo["tokens_per_s"], 1e-9),
+        derived=f"{lo['tokens_per_s']:.1f} tok/s "
+                f"({lo['speedup_vs_macro']:.2f}x macro k={macro_k}); "
+                f"accept {lo['acceptance_rate']:.0%}; "
+                f"{lo['throttled_macros']} throttled macros "
+                f"(bound: >= {1 / 1.1:.2f}x)"))
+
+    out["speedup_ok"] = bool(best[1]["speedup_vs_macro"] >= 1.5)
+    out["degradation_ok"] = bool(lo["speedup_vs_macro"] >= 1 / 1.1)
+    out["greedy_parity_ok"] = bool(
+        all(m["parity"] for m in out["greedy"]["by_spec_len"].values()))
+    out["accepted_nonzero"] = bool(
+        any(m["accepted_tokens"] > 0
+            for m in out["greedy"]["by_spec_len"].values()))
+
+
+def _with_temp(req: Request, temp: float) -> Request:
+    req.temperature = temp
+    return req
+
+
+def _unroll_gap(params, batch: int, steps: int, bench: Dict,
+                rows: List[Row]) -> None:
+    """Scanned vs unrolled decode-step latency (the
+    DECODE_UNROLL_MAX_LAYERS crossover, satellite of ISSUE 3)."""
+    out = {}
+    for name, unroll in (("unrolled", True), ("scanned", False)):
+        eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
+                          max_len=PROMPT_LEN + steps + 8,
+                          decode_unroll=unroll)
+        times = _step_times(eng, steps, batch, PROMPT_LEN)
+        out[f"{name}_step_ms"] = float(np.mean(times)) * 1e3
+    out["scan_over_unroll"] = (out["scanned_step_ms"]
+                               / max(out["unrolled_step_ms"], 1e-9))
+    out["unroll_max_layers"] = tfm.DECODE_UNROLL_MAX_LAYERS
+    bench["decode_unroll"] = out
+    rows.append(Row(
+        name="serve_queue/unroll_gap",
+        us_per_call=out["unrolled_step_ms"] * 1e3,
+        derived=f"unrolled {out['unrolled_step_ms']:.2f}ms vs scanned "
+                f"{out['scanned_step_ms']:.2f}ms "
+                f"({out['scan_over_unroll']:.2f}x; unroll <= "
+                f"{out['unroll_max_layers']} layers)"))
+
+
 def _step_times(engine: ServeEngine, steps: int, batch: int,
                 prompt_len: int) -> List[float]:
     """Per-step decode latency at a fixed batch across generated length."""
@@ -241,7 +430,8 @@ def _longprompt_scenario(params, short_len: int, new_tokens: int,
     return out
 
 
-def run(scale: str = None, ci: bool = False) -> List[Row]:
+def run(scale: str = None, ci: bool = False, spec_len: int = 4,
+        draft: str = "ngram") -> List[Row]:
     batch = 4 if ci else BATCH
     new_tokens = 16 if ci else NEW_TOKENS
     num_reqs = 6 if ci else NUM_REQS
@@ -253,6 +443,14 @@ def run(scale: str = None, ci: bool = False) -> List[Row]:
                    "new_tokens": new_tokens, "num_requests": num_reqs,
                    "model": POCKET.name, "mixed_prompt_lengths": True},
     }
+
+    # -- speculative decode: draft-then-verify vs the macro-step baseline.
+    # Runs FIRST: its criteria are throughput ratios with ~10% margins, and
+    # a process that has accumulated a dozen live engines' executables
+    # measures them several points worse than a fresh one ----------------
+    if spec_len > 0:
+        _spec_sweep(batch, macro_k=4 if ci else 8, spec_len=spec_len,
+                    bench=bench, rows=rows, ci=ci, draft=draft)
 
     # -- PR 1 per-token scheduler (one host round-trip per token) -----------
     eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
@@ -386,6 +584,9 @@ def run(scale: str = None, ci: bool = False) -> List[Row]:
                             f"last-quartile {last * 1e3:.2f}ms "
                             f"(ratio {last / max(first, 1e-9):.2f})"))
 
+    # -- scanned vs unrolled decode step (DECODE_UNROLL_MAX_LAYERS gap) -----
+    _unroll_gap(params, batch, 8 if ci else new_tokens, bench, rows)
+
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "BENCH_serve.json")
     with open(path, "w") as f:
@@ -397,9 +598,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ci", action="store_true",
                     help="tiny config; exit non-zero unless host syncs per "
-                         "token <= 1/k and chunked TTFT-max <= 2x mean")
+                         "token <= 1/k, chunked TTFT-max <= 2x mean, "
+                         "speculative greedy parity is exact, and the "
+                         "accepted-token counter is nonzero")
+    ap.add_argument("--spec-len", type=int, default=4,
+                    help="speculative draft length for the spec sweep "
+                         "(0 skips it)")
+    ap.add_argument("--draft", default="ngram", choices=["ngram"],
+                    help="draft source for the spec sweep (model-free "
+                         "n-gram only in the bench)")
     args = ap.parse_args()
-    for r in run(ci=args.ci):
+    for r in run(ci=args.ci, spec_len=args.spec_len, draft=args.draft):
         print(r.csv())
     if args.ci:
         path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -418,11 +627,20 @@ def main() -> None:
                 f"chunked admission short-TTFT max "
                 f"{lp['short_ttft_max_s'] * 1e3:.0f}ms > 2x mean "
                 f"{lp['short_ttft_mean_s'] * 1e3:.0f}ms")
+        if "spec" in bench:
+            sp = bench["spec"]
+            if not sp["greedy_parity_ok"]:
+                failures.append("speculative greedy decode is NOT "
+                                "token-identical to the vanilla macro-step")
+            if not sp["accepted_nonzero"]:
+                failures.append("speculative decode accepted zero draft "
+                                "tokens on the greedy workload")
         if failures:
             print("CI smoke FAILED:\n  " + "\n  ".join(failures),
                   file=sys.stderr)
             raise SystemExit(1)
-        print("CI smoke OK: host-sync and TTFT bounds hold", file=sys.stderr)
+        print("CI smoke OK: host-sync, TTFT, and spec-decode "
+              "parity/acceptance bounds hold", file=sys.stderr)
 
 
 if __name__ == "__main__":

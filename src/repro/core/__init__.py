@@ -9,6 +9,7 @@ from repro.core.policies import (
 from repro.core.search_space import (
     Categorical, SearchSpace, UniformFloat, UniformInt,
     bitwidth_space, deploy_space, llama_finetune_space, resnet_finetune_space,
+    serve_space,
 )
 from repro.core.hardware import REGISTRY as HARDWARE_REGISTRY, HardwareSpec, Support, get_hardware
 from repro.core import adaptive, costmodel, memory_planner, prompts
@@ -24,7 +25,7 @@ __all__ = [
     "extract_json_config", "make_policy",
     "Categorical", "SearchSpace", "UniformFloat", "UniformInt",
     "bitwidth_space", "deploy_space", "llama_finetune_space",
-    "resnet_finetune_space",
+    "resnet_finetune_space", "serve_space",
     "HARDWARE_REGISTRY", "HardwareSpec", "Support", "get_hardware",
     "adaptive", "costmodel", "memory_planner", "prompts",
     "DecodeEvaluator", "FaultInjection", "FinetuneEvaluator", "KernelEvaluator",

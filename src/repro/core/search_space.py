@@ -252,6 +252,36 @@ def deploy_space(kernel: str) -> SearchSpace:
     return SearchSpace(specs, name=f"deploy_{kernel}")
 
 
+def serve_space() -> SearchSpace:
+    """Serving-deployment knobs for the HAQA loop (Table-3 style): the
+    speculative-decode schedule plus the flash-decode / flash-verify kernel
+    tiles.  These are exactly the counterintuitive, hardware-dependent
+    knobs the paper's agent is built to tune — the optimal draft length
+    trades verify-step arithmetic intensity against acceptance rate, and
+    the optimal split-K point moves with it."""
+    from repro.kernels import registry as kreg
+    fd = kreg.KERNELS["flash_decode"].space
+    fv = kreg.KERNELS["flash_verify"].space
+    return SearchSpace([
+        UniformInt("spec_len", 0, 8, 4,
+                   doc="Draft tokens proposed per speculative verify step "
+                       "(0 disables speculation)."),
+        Categorical("draft_mode", ("none", "ngram", "model"), "ngram",
+                    doc="Speculative draft source: model-free n-gram table "
+                        "from the prompt, or a small draft model."),
+        UniformInt("macro_steps", 1, 32, 8,
+                   doc="Decode steps fused per on-device macro-step."),
+        Categorical("flash_decode_block_k", fd["block_k"], 128,
+                    doc="flash_decode key-block tile."),
+        Categorical("flash_decode_k_splits", fd["k_splits"], 4,
+                    doc="flash_decode split-K factor."),
+        Categorical("flash_verify_block_k", fv["block_k"], 128,
+                    doc="flash_verify key-block tile."),
+        Categorical("flash_verify_k_splits", fv["k_splits"], 4,
+                    doc="flash_verify split-K factor."),
+    ], name="serve_deploy")
+
+
 def bitwidth_space() -> SearchSpace:
     return SearchSpace([
         Categorical("quant_scheme", ("fp16", "int8", "int4"), "int8",

@@ -1,5 +1,6 @@
-"""jit'd wrappers for flash attention (GQA expansion + (B,S,H,D) layout) and
-flash decode (native GQA, int8-KV, per-sequence lengths)."""
+"""jit'd wrappers for flash attention (GQA expansion + (B,S,H,D) layout),
+flash decode (native GQA, int8-KV, per-sequence lengths), and flash verify
+(multi-position speculative verify against the cache)."""
 from __future__ import annotations
 
 from typing import Optional
@@ -7,12 +8,16 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import AttentionConfig, DecodeAttentionConfig
+from repro.kernels.common import (
+    AttentionConfig, DecodeAttentionConfig, VerifyAttentionConfig,
+)
 from repro.kernels.attention import decode as D
 from repro.kernels.attention import kernel as K
+from repro.kernels.attention import verify as V
 
 _DEFAULT_CFG = AttentionConfig()
 _DEFAULT_DECODE_CFG = DecodeAttentionConfig()
+_DEFAULT_VERIFY_CFG = VerifyAttentionConfig()
 
 
 def set_default_config(cfg: AttentionConfig) -> None:
@@ -25,6 +30,12 @@ def set_default_decode_config(cfg: DecodeAttentionConfig) -> None:
     global _DEFAULT_DECODE_CFG
     cfg.validate()
     _DEFAULT_DECODE_CFG = cfg
+
+
+def set_default_verify_config(cfg: VerifyAttentionConfig) -> None:
+    global _DEFAULT_VERIFY_CFG
+    cfg.validate()
+    _DEFAULT_VERIFY_CFG = cfg
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
@@ -67,3 +78,33 @@ def flash_decode(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
     out = D.flash_decode(qg, k_cache, v_cache, lengths, k_scale, v_scale,
                          cfg, cap=cap, window=window, interpret=interpret)
     return out.reshape(b, 1, h, d)
+
+
+def flash_verify(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
+                 *, cap=0.0, window=0,
+                 cfg: Optional[VerifyAttentionConfig] = None,
+                 interpret: bool = False):
+    """Multi-position speculative verify against a (possibly int8) KV cache.
+
+    q: (B, S, H, D) — S = spec_len + 1 query rows per slot at global
+    positions lengths[b] + i, whose K/V rows are already written into the
+    cache; k/v_cache: (B, T, KV, D) with H % KV == 0; lengths: scalar or
+    (B,) committed cache rows per slot BEFORE the verify (EXCLUDING the S
+    new rows); k_scale/v_scale: (B, T, KV, 1) or (B, T, KV) dequant scales
+    for int8 caches.  Returns (B, S, H, D).
+    """
+    cfg = cfg or _DEFAULT_VERIFY_CFG
+    b, s, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    # (B,S,H,D) -> (B,KV,S*G,D), position-major rows (row r: pos r//G, head
+    # r%G) so the kernel recovers the draft position by integer division
+    qg = (q.reshape(b, s, kv, g, d).transpose(0, 2, 1, 3, 4)
+          .reshape(b, kv, s * g, d))
+    if k_scale is not None and k_scale.ndim == 4:
+        k_scale = k_scale[..., 0]
+        v_scale = v_scale[..., 0]
+    out = V.flash_verify(qg, k_cache, v_cache, lengths, g, k_scale, v_scale,
+                         cfg, cap=cap, window=window, interpret=interpret)
+    return (out.reshape(b, kv, s, g, d).transpose(0, 2, 1, 3, 4)
+            .reshape(b, s, h, d))

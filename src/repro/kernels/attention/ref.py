@@ -23,6 +23,35 @@ def attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
     return jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def flash_verify_ref(q, k, v, lengths, k_scale=None, v_scale=None, *,
+                     cap=0.0, window=0):
+    """Oracle for the flash-verify kernel: dequantize the whole cache and
+    apply the staircase mask — draft position s of slot b sees cache rows
+    [0, lengths[b] + s] (window-limited from below when ``window`` is set).
+    q: (B, KV, S, G, D); k/v: (B, T, KV, D); scales: (B, T, KV);
+    lengths: (B,) committed rows BEFORE the verify."""
+    b, kv, s, g, d = q.shape
+    t = k.shape[1]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    logits = jnp.einsum("bhsgd,bthd->bhsgt", q.astype(jnp.float32),
+                        kf) * (d ** -0.5)
+    if cap and cap > 0:
+        logits = cap * jnp.tanh(logits / cap)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    kpos = jnp.arange(t)
+    pos = lengths[:, None] + jnp.arange(s)[None, :]              # (B, S)
+    valid = kpos[None, None, :] <= pos[:, :, None]               # (B, S, T)
+    if window and window > 0:
+        valid &= kpos[None, None, :] > (pos[:, :, None] - window)
+    logits = jnp.where(valid[:, None, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhsgt,bthd->bhsgd", probs, vf).astype(q.dtype)
+
+
 def flash_decode_ref(q, k, v, lengths, k_scale=None, v_scale=None, *,
                      cap=0.0, window=0):
     """Oracle for the flash-decode kernel: dequantize the whole cache, mask,

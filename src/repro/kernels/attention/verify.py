@@ -1,0 +1,187 @@
+"""Pallas flash-verify: multi-position speculative-verify attention.
+
+The short-query (q_len = spec_len + 1) sibling of the flash-decode kernel:
+every slot scores its last emitted token plus ``spec_len`` draft tokens
+against the shared KV cache in ONE pass.  The grid is (B, KV_heads,
+k_splits) exactly like decode — each program owns one (batch, kv-head) pair
+and one contiguous split of the cache — but the query block carries S * G
+rows (S draft positions x G grouped query heads) instead of G, so the loaded
+K/V tiles amortize over every draft position as well as every query head of
+the group.
+
+Causality across draft positions is a *staircase* mask: query position s
+(rows [s*G, (s+1)*G) of the block) sees cache rows [0, lens[b] + s], i.e.
+the slot's committed prefix plus the draft tokens before it (their K/V rows
+are already scattered into the cache by ``transformer.verify_step``; rows
+for later drafts sit beyond the visible length).  Everything else — online
+softmax over ``block_k`` tiles, tile-wise int8 dequant in VMEM, skipped
+out-of-range splits, the unnormalized (acc, m, l) partials merged by a
+logsumexp combine in the wrapper — matches the decode kernel, and decode is
+the S == 1 special case.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+from repro.kernels.common import VerifyAttentionConfig, round_up
+
+NEG_INF = -1e30
+
+
+def _verify_kernel(len_ref, q_ref, k_ref, v_ref, *rest,
+                   block_k, split_len, gq, scale, cap, window, quantized):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        o_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    length = len_ref[b]                      # committed rows BEFORE the verify
+    k_lo = s * split_len
+    rows, d = q_ref.shape[2], q_ref.shape[3]           # rows == S * G
+    n_pos = rows // gq
+
+    # the deepest query (position n_pos - 1) sees rows < length + n_pos; the
+    # shallowest (position 0) sees rows >= length + 1 - window
+    needed = k_lo < length + n_pos
+    if window and window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_lo + split_len > length + 1 - window)
+
+    @pl.when(jnp.logical_not(needed))
+    def _skip():
+        o_ref[0, 0, 0] = jnp.zeros_like(o_ref[0, 0, 0])
+        m_ref[0, 0, 0] = jnp.full_like(m_ref[0, 0, 0], NEG_INF)
+        l_ref[0, 0, 0] = jnp.zeros_like(l_ref[0, 0, 0])
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (S*G, D)
+        # query row r belongs to draft position r // G
+        pos_of_row = jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_k), 0) // gq
+
+        def body(i, carry):
+            m, l, acc = carry                               # (SG,1) (SG,1) (SG,D)
+            krows = pl.ds(i * block_k, block_k)
+            kb = k_ref[0, krows, 0, :].astype(jnp.float32)  # (bk, D)
+            vb = v_ref[0, krows, 0, :].astype(jnp.float32)
+            if quantized:
+                kb = kb * ks_ref[0, krows, 0][:, None]
+                vb = vb * vs_ref[0, krows, 0][:, None]
+            x = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ()))) * scale
+            if cap and cap > 0:
+                x = cap * jnp.tanh(x / cap)                 # (SG, bk)
+            kpos = k_lo + i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (rows, block_k), 1)
+            # staircase causality: position s sees kpos <= length + s
+            valid = kpos < length + pos_of_row + 1
+            if window and window > 0:
+                valid = jnp.logical_and(
+                    valid, kpos > length + pos_of_row - window)
+            x = jnp.where(valid, x, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+            m_safe = jnp.maximum(m_new, -0.5e30)
+            p = jnp.exp(x - m_safe)
+            corr = jnp.exp(jnp.maximum(m, -0.5e30) - m_safe)
+            l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * corr + jax.lax.dot_general(
+                p, vb, (((1,), (0,)), ((), ())))
+            return m_new, l_new, acc_new
+
+        init = (jnp.full((rows, 1), NEG_INF, jnp.float32),
+                jnp.zeros((rows, 1), jnp.float32),
+                jnp.zeros((rows, d), jnp.float32))
+        m, l, acc = jax.lax.fori_loop(0, split_len // block_k, body, init)
+        o_ref[0, 0, 0] = acc
+        m_ref[0, 0, 0] = m[:, 0]
+        l_ref[0, 0, 0] = l[:, 0]
+
+
+def flash_verify(q, k, v, lengths, gq, k_scale=None, v_scale=None,
+                 cfg: VerifyAttentionConfig = None, *, cap: float = 0.0,
+                 window: int = 0, interpret: bool = False):
+    """q: (B, KV, S*G, D) — S draft positions x G grouped query heads per
+    kv-head, flattened position-major (row r = position r // G, head
+    r % G); k/v: (B, T, KV, D) [int8 or float] with the S new rows already
+    written at rows [lengths[b], lengths[b] + S); lengths: (B,) committed
+    rows per slot BEFORE the verify; gq: G (query heads per kv-head);
+    k_scale/v_scale: (B, T, KV) f32 per-(token, head) dequant scales
+    (required iff k/v are int8).
+
+    Returns (B, KV, S*G, D) in q.dtype.
+    """
+    cfg = cfg or VerifyAttentionConfig()
+    b, kv, rows, d = q.shape
+    assert rows % gq == 0, (rows, gq)
+    t = k.shape[1]
+    quantized = k_scale is not None
+
+    bk = min(cfg.block_k, round_up(t, common.SUBLANE))
+    split_len = round_up(-(-round_up(t, bk) // cfg.k_splits), bk)
+    splits = -(-round_up(t, bk) // split_len)
+    t_pad = split_len * splits
+    if t_pad != t:
+        pad = [(0, 0), (0, t_pad - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        if quantized:
+            k_scale = jnp.pad(k_scale, pad[:3])
+            v_scale = jnp.pad(v_scale, pad[:3])
+
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+
+    kv_spec = pl.BlockSpec((1, split_len, 1, d),
+                           lambda bi, h, s, *_refs: (bi, s, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, d), lambda bi, h, s, *_refs: (bi, h, 0, 0)),
+        kv_spec, kv_spec,
+    ]
+    args = [q, k, v]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, split_len, 1),
+                               lambda bi, h, s, *_refs: (bi, s, h))
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, splits),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, rows, d),
+                         lambda bi, h, s, *_refs: (bi, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, rows),
+                         lambda bi, h, s, *_refs: (bi, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, rows),
+                         lambda bi, h, s, *_refs: (bi, h, s, 0)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_verify_kernel, block_k=bk, split_len=split_len,
+                          gq=gq, scale=d ** -0.5, cap=cap, window=window,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, splits, rows, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, splits, rows), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, splits, rows), jnp.float32),
+        ],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lengths, *args)
+
+    # split-K combine: renormalize each partial to the global running max
+    m = jnp.maximum(jnp.max(m_part, axis=2, keepdims=True), -0.5e30)
+    w = jnp.exp(jnp.maximum(m_part, -0.5e30) - m)               # (B,KV,S,SG)
+    denom = jnp.sum(l_part * w, axis=2)                          # (B,KV,SG)
+    out = jnp.sum(o_part * w[..., None], axis=2)                 # (B,KV,SG,D)
+    out = out / jnp.maximum(denom, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -94,6 +94,28 @@ class AttentionConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class VerifyAttentionConfig:
+    """flash-verify tunables: key-block tile, split-K factor, and the
+    speculative draft length the serving loop pairs the kernel with.
+
+    The kernel itself takes its query count from the input shape
+    (``spec_len + 1`` rows per slot); ``spec_len`` lives here because the
+    HAQA deployment loop tunes the three knobs jointly — draft length moves
+    the verify grid's arithmetic intensity, so the optimal (block_k,
+    k_splits) point shifts with it.
+    """
+    block_k: int = 128
+    k_splits: int = 4
+    spec_len: int = 4
+
+    def validate(self):
+        assert self.block_k % SUBLANE == 0
+        assert self.k_splits >= 1 and (self.k_splits & (self.k_splits - 1)) == 0, \
+            "k_splits must be a power of two"
+        assert self.spec_len >= 1
+
+
+@dataclasses.dataclass(frozen=True)
 class DecodeAttentionConfig:
     """flash-decode tunables: key-block tile and split-K factor.
 

@@ -11,7 +11,7 @@ from typing import Any, Callable, Dict, Tuple
 
 from repro.kernels.common import (
     AttentionConfig, DecodeAttentionConfig, EltwiseConfig, MatmulConfig,
-    RopeConfig, RowBlockConfig,
+    RopeConfig, RowBlockConfig, VerifyAttentionConfig,
 )
 
 
@@ -64,6 +64,12 @@ KERNELS: Dict[str, KernelInfo] = {
         space={"block_k": (64, 128, 256, 512, 1024),
                "k_splits": (1, 2, 4, 8, 16)},
         paper_table3=False),       # beyond-paper kernel (int8-KV decode)
+    "flash_verify": KernelInfo(
+        "flash_verify", VerifyAttentionConfig,
+        space={"block_k": (64, 128, 256, 512, 1024),
+               "k_splits": (1, 2, 4, 8, 16),
+               "spec_len": (1, 2, 4, 8)},
+        paper_table3=False),       # beyond-paper kernel (speculative verify)
 }
 
 

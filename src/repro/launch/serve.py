@@ -17,7 +17,33 @@ CPU) instead of materializing a bf16 cache.
 macro-step (sampling + stop detection included), so the host syncs once per
 k tokens; ``--prefill-chunk c`` splits admission prefills into c-token
 chunks interleaved with decode macro-steps, bounding the TTFT jitter a long
-prompt inflicts on co-scheduled requests.
+prompt inflicts on co-scheduled requests; ``--admit-budget t`` caps the
+prompt tokens processed per scheduler iteration (a vLLM-style
+decode-priority budget shared across all admitting slots — a slot may take
+several chunks while the budget lasts, over-budget admissions wait).
+
+``--spec-len L`` turns on speculative decoding inside the macro-step: each
+scan iteration drafts L tokens per slot and verifies them in ONE batched
+multi-position step, emitting up to L+1 tokens per model invocation.
+``--draft`` picks the proposer: ``ngram`` (default; model-free per-slot
+bigram table built from the prompt and updated with emitted tokens) or an
+architecture name from the config registry (a small draft model decoding in
+the same scan — its weights are randomly initialized here, the worst case
+for acceptance).  Greedy outputs are bit-identical to non-speculative
+serving; temperature outputs keep the target distribution (leapfrog
+acceptance).  An adaptive throttle guards adversarial traffic: when a
+macro-step's acceptance rate drops below 10% the engine decodes vanilla
+with exponential backoff and re-probes speculation at draft length 1, so
+near-zero-acceptance workloads cost a few cheap probes instead of a
+verify per step.  Ring-buffer/SSM plans (sliding-window attention, Mamba
+layers) fall back to the vanilla macro-step: their cache layouts make
+rejected-draft rollback destructive, so speculation silently stays off
+(``spec_fallbacks`` in the stats line).
+
+``--decode-unroll-max-layers`` overrides the depth below which the decode
+hot path python-unrolls the layer loop (also via the env var
+``REPRO_DECODE_UNROLL_MAX_LAYERS``); the scanned-vs-unrolled latency gap is
+tracked in benchmarks/BENCH_serve.json.
 """
 from __future__ import annotations
 
@@ -54,9 +80,26 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="admission prefill chunk size in tokens "
                          "(0 = whole-prompt bucketed admission)")
+    ap.add_argument("--admit-budget", type=int, default=0,
+                    help="max prompt tokens processed per scheduler "
+                         "iteration, shared across admitting slots "
+                         "(0 = one chunk per admitting slot)")
+    ap.add_argument("--spec-len", type=int, default=0,
+                    help="speculative draft tokens per verify step "
+                         "(0 = no speculation)")
+    ap.add_argument("--draft", default="ngram",
+                    help="draft source for --spec-len: 'ngram' (model-free "
+                         "bigram self-draft) or an arch name from the "
+                         "config registry (small draft model)")
+    ap.add_argument("--decode-unroll-max-layers", type=int, default=None,
+                    help="unroll the decode layer loop for models at or "
+                         "below this depth (default: env "
+                         "REPRO_DECODE_UNROLL_MAX_LAYERS or 16)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.decode_unroll_max_layers is not None:
+        tfm.DECODE_UNROLL_MAX_LAYERS = args.decode_unroll_max_layers
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.kv_dtype != "bf16":
         cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_dtype)
@@ -70,10 +113,15 @@ def main():
         print("  rationale:", decision.thought)
 
     params = tfm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    draft = args.draft
+    if draft not in ("ngram", "none"):
+        draft = (get_smoke_config(draft) if args.smoke else get_config(draft))
     engine = ServeEngine(cfg, params, scheme=scheme, max_batch=args.batch,
                          max_len=args.prompt_len + args.new_tokens + 8,
                          macro_steps=args.macro_steps,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         admit_budget=args.admit_budget,
+                         spec_len=args.spec_len, draft=draft)
 
     if args.queue > 0:
         rng = np.random.default_rng(args.seed)
@@ -98,6 +146,13 @@ def main():
               f"decode_steps={engine.stats['decode_steps']}, "
               f"useful_slot_steps={engine.stats['useful_slot_steps']}, "
               f"host_syncs/token={stats['host_syncs_per_token']:.3f}")
+        if args.spec_len > 0:
+            drafted = max(engine.stats["draft_tokens"], 1)
+            print(f"  spec: spec_steps={engine.stats['spec_steps']}, "
+                  f"accepted={engine.stats['accepted_tokens']}/"
+                  f"{engine.stats['draft_tokens']} drafts "
+                  f"({engine.stats['accepted_tokens'] / drafted:.0%}), "
+                  f"spec_fallbacks={engine.stats['spec_fallbacks']}")
     else:
         tput = throughput_tokens_per_s(engine, args.batch, args.prompt_len,
                                        args.new_tokens)

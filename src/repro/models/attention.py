@@ -185,6 +185,54 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
     return out.reshape(b, s1, h, d).astype(q.dtype)
 
 
+def verify_attention(q, k_cache, v_cache, lens, *, window: int = 0,
+                     logit_cap: float = 0.0, k_scale=None, v_scale=None,
+                     backend: Optional[str] = None) -> jax.Array:
+    """Multi-position speculative verify: q (B,S,H,D) — each slot's last
+    token plus spec_len draft tokens, query i at global position
+    ``lens[b] + i`` — against a cache (B,T,KV,D) whose rows
+    [lens[b], lens[b]+S) were just written with the drafts' K/V.
+
+    ``lens`` (B,) counts committed rows EXCLUDING the S new ones, so query i
+    of slot b sees ``kpos <= lens[b] + i`` — per-slot staircase causality
+    over the shared cache; ``decode_attention`` is the S == 1 special case.
+    For int8 caches the per-(token, head) scales fold into the contractions
+    exactly as in decode — the bf16 cache is never materialized.
+    """
+    b, s, h, d = q.shape
+    t = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    lens = jnp.asarray(lens)
+    if lens.ndim == 0:
+        lens = jnp.full((b,), lens)
+
+    mode = _resolve_decode_backend(backend)
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels.attention import ops as kops
+        return kops.flash_verify(q, k_cache, v_cache, lens, k_scale, v_scale,
+                                 cap=logit_cap, window=window,
+                                 interpret=(mode == "pallas_interpret"))
+
+    qg = _gqa_split(q, kvh).astype(jnp.float32)                # (B,S,KV,G,D)
+    scale = d ** -0.5
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k_cache.astype(jnp.float32)) * scale   # (B,KV,G,S,T)
+    if k_scale is not None:
+        logits = logits * k_scale.astype(jnp.float32)[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    logits = softcap(logits, logit_cap)
+    kpos = jnp.arange(t)
+    qpos = lens[:, None] + jnp.arange(s)[None, :]              # (B,S)
+    valid = kpos[None, None, :] <= qpos[:, :, None]            # (B,S,T)
+    if window and window > 0:
+        valid &= kpos[None, None, :] > (qpos[:, :, None] - window)
+    logits = jnp.where(valid[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        probs = probs * v_scale.astype(jnp.float32)[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
 def prefix_chunk_attention(q, k, v, *, q_positions, k_positions, k_valid,
                            window: int = 0, logit_cap: float = 0.0,
                            k_scale=None, v_scale=None) -> jax.Array:

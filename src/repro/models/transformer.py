@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -402,8 +403,12 @@ def _apply_layer_decode(x, p, spec, cfg, lcache, lens, active=None):
 # the unrolled form for a 4-layer model on CPU); unrolling lets XLA fuse each
 # layer's row-scatter straight into the output buffers.  Deep models keep
 # the scan so the lowered HLO stays compact (and the roofline analyzer can
-# multiply while-body costs by the trip count).
-DECODE_UNROLL_MAX_LAYERS = 16
+# multiply while-body costs by the trip count).  Overridable per deployment
+# via the env var (or ``--decode-unroll-max-layers`` on the serve launcher):
+# the crossover depth is hardware-dependent, and the scanned-vs-unrolled gap
+# is recorded in benchmarks/BENCH_serve.json so regressions stay visible.
+DECODE_UNROLL_MAX_LAYERS = int(
+    os.environ.get("REPRO_DECODE_UNROLL_MAX_LAYERS", "16"))
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
@@ -530,6 +535,142 @@ def _to_cache_entry(aux, spec, cfg, b, s, max_len, dtype):
         vq, vs = _quantize_kv(vc)
         return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
     return {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# speculative verify (multi-position decode with rollback-aware lengths)
+# ---------------------------------------------------------------------------
+
+def _write_rows_multi(cache, vals, rows):
+    """Batched multi-row cache write: cache (B,T,...), vals (B,S,...), rows
+    (B,S) absolute row indices.  Like ``_write_rows`` this is a scatter with
+    ``mode="drop"`` — rows >= T (inactive slots, or draft rows past the
+    cache capacity) write nothing."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b)[:, None], rows].set(
+        vals.astype(cache.dtype), mode="drop")
+
+
+def _attn_verify(h, p, spec, cfg, lcache, lens, active=None):
+    """Multi-position attention against the cache: S tokens per slot (the
+    last emitted token + spec_len drafts) at global positions lens[b]+i.
+    All S K/V rows are written (linear layout: row == position), then each
+    query attends to the slot's prefix plus the drafts before it
+    (staircase causality inside ``attn_lib.verify_attention``).  Rejected
+    draft rows land beyond the committed length — invisible until a later
+    write at the same rows replaces them, which makes rollback a pure
+    length decrement for the caller."""
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q = dense(h, p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = dense(h, p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = dense(h, p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    pos = lens[:, None] + jnp.arange(s)[None, :]               # (B,S)
+    q = rope_dispatch(q, pos, cfg)
+    k = rope_dispatch(k, pos, cfg)
+    size = lcache["k"].shape[1]
+    rows = pos
+    if active is not None:
+        rows = jnp.where(active[:, None], rows, size)   # OOB -> write dropped
+    k_scale = v_scale = None
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": _write_rows_multi(lcache["k"], kq, rows),
+            "v": _write_rows_multi(lcache["v"], vq, rows),
+            "k_scale": _write_rows_multi(lcache["k_scale"], ks, rows),
+            "v_scale": _write_rows_multi(lcache["v_scale"], vs, rows),
+        }
+        kc, vc = new_cache["k"], new_cache["v"]
+        k_scale, v_scale = new_cache["k_scale"], new_cache["v_scale"]
+    else:
+        kc = _write_rows_multi(lcache["k"], k, rows)
+        vc = _write_rows_multi(lcache["v"], v, rows)
+        new_cache = {"k": kc, "v": vc}
+    o = attn_lib.verify_attention(q, kc, vc, lens,
+                                  logit_cap=cfg.attn_logit_softcap,
+                                  k_scale=k_scale, v_scale=v_scale)
+    out = dense(o.reshape(b, s, cfg.num_heads * hd), p["wo"])
+    return out, new_cache
+
+
+def _apply_layer_verify(x, p, spec, cfg, lcache, lens, active=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    mix, new_cache = _attn_verify(h, p, spec, cfg, lcache, lens, active)
+    return _apply_mlp(x + mix, p, spec, cfg), new_cache
+
+
+def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
+                unroll=None):
+    """Speculative multi-position verify.  tokens: (B, S) int32 — column 0
+    is each slot's last emitted token (whose K/V is not yet cached, exactly
+    as in ``decode_step``), columns 1..S-1 are draft proposals.
+
+    One batched step scores ALL S positions against the shared cache:
+    logits[:, i] is the target model's distribution over the token after
+    ``tokens[:, i]``, so the caller can accept a prefix of the drafts and
+    sample one bonus token — emitting up to S tokens for one invocation.
+
+    All S K/V rows are written at rows ``lens[b] + i`` but ``cache["len"]``
+    is NOT advanced: the caller commits the accepted count c by setting
+    ``len += c``, which *is* the rejected-suffix rollback on linear layouts
+    (rejected rows sit beyond the committed length; later writes at those
+    rows replace them).  Plans where a row write is destructive — local
+    ring buffers (the slot a draft lands on still holds the window's oldest
+    live position) and SSM states (the recurrence has no per-position rows
+    to roll back) — are NOT supported; the engine falls back to vanilla
+    decode for them.
+
+    ``active``/``unroll`` behave as in ``decode_step``.  Returns
+    (logits (B, S, V_padded), new_cache).
+    """
+    plan = block_plan(cfg)
+    assert all(spec.mixer == "attn" and not spec.local
+               for seg in plan for spec in seg.layers), \
+        "verify_step: linear global-attention plans only (ring-buffer/SSM " \
+        "plans must fall back to non-speculative decode)"
+    cur_len = jnp.asarray(cache["len"])
+    x = params["embed"][tokens]
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    b = x.shape[0]
+    lens = jnp.broadcast_to(cur_len, (b,)) if cur_len.ndim == 0 else cur_len
+    if unroll is None:
+        unroll = cfg.num_layers <= DECODE_UNROLL_MAX_LAYERS
+    x = shard_activations(x)
+    new_blocks = []
+    for seg, stacked, ccache in zip(plan, params["blocks"], cache["blocks"]):
+        if unroll:
+            outs = []
+            for i in range(seg.count):
+                layer_params = jax.tree.map(lambda a: a[i], stacked)
+                layer_cache = jax.tree.map(lambda a: a[i], ccache)
+                new_lc = {}
+                for j, spec in enumerate(seg.layers):
+                    x, nc = _apply_layer_verify(x, layer_params[str(j)], spec,
+                                                cfg, layer_cache[str(j)],
+                                                lens, active)
+                    new_lc[str(j)] = nc
+                x = shard_activations(x)
+                outs.append(new_lc)
+            new_c = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        else:
+            def body(carry, xs, _seg=seg):
+                xx = carry
+                layer_params, layer_cache = xs
+                new_lc = {}
+                for j, spec in enumerate(_seg.layers):
+                    xx, nc = _apply_layer_verify(xx, layer_params[str(j)],
+                                                 spec, cfg,
+                                                 layer_cache[str(j)], lens,
+                                                 active)
+                    new_lc[str(j)] = nc
+                return shard_activations(xx), new_lc
+
+            x, new_c = jax.lax.scan(body, x, (stacked, ccache))
+        new_blocks.append(new_c)
+    logits = _logits(params, cfg, x)                           # (B, S, V)
+    return logits, {"blocks": new_blocks, "len": cache["len"]}
 
 
 # ---------------------------------------------------------------------------

@@ -28,17 +28,47 @@ Decode macro-steps
     executed batched steps and ``stats["useful_slot_steps"]`` counts tokens
     actually emitted.
 
+Speculative decoding (draft-then-verify, fused into the macro-step)
+    With ``spec_len > 0`` each scan iteration of the macro-step emits up to
+    ``spec_len + 1`` tokens instead of one: a cheap draft proposes
+    ``spec_len`` tokens per slot — an on-device per-slot bigram table built
+    from the prompt and updated with emitted tokens (``draft="ngram"``,
+    model-free), or a small draft model from the config registry decoding
+    in the same scan (``draft=<ModelConfig>``) — and ONE batched
+    multi-position ``transformer.verify_step`` scores all draft positions
+    against the shared cache at once (per-slot staircase-causal attention;
+    Pallas ``flash_verify`` kernel on TPU).  Acceptance is exact: greedy
+    slots accept while the draft matches the target argmax (bit-identical
+    to non-speculative greedy decoding), temperature slots use leapfrog
+    acceptance + residual resampling, which preserves the target
+    distribution.  Rollback of a rejected suffix is a per-slot length
+    decrement: verify writes K/V rows at ``lens[b]+i`` (linear layout: row
+    == global position), so rejected rows sit beyond the committed length
+    and later writes replace them.  Plans where that is destructive —
+    local-attention ring buffers and SSM states — silently fall back to
+    the vanilla macro-step (``stats["spec_fallbacks"]``); exact-length
+    admission already covers them, speculation simply stays off.
+    ``stats["draft_tokens"]`` / ``stats["accepted_tokens"]`` expose the
+    acceptance rate the HAQA deployment loop tunes ``spec_len`` against.
+
 Chunked prefill admission
     With ``prefill_chunk > 0`` admission prefills are split into fixed-size
     chunks that resume from the slot's cache prefix at a traced offset
-    (``transformer.prefill_chunk``), one chunk per scheduler iteration,
-    interleaved with decode macro-steps.  A 500-token prompt no longer
-    stalls every co-scheduled decode for its whole prefill: TTFT jitter is
-    bounded by the chunk size, and — for pad-safe plans — ONE compiled chunk
-    shape serves every prompt length (the remainder is right-padded; causal
-    masking keeps the padding inert).  The slot's length is published only
-    when the final chunk lands, so interleaved macro-steps keep masking the
-    half-admitted slot.  Non-final chunks skip the unembed matmul entirely.
+    (``transformer.prefill_chunk``), interleaved with decode macro-steps.
+    A 500-token prompt no longer stalls every co-scheduled decode for its
+    whole prefill: TTFT jitter is bounded by the chunk size, and — for
+    pad-safe plans — ONE compiled chunk shape serves every prompt length
+    (the remainder is right-padded; causal masking keeps the padding
+    inert).  The slot's length is published only when the final chunk
+    lands, so interleaved macro-steps keep masking the half-admitted slot.
+    Non-final chunks skip the unembed matmul entirely.  ``admit_budget``
+    caps the prompt tokens processed per scheduler iteration (vLLM-style
+    decode-priority budget SHARED across all admitting slots, replacing
+    one-chunk-per-admitting-slot): under budget a slot may advance several
+    chunks per iteration, over budget the remaining admissions wait for the
+    next iteration (``stats["budget_deferred_admissions"]``) so decode latency
+    stays bounded; the first admission of an iteration always proceeds, so
+    a prompt longer than the budget cannot starve.
 
 Admission shapes & the compile cache
     Whole-prompt admission (``prefill_chunk == 0``) compiles per
@@ -61,6 +91,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -107,6 +138,87 @@ def _sample_token(logits, temp, key, vocab):
     return jnp.where(temp > 0, sampled, greedy).astype(jnp.int32), key
 
 
+def _spec_accept(logits, drafts, q_dists, temp, key, vocab):
+    """Speculative acceptance for ONE slot (vmapped over the batch).
+
+    logits: (L+1, V_padded) target verify logits — row i is the target's
+    distribution over the token AFTER verify input i; drafts: (L,) proposed
+    tokens; q_dists: (L, V) the draft distribution each proposal was drawn
+    from, or None for a DETERMINISTIC draft (the n-gram table): q is then
+    the one-hot at the draft token, so the acceptance ratio reduces to
+    p[d] and the residual to p with the rejected token zeroed — no (L, V)
+    proposal tensor is ever materialized; temp / key: the slot's sampling
+    config and PRNG stream.
+
+    Greedy (temp == 0): accept drafts while they match the target argmax;
+    the bonus token is the argmax after the accepted prefix — exactly the
+    sequence vanilla greedy decoding emits, token for token.
+
+    Temperature: leapfrog acceptance — draft i survives with probability
+    min(1, p_i[d_i] / q_i[d_i]); the first rejection is replaced by a
+    sample from the residual ``normalize(max(p - q, 0))`` and, when every
+    draft survives, the bonus comes from the target's next-position
+    distribution.  Both cases leave each emitted token marginally
+    distributed EXACTLY as the target model's own sampling (Leviathan et
+    al. 2023, Thm. 1) — speculation changes latency, never the
+    distribution.
+
+    Returns (tokens (L+1,), n_acc, key): tokens[:n_acc] are accepted
+    drafts, tokens[n_acc] is the bonus/replacement token, later entries
+    are padding the caller masks by count.
+    """
+    L = drafts.shape[0]
+    lg = logits[:, :vocab].astype(jnp.float32)
+    greedy_t = jnp.argmax(lg, axis=-1)                         # (L+1,)
+    p = jax.nn.softmax(lg / jnp.maximum(temp, 1e-6), axis=-1)  # (L+1, V)
+    key, k_acc, k_bonus = jax.random.split(key, 3)
+    u = jax.random.uniform(k_acc, (L,))
+    idx = jnp.arange(L)
+    p_d = p[idx, drafts]
+    q_d = jnp.ones((L,), jnp.float32) if q_dists is None \
+        else q_dists[idx, drafts]
+    accept = jnp.where(temp > 0, u * q_d < p_d, drafts == greedy_t[:L])
+    # first-rejection index via cumprod: all-accepted -> L
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32)))
+    # bonus: residual at the rejection position; plain target sampling when
+    # every draft survived (the row-L "q" is zero, so the residual IS p)
+    if q_dists is None:
+        # one-hot q: residual = p with the rejected draft token zeroed
+        # (out-of-range index when all accepted -> nothing zeroed)
+        drafts_oob = jnp.concatenate(
+            [drafts.astype(jnp.int32), jnp.full((1,), vocab, jnp.int32)])
+        resid = jnp.where(jnp.arange(vocab) == drafts_oob[n_acc], 0.0,
+                          p[n_acc])
+    else:
+        q_ext = jnp.concatenate([q_dists.astype(jnp.float32),
+                                 jnp.zeros((1, vocab), jnp.float32)])
+        resid = jnp.maximum(p[n_acc] - q_ext[n_acc], 0.0)
+    rsum = jnp.sum(resid)
+    resid = jnp.where(rsum > 1e-9, resid / jnp.maximum(rsum, 1e-9), p[n_acc])
+    bonus_t = jax.random.categorical(k_bonus,
+                                     jnp.log(jnp.maximum(resid, 1e-30)))
+    bonus = jnp.where(temp > 0, bonus_t, greedy_t[n_acc]).astype(jnp.int32)
+    drafts_ext = jnp.concatenate([drafts.astype(jnp.int32), bonus[None]])
+    tokens = jnp.where(jnp.arange(L + 1) < n_acc, drafts_ext, bonus)
+    return tokens, n_acc, key
+
+
+def _spec_accept_greedy(logits, drafts, vocab):
+    """All-greedy fast path of ``_spec_accept``: argmax comparison only —
+    no softmax, no proposal distributions, no PRNG traffic.  Compiled when
+    every request in the queue decodes greedily (the common
+    high-throughput case), where the acceptance math reduces to 'accept
+    while the draft IS the argmax'."""
+    L = drafts.shape[0]
+    greedy_t = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+    accept = drafts == greedy_t[:L]
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32)))
+    bonus = greedy_t[n_acc]
+    drafts_ext = jnp.concatenate([drafts.astype(jnp.int32), bonus[None]])
+    tokens = jnp.where(jnp.arange(L + 1) < n_acc, drafts_ext, bonus)
+    return tokens, n_acc
+
+
 class _CompiledLRU:
     """Bounded, recency-evicting cache of jitted admission functions.
 
@@ -145,7 +257,11 @@ class ServeEngine:
                  max_batch: int = 8, max_len: int = 512, group_size: int = 64,
                  macro_steps: int = 8, prefill_chunk: int = 0,
                  admit_cache_size: int = 32, seed: int = 0,
-                 decode_unroll: Optional[bool] = None):
+                 decode_unroll: Optional[bool] = None,
+                 spec_len: int = 0, draft: Any = "ngram",
+                 draft_params: Any = None, admit_budget: int = 0,
+                 spec_throttle_min: float = 0.1,
+                 spec_probe_every: int = 32):
         self.cfg = cfg
         self.scheme = scheme
         if scheme in ("int8", "int4", "nf4", "w8a8"):
@@ -157,6 +273,7 @@ class ServeEngine:
         self.max_len = max_len
         self.macro_steps = max(1, int(macro_steps))
         self.prefill_chunk = int(prefill_chunk)
+        self.admit_budget = max(0, int(admit_budget))
         self.seed = seed
         plan = tfm.block_plan(cfg)
         self._pad_safe = all(spec.mixer == "attn" and not spec.local
@@ -169,6 +286,49 @@ class ServeEngine:
         self._max_chunk = min(local_sizes) if local_sizes else max_len
         self.buckets = _prompt_buckets(max_len)
         self.decode_unroll = decode_unroll
+        # speculative decode: rollback must be a pure length decrement,
+        # which only linear (global-attention) cache layouts give us — a
+        # ring-buffer row write destroys the window's oldest live position
+        # and an SSM state has no per-position rows at all, so those plans
+        # fall back to the vanilla macro-step at serve time
+        self.spec_len = max(0, int(spec_len))
+        self._spec_safe = self._pad_safe
+        # adaptive throttle: when a macro-step's acceptance rate drops
+        # below ``spec_throttle_min`` the scheduler falls back to the
+        # vanilla macro-step with exponential backoff — sleep 1 macro,
+        # then 2, 4, ... capped at ``spec_probe_every`` — and probes
+        # speculation again after each sleep (the bigram table is
+        # refreshed from the emitted history first).  Probes after a
+        # failure run at spec_len=1 (a verify barely wider than a decode
+        # step), and a successful probe restores the full draft length and
+        # resets the backoff.  An adversarial zero-acceptance workload
+        # therefore pays a handful of near-free probes per run, while a
+        # cold-start bigram table (first macro right after admission) is
+        # re-probed within a macro or two once the emitted history has
+        # taught it something.  Draft-MODEL mode throttles permanently
+        # instead: vanilla macros advance the target without writing the
+        # draft cache, so after one throttle episode the draft's context
+        # has diverged for the rest of the run and probing again would
+        # only burn verifies.
+        self.spec_throttle_min = float(spec_throttle_min)
+        self.spec_probe_every = max(2, int(spec_probe_every))
+        self.draft = draft
+        self._draft_cfg: Optional[ModelConfig] = None
+        self.draft_params = None
+        if isinstance(draft, ModelConfig):
+            dplan = tfm.block_plan(draft)
+            assert all(s.mixer == "attn" and not s.local
+                       for seg in dplan for s in seg.layers), \
+                "draft model must use a linear global-attention plan " \
+                "(its cache needs the same length-decrement rollback)"
+            self._draft_cfg = draft
+            if draft_params is None:
+                # random draft weights still produce a CORRECT engine (the
+                # verify step guarantees the output distribution); they just
+                # accept ~nothing — useful as a worst-case/degradation mode
+                draft_params = tfm.init_params(
+                    jax.random.PRNGKey(seed + 1), draft)
+            self.draft_params = draft_params
         self._decode = jax.jit(
             lambda p, cache, toks: tfm.decode_step(p, cfg, cache, tokens=toks,
                                                    unroll=decode_unroll))
@@ -182,10 +342,15 @@ class ServeEngine:
         self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
                       "host_syncs": 0, "chunked_prefills": 0,
                       "useful_slot_steps": 0, "macro_steps": 0,
-                      "admit_evictions": 0}
+                      "admit_evictions": 0, "spec_steps": 0,
+                      "draft_tokens": 0, "accepted_tokens": 0,
+                      "spec_fallbacks": 0, "budget_deferred_admissions": 0,
+                      "spec_throttled_macros": 0}
         self._admit_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._chunk_fns = _CompiledLRU(admit_cache_size, self.stats)
-        self._macro_fns: Dict[int, Any] = {}
+        self._draft_admit_fns = _CompiledLRU(admit_cache_size, self.stats)
+        self._macro_fns: Dict[Any, Any] = {}
+        self._final_cache = None     # last serve_queue cache (introspection)
 
     def reset_stats(self) -> None:
         for k in self.stats:
@@ -324,8 +489,39 @@ class ServeEngine:
 
         return self._chunk_fns.get((c, final), build)
 
+    def _draft_admit_fn(self, bucket: int):
+        """Jitted draft-model admission: prefill the same (1, bucket) prompt
+        through the DRAFT model and write its cache rows for ``slot``.  No
+        sampling — the draft only ever proposes from inside the macro-step.
+        One extra device dispatch per admission, no host sync."""
+        dcfg = self._draft_cfg
+
+        def build():
+            def admit(dparams, dcache, tokens, slot, true_len):
+                _, small = tfm.prefill(dparams, dcfg, tokens=tokens,
+                                       max_len=bucket)
+
+                def write(big, new):
+                    start = (0, slot) + (0,) * (big.ndim - 2)
+                    return jax.lax.dynamic_update_slice(
+                        big, new.astype(big.dtype), start)
+
+                new_blocks = jax.tree.map(write, dcache["blocks"],
+                                          small["blocks"])
+                lens = dcache["len"].at[slot].set(true_len)
+                return {"blocks": new_blocks, "len": lens}
+
+            return jax.jit(admit)
+
+        return self._draft_admit_fns.get(bucket, build)
+
     def _empty_batched_cache(self):
         cache = tfm.init_cache(self.cfg, self.max_batch, self.max_len)
+        cache["len"] = jnp.zeros((self.max_batch,), jnp.int32)
+        return cache
+
+    def _empty_draft_cache(self):
+        cache = tfm.init_cache(self._draft_cfg, self.max_batch, self.max_len)
         cache["len"] = jnp.zeros((self.max_batch,), jnp.int32)
         return cache
 
@@ -380,18 +576,178 @@ class ServeEngine:
         self._macro_fns[k] = fn
         return fn
 
+    # -- speculative decode macro-step -----------------------------------------
+
+    def _spec_macro_fn(self, k: int, spec_len: int, all_greedy: bool):
+        """Jitted k-iteration SPECULATIVE macro-step: each ``lax.scan``
+        iteration drafts ``spec_len`` tokens per slot, runs ONE batched
+        multi-position ``verify_step``, accepts a prefix (greedy: exact
+        argmax match; temperature: leapfrog + residual), commits the
+        accepted length (the rollback), and truncates at budget/EOS — all
+        on device.  Emits up to ``k * (spec_len + 1)`` tokens per host
+        sync.  ``aux`` is the draft state threaded through the carry: the
+        (B, vocab) bigram table in n-gram mode, the draft model's cache in
+        draft-model mode.  ``all_greedy`` specializes the compilation for
+        a queue with no temperature sampling — the acceptance drops its
+        softmax / proposal-distribution / PRNG work, which is measurable
+        per-iteration overhead on small models."""
+        L = spec_len
+        mode = "model" if self._draft_cfg is not None else "ngram"
+        cache_key = (k, L, mode, all_greedy)
+        if cache_key in self._macro_fns:
+            return self._macro_fns[cache_key]
+        cfg = self.cfg
+        vocab = cfg.vocab_size
+        dcfg = self._draft_cfg
+
+        def macro(params, dparams, cache, aux, last, temps, active,
+                  remaining, eos, keys):
+            def step(carry, _):
+                def spec_it(op):
+                    cache, aux, last, active, remaining, keys = op
+                    B = last.shape[0]
+                    # ---- draft: propose L tokens per slot ----------------
+                    if mode == "ngram":
+                        # bigram chain, unrolled (L is tiny and static):
+                        # d_{i+1} = table[b, d_i]
+                        ds = []
+                        cur = last[:, 0]
+                        for _i in range(L):
+                            cur = jnp.take_along_axis(
+                                aux, cur[:, None], axis=1)[:, 0]
+                            ds.append(cur)
+                        drafts = jnp.stack(ds, axis=1)              # (B, L)
+                        # deterministic draft: _spec_accept's q_dists=None
+                        # path — no (B, L, V) proposal tensor materialized
+                        q_dists = None
+                        new_aux = aux
+                    else:
+                        # draft model decodes L+1 steps in-line: the extra
+                        # step writes the last draft's K/V row so a fully
+                        # accepted window leaves the draft cache dense (its
+                        # sample is discarded)
+                        dcache = aux
+                        dlens0 = dcache["len"]
+                        dlast = last
+                        ds, qs = [], []
+                        for i in range(L + 1):
+                            dlg, dcache = tfm.decode_step(
+                                dparams, dcfg, dcache, tokens=dlast,
+                                active=active)
+                            if i == L:
+                                break
+                            if all_greedy:
+                                toks_i = jnp.argmax(
+                                    dlg[:, :vocab], -1).astype(jnp.int32)
+                            else:
+                                toks_i, keys = jax.vmap(
+                                    lambda lg, t, kk: _sample_token(
+                                        lg, t, kk, vocab))(dlg, temps, keys)
+                                qd = jax.nn.softmax(
+                                    dlg[:, :vocab].astype(jnp.float32)
+                                    / jnp.maximum(temps, 1e-6)[:, None], -1)
+                                # greedy slots accept on argmax equality;
+                                # their q row is irrelevant but normalized
+                                qs.append(qd)
+                            ds.append(toks_i)
+                            dlast = toks_i[:, None]
+                        drafts = jnp.stack(ds, axis=1)              # (B, L)
+                        q_dists = None if all_greedy else jnp.stack(qs, 1)
+                        new_aux = dcache
+                    # ---- one batched multi-position verify ---------------
+                    ver_toks = jnp.concatenate([last, drafts], axis=1)
+                    logits, cache = tfm.verify_step(params, cfg, cache,
+                                                    ver_toks, active=active,
+                                                    unroll=self.decode_unroll)
+                    if all_greedy:
+                        toks, n_acc = jax.vmap(
+                            lambda lg, d: _spec_accept_greedy(lg, d, vocab))(
+                            logits, drafts)
+                    else:
+                        toks, n_acc, keys = jax.vmap(
+                            lambda lg, d, qd, t, kk: _spec_accept(
+                                lg, d, qd, t, kk, vocab))(
+                            logits, drafts, q_dists, temps, keys)
+                    # ---- truncate to budget and first EOS ----------------
+                    pos = jnp.arange(L + 1)[None, :]
+                    c = jnp.minimum(n_acc + 1, remaining)
+                    is_eos = (eos[:, None] >= 0) & (toks == eos[:, None]) \
+                        & (pos < c[:, None])
+                    eos_idx = jnp.min(jnp.where(is_eos, pos, L + 1), axis=1)
+                    c = jnp.minimum(c, eos_idx + 1)
+                    c = jnp.where(active, c, 0)
+                    emitted = pos < c[:, None]                     # (B, L+1)
+                    # ---- commit: the length bump IS the rollback ---------
+                    lens = cache["len"] + c.astype(cache["len"].dtype)
+                    cache = {"blocks": cache["blocks"], "len": lens}
+                    if mode == "model":
+                        new_aux = {"blocks": new_aux["blocks"],
+                                   "len": dlens0 + c.astype(dlens0.dtype)}
+                    new_last = jnp.take_along_axis(
+                        toks, jnp.maximum(c - 1, 0)[:, None], axis=1)
+                    new_last = jnp.where(active[:, None], new_last, last)
+                    remaining = remaining - c.astype(remaining.dtype)
+                    active = active & (remaining > 0) & ~jnp.any(is_eos, 1)
+                    if mode == "ngram":
+                        # learn emitted transitions on device so repeated
+                        # phrases in the OUTPUT draft well too: ONE scatter
+                        # of all (prev -> next) pairs (uncommitted and
+                        # inactive positions index out of bounds and drop)
+                        seq = jnp.concatenate([last, toks], axis=1)
+                        prev = jnp.where(jnp.arange(L + 1)[None, :]
+                                         < c[:, None], seq[:, :-1], vocab)
+                        new_aux = new_aux.at[
+                            jnp.arange(B)[:, None], prev].set(
+                            seq[:, 1:], mode="drop")
+                    # c > 0 marks slots that were active at step entry
+                    accepted = jnp.sum(jnp.minimum(n_acc, c))
+                    drafted = jnp.sum(jnp.where(c > 0, L, 0))
+                    out_toks = jnp.where(emitted, toks, last[:, :1])
+                    return ((cache, new_aux, new_last, active, remaining,
+                             keys),
+                            (out_toks, emitted, accepted, drafted,
+                             jnp.int32(1)))
+
+                def skip(op):
+                    last, active = op[2], op[3]
+                    B, w = last.shape[0], L + 1
+                    return op, (jnp.broadcast_to(last[:, :1], (B, w)),
+                                jnp.zeros((B, w), bool), jnp.int32(0),
+                                jnp.int32(0), jnp.int32(0))
+
+                return jax.lax.cond(jnp.any(carry[3]), spec_it, skip, carry)
+
+            carry = (cache, aux, last, active, remaining, keys)
+            (cache, aux, last, active, remaining, keys), ys = jax.lax.scan(
+                step, carry, None, length=k)
+            toks_k, emit_k, acc_k, drf_k, execd = ys   # (k,B,L+1) .. (k,)
+            w = k * (L + 1)
+            toks_flat = jnp.moveaxis(toks_k, 0, 1).reshape(-1, w)
+            emit_flat = jnp.moveaxis(emit_k, 0, 1).reshape(-1, w)
+            return (cache, aux, last, active, remaining, keys,
+                    toks_flat, emit_flat, jnp.sum(acc_k), jnp.sum(drf_k),
+                    jnp.sum(execd))
+
+        fn = jax.jit(macro)
+        self._macro_fns[cache_key] = fn
+        return fn
+
     # -- continuous batching ---------------------------------------------------
 
     def serve_queue(self, requests: List[Request], step_budget: int = 10_000,
                     macro_steps: Optional[int] = None,
-                    prefill_chunk: Optional[int] = None) -> Dict[int, List[int]]:
+                    prefill_chunk: Optional[int] = None,
+                    spec_len: Optional[int] = None,
+                    admit_budget: Optional[int] = None) -> Dict[int, List[int]]:
         """Continuous batcher over ``max_batch`` persistent cache slots.
 
-        Every scheduler iteration (a) admits pending requests — one whole
-        bucketed prefill each, or one prompt *chunk* per admitting slot when
-        chunked admission is on — and (b) advances ALL active slots with a
-        single jitted k-step decode macro-step, syncing with the host once
-        per macro-step.  Returns {uid: generated tokens}; per-request
+        Every scheduler iteration (a) admits pending requests — whole
+        bucketed prefills, or prompt *chunks* under the shared
+        ``admit_budget`` token budget when chunked admission is on — and
+        (b) advances ALL active slots with a single jitted k-step decode
+        macro-step (speculative draft-then-verify inside the same scan when
+        ``spec_len > 0`` on a linear-layout plan), syncing with the host
+        once per macro-step.  Returns {uid: generated tokens}; per-request
         TTFT/latency timestamps are recorded on the Request objects.
         """
         k = max(1, int(self.macro_steps if macro_steps is None else macro_steps))
@@ -399,6 +755,26 @@ class ServeEngine:
                     else prefill_chunk)
         if chunk > 0:
             chunk = min(chunk, self._max_chunk)
+        budget = int(self.admit_budget if admit_budget is None
+                     else admit_budget)
+        L = max(0, int(self.spec_len if spec_len is None else spec_len))
+        if L > 0 and self.draft == "none":
+            L = 0
+        if L > 0 and not self._spec_safe:
+            # ring-buffer/SSM rollback is destructive -> vanilla macro-step
+            self.stats["spec_fallbacks"] += 1
+            L = 0
+        draft_model = L > 0 and self._draft_cfg is not None
+        if draft_model and chunk > 0:
+            # the draft prefills whole prompts at admission (chunk-resumed
+            # draft prefill isn't wired); keep admission whole-prompt so
+            # target and draft caches stay in lockstep
+            warnings.warn(
+                "draft-model speculation forces whole-prompt admission: "
+                f"ignoring prefill_chunk={chunk} (chunk-resumed draft "
+                "prefill is not implemented, so the PR 2 chunked-TTFT "
+                "bound does not apply to this engine)", stacklevel=2)
+            chunk = 0
         now = time.perf_counter()
         for req in requests:
             if not req.submitted_at:
@@ -418,7 +794,24 @@ class ServeEngine:
         remaining = np.zeros((B,), np.int32)
         keys = np.zeros((B, 2), np.uint32)
         base_key = jax.random.PRNGKey(self.seed)
-        macro = self._macro_fn(k)
+        # speculative draft state: per-slot bigram table (ngram mode, built
+        # at admission, updated on device with emitted tokens) or the draft
+        # model's slot cache; both live on device between macro-steps
+        spec_aux = None
+        if L > 0:
+            spec_aux = (self._empty_draft_cache() if draft_model
+                        else jnp.zeros((B, self.cfg.vocab_size), jnp.int32))
+        all_greedy = all((r.temperature or 0.0) <= 0.0 for r in requests)
+        macro = (self._spec_macro_fn(k, L, all_greedy) if L > 0
+                 else self._macro_fn(k))
+        van_macro = self._macro_fn(k) if L > 0 else None  # throttle target
+        probe_macro = None         # lazily-built L=1 macro for cheap probes
+        throttle_wait = 0          # vanilla macros left before a spec probe
+        # backoff == 1 means acceptance is proven (full draft length);
+        # start at 2 so the FIRST spec macro is a cheap L=1 probe — a
+        # high-acceptance queue ramps to full L after one macro, an
+        # adversarial one never pays a full-width zero-acceptance verify
+        throttle_backoff = 2
         steps = 0
 
         def finish(b: int):
@@ -447,92 +840,211 @@ class ServeEngine:
             eos[b] = -1 if req.eos_id is None else int(req.eos_id)
             keys[b] = np.asarray(key_arr)
 
+        def admit_spec_state(b: int, req: Request, first_tok: int):
+            """Seed the slot's draft state at admission: prefill the draft
+            model's cache, or build the bigram table row from the prompt
+            (last occurrence wins) closed by the first sampled token.  Both
+            are device ops — no host sync."""
+            nonlocal spec_aux
+            if L == 0:
+                return
+            if draft_model:
+                plen = len(req.prompt)
+                bucket = self._bucket_for(plen)
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :plen] = req.prompt
+                spec_aux = self._draft_admit_fn(bucket)(
+                    self.draft_params, spec_aux, jnp.asarray(padded),
+                    np.int32(b), np.int32(plen))
+            else:
+                row = np.zeros((self.cfg.vocab_size,), np.int32)
+                for a, nx in zip(req.prompt[:-1], req.prompt[1:]):
+                    row[int(a)] = int(nx)
+                row[int(req.prompt[-1])] = int(first_tok)
+                spec_aux = spec_aux.at[b].set(jnp.asarray(row))
+
         while (pending or any(s is not None for s in slots)) \
                 and steps < step_budget:
             progressed = False
-            # -- admission: fill free slots; advance admitting slots by one
-            #    chunk (or the whole prompt when chunking is off) ------------
-            for b in range(B):
-                if slots[b] is None and pending:
-                    req = pending.pop(0)
+            # -- admission: fill free slots; advance admissions under the
+            #    shared token budget.  Without a budget this is one pass —
+            #    one chunk (or whole prompt) per admitting slot; with one,
+            #    passes repeat until the budget is spent, so a single slot
+            #    may advance several chunks while an over-budget admission
+            #    defers to the next iteration (decode keeps priority) ------
+            spent = 0
+            deferred_slots: set = set()
+            advanced_slots: set = set()
+            while True:
+                advanced = False
+                for b in range(B):
+                    if slots[b] is None and pending:
+                        req = pending.pop(0)
+                        plen = len(req.prompt)
+                        assert plen + req.max_new_tokens <= self.max_len, \
+                            f"request {req.uid} needs " \
+                            f"{plen + req.max_new_tokens} rows, cache has " \
+                            f"{self.max_len}"
+                        slots[b] = req
+                        admitting[b] = True
+                        admit_off[b] = 0
+                        # per-slot PRNG stream seeded from the request uid:
+                        # one slot's sampling can never perturb another's
+                        slot_key[b] = jax.random.fold_in(base_key, req.uid)
+                    if slots[b] is None or not admitting[b]:
+                        continue
+                    req = slots[b]
                     plen = len(req.prompt)
-                    assert plen + req.max_new_tokens <= self.max_len, \
-                        f"request {req.uid} needs {plen + req.max_new_tokens}" \
-                        f" rows, cache has {self.max_len}"
-                    slots[b] = req
-                    admitting[b] = True
-                    admit_off[b] = 0
-                    # per-slot PRNG stream seeded from the request uid: one
-                    # slot's sampling can never perturb another's
-                    slot_key[b] = jax.random.fold_in(base_key, req.uid)
-                if slots[b] is None or not admitting[b]:
-                    continue
-                req = slots[b]
-                plen = len(req.prompt)
-                # prompts that fit in one chunk take the whole-prompt
-                # bucketed admission (chunk attention would scan the full —
-                # empty — cache prefix for nothing); chunking only pays for
-                # itself on multi-chunk prompts
-                if chunk <= 0 or (admit_off[b] == 0 and plen <= chunk):
-                    bucket = self._bucket_for(plen)
-                    padded = np.zeros((1, bucket), np.int32)
-                    padded[0, :plen] = req.prompt
-                    tok, key2, cache = self._admit_fn(bucket)(
-                        self.params, cache, jnp.asarray(padded),
-                        np.int32(b), np.int32(plen),
-                        np.float32(req.temperature), slot_key[b])
-                    req.admitted_at = time.perf_counter()
-                    tok, key2 = jax.device_get((tok, key2))
-                    self.stats["host_syncs"] += 1
-                    admitting[b] = False
-                    start_slot(b, tok, key2)
-                else:
-                    off = admit_off[b]
-                    end = min(off + chunk, plen)
-                    final = end == plen
-                    if self._pad_safe:
-                        # one compiled chunk shape for ANY prompt length:
-                        # the remainder is right-padded; pad rows sit beyond
-                        # every real query position, so causal masking keeps
-                        # them inert and decode overwrites them row by row
-                        c_shape = chunk
-                        toks_np = np.zeros((1, chunk), np.int32)
-                        toks_np[0, :end - off] = req.prompt[off:end]
-                    else:
-                        c_shape = end - off
-                        toks_np = np.asarray(req.prompt[off:end],
-                                             np.int32)[None]
-                    self.stats["chunked_prefills"] += 1
-                    if final:
-                        tok, key2, cache = self._chunk_fn(c_shape, True)(
-                            self.params, cache, jnp.asarray(toks_np),
-                            np.int32(b), np.int32(off),
-                            np.int32(plen - 1 - off), np.int32(plen),
+                    # prompts that fit in one chunk take the whole-prompt
+                    # bucketed admission (chunk attention would scan the
+                    # full — empty — cache prefix for nothing); chunking
+                    # only pays for itself on multi-chunk prompts
+                    whole = chunk <= 0 or (admit_off[b] == 0
+                                           and plen <= chunk)
+                    cost = plen if whole else min(chunk, plen - admit_off[b])
+                    if budget > 0 and spent > 0 and spent + cost > budget:
+                        deferred_slots.add(b)
+                        continue
+                    if whole:
+                        bucket = self._bucket_for(plen)
+                        padded = np.zeros((1, bucket), np.int32)
+                        padded[0, :plen] = req.prompt
+                        tok, key2, cache = self._admit_fn(bucket)(
+                            self.params, cache, jnp.asarray(padded),
+                            np.int32(b), np.int32(plen),
                             np.float32(req.temperature), slot_key[b])
                         req.admitted_at = time.perf_counter()
                         tok, key2 = jax.device_get((tok, key2))
                         self.stats["host_syncs"] += 1
                         admitting[b] = False
                         start_slot(b, tok, key2)
+                        admit_spec_state(b, req, int(tok))
                     else:
-                        cache = self._chunk_fn(c_shape, False)(
-                            self.params, cache, jnp.asarray(toks_np),
-                            np.int32(b), np.int32(off))
-                        admit_off[b] = end
-                progressed = True
+                        off = admit_off[b]
+                        end = min(off + chunk, plen)
+                        final = end == plen
+                        if self._pad_safe:
+                            # one compiled chunk shape for ANY prompt
+                            # length: the remainder is right-padded; pad
+                            # rows sit beyond every real query position, so
+                            # causal masking keeps them inert and decode
+                            # overwrites them row by row
+                            c_shape = chunk
+                            toks_np = np.zeros((1, chunk), np.int32)
+                            toks_np[0, :end - off] = req.prompt[off:end]
+                        else:
+                            c_shape = end - off
+                            toks_np = np.asarray(req.prompt[off:end],
+                                                 np.int32)[None]
+                        self.stats["chunked_prefills"] += 1
+                        if final:
+                            tok, key2, cache = self._chunk_fn(c_shape, True)(
+                                self.params, cache, jnp.asarray(toks_np),
+                                np.int32(b), np.int32(off),
+                                np.int32(plen - 1 - off), np.int32(plen),
+                                np.float32(req.temperature), slot_key[b])
+                            req.admitted_at = time.perf_counter()
+                            tok, key2 = jax.device_get((tok, key2))
+                            self.stats["host_syncs"] += 1
+                            admitting[b] = False
+                            start_slot(b, tok, key2)
+                            admit_spec_state(b, req, int(tok))
+                        else:
+                            cache = self._chunk_fn(c_shape, False)(
+                                self.params, cache, jnp.asarray(toks_np),
+                                np.int32(b), np.int32(off))
+                            admit_off[b] = end
+                    spent += cost
+                    advanced_slots.add(b)
+                    advanced = True
+                    progressed = True
+                if budget <= 0 or not advanced or spent >= budget:
+                    break
+            # a deferral = a slot whose admission made NO progress this
+            # iteration because the shared budget ran out (a slot that got
+            # some chunks in before the budget closed is not deferred)
+            self.stats["budget_deferred_admissions"] += len(
+                deferred_slots - advanced_slots)
 
             # -- one decode macro-step across all active slots ---------------
             if active.any():
                 was_active = active.copy()
-                (cache, last_d, act_d, rem_d, keys_d,
-                 toks_bk, emit_bk, execd) = macro(
-                    self.params, cache, jnp.asarray(last_tokens),
-                    jnp.asarray(temps), jnp.asarray(active),
-                    jnp.asarray(remaining), jnp.asarray(eos),
-                    jnp.asarray(keys))
-                (last_np, act_np, rem_np, keys_np,
-                 toks_np, emit_np, nexec) = jax.device_get(
-                    (last_d, act_d, rem_d, keys_d, toks_bk, emit_bk, execd))
+                spec_now = L > 0 and throttle_wait == 0
+                if L > 0 and not spec_now:
+                    throttle_wait -= 1
+                    self.stats["spec_throttled_macros"] += 1
+                    if throttle_wait == 0 and not draft_model:
+                        # refresh the bigram table from the history emitted
+                        # while speculation was off, so the probe sees the
+                        # CURRENT cycle, not a stale one (device scatter
+                        # per active slot, no host sync)
+                        for b in range(B):
+                            req = slots[b]
+                            if (req is None or not active[b]
+                                    or not req.tokens or len(req.tokens) < 2):
+                                continue
+                            tail = req.tokens[-(L + 2):]
+                            spec_aux = spec_aux.at[
+                                b, np.asarray(tail[:-1], np.int32)].set(
+                                np.asarray(tail[1:], np.int32))
+                if spec_now:
+                    # after a failed probe (backoff > 1) probe at L=1 — a
+                    # verify barely wider than a decode step — and only
+                    # restore the full draft length once acceptance is back
+                    probing = throttle_backoff > 1 and L > 1
+                    if probing and probe_macro is None:
+                        probe_macro = self._spec_macro_fn(k, 1, all_greedy)
+                    width_L = 1 if probing else L
+                    fn = probe_macro if probing else macro
+                    (cache, spec_aux, last_d, act_d, rem_d, keys_d,
+                     toks_bk, emit_bk, acc_n, drf_n, execd) = fn(
+                        self.params, self.draft_params, cache, spec_aux,
+                        jnp.asarray(last_tokens), jnp.asarray(temps),
+                        jnp.asarray(active), jnp.asarray(remaining),
+                        jnp.asarray(eos), jnp.asarray(keys))
+                    (last_np, act_np, rem_np, keys_np, toks_np, emit_np,
+                     acc_np, drf_np, nexec) = jax.device_get(
+                        (last_d, act_d, rem_d, keys_d, toks_bk, emit_bk,
+                         acc_n, drf_n, execd))
+                    self.stats["spec_steps"] += int(nexec)
+                    self.stats["accepted_tokens"] += int(acc_np)
+                    self.stats["draft_tokens"] += int(drf_np)
+                    if (int(drf_np) > 0 and int(acc_np) < self.spec_throttle_min
+                            * int(drf_np)):
+                        if draft_model:
+                            # vanilla macros advance the target but write
+                            # nothing into the draft cache, and there is no
+                            # chunk-resumed draft catch-up — after one
+                            # throttle episode the draft's context has
+                            # diverged for the rest of the run, so probing
+                            # again would only burn verifies
+                            throttle_wait = step_budget
+                        elif throttle_backoff >= 4:
+                            # second consecutive failed probe: this traffic
+                            # is adversarial to the draft — jump straight
+                            # to the longest sleep
+                            throttle_backoff = self.spec_probe_every
+                            throttle_wait = throttle_backoff
+                        else:
+                            throttle_wait = throttle_backoff
+                            throttle_backoff = min(2 * throttle_backoff,
+                                                   self.spec_probe_every)
+                    else:
+                        throttle_backoff = 1
+                    width = k * (width_L + 1)
+                else:
+                    fn = van_macro if L > 0 else macro   # throttled == plain
+                    (cache, last_d, act_d, rem_d, keys_d,
+                     toks_bk, emit_bk, execd) = fn(
+                        self.params, cache, jnp.asarray(last_tokens),
+                        jnp.asarray(temps), jnp.asarray(active),
+                        jnp.asarray(remaining), jnp.asarray(eos),
+                        jnp.asarray(keys))
+                    (last_np, act_np, rem_np, keys_np,
+                     toks_np, emit_np, nexec) = jax.device_get(
+                        (last_d, act_d, rem_d, keys_d, toks_bk, emit_bk,
+                         execd))
+                    width = k
                 self.stats["host_syncs"] += 1
                 self.stats["macro_steps"] += 1
                 self.stats["decode_steps"] += int(nexec)
@@ -541,7 +1053,7 @@ class ServeEngine:
                     if slots[b] is None or not was_active[b]:
                         continue
                     req = slots[b]
-                    for i in range(k):
+                    for i in range(width):
                         if emit_np[b, i]:
                             req.tokens.append(int(toks_np[b, i]))
                     active[b] = bool(act_np[b])
@@ -565,6 +1077,7 @@ class ServeEngine:
                 finish(b)
         for req in pending:
             results[req.uid] = []
+        self._final_cache = cache          # introspection (rollback tests)
         return results
 
 

@@ -174,3 +174,83 @@ def test_flash_decode_registry_space():
     for bk in space["block_k"]:
         for s in space["k_splits"]:
             registry.make_config("flash_decode", block_k=bk, k_splits=s)
+
+
+# ---------------------------------------------------------------------------
+# flash verify (multi-position speculative verify, staircase causality)
+# ---------------------------------------------------------------------------
+
+def _verify_inputs(b=3, s=5, h=8, kv=2, d=32, t=160):
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(21), (b, t, kv, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(22), (b, t, kv, d), jnp.float32)
+    # committed rows BEFORE the verify (the s new rows live just past them)
+    lens = jnp.array([0, t // 2, t - s], jnp.int32)[:b]
+    return q, k, v, lens
+
+
+def _verify_ref(q, k, v, lens, ks=None, vs=None, **kw):
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, s, kvh, h // kvh, d).transpose(0, 2, 1, 3, 4)
+    out = aref.flash_verify_ref(qg, k, v, lens, ks, vs, **kw)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, d)
+
+
+@pytest.mark.parametrize("block_k,k_splits", [(32, 1), (32, 4), (64, 2),
+                                              (128, 8)])
+def test_flash_verify_splitk_sweep(block_k, k_splits):
+    """Split-K partials with the per-position staircase mask must match the
+    monolithic oracle at every tunable point — including a slot whose
+    prefix is empty (lens == 0: each draft sees only earlier drafts)."""
+    from repro.kernels.common import VerifyAttentionConfig
+    q, k, v, lens = _verify_inputs()
+    cfg = VerifyAttentionConfig(block_k=block_k, k_splits=k_splits)
+    out = aops.flash_verify(q, k, v, lens, cfg=cfg, interpret=True)
+    assert _rel_err(out, _verify_ref(q, k, v, lens)) < 1e-4
+
+
+@pytest.mark.parametrize("cap,window", [(30.0, 0), (0.0, 64)])
+def test_flash_verify_cap_window(cap, window):
+    from repro.kernels.common import VerifyAttentionConfig
+    q, k, v, lens = _verify_inputs()
+    cfg = VerifyAttentionConfig(block_k=32, k_splits=4)
+    out = aops.flash_verify(q, k, v, lens, cap=cap, window=window, cfg=cfg,
+                            interpret=True)
+    exp = _verify_ref(q, k, v, lens, cap=cap, window=window)
+    assert _rel_err(out, exp) < 1e-4
+
+
+def test_flash_verify_int8_kv():
+    """int8 cache + per-(token, head) scales dequantized tile-wise in VMEM
+    must match the oracle's full dequantization."""
+    from repro.kernels.common import VerifyAttentionConfig
+    q, k, v, lens = _verify_inputs()
+    kq, ks = _quantize_cache(k)
+    vq, vs = _quantize_cache(v)
+    cfg = VerifyAttentionConfig(block_k=32, k_splits=4)
+    out = aops.flash_verify(q, kq, vq, lens, ks, vs, cfg=cfg, interpret=True)
+    assert _rel_err(out, _verify_ref(q, kq, vq, lens, ks, vs)) < 1e-4
+    assert _rel_err(out, _verify_ref(q, k, v, lens)) < 5e-2   # quant noise
+
+
+def test_flash_verify_reduces_to_decode_at_s1():
+    """With a single query position flash_verify IS flash_decode (lengths
+    conventions differ by the current token: decode includes it)."""
+    q, k, v, lens = _decode_inputs()
+    out_v = aops.flash_verify(q, k, v, lens - 1, interpret=True)
+    out_d = aops.flash_decode(q, k, v, lens, interpret=True)
+    assert _rel_err(out_v, out_d) < 1e-5
+
+
+def test_flash_verify_registry_space():
+    """flash_verify is a tunable kernel: (block_k, k_splits, spec_len) all
+    come from the registry for the HAQA deployment loop."""
+    from repro.kernels import registry
+    space = registry.config_space("flash_verify")
+    assert set(space) == {"block_k", "k_splits", "spec_len"}
+    for bk in space["block_k"]:
+        for s in space["k_splits"]:
+            for L in space["spec_len"]:
+                registry.make_config("flash_verify", block_k=bk, k_splits=s,
+                                     spec_len=L)

@@ -1,0 +1,420 @@
+"""Fused speculative decoding (ISSUE 3).
+
+Covers the multi-position verify step (parity with sequential decode,
+rollback invariants), the speculative macro-step scheduler (bit-exact
+greedy parity vs the vanilla macro-step on global-attention and int8-KV
+plans, ring-buffer/SSM fallback, acceptance counters, adaptive throttle),
+the distributional correctness of leapfrog acceptance, the shared
+admission token budget, and the HAQA serve-deployment search space.
+
+Engine parity tests use f32 params: with bf16 weights the greedy collapse
+regime produces exactly-tied logits whose argmax flips under the (S, D) vs
+(1, D) matmul reassociation of the CPU backend — an ulp artifact that
+would make "exact" assertions test XLA's summation order, not the
+scheduler.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import POCKET
+from repro.models import attention as attn_lib
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+from repro.serve.engine import _spec_accept
+
+PARAMS32 = tfm.init_params(jax.random.PRNGKey(0), POCKET, dtype=jnp.float32)
+
+
+def _mixed_requests(n, temp=0.0, seed=11, max_new=12):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(3, 24))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, POCKET.vocab_size, (plen,)).astype(np.int32),
+            max_new_tokens=int(rng.integers(1, max_new + 1)),
+            temperature=temp))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# verify_step: multi-position decode parity + rollback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_verify_step_matches_sequential_decode(kv_dtype):
+    """One verify_step over [last, d1..dL] must produce, at every position,
+    exactly the logits sequential decode_steps produce, write the same K/V
+    rows, and leave cache["len"] untouched."""
+    cfg = dataclasses.replace(POCKET, kv_cache_dtype=kv_dtype)
+    prompt = (np.arange(13, dtype=np.int32) % cfg.vocab_size)[None]
+    _, cache0 = tfm.prefill(PARAMS32, cfg, tokens=jnp.asarray(prompt),
+                            max_len=64)
+    cache0["len"] = jnp.full((1,), 13, jnp.int32)
+    seq = jnp.array([[7, 3, 9, 1, 5]], jnp.int32)
+    cache = cache0
+    step_logits = []
+    for i in range(5):
+        lg, cache = tfm.decode_step(PARAMS32, cfg, cache,
+                                    tokens=seq[:, i:i + 1])
+        step_logits.append(lg)
+    seq_logits = jnp.stack(step_logits, 1)
+    ver_logits, vcache = tfm.verify_step(PARAMS32, cfg, cache0, seq)
+    assert int(vcache["len"][0]) == 13            # caller commits the length
+    np.testing.assert_allclose(
+        np.asarray(ver_logits[..., :cfg.vocab_size]),
+        np.asarray(seq_logits[..., :cfg.vocab_size]), atol=1e-5)
+    assert np.array_equal(
+        np.asarray(jnp.argmax(ver_logits[..., :cfg.vocab_size], -1)),
+        np.asarray(jnp.argmax(seq_logits[..., :cfg.vocab_size], -1)))
+    for a, b in zip(jax.tree.leaves(cache["blocks"]),
+                    jax.tree.leaves(vcache["blocks"])):
+        np.testing.assert_allclose(
+            np.asarray(a)[:, :, 13:18].astype(np.float32),
+            np.asarray(b)[:, :, 13:18].astype(np.float32), atol=1e-5)
+
+
+def test_verify_step_rejects_non_linear_plans():
+    """Ring-buffer and SSM plans have no length-decrement rollback; the
+    model layer must refuse rather than corrupt the cache."""
+    for cfg in (dataclasses.replace(POCKET, attn_pattern="local_global",
+                                    window_size=8),
+                dataclasses.replace(POCKET, attn_pattern="hybrid_1_7",
+                                    num_layers=8)):
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        cache = tfm.init_cache(cfg, 1, 32)
+        with pytest.raises(AssertionError):
+            tfm.verify_step(params, cfg, cache,
+                            jnp.zeros((1, 3), jnp.int32))
+
+
+def test_rollback_is_invisible_to_committed_rows():
+    """The committed cache region must be bit-identical REGARDLESS of what
+    rejected drafts were written past it: run verify with two different
+    all-wrong draft suffixes, commit one token each, decode on — every
+    committed row and every subsequent token must agree bitwise."""
+    prompt = (np.arange(11, dtype=np.int32) % POCKET.vocab_size)[None]
+    logits, cache0 = tfm.prefill(PARAMS32, POCKET, tokens=jnp.asarray(prompt),
+                                 max_len=32)
+    cache0["len"] = jnp.full((1,), 11, jnp.int32)
+    last = int(jnp.argmax(logits[0, -1, :POCKET.vocab_size]))
+
+    def run(draft_offset):
+        lg, cache = tfm.verify_step(
+            PARAMS32, POCKET, cache0,
+            jnp.asarray([[last,
+                          (last + draft_offset) % POCKET.vocab_size,
+                          (last + draft_offset + 1) % POCKET.vocab_size]],
+                        jnp.int32))
+        bonus = int(jnp.argmax(lg[0, 0, :POCKET.vocab_size]))
+        cache = {"blocks": cache["blocks"],
+                 "len": cache["len"] + 1}           # commit only the bonus
+        toks = [bonus]
+        cur = bonus
+        for _ in range(3):
+            lg, cache = tfm.decode_step(PARAMS32, POCKET, cache,
+                                        tokens=jnp.asarray([[cur]], jnp.int32))
+            cur = int(jnp.argmax(lg[0, :POCKET.vocab_size]))
+            toks.append(cur)
+        return toks, cache
+
+    toks_a, cache_a = run(100)
+    toks_b, cache_b = run(200)
+    assert toks_a == toks_b
+    n = int(cache_a["len"][0])
+    for a, b in zip(jax.tree.leaves(cache_a["blocks"]),
+                    jax.tree.leaves(cache_b["blocks"])):
+        np.testing.assert_array_equal(np.asarray(a)[:, :, :n],
+                                      np.asarray(b)[:, :, :n])
+
+
+def test_verify_attention_pallas_interpret_matches_xla():
+    """The engine-facing verify attention must agree between the XLA
+    fallback and the Pallas flash_verify kernel (interpret mode), int8
+    scale folding included."""
+    b, s, h, kv, d, t = 2, 4, 4, 2, 32, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, kv, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, kv, d), jnp.float32)
+    lens = jnp.array([5, t - s], jnp.int32)
+    o_x = attn_lib.verify_attention(q, k, v, lens, backend="xla")
+    o_p = attn_lib.verify_attention(q, k, v, lens,
+                                    backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p), atol=2e-5)
+    amax = jnp.maximum(jnp.abs(k).max(-1, keepdims=True), 1e-6)
+    kq = jnp.clip(jnp.round(k / amax * 127), -127, 127).astype(jnp.int8)
+    ks = (amax / 127.0).astype(jnp.float16)
+    o_x = attn_lib.verify_attention(q, kq, v, lens, k_scale=ks,
+                                    v_scale=jnp.ones_like(ks),
+                                    backend="xla")
+    o_p = attn_lib.verify_attention(q, kq, v, lens, k_scale=ks,
+                                    v_scale=jnp.ones_like(ks),
+                                    backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# speculative macro-step scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_spec_greedy_exact_parity(kv_dtype):
+    """Greedy spec-decode must emit EXACTLY the tokens the vanilla
+    macro-step emits — same uids, same sequences — on global-attention
+    plans with bf16 and int8 KV caches."""
+    cfg = dataclasses.replace(POCKET, kv_cache_dtype=kv_dtype)
+    eng = ServeEngine(cfg, PARAMS32, scheme="bf16", max_batch=3, max_len=64)
+    vanilla = eng.serve_queue(_mixed_requests(7), spec_len=0)
+    eng.reset_stats()
+    spec = eng.serve_queue(_mixed_requests(7), spec_len=4)
+    assert spec == vanilla
+    assert eng.stats["spec_steps"] > 0
+    assert eng.stats["spec_fallbacks"] == 0
+
+
+def test_spec_fallback_ring_and_hybrid_layouts():
+    """Ring-buffer (local attention) and SSM (hybrid) plans fall back to
+    the vanilla macro-step: identical results, no verify steps, and the
+    fallback counted."""
+    for pattern, kw in (("local_global", {"window_size": 8}),
+                        ("hybrid_1_7", {"num_layers": 8})):
+        cfg = dataclasses.replace(POCKET, attn_pattern=pattern, **kw)
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, scheme="bf16", max_batch=2,
+                          max_len=64, spec_len=4)
+        vanilla = eng.serve_queue(_mixed_requests(4, seed=3), spec_len=0)
+        eng.reset_stats()
+        spec = eng.serve_queue(_mixed_requests(4, seed=3))
+        assert spec == vanilla, pattern
+        assert eng.stats["spec_steps"] == 0
+        assert eng.stats["spec_fallbacks"] == 1
+
+
+def test_spec_eos_and_temperature_complete():
+    """EOS inside an accepted draft window stops at the first occurrence;
+    temperature queues emit full budgets (values differ from vanilla by
+    design — speculation preserves the distribution, not the draws)."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=2,
+                      max_len=64)
+    prompt = np.arange(9, dtype=np.int32)
+    full = eng.serve_queue([Request(uid=0, prompt=prompt,
+                                    max_new_tokens=8)], spec_len=4)[0]
+    eos = full[3]
+    got = eng.serve_queue([Request(uid=0, prompt=prompt, max_new_tokens=8,
+                                   eos_id=int(eos))], spec_len=4)[0]
+    assert got == full[:full.index(eos) + 1]
+    reqs = _mixed_requests(5, temp=0.7, seed=9)
+    res = eng.serve_queue(_mixed_requests(5, temp=0.7, seed=9), spec_len=3)
+    for r in reqs:
+        assert len(res[r.uid]) <= r.max_new_tokens
+        assert len(res[r.uid]) >= 1
+
+
+def test_spec_acceptance_counters_and_sync_bound():
+    """accepted_tokens/draft_tokens expose the acceptance rate; emitted
+    tokens match useful_slot_steps; one host sync per admission plus one
+    per macro-step regardless of how many tokens a verify emits."""
+    k = 4
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=3,
+                      max_len=96, macro_steps=k, spec_len=4)
+    reqs = [Request(uid=i,
+                    prompt=(np.arange(8, dtype=np.int32) + i * 3)
+                    % POCKET.vocab_size,
+                    max_new_tokens=24) for i in range(5)]
+    res = eng.serve_queue(reqs)
+    total = sum(len(v) for v in res.values())
+    s = eng.stats
+    assert s["admitted"] == len(reqs)
+    assert s["host_syncs"] == s["admitted"] + s["macro_steps"]
+    assert s["useful_slot_steps"] == total - s["admitted"]
+    assert 0 < s["accepted_tokens"] <= s["draft_tokens"]
+    assert s["spec_steps"] <= (s["macro_steps"]
+                               - s["spec_throttled_macros"]) * k
+    # a verify step emits at least one token per active slot, so executed
+    # steps can never exceed emitted tokens
+    assert s["spec_steps"] <= s["useful_slot_steps"]
+
+
+def test_spec_throttle_on_zero_acceptance():
+    """A random-weight draft MODEL accepts ~nothing under greedy decoding;
+    the adaptive throttle must kick in (vanilla macros between probes)
+    while results stay exactly the vanilla ones."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=2,
+                      max_len=96, spec_len=3, draft=POCKET,
+                      spec_probe_every=4)
+    reqs = lambda: [Request(uid=i,
+                            prompt=(np.arange(10, dtype=np.int32) + i)
+                            % POCKET.vocab_size,
+                            max_new_tokens=30) for i in range(2)]
+    vanilla = eng.serve_queue(reqs(), spec_len=0)
+    eng.reset_stats()
+    spec = eng.serve_queue(reqs())
+    assert spec == vanilla
+    # a random draft can argmax-collide occasionally; near-zero is the point
+    assert eng.stats["accepted_tokens"] <= 0.1 * eng.stats["draft_tokens"]
+    assert eng.stats["spec_throttled_macros"] > 0
+
+
+def test_spec_draft_model_self_draft_full_acceptance():
+    """Drafting with the target model itself must accept every draft (the
+    verify argmax IS the draft argmax) — the upper bound of the
+    acceptance telemetry."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=2,
+                      max_len=96, spec_len=3, draft=POCKET,
+                      draft_params=PARAMS32)
+    reqs = [Request(uid=i, prompt=np.arange(9, dtype=np.int32) + i,
+                    max_new_tokens=17) for i in range(3)]
+    vanilla = eng.serve_queue(
+        [Request(uid=i, prompt=np.arange(9, dtype=np.int32) + i,
+                 max_new_tokens=17) for i in range(3)], spec_len=0)
+    eng.reset_stats()
+    res = eng.serve_queue(reqs)
+    assert res == vanilla
+    s = eng.stats
+    assert s["draft_tokens"] > 0
+    assert s["accepted_tokens"] == s["draft_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# leapfrog acceptance: distributional correctness
+# ---------------------------------------------------------------------------
+
+def _accept_marginal(q_dists, temp, n=20000):
+    """Empirical marginal of the FIRST emitted token when drafts are drawn
+    from q_dists (``None``: the deterministic-draft path, fixed draft
+    token), for a fixed target logit row."""
+    vocab, L = 8, 1
+    logits = jax.random.normal(jax.random.PRNGKey(5), (L + 1, vocab)) * 2.0
+
+    def trial(key):
+        if q_dists is None:
+            d = jnp.array(2)                 # fixed deterministic proposal
+        else:
+            key, sub = jax.random.split(key)
+            d = jax.random.categorical(sub, jnp.log(q_dists[0] + 1e-30))
+        toks, _, _ = _spec_accept(logits, d[None], q_dists, temp, key, vocab)
+        return toks[0]
+
+    toks = jax.vmap(trial)(jax.random.split(jax.random.PRNGKey(7), n))
+    emp = np.bincount(np.asarray(toks), minlength=vocab) / n
+    target = np.asarray(jax.nn.softmax(logits[0] / temp))
+    return emp, target
+
+
+def test_spec_accept_preserves_target_distribution():
+    """Leapfrog acceptance (Leviathan et al.): whatever the proposal
+    distribution — broad, explicit one-hot, or the q_dists=None
+    deterministic-draft fast path (the n-gram table) — the first emitted
+    token's marginal must be the target softmax."""
+    vocab = 8
+    cases = [
+        jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3),
+                                         (1, vocab))),         # broad
+        jax.nn.one_hot(jnp.array([2]), vocab),                 # one-hot
+        None,                                  # deterministic fast path
+    ]
+    for q_dists in cases:
+        emp, target = _accept_marginal(q_dists, temp=0.8)
+        np.testing.assert_allclose(emp, target, atol=0.02)
+
+
+def test_spec_accept_greedy_is_argmax():
+    """temp == 0: the first emitted token is the target argmax no matter
+    what was drafted."""
+    vocab = 8
+    logits = jax.random.normal(jax.random.PRNGKey(5), (3, vocab)) * 2.0
+    for d in range(vocab):
+        toks, n_acc, _ = _spec_accept(
+            logits, jnp.array([d, d]), jax.nn.one_hot(jnp.array([d, d]),
+                                                      vocab),
+            0.0, jax.random.PRNGKey(0), vocab)
+        assert int(toks[0]) == int(jnp.argmax(logits[0])) or \
+            (int(n_acc) > 0 and d == int(jnp.argmax(logits[0])))
+
+
+# ---------------------------------------------------------------------------
+# admission token budget
+# ---------------------------------------------------------------------------
+
+def test_admit_budget_parity_and_deferrals():
+    """A tight shared budget defers chunks (decode priority) without
+    changing any emitted token; a loose budget admits several chunks per
+    iteration, also without changing results."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=4,
+                      max_len=64)
+    mk = lambda: [Request(uid=i,
+                          prompt=(np.arange(20, dtype=np.int32) + 5 * i)
+                          % POCKET.vocab_size,
+                          max_new_tokens=6) for i in range(6)]
+    free = eng.serve_queue(mk(), prefill_chunk=6, admit_budget=0)
+    eng.reset_stats()
+    tight = eng.serve_queue(mk(), prefill_chunk=6, admit_budget=6)
+    assert tight == free
+    assert eng.stats["budget_deferred_admissions"] > 0
+    eng.reset_stats()
+    loose = eng.serve_queue(mk(), prefill_chunk=6, admit_budget=1000)
+    assert loose == free
+    assert eng.stats["budget_deferred_admissions"] == 0
+
+
+def test_admit_budget_oversized_prompt_progresses():
+    """A prompt longer than the budget must still admit (first admission
+    of an iteration ignores the cap) — no starvation."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=2,
+                      max_len=64, admit_budget=4)
+    res = eng.serve_queue([Request(uid=0,
+                                   prompt=np.arange(30, dtype=np.int32),
+                                   max_new_tokens=4)])
+    assert len(res[0]) == 4
+
+
+# ---------------------------------------------------------------------------
+# HAQA search space + unroll knob
+# ---------------------------------------------------------------------------
+
+def test_serve_space_registers_spec_knobs():
+    from repro.core import serve_space
+    space = serve_space()
+    names = set(space.names)
+    assert {"spec_len", "draft_mode", "macro_steps",
+            "flash_decode_block_k", "flash_decode_k_splits",
+            "flash_verify_block_k", "flash_verify_k_splits"} <= names
+    defaults = space.defaults()
+    assert not space.validate(defaults)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        cfgd = space.sample(rng)
+        assert not space.validate(space.clamp(cfgd))
+    # prompt rendering (the paper's agent prompt) mentions every knob
+    text = space.prompt_text()
+    for n in names:
+        assert f"'{n}'" in text
+
+
+def test_decode_unroll_threshold_consulted_at_call_time():
+    """DECODE_UNROLL_MAX_LAYERS is a module global (env-overridable, and
+    settable by the launcher flag): decode_step must consult it at trace
+    time — threshold 0 keeps the layer scan, a large threshold unrolls."""
+    cache = tfm.init_cache(POCKET, 1, 16)
+    toks = jnp.zeros((1, 1), jnp.int32)
+    old = tfm.DECODE_UNROLL_MAX_LAYERS
+    try:
+        tfm.DECODE_UNROLL_MAX_LAYERS = 0
+        jaxpr_scan = jax.make_jaxpr(
+            lambda p, c, t: tfm.decode_step(p, POCKET, c, tokens=t))(
+            PARAMS32, cache, toks)
+        tfm.DECODE_UNROLL_MAX_LAYERS = 99
+        jaxpr_unroll = jax.make_jaxpr(
+            lambda p, c, t: tfm.decode_step(p, POCKET, c, tokens=t))(
+            PARAMS32, cache, toks)
+    finally:
+        tfm.DECODE_UNROLL_MAX_LAYERS = old
+    prims_scan = {e.primitive.name for e in jaxpr_scan.eqns}
+    prims_unroll = {e.primitive.name for e in jaxpr_unroll.eqns}
+    assert "scan" in prims_scan
+    assert "scan" not in prims_unroll
