@@ -32,6 +32,16 @@ tokens per request):
 * ``queue/unroll_gap`` — scanned vs python-unrolled decode-step latency
   (the DECODE_UNROLL_MAX_LAYERS crossover), so deep-model regressions on
   the scanned path stay visible.
+* ``queue/paged_*`` — the paged KV cache (ISSUE 4).  (a) Concurrency at
+  equal memory: a contiguous engine reserves ``max_len`` rows per slot, so
+  a mixed long/short workload is capped at ``memory / max_len`` concurrent
+  requests; the paged engine spends the SAME row budget as a shared page
+  pool over more slots and sustains more concurrent requests
+  (``peak_active_slots``).  (b) Eviction smoke: a deliberately undersized
+  pool must evict+requeue (nonzero ``evictions``) and still finish every
+  request with tokens matching the contiguous run (evicted requests
+  re-prefill their generated prefix; greedy parity asserted on f32 weights
+  for the same reassociation reason as the spec sweep).
 
 Everything is also written machine-readably to ``benchmarks/BENCH_serve.json``
 (tokens/s, TTFT p50/p99, host_syncs/token, criteria booleans).
@@ -92,6 +102,123 @@ def _warmup(engine: ServeEngine, base_len: int = PROMPT_LEN) -> None:
         Request(uid=9_001, prompt=np.arange(base_len, dtype=np.int32)
                 % POCKET.vocab_size, max_new_tokens=2),
     ])
+
+
+def _paged_section(bench: Dict, rows: List[Row], ci: bool,
+                   page_size: int, kv_pages: int) -> None:
+    """Paged vs contiguous KV cache (ISSUE 4).
+
+    Concurrency: both engines get the SAME total KV rows.  The contiguous
+    engine must carve them into ``max_len`` worst-case stripes (few slots);
+    the paged engine shares them as a page pool across 3x the slots, so a
+    mixed long/short workload runs more requests concurrently — the
+    fragmentation win paging exists for.  Eviction: an undersized pool must
+    evict+requeue (never crash or drop) and, because preempted requests
+    resume from their generated prefix with their PRNG stream preserved,
+    finish with exactly the contiguous run's tokens (f32 weights: re-prefill
+    reassociates bf16 near-ties, the same artifact the spec sweep documents).
+    """
+    params32 = tfm.init_params(jax.random.PRNGKey(0), POCKET,
+                               dtype=jnp.float32)
+    out: Dict[str, object] = {"page_size": page_size}
+    bench["paged"] = out
+
+    # -- concurrency at equal memory ----------------------------------------
+    long_len = 64 if ci else 128
+    short_len, new_tokens = 12, 12
+    contig_slots = 2 if ci else 4
+    paged_slots = 3 * contig_slots
+    max_len = long_len + new_tokens + 8
+    ps = 32
+    # floor: the paged pool never gets MORE rows than the contiguous layout
+    pool_pages = (contig_slots * max_len) // ps
+    n_short = 3 * contig_slots if ci else 4 * contig_slots
+
+    def workload():
+        rng = np.random.default_rng(5)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, POCKET.vocab_size,
+                                            (short_len,)).astype(np.int32),
+                        max_new_tokens=new_tokens) for i in range(n_short)]
+        for j in range(2):
+            reqs.insert(j * (n_short // 2), Request(
+                uid=1000 + j,
+                prompt=rng.integers(0, POCKET.vocab_size,
+                                    (long_len,)).astype(np.int32),
+                max_new_tokens=new_tokens))
+        return reqs
+
+    conc = {}
+    for name, eng in (
+            ("contiguous", ServeEngine(POCKET, tfm.init_params(
+                jax.random.PRNGKey(0), POCKET), scheme="bf16",
+                max_batch=contig_slots, max_len=max_len, macro_steps=4,
+                kv_layout="contiguous")),
+            ("paged", ServeEngine(POCKET, tfm.init_params(
+                jax.random.PRNGKey(0), POCKET), scheme="bf16",
+                max_batch=paged_slots, max_len=max_len, macro_steps=4,
+                page_size=ps, kv_pages=pool_pages))):
+        queue_throughput(eng, workload())                # warmup/compile
+        eng.reset_stats()
+        stats = queue_throughput(eng, workload())
+        conc[name] = {
+            "slots": eng.max_batch,
+            "kv_rows": (eng.kv_pages * eng.page_size if eng.paged
+                        else eng.max_batch * eng.max_len),
+            "peak_active_slots": eng.stats["peak_active_slots"],
+            "peak_pages_in_use": eng.stats["peak_pages_in_use"],
+            "evictions": eng.stats["evictions"],
+            "tokens_per_s": stats["tokens_per_s"],
+            "ttft_mean_s": stats["ttft_mean_s"],
+            "ttft_p99_s": stats["ttft_p99_s"],
+        }
+        rows.append(Row(
+            name=f"serve_queue/paged_concurrency_{name}",
+            us_per_call=1e6 / max(stats["tokens_per_s"], 1e-9),
+            derived=f"{conc[name]['peak_active_slots']} peak active slots "
+                    f"@ {conc[name]['kv_rows']} KV rows; "
+                    f"{stats['tokens_per_s']:.1f} tok/s; TTFT mean "
+                    f"{stats['ttft_mean_s'] * 1e3:.0f}ms"))
+    out["concurrency"] = conc
+    out["more_concurrent_ok"] = bool(
+        conc["paged"]["peak_active_slots"]
+        > conc["contiguous"]["peak_active_slots"])
+
+    # -- eviction smoke: undersized pool, parity with contiguous ------------
+    ev_len, ev_new, ev_slots = 64, 20, 4
+    plen = int(page_size * 0.75)                  # grows past its first page
+    if kv_pages <= 0:
+        kv_pages = ev_slots + 1
+    mk = lambda: [Request(uid=i, prompt=(np.arange(plen, dtype=np.int32)
+                                         + 7 * i) % POCKET.vocab_size,
+                          max_new_tokens=ev_new) for i in range(6)]
+    contig = ServeEngine(POCKET, params32, scheme="bf16", max_batch=ev_slots,
+                         max_len=ev_len + ev_new, kv_layout="contiguous")
+    paged = ServeEngine(POCKET, params32, scheme="bf16", max_batch=ev_slots,
+                        max_len=ev_len + ev_new, page_size=page_size,
+                        kv_pages=kv_pages)
+    base = contig.serve_queue(mk())
+    paged.reset_stats()
+    got = paged.serve_queue(mk())
+    ev = {
+        "page_size": page_size,
+        "kv_pages": kv_pages,
+        "evictions": paged.stats["evictions"],
+        "peak_pages_in_use": paged.stats["peak_pages_in_use"],
+        "rejected_requests": paged.stats["rejected_requests"],
+        "all_complete": bool(all(len(got[r.uid]) == ev_new for r in mk())),
+        "parity": bool(got == base),
+    }
+    out["eviction"] = ev
+    out["evictions_nonzero"] = bool(ev["evictions"] > 0)
+    out["eviction_parity_ok"] = bool(ev["parity"] and ev["all_complete"])
+    rows.append(Row(
+        name="serve_queue/paged_eviction",
+        us_per_call=0.0,
+        derived=f"{ev['evictions']} evictions @ pool={kv_pages}x"
+                f"{page_size} rows; parity="
+                f"{'ok' if ev['parity'] else 'FAIL'}; "
+                f"complete={'ok' if ev['all_complete'] else 'FAIL'}"))
 
 
 def _pertoken_pr1(engine: ServeEngine, requests: List[Request],
@@ -431,7 +558,8 @@ def _longprompt_scenario(params, short_len: int, new_tokens: int,
 
 
 def run(scale: str = None, ci: bool = False, spec_len: int = 4,
-        draft: str = "ngram") -> List[Row]:
+        draft: str = "ngram", page_size: int = 32,
+        kv_pages: int = 0) -> List[Row]:
     batch = 4 if ci else BATCH
     new_tokens = 16 if ci else NEW_TOKENS
     num_reqs = 6 if ci else NUM_REQS
@@ -452,10 +580,14 @@ def run(scale: str = None, ci: bool = False, spec_len: int = 4,
         _spec_sweep(batch, macro_k=4 if ci else 8, spec_len=spec_len,
                     bench=bench, rows=rows, ci=ci, draft=draft)
 
+    # -- paged vs contiguous KV cache (concurrency + eviction smoke) --------
+    _paged_section(bench, rows, ci, page_size=page_size, kv_pages=kv_pages)
+
     # -- PR 1 per-token scheduler (one host round-trip per token) -----------
     eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
                       max_len=PROMPT_LEN + new_tokens + 8,
-                      decode_unroll=False)       # the decode step PR 1 shipped
+                      decode_unroll=False,       # the decode step PR 1 shipped
+                      kv_layout="contiguous")    # (PR 1 had no page pool)
     _pertoken_pr1(eng, _requests(2, 2))                  # warmup/compile
     eng.reset_stats()
     pr1_reqs = _requests(num_reqs, new_tokens)
@@ -607,8 +739,14 @@ def main() -> None:
     ap.add_argument("--draft", default="ngram", choices=["ngram"],
                     help="draft source for the spec sweep (model-free "
                          "n-gram only in the bench)")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="page size for the paged-KV eviction smoke")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="pool pages for the paged-KV eviction smoke "
+                         "(0 = slots+1, small enough to force evictions)")
     args = ap.parse_args()
-    for r in run(ci=args.ci, spec_len=args.spec_len, draft=args.draft):
+    for r in run(ci=args.ci, spec_len=args.spec_len, draft=args.draft,
+                 page_size=args.page_size, kv_pages=args.kv_pages):
         print(r.csv())
     if args.ci:
         path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -635,6 +773,19 @@ def main() -> None:
             if not sp["accepted_nonzero"]:
                 failures.append("speculative decode accepted zero draft "
                                 "tokens on the greedy workload")
+        pg = bench["paged"]
+        if not pg["more_concurrent_ok"]:
+            failures.append(
+                "paged pool did not sustain more concurrent slots than "
+                f"contiguous at equal memory "
+                f"({pg['concurrency']['paged']['peak_active_slots']} vs "
+                f"{pg['concurrency']['contiguous']['peak_active_slots']})")
+        if not pg["evictions_nonzero"]:
+            failures.append("undersized paged pool recorded ZERO evictions")
+        if not pg["eviction_parity_ok"]:
+            failures.append(
+                "paged run under eviction did not match the contiguous "
+                "run's tokens (or dropped requests)")
         if failures:
             print("CI smoke FAILED:\n  " + "\n  ".join(failures),
                   file=sys.stderr)

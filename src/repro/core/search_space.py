@@ -254,14 +254,18 @@ def deploy_space(kernel: str) -> SearchSpace:
 
 def serve_space() -> SearchSpace:
     """Serving-deployment knobs for the HAQA loop (Table-3 style): the
-    speculative-decode schedule plus the flash-decode / flash-verify kernel
-    tiles.  These are exactly the counterintuitive, hardware-dependent
-    knobs the paper's agent is built to tune — the optimal draft length
-    trades verify-step arithmetic intensity against acceptance rate, and
-    the optimal split-K point moves with it."""
+    speculative-decode schedule, the paged-KV pool geometry (page size and
+    pool fraction — the per-platform memory knob a hardware-aware agent
+    tunes against the device's HBM budget: a smaller pool admits the same
+    traffic in less memory at the cost of evictions), and the flash-decode /
+    flash-verify kernel tiles.  These are exactly the counterintuitive,
+    hardware-dependent knobs the paper's agent is built to tune — the
+    optimal draft length trades verify-step arithmetic intensity against
+    acceptance rate, and the optimal split-K point moves with it."""
     from repro.kernels import registry as kreg
     fd = kreg.KERNELS["flash_decode"].space
     fv = kreg.KERNELS["flash_verify"].space
+    pd = kreg.KERNELS["paged_flash_decode"].space
     return SearchSpace([
         UniformInt("spec_len", 0, 8, 4,
                    doc="Draft tokens proposed per speculative verify step "
@@ -271,6 +275,17 @@ def serve_space() -> SearchSpace:
                         "from the prompt, or a small draft model."),
         UniformInt("macro_steps", 1, 32, 8,
                    doc="Decode steps fused per on-device macro-step."),
+        Categorical("page_size", pd["page_size"], 64,
+                    doc="Paged-KV pool page size in rows (block-table "
+                        "granularity; smaller pages waste less memory per "
+                        "slot but widen the table and shrink kernel "
+                        "tiles)."),
+        UniformFloat("kv_pool_frac", 0.25, 1.0, 1.0,
+                     doc="Paged-KV pool size as a fraction of the "
+                         "contiguous layout's worst-case reservation "
+                         "(max_batch x max_len rows); below 1.0 the engine "
+                         "over-commits slots and relies on eviction+requeue "
+                         "under pressure."),
         Categorical("flash_decode_block_k", fd["block_k"], 128,
                     doc="flash_decode key-block tile."),
         Categorical("flash_decode_k_splits", fd["k_splits"], 4,

@@ -1,3 +1,3 @@
-from repro.kernels.attention import decode, kernel, ops, ref, verify
+from repro.kernels.attention import decode, kernel, ops, paged, ref, verify
 
-__all__ = ["decode", "kernel", "ops", "ref", "verify"]
+__all__ = ["decode", "kernel", "ops", "paged", "ref", "verify"]

@@ -9,10 +9,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import (
-    AttentionConfig, DecodeAttentionConfig, VerifyAttentionConfig,
+    AttentionConfig, DecodeAttentionConfig, PagedDecodeConfig,
+    PagedVerifyConfig, VerifyAttentionConfig,
 )
 from repro.kernels.attention import decode as D
 from repro.kernels.attention import kernel as K
+from repro.kernels.attention import paged as P
 from repro.kernels.attention import verify as V
 
 _DEFAULT_CFG = AttentionConfig()
@@ -78,6 +80,50 @@ def flash_decode(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
     out = D.flash_decode(qg, k_cache, v_cache, lengths, k_scale, v_scale,
                          cfg, cap=cap, window=window, interpret=interpret)
     return out.reshape(b, 1, h, d)
+
+
+def paged_flash_decode(q, k_pool, v_pool, block_table, lengths, page_size,
+                       k_scale=None, v_scale=None, *, cap=0.0, window=0,
+                       cfg: Optional[PagedDecodeConfig] = None,
+                       interpret: bool = False):
+    """Single-token decode against a PAGED (possibly int8) KV pool.
+
+    q: (B, 1, H, D); k/v_pool: (pool_rows, KV, D) with H % KV == 0;
+    block_table: (B, max_pages) int32 (-1 = unallocated page); lengths:
+    scalar or (B,) valid LOGICAL cache length INCLUDING the current token;
+    page_size: rows per page (pool_rows % page_size == 0);
+    k_scale/v_scale: (pool_rows, KV, 1) or (pool_rows, KV) dequant scales
+    for int8 pools.  Returns (B, 1, H, D).
+    """
+    b, s1, h, d = q.shape
+    kv = k_pool.shape[1]
+    qg = q[:, 0].reshape(b, kv, h // kv, d)
+    out = P.paged_flash_decode(qg, k_pool, v_pool, block_table, lengths,
+                               page_size, k_scale, v_scale, cfg, cap=cap,
+                               window=window, interpret=interpret)
+    return out.reshape(b, 1, h, d)
+
+
+def paged_flash_verify(q, k_pool, v_pool, block_table, lengths, page_size,
+                       k_scale=None, v_scale=None, *, cap=0.0, window=0,
+                       cfg: Optional[PagedVerifyConfig] = None,
+                       interpret: bool = False):
+    """Multi-position speculative verify against a PAGED (possibly int8) KV
+    pool.  q: (B, S, H, D) — S = spec_len + 1 query rows per slot at logical
+    positions lengths[b] + i, whose K/V rows are already scattered into the
+    pool through the block table; lengths: committed LOGICAL rows per slot
+    BEFORE the verify (EXCLUDING the S new rows).  Returns (B, S, H, D).
+    """
+    b, s, h, d = q.shape
+    kv = k_pool.shape[1]
+    g = h // kv
+    qg = (q.reshape(b, s, kv, g, d).transpose(0, 2, 1, 3, 4)
+          .reshape(b, kv, s * g, d))
+    out = P.paged_flash_verify(qg, k_pool, v_pool, block_table, lengths,
+                               page_size, g, k_scale, v_scale, cfg, cap=cap,
+                               window=window, interpret=interpret)
+    return (out.reshape(b, kv, s, g, d).transpose(0, 2, 1, 3, 4)
+            .reshape(b, s, h, d))
 
 
 def flash_verify(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,

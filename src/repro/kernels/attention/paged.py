@@ -1,0 +1,334 @@
+"""Pallas paged flash-decode / flash-verify: block-table-indexed KV pools.
+
+The paged siblings of ``decode.py`` / ``verify.py``: K/V live in a global
+pool of fixed-size pages shared by every slot and a (B, max_pages) int32
+block table maps a slot's logical page p to its physical pool page (or -1
+when unallocated).  The grid is (B, KV_heads, max_pages) — every program
+owns one (batch, kv-head) pair and ONE logical page of that slot's cache —
+and the page's physical K/V tile is fetched by the BlockSpec ``index_map``
+reading the block table from the scalar-prefetch operand.  That is the
+whole trick: the DMA engine walks the page table, so the slot's logically
+contiguous cache is never gathered into a contiguous buffer (the XLA
+fallback in ``repro.models.attention`` does gather — it exists for
+correctness on non-TPU backends, not for memory).
+
+Everything else matches the dense kernels: online softmax over ``block_k``
+tiles inside the page, tile-wise int8 dequant in VMEM, skipped
+out-of-range/unallocated pages, unnormalized (acc, m, l) partials merged by
+a logsumexp combine in the wrapper.  Per-page partials play the role the
+split-K partials play in the dense kernels — the split factor is simply the
+page count, so decode latency scales with ``cache_len / page_size`` pages
+of parallel work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+from repro.kernels.common import PagedDecodeConfig, PagedVerifyConfig
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                         block_k, page_size, scale, cap, window, quantized):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        o_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    length = len_ref[b]
+    page = bt_ref[b, p]
+    k_lo = p * page_size                    # logical row of the page's row 0
+    g, d = q_ref.shape[2], q_ref.shape[3]
+
+    needed = jnp.logical_and(k_lo < length, page >= 0)
+    if window and window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_lo + page_size > length - window)
+
+    @pl.when(jnp.logical_not(needed))
+    def _skip():
+        o_ref[0, 0, 0] = jnp.zeros_like(o_ref[0, 0, 0])
+        m_ref[0, 0, 0] = jnp.full_like(m_ref[0, 0, 0], NEG_INF)
+        l_ref[0, 0, 0] = jnp.zeros_like(l_ref[0, 0, 0])
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+
+        def body(i, carry):
+            m, l, acc = carry
+            rows = pl.ds(i * block_k, block_k)
+            kb = k_ref[0, rows, 0, :].astype(jnp.float32)       # (bk, D)
+            vb = v_ref[0, rows, 0, :].astype(jnp.float32)
+            if quantized:
+                kb = kb * ks_ref[0, rows, 0][:, None]
+                vb = vb * vs_ref[0, rows, 0][:, None]
+            x = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ()))) * scale
+            if cap and cap > 0:
+                x = cap * jnp.tanh(x / cap)
+            kpos = k_lo + i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (g, block_k), 1)
+            valid = kpos < length
+            if window and window > 0:
+                valid = jnp.logical_and(valid, kpos >= length - window)
+            x = jnp.where(valid, x, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+            m_safe = jnp.maximum(m_new, -0.5e30)
+            pr = jnp.exp(x - m_safe)
+            corr = jnp.exp(jnp.maximum(m, -0.5e30) - m_safe)
+            l_new = l * corr + jnp.sum(pr, axis=-1, keepdims=True)
+            acc_new = acc * corr + jax.lax.dot_general(
+                pr, vb, (((1,), (0,)), ((), ())))
+            return m_new, l_new, acc_new
+
+        init = (jnp.full((g, 1), NEG_INF, jnp.float32),
+                jnp.zeros((g, 1), jnp.float32),
+                jnp.zeros((g, d), jnp.float32))
+        m, l, acc = jax.lax.fori_loop(0, page_size // block_k, body, init)
+        o_ref[0, 0, 0] = acc
+        m_ref[0, 0, 0] = m[:, 0]
+        l_ref[0, 0, 0] = l[:, 0]
+
+
+def _paged_verify_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                         block_k, page_size, gq, scale, cap, window,
+                         quantized):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        o_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    length = len_ref[b]                  # committed rows BEFORE the verify
+    page = bt_ref[b, p]
+    k_lo = p * page_size
+    rows, d = q_ref.shape[2], q_ref.shape[3]           # rows == S * G
+    n_pos = rows // gq
+
+    # the deepest query (position n_pos - 1) sees rows < length + n_pos
+    needed = jnp.logical_and(k_lo < length + n_pos, page >= 0)
+    if window and window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_lo + page_size > length + 1 - window)
+
+    @pl.when(jnp.logical_not(needed))
+    def _skip():
+        o_ref[0, 0, 0] = jnp.zeros_like(o_ref[0, 0, 0])
+        m_ref[0, 0, 0] = jnp.full_like(m_ref[0, 0, 0], NEG_INF)
+        l_ref[0, 0, 0] = jnp.zeros_like(l_ref[0, 0, 0])
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (S*G, D)
+        pos_of_row = jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_k), 0) // gq
+
+        def body(i, carry):
+            m, l, acc = carry
+            krows = pl.ds(i * block_k, block_k)
+            kb = k_ref[0, krows, 0, :].astype(jnp.float32)  # (bk, D)
+            vb = v_ref[0, krows, 0, :].astype(jnp.float32)
+            if quantized:
+                kb = kb * ks_ref[0, krows, 0][:, None]
+                vb = vb * vs_ref[0, krows, 0][:, None]
+            x = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ()))) * scale
+            if cap and cap > 0:
+                x = cap * jnp.tanh(x / cap)
+            kpos = k_lo + i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (rows, block_k), 1)
+            # staircase causality: position s sees kpos <= length + s
+            valid = kpos < length + pos_of_row + 1
+            if window and window > 0:
+                valid = jnp.logical_and(
+                    valid, kpos > length + pos_of_row - window)
+            x = jnp.where(valid, x, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+            m_safe = jnp.maximum(m_new, -0.5e30)
+            pr = jnp.exp(x - m_safe)
+            corr = jnp.exp(jnp.maximum(m, -0.5e30) - m_safe)
+            l_new = l * corr + jnp.sum(pr, axis=-1, keepdims=True)
+            acc_new = acc * corr + jax.lax.dot_general(
+                pr, vb, (((1,), (0,)), ((), ())))
+            return m_new, l_new, acc_new
+
+        init = (jnp.full((rows, 1), NEG_INF, jnp.float32),
+                jnp.zeros((rows, 1), jnp.float32),
+                jnp.zeros((rows, d), jnp.float32))
+        m, l, acc = jax.lax.fori_loop(0, page_size // block_k, body, init)
+        o_ref[0, 0, 0] = acc
+        m_ref[0, 0, 0] = m[:, 0]
+        l_ref[0, 0, 0] = l[:, 0]
+
+
+def _combine(o_part, m_part, l_part, dtype):
+    """Logsumexp merge of per-page partials (page axis == 2)."""
+    m = jnp.maximum(jnp.max(m_part, axis=2, keepdims=True), -0.5e30)
+    w = jnp.exp(jnp.maximum(m_part, -0.5e30) - m)
+    denom = jnp.sum(l_part * w, axis=2)
+    out = jnp.sum(o_part * w[..., None], axis=2)
+    out = out / jnp.maximum(denom, 1e-30)[..., None]
+    return out.astype(dtype)
+
+
+def _page_pools(k, v, k_scale, v_scale, page_size):
+    """Reshape flat (pool_rows, KV, D) pools to (P, page_size, KV, D)."""
+    rows, kv, d = k.shape
+    assert rows % page_size == 0, (rows, page_size)
+    n = rows // page_size
+    k = k.reshape(n, page_size, kv, d)
+    v = v.reshape(n, page_size, kv, d)
+    if k_scale is not None:
+        k_scale = k_scale.reshape(n, page_size, kv).astype(jnp.float32)
+        v_scale = v_scale.reshape(n, page_size, kv).astype(jnp.float32)
+    return n, k, v, k_scale, v_scale
+
+
+def paged_flash_decode(q, k, v, block_table, lengths, page_size,
+                       k_scale=None, v_scale=None,
+                       cfg: PagedDecodeConfig = None, *, cap: float = 0.0,
+                       window: int = 0, interpret: bool = False):
+    """q: (B, KV, G, D); k/v: (pool_rows, KV, D) paged pools [int8 or float];
+    block_table: (B, max_pages) int32 (-1 = unallocated); lengths: (B,) int32
+    valid LOGICAL cache length per slot INCLUDING the current token;
+    k_scale/v_scale: (pool_rows, KV) dequant scales (required iff int8).
+
+    Returns (B, KV, G, D) in q.dtype.
+    """
+    cfg = cfg or PagedDecodeConfig()
+    b, kv, g, d = q.shape
+    quantized = k_scale is not None
+    if k_scale is not None and k_scale.ndim == 3:
+        k_scale, v_scale = k_scale[..., 0], v_scale[..., 0]
+    _, k, v, k_scale, v_scale = _page_pools(k, v, k_scale, v_scale, page_size)
+    n_pages = block_table.shape[1]
+    bk = min(cfg.block_k, page_size)
+    assert page_size % bk == 0, (page_size, bk)
+
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    block_table = jnp.asarray(block_table, jnp.int32)
+
+    def kv_map(bi, h, p, bt_ref, *_refs):
+        # the DMA walks the page table: physical page (clamped so that even
+        # an unallocated page DMAs a real tile — the kernel masks it)
+        return (jnp.maximum(bt_ref[bi, p], 0), 0, h, 0)
+
+    kv_spec = pl.BlockSpec((1, page_size, 1, d), kv_map)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bi, h, p, *_refs: (bi, h, 0, 0)),
+        kv_spec, kv_spec,
+    ]
+    args = [q, k, v]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, page_size, 1),
+                               lambda bi, h, p, bt_ref, *_refs:
+                               (jnp.maximum(bt_ref[bi, p], 0), 0, h))
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, n_pages),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda bi, h, p, *_refs: (bi, h, p, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda bi, h, p, *_refs: (bi, h, p, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda bi, h, p, *_refs: (bi, h, p, 0)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, block_k=bk,
+                          page_size=page_size, scale=d ** -0.5, cap=cap,
+                          window=window, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, n_pages, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, n_pages, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, n_pages, g), jnp.float32),
+        ],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(block_table, lengths, *args)
+    return _combine(o_part, m_part, l_part, q.dtype)
+
+
+def paged_flash_verify(q, k, v, block_table, lengths, page_size, gq,
+                       k_scale=None, v_scale=None,
+                       cfg: PagedVerifyConfig = None, *, cap: float = 0.0,
+                       window: int = 0, interpret: bool = False):
+    """q: (B, KV, S*G, D) — S draft positions x G grouped query heads,
+    position-major (row r = position r // G); k/v: (pool_rows, KV, D) paged
+    pools with the S new rows already scattered at logical rows
+    [lengths[b], lengths[b] + S); block_table: (B, max_pages) int32;
+    lengths: (B,) committed LOGICAL rows per slot BEFORE the verify; gq: G.
+
+    Returns (B, KV, S*G, D) in q.dtype.
+    """
+    cfg = cfg or PagedVerifyConfig()
+    b, kv, rows, d = q.shape
+    assert rows % gq == 0, (rows, gq)
+    quantized = k_scale is not None
+    if k_scale is not None and k_scale.ndim == 3:
+        k_scale, v_scale = k_scale[..., 0], v_scale[..., 0]
+    _, k, v, k_scale, v_scale = _page_pools(k, v, k_scale, v_scale, page_size)
+    n_pages = block_table.shape[1]
+    bk = min(cfg.block_k, page_size)
+    assert page_size % bk == 0, (page_size, bk)
+
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    block_table = jnp.asarray(block_table, jnp.int32)
+
+    def kv_map(bi, h, p, bt_ref, *_refs):
+        return (jnp.maximum(bt_ref[bi, p], 0), 0, h, 0)
+
+    kv_spec = pl.BlockSpec((1, page_size, 1, d), kv_map)
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, d),
+                     lambda bi, h, p, *_refs: (bi, h, 0, 0)),
+        kv_spec, kv_spec,
+    ]
+    args = [q, k, v]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, page_size, 1),
+                               lambda bi, h, p, bt_ref, *_refs:
+                               (jnp.maximum(bt_ref[bi, p], 0), 0, h))
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, n_pages),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, rows, d),
+                         lambda bi, h, p, *_refs: (bi, h, p, 0, 0)),
+            pl.BlockSpec((1, 1, 1, rows),
+                         lambda bi, h, p, *_refs: (bi, h, p, 0)),
+            pl.BlockSpec((1, 1, 1, rows),
+                         lambda bi, h, p, *_refs: (bi, h, p, 0)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_paged_verify_kernel, block_k=bk,
+                          page_size=page_size, gq=gq, scale=d ** -0.5,
+                          cap=cap, window=window, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, n_pages, rows, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, n_pages, rows), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, n_pages, rows), jnp.float32),
+        ],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(block_table, lengths, *args)
+    return _combine(o_part, m_part, l_part, q.dtype)

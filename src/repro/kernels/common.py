@@ -131,3 +131,36 @@ class DecodeAttentionConfig:
         assert self.block_k % SUBLANE == 0
         assert self.k_splits >= 1 and (self.k_splits & (self.k_splits - 1)) == 0, \
             "k_splits must be a power of two"
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedDecodeConfig:
+    """paged flash-decode tunables: per-page key tile plus the pool page
+    size itself.  Unlike the dense kernel's free-floating ``k_splits``,
+    the paged grid's split granularity IS the page — one program per
+    logical page — so ``page_size`` moves both the kernel's arithmetic
+    intensity and the allocator's memory granularity, which is exactly why
+    the HAQA serving loop tunes it per platform."""
+    block_k: int = 128
+    page_size: int = 64
+
+    def validate(self):
+        assert self.block_k % SUBLANE == 0
+        assert self.page_size % SUBLANE == 0
+        assert self.page_size % min(self.block_k, self.page_size) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedVerifyConfig:
+    """paged flash-verify tunables: page tile + the speculative draft
+    length the serving loop pairs the kernel with (see
+    ``VerifyAttentionConfig`` for why spec_len lives here)."""
+    block_k: int = 128
+    page_size: int = 64
+    spec_len: int = 4
+
+    def validate(self):
+        assert self.block_k % SUBLANE == 0
+        assert self.page_size % SUBLANE == 0
+        assert self.page_size % min(self.block_k, self.page_size) == 0
+        assert self.spec_len >= 1

@@ -11,7 +11,8 @@ from typing import Any, Callable, Dict, Tuple
 
 from repro.kernels.common import (
     AttentionConfig, DecodeAttentionConfig, EltwiseConfig, MatmulConfig,
-    RopeConfig, RowBlockConfig, VerifyAttentionConfig,
+    PagedDecodeConfig, PagedVerifyConfig, RopeConfig, RowBlockConfig,
+    VerifyAttentionConfig,
 )
 
 
@@ -70,6 +71,20 @@ KERNELS: Dict[str, KernelInfo] = {
                "k_splits": (1, 2, 4, 8, 16),
                "spec_len": (1, 2, 4, 8)},
         paper_table3=False),       # beyond-paper kernel (speculative verify)
+    # paged variants: the split granularity IS the pool page (one program
+    # per logical page), so page_size replaces k_splits as the tunable —
+    # and it doubles as the serving engine's allocation granularity
+    "paged_flash_decode": KernelInfo(
+        "paged_flash_decode", PagedDecodeConfig,
+        space={"block_k": (64, 128, 256, 512),
+               "page_size": (16, 32, 64, 128)},
+        paper_table3=False),       # beyond-paper kernel (paged KV decode)
+    "paged_flash_verify": KernelInfo(
+        "paged_flash_verify", PagedVerifyConfig,
+        space={"block_k": (64, 128, 256, 512),
+               "page_size": (16, 32, 64, 128),
+               "spec_len": (1, 2, 4, 8)},
+        paper_table3=False),       # beyond-paper kernel (paged verify)
 }
 
 

@@ -44,6 +44,18 @@ rejected-draft rollback destructive, so speculation silently stays off
 hot path python-unrolls the layer loop (also via the env var
 ``REPRO_DECODE_UNROLL_MAX_LAYERS``); the scanned-vs-unrolled latency gap is
 tracked in benchmarks/BENCH_serve.json.
+
+``--kv-layout``/``--page-size``/``--kv-pages`` control the paged KV cache:
+on linear (global-attention) plans the engine replaces per-slot contiguous
+``max_len`` stripes with a global pool of fixed-size pages shared by all
+slots through a block table (vLLM-style), so long and short requests share
+memory at page granularity.  ``--kv-pages 0`` sizes the pool to the
+contiguous layout's worst case; smaller pools over-commit the slots and
+evict+requeue the youngest requests under pressure (``evictions`` in the
+stats line; evicted requests resume with their generated prefix, never
+dropped).  Ring-buffer/SSM plans keep the contiguous layout.  Requests
+whose prompt+budget exceed capacity are rejected per-request with
+``Request.error`` instead of crashing the batch.
 """
 from __future__ import annotations
 
@@ -95,6 +107,19 @@ def main():
                     help="unroll the decode layer loop for models at or "
                          "below this depth (default: env "
                          "REPRO_DECODE_UNROLL_MAX_LAYERS or 16)")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "paged", "contiguous"],
+                    help="KV cache layout: 'auto' pages linear "
+                         "(global-attention) plans and keeps ring-buffer/"
+                         "SSM plans contiguous")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="rows per paged-KV pool page (block-table "
+                         "granularity)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="total pages in the shared KV pool (0 = match the "
+                         "contiguous layout's worst-case memory; smaller "
+                         "over-commits slots and evicts+requeues under "
+                         "pressure)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -121,7 +146,9 @@ def main():
                          macro_steps=args.macro_steps,
                          prefill_chunk=args.prefill_chunk,
                          admit_budget=args.admit_budget,
-                         spec_len=args.spec_len, draft=draft)
+                         spec_len=args.spec_len, draft=draft,
+                         kv_layout=args.kv_layout, page_size=args.page_size,
+                         kv_pages=args.kv_pages)
 
     if args.queue > 0:
         rng = np.random.default_rng(args.seed)
@@ -146,6 +173,14 @@ def main():
               f"decode_steps={engine.stats['decode_steps']}, "
               f"useful_slot_steps={engine.stats['useful_slot_steps']}, "
               f"host_syncs/token={stats['host_syncs_per_token']:.3f}")
+        if engine.paged:
+            print(f"  paged kv: page_size={engine.page_size}, "
+                  f"pool={engine.kv_pages} pages "
+                  f"({engine.kv_pages * engine.page_size} rows), "
+                  f"pages_in_use peak={engine.stats['peak_pages_in_use']}, "
+                  f"evictions={engine.stats['evictions']}, "
+                  f"rejected={engine.stats['rejected_requests']}, "
+                  f"peak_active_slots={engine.stats['peak_active_slots']}")
         if args.spec_len > 0:
             drafted = max(engine.stats["draft_tokens"], 1)
             print(f"  spec: spec_steps={engine.stats['spec_steps']}, "

@@ -115,6 +115,39 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out.reshape(b, s, h, d).astype(q.dtype)
 
 
+# --- paged KV cache addressing ---------------------------------------------
+#
+# A paged cache stores K/V rows in a global pool of fixed-size pages shared by
+# every slot; a (B, max_pages) int32 block table maps a slot's logical row r
+# to physical pool row ``table[b, r // page_size] * page_size + r % page_size``
+# (-1 marks an unallocated page).  The helpers below build the gather indices
+# the XLA attention paths use to view a slot's logical cache; the Pallas paged
+# kernels index pages directly from the block table instead (no gather).
+
+def paged_view_index(block_table, page_size: int, t_logical: int):
+    """Physical pool row for each of a slot's ``t_logical`` logical rows.
+
+    block_table: (B, max_pages) int32, -1 for unallocated pages.  Rows on
+    unallocated pages map to pool row 0 — callers mask them by length, so the
+    garbage is never attended to.  Returns (B, t_logical) int32.
+    """
+    r = jnp.arange(t_logical)
+    pages = jnp.take(block_table, r // page_size, axis=1)       # (B, T)
+    return jnp.where(pages >= 0,
+                     pages * page_size + (r % page_size)[None, :], 0)
+
+
+def _paged_gather(pool, block_table, page_size: int, t_logical: int):
+    """Gather a (B, T, ...) logical view out of a (pool_rows, ...) page pool.
+
+    The view covers logical rows [0, t_logical) EXACTLY — not the page-rounded
+    capacity — so the downstream attention reductions see the same shape (and
+    therefore the same float association) as a contiguous (B, T, ...) cache:
+    paged XLA attention is bit-identical to contiguous, not just close.
+    """
+    return pool[paged_view_index(block_table, page_size, t_logical)]
+
+
 # How decode_attention executes: "xla" is the fused einsum path (works on any
 # backend and never materializes a dequantized cache), "pallas" is the
 # flash-decode split-K kernel, "pallas_interpret" runs that kernel in
@@ -141,23 +174,42 @@ def _resolve_decode_backend(backend: Optional[str]) -> str:
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
                      logit_cap: float = 0.0, k_scale=None, v_scale=None,
-                     backend: Optional[str] = None) -> jax.Array:
+                     backend: Optional[str] = None, block_table=None,
+                     page_size: int = 0, t_logical: int = 0) -> jax.Array:
     """One-token decode: q (B,1,H,D) against cache (B,T,KV,D), valid length
     ``cache_len`` (scalar or (B,) int) INCLUDING the current token.
 
     For int8 caches pass ``k_scale``/``v_scale`` ((B,T,KV,1) per-token-head
     dequant scales): the scales are folded into the score/value contractions
     so the full bf16 cache is never materialized.
+
+    With ``block_table`` (B, max_pages), the caches are PAGED pools of shape
+    (pool_rows, KV, D) shared by all slots: the XLA path gathers each slot's
+    ``t_logical``-row logical view through the table (bit-identical to the
+    contiguous layout), the Pallas path indexes K/V page tiles directly from
+    the block table without materializing the view.
     """
     b, s1, h, d = q.shape
-    t = k_cache.shape[1]
-    kvh = k_cache.shape[2]
+    kvh = k_cache.shape[-2]
     g = h // kvh
     clen = jnp.asarray(cache_len)
     if clen.ndim == 0:
         clen = jnp.full((b,), clen)
 
     mode = _resolve_decode_backend(backend)
+    if block_table is not None:
+        if mode in ("pallas", "pallas_interpret"):
+            from repro.kernels.attention import ops as kops
+            return kops.paged_flash_decode(
+                q, k_cache, v_cache, block_table, clen, page_size,
+                k_scale, v_scale, cap=logit_cap, window=window,
+                interpret=(mode == "pallas_interpret"))
+        k_cache = _paged_gather(k_cache, block_table, page_size, t_logical)
+        v_cache = _paged_gather(v_cache, block_table, page_size, t_logical)
+        if k_scale is not None:
+            k_scale = _paged_gather(k_scale, block_table, page_size, t_logical)
+            v_scale = _paged_gather(v_scale, block_table, page_size, t_logical)
+    t = k_cache.shape[1]
     if mode in ("pallas", "pallas_interpret"):
         from repro.kernels.attention import ops as kops
         return kops.flash_decode(q, k_cache, v_cache, clen, k_scale, v_scale,
@@ -187,7 +239,8 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
 
 def verify_attention(q, k_cache, v_cache, lens, *, window: int = 0,
                      logit_cap: float = 0.0, k_scale=None, v_scale=None,
-                     backend: Optional[str] = None) -> jax.Array:
+                     backend: Optional[str] = None, block_table=None,
+                     page_size: int = 0, t_logical: int = 0) -> jax.Array:
     """Multi-position speculative verify: q (B,S,H,D) — each slot's last
     token plus spec_len draft tokens, query i at global position
     ``lens[b] + i`` — against a cache (B,T,KV,D) whose rows
@@ -198,15 +251,30 @@ def verify_attention(q, k_cache, v_cache, lens, *, window: int = 0,
     over the shared cache; ``decode_attention`` is the S == 1 special case.
     For int8 caches the per-(token, head) scales fold into the contractions
     exactly as in decode — the bf16 cache is never materialized.
+
+    ``block_table``/``page_size``/``t_logical`` switch the caches to paged
+    pools exactly as in ``decode_attention``.
     """
     b, s, h, d = q.shape
-    t = k_cache.shape[1]
-    kvh = k_cache.shape[2]
+    kvh = k_cache.shape[-2]
     lens = jnp.asarray(lens)
     if lens.ndim == 0:
         lens = jnp.full((b,), lens)
 
     mode = _resolve_decode_backend(backend)
+    if block_table is not None:
+        if mode in ("pallas", "pallas_interpret"):
+            from repro.kernels.attention import ops as kops
+            return kops.paged_flash_verify(
+                q, k_cache, v_cache, block_table, lens, page_size,
+                k_scale, v_scale, cap=logit_cap, window=window,
+                interpret=(mode == "pallas_interpret"))
+        k_cache = _paged_gather(k_cache, block_table, page_size, t_logical)
+        v_cache = _paged_gather(v_cache, block_table, page_size, t_logical)
+        if k_scale is not None:
+            k_scale = _paged_gather(k_scale, block_table, page_size, t_logical)
+            v_scale = _paged_gather(v_scale, block_table, page_size, t_logical)
+    t = k_cache.shape[1]
     if mode in ("pallas", "pallas_interpret"):
         from repro.kernels.attention import ops as kops
         return kops.flash_verify(q, k_cache, v_cache, lens, k_scale, v_scale,

@@ -303,6 +303,89 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return {"blocks": blocks, "len": jnp.zeros((), jnp.int32)}
 
 
+# ---------------------------------------------------------------------------
+# paged decode cache (vLLM-style block-table layout)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static description of a paged KV cache (hashable, closed over by the
+    engine's jitted steps).
+
+    ``page_size``: rows per pool page; ``max_len``: a slot's LOGICAL cache
+    length — attention views exactly this many rows through the block table,
+    so when ``page_size`` divides ``max_len`` the paged XLA path reduces over
+    the same shapes as a contiguous cache and stays bit-identical to it.
+    """
+    page_size: int
+    max_len: int
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_len // self.page_size)
+
+
+def paged_layout_supported(cfg: ModelConfig) -> bool:
+    """Paging needs a linear cache layout: every row holds one global
+    position forever.  Local-attention ring buffers reuse rows (row r holds
+    position p with p % size == r, so a page's contents churn every window)
+    and SSM states have no rows at all — both keep the contiguous path."""
+    plan = block_plan(cfg)
+    return all(spec.mixer == "attn" and not spec.local
+               for seg in plan for spec in seg.layers)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     page_size: int, num_pages: int, dtype=jnp.bfloat16):
+    """Shared-pool paged decode cache: per layer a (num_pages * page_size,
+    KV, D) K/V pool (plus scale pools for int8), ONE (batch, pages_per_slot)
+    int32 block table shared by every layer (-1 = unallocated), and per-slot
+    lengths.  Page allocation is host-side (``repro.serve.engine``); the
+    model code only translates logical rows to physical pool rows."""
+    assert paged_layout_supported(cfg), \
+        "paged KV cache: linear global-attention plans only " \
+        "(ring-buffer/SSM plans keep the contiguous layout)"
+    plan = block_plan(cfg)
+    hd = cfg.resolved_head_dim
+    rows = num_pages * page_size
+    if cfg.kv_cache_dtype == "int8":
+        leaf = {
+            "k": jnp.zeros((rows, cfg.num_kv_heads, hd), jnp.int8),
+            "v": jnp.zeros((rows, cfg.num_kv_heads, hd), jnp.int8),
+            "k_scale": jnp.zeros((rows, cfg.num_kv_heads, 1), jnp.float16),
+            "v_scale": jnp.zeros((rows, cfg.num_kv_heads, 1), jnp.float16),
+        }
+    else:
+        leaf = {
+            "k": jnp.zeros((rows, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((rows, cfg.num_kv_heads, hd), dtype),
+        }
+    blocks = []
+    for seg in plan:
+        body = {str(j): leaf for j in range(len(seg.layers))}
+        blocks.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (seg.count,) + a.shape).copy(), body))
+    pages_per_slot = -(-max_len // page_size)
+    return {"blocks": blocks,
+            "len": jnp.zeros((batch,), jnp.int32),
+            "block_table": jnp.full((batch, pages_per_slot), -1, jnp.int32)}
+
+
+def paged_phys_rows(block_table, rows, page_size: int, t_logical: int,
+                    pool_rows: int):
+    """Physical pool row for each logical row in ``rows`` (B,) or (B, S).
+
+    Rows beyond ``t_logical`` or on unallocated pages map to ``pool_rows``
+    (one past the pool) so ``mode="drop"`` scatters discard them — the paged
+    analogue of the contiguous layout's out-of-bounds write masking."""
+    rows2 = rows if rows.ndim == 2 else rows[:, None]
+    page_idx = jnp.clip(rows2 // page_size, 0, block_table.shape[1] - 1)
+    pages = jnp.take_along_axis(block_table, page_idx, axis=1)
+    phys = pages * page_size + rows2 % page_size
+    phys = jnp.where((rows2 < t_logical) & (pages >= 0), phys, pool_rows)
+    return phys if rows.ndim == 2 else phys[:, 0]
+
+
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
 
@@ -322,12 +405,14 @@ def _write_rows(cache, rows, slots):
                                               mode="drop")
 
 
-def _attn_decode(h, p, spec, cfg, lcache, lens, active=None):
+def _attn_decode(h, p, spec, cfg, lcache, lens, active=None, paged=None):
     """One-token attention against the cache.  lens: (B,) int32 — the number
     of tokens already cached per sequence (the new token is written at row
     ``lens[b]``, so heterogeneous slot lengths batch together).  ``active``
     (B,) bool masks cache writes: inactive slots write at an out-of-bounds
-    row, which the scatter drops."""
+    row, which the scatter drops.  ``paged``: (block_table, PagedLayout) —
+    the cache leaves are then shared (pool_rows, KV, D) page pools and the
+    write/read rows go through the block table."""
     b = h.shape[0]
     hd = cfg.resolved_head_dim
     q = dense(h, p["wq"]).reshape(b, 1, cfg.num_heads, hd)
@@ -336,19 +421,39 @@ def _attn_decode(h, p, spec, cfg, lcache, lens, active=None):
     pos = lens[:, None]
     q = rope_dispatch(q, pos, cfg)
     k = rope_dispatch(k, pos, cfg)
-    size = lcache["k"].shape[1]
-    slots = (lens % size) if spec.local else lens
-    if active is not None:
-        slots = jnp.where(active, slots, size)      # OOB -> write dropped
+    paged_kw = {}
+    if paged is not None:
+        bt, layout = paged
+        pool_rows = lcache["k"].shape[0]
+        slots = paged_phys_rows(bt, lens, layout.page_size, layout.max_len,
+                                pool_rows)
+        if active is not None:
+            slots = jnp.where(active, slots, pool_rows)   # OOB -> dropped
+
+        def write(pool, vals):
+            return pool.at[slots].set(vals[:, 0].astype(pool.dtype),
+                                      mode="drop")
+
+        paged_kw = dict(block_table=bt, page_size=layout.page_size,
+                        t_logical=layout.max_len)
+    else:
+        size = lcache["k"].shape[1]
+        slots = (lens % size) if spec.local else lens
+        if active is not None:
+            slots = jnp.where(active, slots, size)  # OOB -> write dropped
+
+        def write(cache, vals):
+            return _write_rows(cache, vals, slots)
+
     k_scale = v_scale = None
     if cfg.kv_cache_dtype == "int8":
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
         new_cache = {
-            "k": _write_rows(lcache["k"], kq, slots),
-            "v": _write_rows(lcache["v"], vq, slots),
-            "k_scale": _write_rows(lcache["k_scale"], ks, slots),
-            "v_scale": _write_rows(lcache["v_scale"], vs, slots),
+            "k": write(lcache["k"], kq),
+            "v": write(lcache["v"], vq),
+            "k_scale": write(lcache["k_scale"], ks),
+            "v_scale": write(lcache["v_scale"], vs),
         }
         # scales are folded into the attention contractions (or dequantized
         # tile-wise inside the flash-decode kernel) — the full bf16 cache is
@@ -356,13 +461,17 @@ def _attn_decode(h, p, spec, cfg, lcache, lens, active=None):
         kc, vc = new_cache["k"], new_cache["v"]
         k_scale, v_scale = new_cache["k_scale"], new_cache["v_scale"]
     else:
-        kc = _write_rows(lcache["k"], k, slots)
-        vc = _write_rows(lcache["v"], v, slots)
+        kc = write(lcache["k"], k)
+        vc = write(lcache["v"], v)
         new_cache = {"k": kc, "v": vc}
-    valid = jnp.minimum(lens + 1, size) if spec.local else lens + 1
+    if paged is not None:
+        valid = lens + 1                          # paged plans are linear
+    else:
+        valid = jnp.minimum(lens + 1, size) if spec.local else lens + 1
     o = attn_lib.decode_attention(q, kc, vc, valid,
                                   logit_cap=cfg.attn_logit_softcap,
-                                  k_scale=k_scale, v_scale=v_scale)
+                                  k_scale=k_scale, v_scale=v_scale,
+                                  **paged_kw)
     out = dense(o.reshape(b, 1, cfg.num_heads * hd), p["wo"])
     return out, new_cache
 
@@ -377,10 +486,12 @@ def _apply_mlp(x, p, spec, cfg):
     return x + swiglu_mlp(h2, p["mlp"])
 
 
-def _apply_layer_decode(x, p, spec, cfg, lcache, lens, active=None):
+def _apply_layer_decode(x, p, spec, cfg, lcache, lens, active=None,
+                        paged=None):
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.mixer == "attn":
-        mix, new_cache = _attn_decode(h, p, spec, cfg, lcache, lens, active)
+        mix, new_cache = _attn_decode(h, p, spec, cfg, lcache, lens, active,
+                                      paged)
     else:
         mix, new_cache = ssm_lib.mamba_decode_step(h, lcache, p["mamba"],
                                                    cfg.ssm or SSMConfig())
@@ -412,7 +523,7 @@ DECODE_UNROLL_MAX_LAYERS = int(
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
-                active=None, unroll=None):
+                active=None, unroll=None, paged: Optional[PagedLayout] = None):
     """One-token decode.  tokens: (B, 1) int32 (or embeds (B, 1, D)).
 
     ``cache["len"]`` may be a scalar (homogeneous batch, as produced by
@@ -429,8 +540,14 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
     ``unroll`` forces the layer loop unrolled (True) or scanned (False);
     default picks by depth (see ``DECODE_UNROLL_MAX_LAYERS``).
 
+    ``paged`` (static ``PagedLayout``) must be given iff ``cache`` is an
+    ``init_paged_cache`` pytree: K/V rows are then written/read through
+    ``cache["block_table"]``.
+
     Returns (logits (B, V_padded), new_cache).
     """
+    assert (paged is not None) == ("block_table" in cache), \
+        "decode_step: pass paged=PagedLayout(...) exactly for paged caches"
     cur_len = jnp.asarray(cache["len"])
     if embeds is not None:
         x = embeds.astype(params["embed"].dtype)
@@ -441,6 +558,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
     lens = jnp.broadcast_to(cur_len, (b,)) if cur_len.ndim == 0 else cur_len
     if unroll is None:
         unroll = cfg.num_layers <= DECODE_UNROLL_MAX_LAYERS
+    pg = None if paged is None else (cache["block_table"], paged)
     x = shard_activations(x)
     plan = block_plan(cfg)
     new_blocks = []
@@ -454,7 +572,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
                 for j, spec in enumerate(seg.layers):
                     x, nc = _apply_layer_decode(x, layer_params[str(j)], spec,
                                                 cfg, layer_cache[str(j)],
-                                                lens, active)
+                                                lens, active, pg)
                     new_lc[str(j)] = nc
                 x = shard_activations(x)
                 outs.append(new_lc)
@@ -468,7 +586,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
                     xx, nc = _apply_layer_decode(xx, layer_params[str(j)],
                                                  spec, cfg,
                                                  layer_cache[str(j)], lens,
-                                                 active)
+                                                 active, pg)
                     new_lc[str(j)] = nc
                 return shard_activations(xx), new_lc
 
@@ -479,7 +597,10 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
         new_len = cur_len + active.astype(cur_len.dtype)
     else:
         new_len = cur_len + 1
-    return logits, {"blocks": new_blocks, "len": new_len}
+    new_cache = {"blocks": new_blocks, "len": new_len}
+    if paged is not None:
+        new_cache["block_table"] = cache["block_table"]
+    return logits, new_cache
 
 
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
@@ -551,7 +672,7 @@ def _write_rows_multi(cache, vals, rows):
         vals.astype(cache.dtype), mode="drop")
 
 
-def _attn_verify(h, p, spec, cfg, lcache, lens, active=None):
+def _attn_verify(h, p, spec, cfg, lcache, lens, active=None, paged=None):
     """Multi-position attention against the cache: S tokens per slot (the
     last emitted token + spec_len drafts) at global positions lens[b]+i.
     All S K/V rows are written (linear layout: row == position), then each
@@ -559,7 +680,9 @@ def _attn_verify(h, p, spec, cfg, lcache, lens, active=None):
     (staircase causality inside ``attn_lib.verify_attention``).  Rejected
     draft rows land beyond the committed length — invisible until a later
     write at the same rows replaces them, which makes rollback a pure
-    length decrement for the caller."""
+    length decrement for the caller.  ``paged``: (block_table, PagedLayout)
+    for shared-pool caches — draft rows past the slot's allocated pages are
+    dropped exactly like rows past a contiguous cache's capacity."""
     b, s, _ = h.shape
     hd = cfg.resolved_head_dim
     q = dense(h, p["wq"]).reshape(b, s, cfg.num_heads, hd)
@@ -568,41 +691,63 @@ def _attn_verify(h, p, spec, cfg, lcache, lens, active=None):
     pos = lens[:, None] + jnp.arange(s)[None, :]               # (B,S)
     q = rope_dispatch(q, pos, cfg)
     k = rope_dispatch(k, pos, cfg)
-    size = lcache["k"].shape[1]
-    rows = pos
-    if active is not None:
-        rows = jnp.where(active[:, None], rows, size)   # OOB -> write dropped
+    paged_kw = {}
+    if paged is not None:
+        bt, layout = paged
+        pool_rows = lcache["k"].shape[0]
+        rows = paged_phys_rows(bt, pos, layout.page_size, layout.max_len,
+                               pool_rows)
+        if active is not None:
+            rows = jnp.where(active[:, None], rows, pool_rows)
+
+        def write(pool, vals):
+            return pool.at[rows].set(vals.astype(pool.dtype), mode="drop")
+
+        paged_kw = dict(block_table=bt, page_size=layout.page_size,
+                        t_logical=layout.max_len)
+    else:
+        size = lcache["k"].shape[1]
+        rows = pos
+        if active is not None:
+            rows = jnp.where(active[:, None], rows, size)  # OOB -> dropped
+
+        def write(cache, vals):
+            return _write_rows_multi(cache, vals, rows)
+
     k_scale = v_scale = None
     if cfg.kv_cache_dtype == "int8":
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
         new_cache = {
-            "k": _write_rows_multi(lcache["k"], kq, rows),
-            "v": _write_rows_multi(lcache["v"], vq, rows),
-            "k_scale": _write_rows_multi(lcache["k_scale"], ks, rows),
-            "v_scale": _write_rows_multi(lcache["v_scale"], vs, rows),
+            "k": write(lcache["k"], kq),
+            "v": write(lcache["v"], vq),
+            "k_scale": write(lcache["k_scale"], ks),
+            "v_scale": write(lcache["v_scale"], vs),
         }
         kc, vc = new_cache["k"], new_cache["v"]
         k_scale, v_scale = new_cache["k_scale"], new_cache["v_scale"]
     else:
-        kc = _write_rows_multi(lcache["k"], k, rows)
-        vc = _write_rows_multi(lcache["v"], v, rows)
+        kc = write(lcache["k"], k)
+        vc = write(lcache["v"], v)
         new_cache = {"k": kc, "v": vc}
     o = attn_lib.verify_attention(q, kc, vc, lens,
                                   logit_cap=cfg.attn_logit_softcap,
-                                  k_scale=k_scale, v_scale=v_scale)
+                                  k_scale=k_scale, v_scale=v_scale,
+                                  **paged_kw)
     out = dense(o.reshape(b, s, cfg.num_heads * hd), p["wo"])
     return out, new_cache
 
 
-def _apply_layer_verify(x, p, spec, cfg, lcache, lens, active=None):
+def _apply_layer_verify(x, p, spec, cfg, lcache, lens, active=None,
+                        paged=None):
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    mix, new_cache = _attn_verify(h, p, spec, cfg, lcache, lens, active)
+    mix, new_cache = _attn_verify(h, p, spec, cfg, lcache, lens, active,
+                                  paged)
     return _apply_mlp(x + mix, p, spec, cfg), new_cache
 
 
 def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
-                unroll=None):
+                unroll=None, paged: Optional[PagedLayout] = None):
     """Speculative multi-position verify.  tokens: (B, S) int32 — column 0
     is each slot's last emitted token (whose K/V is not yet cached, exactly
     as in ``decode_step``), columns 1..S-1 are draft proposals.
@@ -630,6 +775,8 @@ def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
                for seg in plan for spec in seg.layers), \
         "verify_step: linear global-attention plans only (ring-buffer/SSM " \
         "plans must fall back to non-speculative decode)"
+    assert (paged is not None) == ("block_table" in cache), \
+        "verify_step: pass paged=PagedLayout(...) exactly for paged caches"
     cur_len = jnp.asarray(cache["len"])
     x = params["embed"][tokens]
     x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
@@ -637,6 +784,7 @@ def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
     lens = jnp.broadcast_to(cur_len, (b,)) if cur_len.ndim == 0 else cur_len
     if unroll is None:
         unroll = cfg.num_layers <= DECODE_UNROLL_MAX_LAYERS
+    pg = None if paged is None else (cache["block_table"], paged)
     x = shard_activations(x)
     new_blocks = []
     for seg, stacked, ccache in zip(plan, params["blocks"], cache["blocks"]):
@@ -649,7 +797,7 @@ def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
                 for j, spec in enumerate(seg.layers):
                     x, nc = _apply_layer_verify(x, layer_params[str(j)], spec,
                                                 cfg, layer_cache[str(j)],
-                                                lens, active)
+                                                lens, active, pg)
                     new_lc[str(j)] = nc
                 x = shard_activations(x)
                 outs.append(new_lc)
@@ -663,14 +811,17 @@ def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
                     xx, nc = _apply_layer_verify(xx, layer_params[str(j)],
                                                  spec, cfg,
                                                  layer_cache[str(j)], lens,
-                                                 active)
+                                                 active, pg)
                     new_lc[str(j)] = nc
                 return shard_activations(xx), new_lc
 
             x, new_c = jax.lax.scan(body, x, (stacked, ccache))
         new_blocks.append(new_c)
     logits = _logits(params, cfg, x)                           # (B, S, V)
-    return logits, {"blocks": new_blocks, "len": cache["len"]}
+    new_cache = {"blocks": new_blocks, "len": cache["len"]}
+    if paged is not None:
+        new_cache["block_table"] = cache["block_table"]
+    return logits, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -686,7 +837,7 @@ def hidden_to_logits(params, cfg: ModelConfig, x):
     return _logits(params, cfg, x)
 
 
-def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions):
+def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions, paged=None):
     """Chunk attention for one slot of a batched cache, resumed at a traced
     ``offset``: C query rows attend to the slot's cached prefix plus the
     chunk itself, then the chunk's K/V rows are scattered into the cache.
@@ -695,7 +846,10 @@ def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions):
     row r < offset holds position r; a local ring row r holds the latest
     position below ``offset`` with residue r.  Either way
     ``prefix_chunk_attention`` masks causally on global positions, so one
-    code path serves global and sliding-window layers.
+    code path serves global and sliding-window layers.  With ``paged``
+    (block_table, PagedLayout) the prefix is gathered out of the shared page
+    pool through the slot's block-table row — same global-position masking,
+    different addressing.
     """
     b, c, _ = h.shape                                          # b == 1
     hd = cfg.resolved_head_dim
@@ -704,23 +858,40 @@ def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions):
     v = dense(h, p["wv"]).reshape(b, c, cfg.num_kv_heads, hd)
     q = rope_dispatch(q, positions, cfg)
     k = rope_dispatch(k, positions, cfg)
-    size = lcache["k"].shape[1]
     chunk_pos = offset + jnp.arange(c)
-    if spec.local:
-        rows = chunk_pos % size
-        r = jnp.arange(size)
-        # latest global position with residue r strictly below offset
-        # (jnp % is non-negative, so offset == 0 yields valid == nothing)
-        ctx_pos = offset - 1 - ((offset - 1 - r) % size)
-        ctx_valid = r < jnp.minimum(offset, size)
-    else:
-        rows = chunk_pos
-        ctx_pos = jnp.arange(size)
+    if paged is not None:
+        bt, layout = paged
+        ps, tl = layout.page_size, layout.max_len
+        pool_rows = lcache["k"].shape[0]
+        bt_slot = jax.lax.dynamic_index_in_dim(bt, slot, axis=0,
+                                               keepdims=True)   # (1, n_pages)
+        rows = paged_phys_rows(bt_slot, chunk_pos[None], ps, tl,
+                               pool_rows)[0]
+        view_idx = attn_lib.paged_view_index(bt_slot, ps, tl)[0]
+        ctx_pos = jnp.arange(tl)
         ctx_valid = ctx_pos < offset
-    window = cfg.window_size if spec.local else 0
+        window = 0
 
-    def take(a):
-        return jax.lax.dynamic_index_in_dim(a, slot, axis=0, keepdims=True)
+        def take(a):
+            return a[view_idx][None]          # (1, tl, ...) logical view
+    else:
+        size = lcache["k"].shape[1]
+        if spec.local:
+            rows = chunk_pos % size
+            r = jnp.arange(size)
+            # latest global position with residue r strictly below offset
+            # (jnp % is non-negative, so offset == 0 yields valid == nothing)
+            ctx_pos = offset - 1 - ((offset - 1 - r) % size)
+            ctx_valid = r < jnp.minimum(offset, size)
+        else:
+            rows = chunk_pos
+            ctx_pos = jnp.arange(size)
+            ctx_valid = ctx_pos < offset
+        window = cfg.window_size if spec.local else 0
+
+        def take(a):
+            return jax.lax.dynamic_index_in_dim(a, slot, axis=0,
+                                                keepdims=True)
 
     k_scale = v_scale = None
     if cfg.kv_cache_dtype == "int8":
@@ -743,7 +914,10 @@ def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions):
         k_scale=k_scale, v_scale=v_scale)
 
     def put(full, vals):
-        # rows beyond the buffer (padded remainder near max_len) are dropped
+        # rows beyond the buffer (padded remainder near max_len) are dropped;
+        # paged pools scatter by physical row, contiguous stripes by slot
+        if paged is not None:
+            return full.at[rows].set(vals[0].astype(full.dtype), mode="drop")
         return full.at[slot, rows].set(vals[0].astype(full.dtype), mode="drop")
 
     new_cache = {"k": put(lcache["k"], kw), "v": put(lcache["v"], vw)}
@@ -754,11 +928,12 @@ def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions):
     return out, new_cache
 
 
-def _apply_layer_chunk(x, p, spec, cfg, lcache, slot, offset, positions):
+def _apply_layer_chunk(x, p, spec, cfg, lcache, slot, offset, positions,
+                       paged=None):
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.mixer == "attn":
         mix, new_cache = _attn_chunk(h, p, spec, cfg, lcache, slot, offset,
-                                     positions)
+                                     positions, paged)
     else:
         # resume the slot's SSM state — but a re-admitted slot still holds
         # the PREVIOUS request's final state (attention rows are masked by
@@ -780,7 +955,8 @@ def _apply_layer_chunk(x, p, spec, cfg, lcache, slot, offset, positions):
     return _apply_mlp(x + mix, p, spec, cfg), new_cache
 
 
-def prefill_chunk(params, cfg: ModelConfig, cache, tokens, slot, offset):
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens, slot, offset,
+                  paged: Optional[PagedLayout] = None):
     """Process one admission chunk: C prompt tokens at global positions
     [offset, offset+C) for ``slot`` of a batched cache, resuming from the
     rows/states already written for [0, offset).
@@ -794,8 +970,11 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, slot, offset):
     Returns (hidden (1, C, D), new_cache); project hiddens with
     ``hidden_to_logits`` only where logits are actually needed.
     """
+    assert (paged is not None) == ("block_table" in cache), \
+        "prefill_chunk: pass paged=PagedLayout(...) exactly for paged caches"
     b, c = tokens.shape
     positions = offset + jnp.arange(c)[None, :]
+    pg = None if paged is None else (cache["block_table"], paged)
     x = params["embed"][tokens]
     x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
     x = shard_activations(x)
@@ -809,10 +988,13 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, slot, offset):
             for j, spec in enumerate(_seg.layers):
                 xx, nc = _apply_layer_chunk(xx, layer_params[str(j)], spec,
                                             cfg, layer_cache[str(j)], slot,
-                                            offset, positions)
+                                            offset, positions, pg)
                 new_lc[str(j)] = nc
             return shard_activations(xx), new_lc
 
         x, new_c = jax.lax.scan(body, x, (stacked, ccache))
         new_blocks.append(new_c)
-    return x, {"blocks": new_blocks, "len": cache["len"]}
+    new_cache = {"blocks": new_blocks, "len": cache["len"]}
+    if paged is not None:
+        new_cache["block_table"] = cache["block_table"]
+    return x, new_cache

@@ -1,6 +1,7 @@
 from repro.serve.engine import (
-    Request, ServeEngine, queue_throughput, throughput_tokens_per_s,
+    PageAllocator, Request, ServeEngine, queue_throughput,
+    throughput_tokens_per_s,
 )
 
-__all__ = ["Request", "ServeEngine", "queue_throughput",
+__all__ = ["PageAllocator", "Request", "ServeEngine", "queue_throughput",
            "throughput_tokens_per_s"]

@@ -10,7 +10,33 @@ Slots
     and a (B,) vector of per-slot lengths (``cache["len"]``).  A request is
     admitted into a free slot by jitted admission steps that write the
     prompt's per-layer K/V (and SSM state) rows directly into the shared
-    cache; after admission a request is NEVER re-prefilled.
+    cache; after admission a request is NEVER re-prefilled (the one
+    exception: paged-pool eviction, below).
+
+Paged KV cache (vLLM-style block table)
+    On linear (global-attention) plans the per-slot contiguous ``max_len``
+    stripes are replaced by a global pool of ``kv_pages`` fixed-size pages
+    (``page_size`` rows) shared by every slot, plus ONE (B, pages_per_slot)
+    int32 block table threaded through the cache pytree.  A host-side
+    ``PageAllocator`` grants pages at admission and before every decode
+    macro-step (the macro's worst-case growth is pre-allocated, so the
+    jitted scan never faults); attention reads each slot's logical view
+    through the table (XLA gather fallback — bit-identical to contiguous —
+    or the Pallas ``paged_flash_decode``/``paged_flash_verify`` kernels,
+    which walk the page table in their BlockSpec index maps).  Long and
+    short requests therefore share memory at page granularity: one
+    worst-case long request no longer reserves ``max_len`` rows that dozens
+    of short requests could use.  When the pool is exhausted the engine
+    EVICTS the youngest-admitted slots (``stats["evictions"]``) and
+    requeues them — the generated prefix re-enters the admission queue as
+    prompt and the slot's PRNG stream is preserved, so a preempted greedy
+    request finishes with exactly the tokens of an uninterrupted run, just
+    later.  Over-capacity requests are rejected per-request
+    (``Request.error``), never crashing the batch.  Ring-buffer/SSM plans
+    keep the contiguous layout (a ring row's contents churn every window; an
+    SSM state has no rows) via the ``kv_layout="auto"`` fallback.
+    ``page_size`` and the pool fraction are HAQA-tunable serving knobs
+    (``core.search_space.serve_space``).
 
 Decode macro-steps
     The scheduler does not dispatch one decode per token.  A jitted
@@ -116,6 +142,8 @@ class Request:
     admitted_at: float = 0.0           # when a slot prefilled the prompt
     first_token_at: float = 0.0        # time-to-first-token = this - submitted_at
     finished_at: float = 0.0
+    error: Optional[str] = None        # set when the engine REJECTS the request
+    preemptions: int = 0               # paged pool evict->requeue count
 
 
 def _prompt_buckets(max_len: int, smallest: int = 16) -> List[int]:
@@ -219,6 +247,53 @@ def _spec_accept_greedy(logits, drafts, vocab):
     return tokens, n_acc
 
 
+class PageAllocator:
+    """Host-side page allocator for the paged KV cache.
+
+    The device holds one global pool of ``num_pages`` fixed-size pages per
+    layer plus ONE (max_batch, pages_per_slot) int32 block table shared by
+    every layer; this class owns the table.  Pages move strictly between the
+    free list and exactly one slot's allocation (never two — the scatter
+    conflict-freedom of the paged cache writes rests on that), allocation is
+    all-or-nothing, and releasing a slot invalidates its whole table row.
+    The engine mirrors ``table`` to the device before every jitted call that
+    reads it.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_batch: int,
+                 pages_per_slot: int):
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.free: List[int] = list(range(self.num_pages - 1, -1, -1))
+        self.owned: List[List[int]] = [[] for _ in range(max_batch)]
+        self.table = np.full((max_batch, pages_per_slot), -1, np.int32)
+
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self.free)
+
+    def pages_for(self, rows: int) -> int:
+        return -(-int(rows) // self.page_size)
+
+    def ensure(self, slot: int, rows: int) -> bool:
+        """Grow ``slot``'s allocation to cover ``rows`` logical cache rows.
+        All-or-nothing: on False neither the free list nor the table moved."""
+        need = self.pages_for(rows) - len(self.owned[slot])
+        if need <= 0:
+            return True
+        if need > len(self.free) or self.pages_for(rows) > self.table.shape[1]:
+            return False
+        for _ in range(need):
+            p = self.free.pop()
+            self.table[slot, len(self.owned[slot])] = p
+            self.owned[slot].append(p)
+        return True
+
+    def release(self, slot: int) -> None:
+        self.free.extend(reversed(self.owned[slot]))
+        self.owned[slot] = []
+        self.table[slot, :] = -1
+
+
 class _CompiledLRU:
     """Bounded, recency-evicting cache of jitted admission functions.
 
@@ -261,7 +336,9 @@ class ServeEngine:
                  spec_len: int = 0, draft: Any = "ngram",
                  draft_params: Any = None, admit_budget: int = 0,
                  spec_throttle_min: float = 0.1,
-                 spec_probe_every: int = 32):
+                 spec_probe_every: int = 32,
+                 page_size: int = 64, kv_pages: int = 0,
+                 kv_layout: str = "auto"):
         self.cfg = cfg
         self.scheme = scheme
         if scheme in ("int8", "int4", "nf4", "w8a8"):
@@ -286,6 +363,27 @@ class ServeEngine:
         self._max_chunk = min(local_sizes) if local_sizes else max_len
         self.buckets = _prompt_buckets(max_len)
         self.decode_unroll = decode_unroll
+        # paged KV cache: a global pool of fixed-size pages shared by all
+        # slots + a (B, pages_per_slot) block table, instead of one
+        # contiguous max_len stripe per slot.  Only linear (global-attn)
+        # cache layouts page — a ring-buffer row's contents churn every
+        # window and an SSM state has no rows, so those plans keep the
+        # contiguous path ("auto" resolves per plan).  ``kv_pages`` sizes
+        # the pool; 0 means "as much memory as the contiguous layout"
+        # (max_batch * pages_per_slot) — under-provision it to trade
+        # worst-case reservation for LRU eviction under pressure.
+        assert kv_layout in ("auto", "paged", "contiguous"), kv_layout
+        self.page_size = max(1, int(page_size))
+        self.paged = kv_layout != "contiguous" and self._pad_safe
+        if kv_layout == "paged" and not self._pad_safe:
+            warnings.warn(
+                "paged KV cache needs a linear global-attention plan; "
+                "this plan has ring-buffer/SSM layers — keeping the "
+                "contiguous layout", stacklevel=2)
+        self.pages_per_slot = -(-max_len // self.page_size)
+        self.kv_pages = int(kv_pages) or max_batch * self.pages_per_slot
+        self._paged_layout = (tfm.PagedLayout(self.page_size, max_len)
+                              if self.paged else None)
         # speculative decode: rollback must be a pure length decrement,
         # which only linear (global-attention) cache layouts give us — a
         # ring-buffer row write destroys the window's oldest live position
@@ -345,10 +443,17 @@ class ServeEngine:
                       "admit_evictions": 0, "spec_steps": 0,
                       "draft_tokens": 0, "accepted_tokens": 0,
                       "spec_fallbacks": 0, "budget_deferred_admissions": 0,
-                      "spec_throttled_macros": 0}
+                      "spec_throttled_macros": 0,
+                      # paged KV pool: evict->requeue count, current/peak
+                      # allocated pages, peak concurrently-active slots, and
+                      # per-request admission rejections (over-capacity)
+                      "evictions": 0, "pages_in_use": 0,
+                      "peak_pages_in_use": 0, "peak_active_slots": 0,
+                      "rejected_requests": 0}
         self._admit_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._chunk_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._draft_admit_fns = _CompiledLRU(admit_cache_size, self.stats)
+        self._draft_chunk_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._macro_fns: Dict[Any, Any] = {}
         self._final_cache = None     # last serve_queue cache (introspection)
 
@@ -377,9 +482,17 @@ class ServeEngine:
         prompt's last logits yield the first token, so a final decode whose
         sample would be discarded is never dispatched).  Tokens stay on
         device until the end — per-step host syncs would serialize dispatch.
+
+        Raises ``ValueError`` for over-budget batches: a real exception (a
+        bare assert vanishes under ``python -O``, silently overrunning the
+        cache) — ``serve_queue`` instead rejects the one offending request.
         """
         b, s = prompts.shape
-        assert s + max_new_tokens <= self.max_len
+        if s + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"generate: prompt length {s} + max_new_tokens "
+                f"{max_new_tokens} exceeds the engine's max_len "
+                f"{self.max_len}")
         logits, cache = self.prefill(jnp.asarray(prompts))
         key = jax.random.PRNGKey(seed)
         key, sub = jax.random.split(key)
@@ -430,21 +543,41 @@ class ServeEngine:
         sample the first token from the prompt's last logits with the slot's
         own PRNG stream.  ``slot``, ``true_len``, ``temp`` and ``key`` are
         traced, so one compilation serves every slot, prompt length in the
-        bucket, and sampling config."""
+        bucket, and sampling config.  Paged engines scatter the prompt rows
+        through the slot's block-table row instead of a contiguous stripe
+        (padded rows past ``true_len`` index out of bounds and drop, so they
+        never touch pages the allocator did not grant)."""
         cfg = self.cfg
+        layout = self._paged_layout
 
         def build():
             def admit(params, cache, tokens, slot, true_len, temp, key):
                 logits, small = tfm.prefill(params, cfg, tokens=tokens,
                                             max_len=bucket)
 
-                def write(big, new):
-                    # leaves are (count, B, rows, ...) vs (count, 1, rows', ...)
-                    # with rows' <= rows; SSM states carry no row dim but share
-                    # the (count, batch, ...) prefix, so the same write works
-                    start = (0, slot) + (0,) * (big.ndim - 2)
-                    return jax.lax.dynamic_update_slice(
-                        big, new.astype(big.dtype), start)
+                if layout is not None:
+                    bt_slot = jax.lax.dynamic_index_in_dim(
+                        cache["block_table"], slot, axis=0, keepdims=True)
+                    pool_rows = jax.tree.leaves(cache["blocks"])[0].shape[1]
+                    # padded rows past true_len map to the OOB sentinel and
+                    # drop — they never touch pages the allocator withheld
+                    rows = tfm.paged_phys_rows(
+                        bt_slot, jnp.arange(bucket)[None],
+                        layout.page_size,
+                        jnp.minimum(true_len, layout.max_len), pool_rows)[0]
+
+                    def write(big, new):
+                        return big.at[:, rows].set(
+                            new[:, 0].astype(big.dtype), mode="drop")
+                else:
+                    def write(big, new):
+                        # leaves are (count, B, rows, ...) vs
+                        # (count, 1, rows', ...) with rows' <= rows; SSM
+                        # states carry no row dim but share the
+                        # (count, batch, ...) prefix, so the same write works
+                        start = (0, slot) + (0,) * (big.ndim - 2)
+                        return jax.lax.dynamic_update_slice(
+                            big, new.astype(big.dtype), start)
 
                 new_blocks = jax.tree.map(write, cache["blocks"],
                                           small["blocks"])
@@ -452,7 +585,10 @@ class ServeEngine:
                 last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1,
                                                     axis=0, keepdims=False)
                 tok, key = _sample_token(last, temp, key, cfg.vocab_size)
-                return tok, key, {"blocks": new_blocks, "len": lens}
+                out = {"blocks": new_blocks, "len": lens}
+                if layout is not None:
+                    out["block_table"] = cache["block_table"]
+                return tok, key, out
 
             return jax.jit(admit)
 
@@ -465,25 +601,28 @@ class ServeEngine:
         publishes the slot's length."""
         cfg = self.cfg
 
+        layout = self._paged_layout
+
         def build():
             if not final:
                 def run(params, cache, tokens, slot, offset):
                     _, cache = tfm.prefill_chunk(params, cfg, cache, tokens,
-                                                 slot, offset)
+                                                 slot, offset, paged=layout)
                     return cache
                 return jax.jit(run)
 
             def run_final(params, cache, tokens, slot, offset, last_idx,
                           final_len, temp, key):
                 x, cache = tfm.prefill_chunk(params, cfg, cache, tokens,
-                                             slot, offset)
+                                             slot, offset, paged=layout)
                 last_h = jax.lax.dynamic_index_in_dim(x[0], last_idx, axis=0,
                                                       keepdims=False)
                 logits = tfm.hidden_to_logits(params, cfg,
                                               last_h[None, None])[0, 0]
                 tok, key = _sample_token(logits, temp, key, cfg.vocab_size)
-                lens = cache["len"].at[slot].set(final_len)
-                return tok, key, {"blocks": cache["blocks"], "len": lens}
+                out = dict(cache)
+                out["len"] = cache["len"].at[slot].set(final_len)
+                return tok, key, out
 
             return jax.jit(run_final)
 
@@ -515,7 +654,40 @@ class ServeEngine:
 
         return self._draft_admit_fns.get(bucket, build)
 
+    def _draft_chunk_fn(self, c: int, final: bool):
+        """Jitted DRAFT-model admission chunk at shape (1, c): resume the
+        draft cache from its prefix exactly like the target's ``_chunk_fn``,
+        so draft-model speculation composes with chunked admission (the
+        draft cache is never stale).  No sampling and no unembed — the draft
+        only proposes from inside the macro-step; the final chunk just
+        publishes the slot's draft length."""
+        dcfg = self._draft_cfg
+
+        def build():
+            if not final:
+                def run(dparams, dcache, tokens, slot, offset):
+                    _, dcache = tfm.prefill_chunk(dparams, dcfg, dcache,
+                                                  tokens, slot, offset)
+                    return dcache
+                return jax.jit(run)
+
+            def run_final(dparams, dcache, tokens, slot, offset, final_len):
+                _, dcache = tfm.prefill_chunk(dparams, dcfg, dcache, tokens,
+                                              slot, offset)
+                lens = dcache["len"].at[slot].set(final_len)
+                return {"blocks": dcache["blocks"], "len": lens}
+
+            return jax.jit(run_final)
+
+        return self._draft_chunk_fns.get((c, final), build)
+
     def _empty_batched_cache(self):
+        """Fresh serving cache: a paged pool + block table when the engine
+        pages, contiguous per-slot stripes otherwise."""
+        if self.paged:
+            return tfm.init_paged_cache(self.cfg, self.max_batch,
+                                        self.max_len, self.page_size,
+                                        self.kv_pages)
         cache = tfm.init_cache(self.cfg, self.max_batch, self.max_len)
         cache["len"] = jnp.zeros((self.max_batch,), jnp.int32)
         return cache
@@ -543,7 +715,8 @@ class ServeEngine:
                     cache, last, active, remaining, keys = op
                     logits, cache = tfm.decode_step(params, cfg, cache,
                                                     tokens=last, active=active,
-                                                    unroll=self.decode_unroll)
+                                                    unroll=self.decode_unroll,
+                                                    paged=self._paged_layout)
                     # one _sample_token per slot: the same primitive (and
                     # key-split discipline) admission uses, so macro and
                     # per-token scheduling share one sampling definition
@@ -658,7 +831,8 @@ class ServeEngine:
                     ver_toks = jnp.concatenate([last, drafts], axis=1)
                     logits, cache = tfm.verify_step(params, cfg, cache,
                                                     ver_toks, active=active,
-                                                    unroll=self.decode_unroll)
+                                                    unroll=self.decode_unroll,
+                                                    paged=self._paged_layout)
                     if all_greedy:
                         toks, n_acc = jax.vmap(
                             lambda lg, d: _spec_accept_greedy(lg, d, vocab))(
@@ -679,7 +853,7 @@ class ServeEngine:
                     emitted = pos < c[:, None]                     # (B, L+1)
                     # ---- commit: the length bump IS the rollback ---------
                     lens = cache["len"] + c.astype(cache["len"].dtype)
-                    cache = {"blocks": cache["blocks"], "len": lens}
+                    cache = dict(cache, len=lens)
                     if mode == "model":
                         new_aux = {"blocks": new_aux["blocks"],
                                    "len": dlens0 + c.astype(dlens0.dtype)}
@@ -765,16 +939,10 @@ class ServeEngine:
             self.stats["spec_fallbacks"] += 1
             L = 0
         draft_model = L > 0 and self._draft_cfg is not None
-        if draft_model and chunk > 0:
-            # the draft prefills whole prompts at admission (chunk-resumed
-            # draft prefill isn't wired); keep admission whole-prompt so
-            # target and draft caches stay in lockstep
-            warnings.warn(
-                "draft-model speculation forces whole-prompt admission: "
-                f"ignoring prefill_chunk={chunk} (chunk-resumed draft "
-                "prefill is not implemented, so the PR 2 chunked-TTFT "
-                "bound does not apply to this engine)", stacklevel=2)
-            chunk = 0
+        # draft-model speculation composes with chunked admission: every
+        # target chunk is mirrored by a ``_draft_chunk_fn`` call resuming
+        # the DRAFT cache from its own prefix, so the two caches stay in
+        # lockstep without forcing whole-prompt admission
         now = time.perf_counter()
         for req in requests:
             if not req.submitted_at:
@@ -783,6 +951,31 @@ class ServeEngine:
         results: Dict[int, List[int]] = {}
         B = self.max_batch
         cache = self._empty_batched_cache()
+        # paged pool bookkeeping: the host-side allocator owns the block
+        # table; slot_rows mirrors each slot's committed cache length so
+        # page growth never needs a device sync; order[b] is the admission
+        # sequence number eviction uses (youngest preempted first,
+        # vLLM-style — the oldest request is closest to completing and has
+        # the most re-prefill work to lose); resume_keys preserves an
+        # evicted request's PRNG stream so its re-admitted continuation
+        # samples exactly as the uninterrupted run would
+        alloc = (PageAllocator(self.kv_pages, self.page_size, B,
+                               self.pages_per_slot) if self.paged else None)
+        slot_rows = np.zeros((B,), np.int64)
+        order = [0] * B
+        admit_seq = 0
+        resume_keys: Dict[int, np.ndarray] = {}
+        # tokens already folded into req.prompt by earlier preemptions, so a
+        # second preemption never re-appends an already-folded prefix
+        folded: Dict[int, int] = {}
+
+        def push_table():
+            cache["block_table"] = jnp.asarray(alloc.table)
+            used = alloc.pages_in_use()
+            self.stats["pages_in_use"] = used
+            self.stats["peak_pages_in_use"] = max(
+                self.stats["peak_pages_in_use"], used)
+
         slots: List[Optional[Request]] = [None] * B
         admitting = [False] * B
         admit_off = [0] * B
@@ -821,24 +1014,82 @@ class ServeEngine:
             results[req.uid] = req.tokens
             slots[b] = None
             active[b] = False
+            if alloc is not None:
+                alloc.release(b)
+
+        def reject(req: Request, why: str):
+            """Per-request rejection: the error is surfaced on the Request
+            (and its result stays empty) instead of crashing the engine —
+            the queued mirror of ``generate``'s ValueError."""
+            req.error = why
+            req.done = True
+            req.finished_at = time.perf_counter()
+            results[req.uid] = list(req.tokens or [])
+            self.stats["rejected_requests"] += 1
 
         def start_slot(b: int, tok: int, key_arr):
-            """The prompt's last logits just yielded the first token."""
+            """The prompt's last logits just yielded the next token.  For a
+            fresh request that is its FIRST token; for an evicted+requeued
+            one (whose generated prefix re-entered as prompt) it is the
+            continuation, appended to the tokens it already emitted."""
             req = slots[b]
-            req.tokens = [int(tok)]
-            req.first_token_at = time.perf_counter()
+            if req.tokens is None:
+                req.tokens = []
+            req.tokens.append(int(tok))
+            if not req.first_token_at:
+                req.first_token_at = time.perf_counter()
             self.stats["prefills"] += 1
             self.stats["admitted"] += 1
-            hit_eos = req.eos_id is not None and req.tokens[0] == req.eos_id
+            slot_rows[b] = len(req.prompt)
+            hit_eos = req.eos_id is not None and req.tokens[-1] == req.eos_id
             if len(req.tokens) >= req.max_new_tokens or hit_eos:
                 finish(b)
                 return
             active[b] = True
-            remaining[b] = req.max_new_tokens - 1
-            last_tokens[b, 0] = req.tokens[0]
+            remaining[b] = req.max_new_tokens - len(req.tokens)
+            last_tokens[b, 0] = req.tokens[-1]
             temps[b] = req.temperature
             eos[b] = -1 if req.eos_id is None else int(req.eos_id)
             keys[b] = np.asarray(key_arr)
+
+        def preempt(b: int):
+            """Evict slot b under pool pressure and REQUEUE it (head of the
+            queue): its generated prefix becomes part of the prompt, so
+            re-admission prefills prompt+prefix and decoding continues where
+            it stopped — the request is delayed, never dropped.  The PRNG
+            stream is preserved, so greedy continuations are bit-identical
+            to an uninterrupted run and sampled ones draw the same stream."""
+            req = slots[b]
+            new_toks = (req.tokens or [])[folded.get(req.uid, 0):]
+            if new_toks:
+                req.prompt = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(new_toks, np.int32)])
+                folded[req.uid] = len(req.tokens)
+            # preserve the PRNG stream: for an admitted slot the post-macro
+            # key, for one preempted MID-admission the key the interrupted
+            # admission would have used (possibly itself a resumed key)
+            resume_keys[req.uid] = (np.asarray(slot_key[b]) if admitting[b]
+                                    else np.array(keys[b], copy=True))
+            req.preemptions += 1
+            alloc.release(b)
+            slots[b] = None
+            active[b] = False
+            admitting[b] = False
+            admit_off[b] = 0
+            pending.insert(0, req)
+            self.stats["evictions"] += 1
+
+        def make_room(b: int, rows: int) -> bool:
+            """Grow slot b's pages to cover ``rows`` logical rows, evicting
+            the youngest-admitted other slots until it fits."""
+            while not alloc.ensure(b, rows):
+                victims = [s for s in range(B)
+                           if s != b and slots[s] is not None]
+                if not victims:
+                    return False
+                preempt(max(victims, key=lambda s: order[s]))
+            return True
 
         def admit_spec_state(b: int, req: Request, first_tok: int):
             """Seed the slot's draft state at admission: prefill the draft
@@ -878,19 +1129,41 @@ class ServeEngine:
             while True:
                 advanced = False
                 for b in range(B):
-                    if slots[b] is None and pending:
+                    while slots[b] is None and pending:
                         req = pending.pop(0)
                         plen = len(req.prompt)
-                        assert plen + req.max_new_tokens <= self.max_len, \
-                            f"request {req.uid} needs " \
-                            f"{plen + req.max_new_tokens} rows, cache has " \
-                            f"{self.max_len}"
+                        budget_rows = plen + req.max_new_tokens \
+                            - len(req.tokens or [])
+                        cap_rows = self.max_len
+                        if self.paged:
+                            cap_rows = min(cap_rows,
+                                           self.kv_pages * self.page_size)
+                        if budget_rows > cap_rows or plen > self.max_len:
+                            # over-capacity request: reject THIS request
+                            # (error surfaced on it) instead of crashing the
+                            # engine — a bare assert here would also vanish
+                            # under python -O and overrun the cache
+                            reject(req, f"request {req.uid} needs "
+                                        f"{budget_rows} cache rows, but "
+                                        f"engine capacity is {cap_rows} "
+                                        f"(max_len={self.max_len}"
+                                        + (f", kv pool={self.kv_pages} pages"
+                                           f" x {self.page_size} rows"
+                                           if self.paged else "") + ")")
+                            progressed = True
+                            continue
                         slots[b] = req
                         admitting[b] = True
                         admit_off[b] = 0
-                        # per-slot PRNG stream seeded from the request uid:
-                        # one slot's sampling can never perturb another's
-                        slot_key[b] = jax.random.fold_in(base_key, req.uid)
+                        admit_seq += 1
+                        order[b] = admit_seq
+                        # per-slot PRNG stream seeded from the request uid
+                        # (one slot's sampling can never perturb another's);
+                        # evicted requests resume their saved stream instead
+                        rk = resume_keys.pop(req.uid, None)
+                        slot_key[b] = (jnp.asarray(rk) if rk is not None
+                                       else jax.random.fold_in(base_key,
+                                                               req.uid))
                     if slots[b] is None or not admitting[b]:
                         continue
                     req = slots[b]
@@ -905,6 +1178,18 @@ class ServeEngine:
                     if budget > 0 and spent > 0 and spent + cost > budget:
                         deferred_slots.add(b)
                         continue
+                    if self.paged:
+                        # reserve pages for the rows this admission step
+                        # writes.  Admissions never preempt running slots
+                        # (decode keeps priority); a full pool just defers
+                        # the admission until decode frees pages — deferral
+                        # here is pool pressure, NOT the token budget, so it
+                        # stays out of budget_deferred_admissions
+                        rows_now = plen if whole else min(admit_off[b] + chunk,
+                                                          plen)
+                        if not alloc.ensure(b, rows_now):
+                            continue
+                        push_table()
                     if whole:
                         bucket = self._bucket_for(plen)
                         padded = np.zeros((1, bucket), np.int32)
@@ -943,16 +1228,33 @@ class ServeEngine:
                                 np.int32(b), np.int32(off),
                                 np.int32(plen - 1 - off), np.int32(plen),
                                 np.float32(req.temperature), slot_key[b])
+                            if draft_model:
+                                # chunk-resume the draft cache alongside the
+                                # target's: its last chunk publishes the
+                                # draft length, so the in-macro draft decode
+                                # starts from a fresh (never stale) cache
+                                spec_aux = self._draft_chunk_fn(
+                                    c_shape, True)(
+                                    self.draft_params, spec_aux,
+                                    jnp.asarray(toks_np), np.int32(b),
+                                    np.int32(off), np.int32(plen))
                             req.admitted_at = time.perf_counter()
                             tok, key2 = jax.device_get((tok, key2))
                             self.stats["host_syncs"] += 1
                             admitting[b] = False
                             start_slot(b, tok, key2)
-                            admit_spec_state(b, req, int(tok))
+                            if not draft_model:
+                                admit_spec_state(b, req, int(tok))
                         else:
                             cache = self._chunk_fn(c_shape, False)(
                                 self.params, cache, jnp.asarray(toks_np),
                                 np.int32(b), np.int32(off))
+                            if draft_model:
+                                spec_aux = self._draft_chunk_fn(
+                                    c_shape, False)(
+                                    self.draft_params, spec_aux,
+                                    jnp.asarray(toks_np), np.int32(b),
+                                    np.int32(off))
                             admit_off[b] = end
                     spent += cost
                     advanced_slots.add(b)
@@ -968,7 +1270,6 @@ class ServeEngine:
 
             # -- one decode macro-step across all active slots ---------------
             if active.any():
-                was_active = active.copy()
                 spec_now = L > 0 and throttle_wait == 0
                 if L > 0 and not spec_now:
                     throttle_wait -= 1
@@ -987,14 +1288,38 @@ class ServeEngine:
                             spec_aux = spec_aux.at[
                                 b, np.asarray(tail[:-1], np.int32)].set(
                                 np.asarray(tail[1:], np.int32))
+                # after a failed probe (backoff > 1) probe at L=1 — a
+                # verify barely wider than a decode step — and only
+                # restore the full draft length once acceptance is back
+                probing = spec_now and throttle_backoff > 1 and L > 1
+                width_L = 1 if probing else L
+                width = k * (width_L + 1) if spec_now else k
+                if self.paged:
+                    # grow every active slot's pages to this macro-step's
+                    # worst case BEFORE dispatch (allocation is host-side;
+                    # the jitted scan cannot fault a page in).  Oldest
+                    # admissions grow first; an exhausted pool preempts the
+                    # youngest slots into the queue (their generated prefix
+                    # re-enters as prompt), so memory pressure delays
+                    # requests instead of crashing or dropping them.
+                    for b in sorted(range(B), key=lambda s: order[s]):
+                        if slots[b] is None or not active[b]:
+                            continue
+                        rows = int(slot_rows[b]) + min(width,
+                                                       int(remaining[b]))
+                        if not make_room(b, rows):
+                            preempt(b)       # defensive; see make_room
+                    push_table()
+                    progressed = True
+                self.stats["peak_active_slots"] = max(
+                    self.stats["peak_active_slots"], int(active.sum()))
+                if not active.any():
+                    steps += 1
+                    continue
+                was_active = active.copy()
                 if spec_now:
-                    # after a failed probe (backoff > 1) probe at L=1 — a
-                    # verify barely wider than a decode step — and only
-                    # restore the full draft length once acceptance is back
-                    probing = throttle_backoff > 1 and L > 1
                     if probing and probe_macro is None:
                         probe_macro = self._spec_macro_fn(k, 1, all_greedy)
-                    width_L = 1 if probing else L
                     fn = probe_macro if probing else macro
                     (cache, spec_aux, last_d, act_d, rem_d, keys_d,
                      toks_bk, emit_bk, acc_n, drf_n, execd) = fn(
@@ -1031,7 +1356,6 @@ class ServeEngine:
                                                    self.spec_probe_every)
                     else:
                         throttle_backoff = 1
-                    width = k * (width_L + 1)
                 else:
                     fn = van_macro if L > 0 else macro   # throttled == plain
                     (cache, last_d, act_d, rem_d, keys_d,
@@ -1044,7 +1368,6 @@ class ServeEngine:
                      toks_np, emit_np, nexec) = jax.device_get(
                         (last_d, act_d, rem_d, keys_d, toks_bk, emit_bk,
                          execd))
-                    width = k
                 self.stats["host_syncs"] += 1
                 self.stats["macro_steps"] += 1
                 self.stats["decode_steps"] += int(nexec)
@@ -1053,10 +1376,13 @@ class ServeEngine:
                     if slots[b] is None or not was_active[b]:
                         continue
                     req = slots[b]
+                    n_emit = 0
                     for i in range(width):
                         if emit_np[b, i]:
                             req.tokens.append(int(toks_np[b, i]))
-                    active[b] = bool(act_np[b])
+                            n_emit += 1
+                    slot_rows[b] += n_emit     # every emitted token == one
+                    active[b] = bool(act_np[b])  # committed cache row
                     remaining[b] = int(rem_np[b])
                     last_tokens[b, 0] = int(last_np[b, 0])
                     keys[b] = keys_np[b]
@@ -1067,6 +1393,20 @@ class ServeEngine:
             else:
                 steps += 1
 
+            if not progressed and self.paged and not active.any():
+                # paged deadlock guard: several half-admitted slots can each
+                # hold partial pages and ALL block on the exhausted pool
+                # with no decode running to free any.  Preempt the youngest
+                # admission (it requeues with nothing lost — no tokens yet)
+                # so the pages recycle and an older admission proceeds.  A
+                # LONE blocked admission cannot exist: the per-request
+                # capacity check guarantees it fits the pool by itself.
+                stuck = [b for b in range(B)
+                         if slots[b] is not None and admitting[b]]
+                if len(stuck) > 1:
+                    preempt(max(stuck, key=lambda s: order[s]))
+                    progressed = True
+
             if not progressed:
                 break                                # nothing left to drive
 
@@ -1076,7 +1416,10 @@ class ServeEngine:
                     slots[b].tokens = []
                 finish(b)
         for req in pending:
-            results[req.uid] = []
+            # an evicted request still queued keeps the prefix it generated
+            results.setdefault(req.uid, list(req.tokens or []))
+        if alloc is not None:
+            self.stats["pages_in_use"] = alloc.pages_in_use()
         self._final_cache = cache          # introspection (rollback tests)
         return results
 

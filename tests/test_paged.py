@@ -1,0 +1,486 @@
+"""Paged KV cache (ISSUE 4): block-table attention, page allocator,
+eviction + requeue, and the serving-path bugfix sweep.
+
+Covers the host-side ``PageAllocator`` invariants (property-style: no page
+is ever owned twice, freed pages return to the pool, released slots'
+block-table rows are invalidated), the paged Pallas kernels against the XLA
+gather path (interpret mode), bit-exact paged-vs-contiguous greedy parity
+at the engine level (bf16 + int8 KV; the XLA paged path gathers each slot's
+logical view through the block table and then runs the SAME reductions, so
+parity is bitwise, not approximate), the contiguous fallback for
+ring-buffer/SSM plans, eviction + requeue under an undersized pool
+(f32 weights for the parity assertions: re-prefilling an evicted request's
+prefix reassociates bf16 matmuls, the same ulp artifact the spec-decode
+tests document), per-request over-capacity rejection, and paged x
+speculative / chunked-admission composition.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:        # only the random-ops property test needs it; CI installs it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.paper_models import POCKET
+from repro.models import attention as attn_lib
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+from repro.serve.engine import PageAllocator
+
+PARAMS = tfm.init_params(jax.random.PRNGKey(0), POCKET)
+PARAMS32 = tfm.init_params(jax.random.PRNGKey(0), POCKET, dtype=jnp.float32)
+POCKET_INT8KV = dataclasses.replace(POCKET, kv_cache_dtype="int8")
+
+
+def _mixed_requests(n, temp=0.0, seed=11, plen_hi=24, max_new=9):
+    rng = np.random.default_rng(seed)
+    return [Request(
+        uid=i,
+        prompt=rng.integers(0, POCKET.vocab_size,
+                            (int(rng.integers(3, plen_hi)),)).astype(np.int32),
+        max_new_tokens=int(rng.integers(1, max_new)),
+        temperature=temp) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator invariants (property-style)
+# ---------------------------------------------------------------------------
+
+def _check_invariants(alloc: PageAllocator):
+    owned = [p for ps in alloc.owned for p in ps]
+    # a page is free XOR owned by exactly one slot — never double-assigned
+    assert len(owned) == len(set(owned))
+    assert not set(owned) & set(alloc.free)
+    assert sorted(owned + alloc.free) == list(range(alloc.num_pages))
+    # the block table mirrors ownership exactly: slot rows hold the slot's
+    # pages in allocation order, then -1
+    for s, pages in enumerate(alloc.owned):
+        row = alloc.table[s]
+        assert list(row[:len(pages)]) == pages
+        assert (row[len(pages):] == -1).all()
+
+
+def _allocator_op_sequence(alloc: PageAllocator, ops):
+    """Replay (slot, op, rows) triples asserting the pool invariants after
+    every step; shared by the hypothesis and the fixed-seed variants."""
+    for slot, op, rows in ops:
+        if op == 2:
+            alloc.release(slot)
+        else:
+            before_free = list(alloc.free)
+            before_owned = list(alloc.owned[slot])
+            ok = alloc.ensure(slot, rows)
+            if not ok:
+                # all-or-nothing: a failed grow moved nothing
+                assert alloc.free == before_free
+                assert alloc.owned[slot] == before_owned
+            else:
+                assert len(alloc.owned[slot]) * alloc.page_size >= rows
+        _check_invariants(alloc)
+    for s in range(len(alloc.owned)):
+        alloc.release(s)
+    _check_invariants(alloc)
+    assert len(alloc.free) == alloc.num_pages         # everything returned
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3),      # slot
+                              st.integers(0, 2),      # 0/1: ensure, 2: release
+                              st.integers(1, 40)),    # rows
+                    min_size=1, max_size=60))
+    def test_allocator_random_ops_keep_invariants(ops):
+        """Any interleaving of grows and releases keeps the pool
+        partitioned: alloc/free/evict never double-assigns a page, freed
+        pages return to the pool, and released slots' block-table entries
+        are invalidated."""
+        _allocator_op_sequence(
+            PageAllocator(num_pages=6, page_size=8, max_batch=4,
+                          pages_per_slot=5), ops)
+
+
+def test_allocator_fixed_seed_op_sequences():
+    """Hypothesis-free fallback of the property test: long pseudo-random op
+    sequences over several pool geometries."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        alloc = PageAllocator(num_pages=int(rng.integers(2, 9)),
+                              page_size=8, max_batch=4, pages_per_slot=5)
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 3)),
+                int(rng.integers(1, 41))) for _ in range(80)]
+        _allocator_op_sequence(alloc, ops)
+
+
+def test_allocator_grow_is_incremental_and_release_frees():
+    alloc = PageAllocator(num_pages=4, page_size=16, max_batch=2,
+                          pages_per_slot=4)
+    assert alloc.ensure(0, 10)                        # 1 page
+    assert alloc.pages_in_use() == 1
+    assert alloc.ensure(0, 10)                        # idempotent
+    assert alloc.pages_in_use() == 1
+    assert alloc.ensure(0, 40)                        # grow to 3
+    assert alloc.pages_in_use() == 3
+    assert alloc.ensure(1, 16)
+    assert not alloc.ensure(1, 33)                    # needs 3, 0 free: fail
+    assert alloc.pages_in_use() == 4
+    first_row = list(alloc.table[0])
+    alloc.release(0)
+    assert alloc.pages_in_use() == 1
+    assert (alloc.table[0] == -1).all() and first_row != list(alloc.table[0])
+    assert alloc.ensure(1, 33)                        # freed pages reusable
+
+
+# ---------------------------------------------------------------------------
+# paged Pallas kernels vs the XLA gather path (interpret mode)
+# ---------------------------------------------------------------------------
+
+def _paged_pool(seed, kv, d, pool_rows):
+    k = jax.random.normal(jax.random.PRNGKey(seed), (pool_rows, kv, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(seed + 1), (pool_rows, kv, d),
+                          jnp.float32)
+    return k, v
+
+
+@pytest.mark.parametrize("cap", [0.0, 30.0])
+def test_paged_flash_decode_interpret_matches_xla(cap):
+    """The paged flash-decode kernel (BlockSpec index map walking the block
+    table) must agree with the XLA gather fallback, scrambled page order and
+    unallocated pages included."""
+    b, h, kv, d, ps = 2, 4, 2, 32, 16
+    k, v = _paged_pool(1, kv, d, 8 * ps)
+    bt = jnp.asarray(np.array([[3, 0, 5, -1], [7, 2, 6, 4]], np.int32))
+    lens = jnp.array([37, 64], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, 1, h, d), jnp.float32)
+    kw = dict(block_table=bt, page_size=ps, t_logical=64, logit_cap=cap)
+    o_x = attn_lib.decode_attention(q, k, v, lens, backend="xla", **kw)
+    o_p = attn_lib.decode_attention(q, k, v, lens,
+                                    backend="pallas_interpret", **kw)
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p), atol=2e-5)
+
+
+def test_paged_flash_decode_int8_interpret_matches_xla():
+    b, h, kv, d, ps = 2, 4, 2, 32, 16
+    k, v = _paged_pool(3, kv, d, 8 * ps)
+    amax = jnp.maximum(jnp.abs(k).max(-1, keepdims=True), 1e-6)
+    kq = jnp.clip(jnp.round(k / amax * 127), -127, 127).astype(jnp.int8)
+    ks = (amax / 127.0).astype(jnp.float16)
+    bt = jnp.asarray(np.array([[1, 4, 0, 2], [7, 3, 6, 5]], np.int32))
+    lens = jnp.array([50, 61], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(5), (b, 1, h, d), jnp.float32)
+    kw = dict(block_table=bt, page_size=ps, t_logical=64,
+              k_scale=ks, v_scale=jnp.ones_like(ks))
+    o_x = attn_lib.decode_attention(q, kq, v, lens, backend="xla", **kw)
+    o_p = attn_lib.decode_attention(q, kq, v, lens,
+                                    backend="pallas_interpret", **kw)
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p), atol=2e-5)
+
+
+def test_paged_flash_verify_interpret_matches_xla():
+    """Multi-position staircase verify through the block table."""
+    b, s, h, kv, d, ps = 2, 4, 4, 2, 32, 16
+    k, v = _paged_pool(7, kv, d, 8 * ps)
+    bt = jnp.asarray(np.array([[3, 0, 5, 1], [7, 2, 6, 4]], np.int32))
+    lens = jnp.array([29, 55], jnp.int32)     # committed BEFORE the verify
+    q = jax.random.normal(jax.random.PRNGKey(9), (b, s, h, d), jnp.float32)
+    kw = dict(block_table=bt, page_size=ps, t_logical=64)
+    o_x = attn_lib.verify_attention(q, k, v, lens, backend="xla", **kw)
+    o_p = attn_lib.verify_attention(q, k, v, lens,
+                                    backend="pallas_interpret", **kw)
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p), atol=2e-5)
+
+
+def test_paged_kernel_registry_spaces():
+    """The paged kernels register their own tunables: the split granularity
+    IS the pool page, so page_size replaces k_splits; every space point
+    builds a valid config for the HAQA deployment loop."""
+    from repro.kernels import registry
+    space = registry.config_space("paged_flash_decode")
+    assert set(space) == {"block_k", "page_size"}
+    for bk in space["block_k"]:
+        for ps in space["page_size"]:
+            registry.make_config("paged_flash_decode", block_k=bk,
+                                 page_size=ps)
+    space = registry.config_space("paged_flash_verify")
+    assert set(space) == {"block_k", "page_size", "spec_len"}
+    for ps in space["page_size"]:
+        registry.make_config("paged_flash_verify", page_size=ps)
+    # serve_space sources its page_size candidates from the paged kernel
+    from repro.core import serve_space
+    sp = serve_space()
+    assert {"page_size", "kv_pool_frac"} <= set(sp.names)
+    assert tuple(sp.specs["page_size"].choices) == space["page_size"]
+
+
+# ---------------------------------------------------------------------------
+# model-level: paged cache ops are bit-identical to contiguous
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_paged_decode_and_verify_bitwise_match_contiguous(kv_dtype):
+    """Scrambled page order, shared pool: decode_step and verify_step must
+    produce BIT-identical logits to the contiguous cache (the paged gather
+    reproduces the exact contiguous view, so reductions associate the same
+    way)."""
+    cfg = dataclasses.replace(POCKET, kv_cache_dtype=kv_dtype)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    B, M, PS = 2, 32, 8
+    layout = tfm.PagedLayout(PS, M)
+    n_slot = M // PS
+    bt = np.array([[3, 0, 5, 1], [7, 2, 6, 4]], np.int32)
+    cc = tfm.init_cache(cfg, B, M)
+    cc["len"] = jnp.zeros((B,), jnp.int32)
+    pc = tfm.init_paged_cache(cfg, B, M, PS, B * n_slot)
+    pc["block_table"] = jnp.asarray(bt)
+    seq = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (B, 6)), jnp.int32)
+    for i in range(6):
+        lg_c, cc = tfm.decode_step(params, cfg, cc, tokens=seq[:, i:i + 1])
+        lg_p, pc = tfm.decode_step(params, cfg, pc, tokens=seq[:, i:i + 1],
+                                   paged=layout)
+        np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_p))
+    vt = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (B, 4)), jnp.int32)
+    lv_c, _ = tfm.verify_step(params, cfg, cc, vt)
+    lv_p, _ = tfm.verify_step(params, cfg, pc, vt, paged=layout)
+    np.testing.assert_array_equal(np.asarray(lv_c), np.asarray(lv_p))
+
+
+def test_paged_prefill_chunk_bitwise_matches_contiguous():
+    B, M, PS = 2, 32, 8
+    layout = tfm.PagedLayout(PS, M)
+    bt = np.array([[4, 5, 6, 7], [0, 1, 2, 3]], np.int32)
+    pc = tfm.init_paged_cache(POCKET, B, M, PS, B * (M // PS))
+    pc["block_table"] = jnp.asarray(bt)
+    cc = tfm.init_cache(POCKET, B, M)
+    cc["len"] = jnp.zeros((B,), jnp.int32)
+    toks = (np.arange(13, dtype=np.int32) % POCKET.vocab_size)[None]
+    off = 0
+    for c in (5, 5, 3):
+        xc, cc = tfm.prefill_chunk(PARAMS, POCKET, cc,
+                                   jnp.asarray(toks[:, off:off + c]),
+                                   jnp.int32(1), jnp.int32(off))
+        xp, pc = tfm.prefill_chunk(PARAMS, POCKET, pc,
+                                   jnp.asarray(toks[:, off:off + c]),
+                                   jnp.int32(1), jnp.int32(off),
+                                   paged=layout)
+        np.testing.assert_array_equal(np.asarray(xc), np.asarray(xp))
+        off += c
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity + layout fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg,params", [(POCKET, PARAMS),
+                                        (POCKET_INT8KV, PARAMS)],
+                         ids=["bf16_kv", "int8_kv"])
+def test_engine_paged_matches_contiguous_greedy_bitexact(cfg, params):
+    """serve_queue on the paged layout must emit EXACTLY the contiguous
+    layout's tokens — same uids, same sequences (bf16 and int8 KV)."""
+    paged = ServeEngine(cfg, params, scheme="bf16", max_batch=3, max_len=64,
+                        page_size=16, kv_layout="paged")
+    contig = ServeEngine(cfg, params, scheme="bf16", max_batch=3, max_len=64,
+                         kv_layout="contiguous")
+    assert paged.paged and not contig.paged
+    a = paged.serve_queue(_mixed_requests(7))
+    b = contig.serve_queue(_mixed_requests(7))
+    assert a == b
+    assert paged.stats["peak_pages_in_use"] > 0
+    assert paged.stats["evictions"] == 0              # full-size pool
+
+
+def test_engine_paged_chunked_admission_matches_contiguous():
+    """Chunked admission through the block table (prefix gathered from the
+    page pool) reproduces the contiguous engine token for token."""
+    paged = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=2,
+                        max_len=64, page_size=16)
+    contig = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=2,
+                         max_len=64, kv_layout="contiguous")
+    a = paged.serve_queue(_mixed_requests(5, seed=3), prefill_chunk=6)
+    b = contig.serve_queue(_mixed_requests(5, seed=3), prefill_chunk=6)
+    assert a == b
+    assert paged.stats["chunked_prefills"] > 0
+
+
+def test_engine_paged_spec_decode_matches_contiguous():
+    """Speculative verify through the block table: greedy spec on the paged
+    engine == greedy spec on the contiguous engine == vanilla."""
+    paged = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=3,
+                        max_len=64, page_size=16)
+    contig = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=3,
+                         max_len=64, kv_layout="contiguous")
+    a = paged.serve_queue(_mixed_requests(6), spec_len=4)
+    b = contig.serve_queue(_mixed_requests(6), spec_len=4)
+    vanilla = contig.serve_queue(_mixed_requests(6), spec_len=0)
+    assert a == b == vanilla
+    assert paged.stats["spec_steps"] > 0
+
+
+@pytest.mark.parametrize("pattern,kw", [("local_global", {"window_size": 8}),
+                                        ("hybrid_1_7", {"num_layers": 8})])
+def test_ring_and_ssm_plans_fall_back_to_contiguous(pattern, kw):
+    """kv_layout='auto' keeps ring-buffer/SSM plans on the contiguous path
+    (and an explicit 'paged' request degrades with a warning, not a crash);
+    results match a contiguous engine exactly."""
+    cfg = dataclasses.replace(POCKET, attn_pattern=pattern, **kw)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    auto = ServeEngine(cfg, params, scheme="bf16", max_batch=2, max_len=64)
+    assert not auto.paged
+    with pytest.warns(UserWarning, match="paged KV cache"):
+        forced = ServeEngine(cfg, params, scheme="bf16", max_batch=2,
+                             max_len=64, kv_layout="paged")
+    assert not forced.paged
+    contig = ServeEngine(cfg, params, scheme="bf16", max_batch=2, max_len=64,
+                         kv_layout="contiguous")
+    reqs = lambda: [Request(uid=i,
+                            prompt=((np.arange(12, dtype=np.int32) + 5 * i)
+                                    % cfg.vocab_size),
+                            max_new_tokens=4) for i in range(3)]
+    assert auto.serve_queue(reqs()) == contig.serve_queue(reqs())
+
+
+# ---------------------------------------------------------------------------
+# eviction + requeue under pool pressure
+# ---------------------------------------------------------------------------
+
+def _growth_requests(n, temp=0.0):
+    """One-page prompts that must GROW into further pages while decoding —
+    admission alone cannot absorb the pressure, so the pool exhausts."""
+    return [Request(uid=i,
+                    prompt=(np.arange(10, dtype=np.int32) + 7 * i)
+                    % POCKET.vocab_size,
+                    max_new_tokens=20, temperature=temp) for i in range(6)]
+
+
+@pytest.mark.parametrize("temp", [0.0, 0.8], ids=["greedy", "temperature"])
+def test_eviction_requeues_and_matches_uninterrupted_run(temp):
+    """An undersized pool (5 pages for 4 slots that each grow to 2) must
+    evict + requeue — never crash or drop — and every request must finish
+    with EXACTLY the tokens of an uninterrupted run: the generated prefix
+    re-enters as prompt and the slot PRNG stream is preserved, so greedy
+    continuations re-derive the same argmaxes and sampled ones draw the
+    same stream.  f32 weights: re-prefilling reassociates bf16 matmul
+    near-ties (the documented spec-decode artifact), which would test XLA's
+    summation order, not the scheduler."""
+    big = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=4,
+                      max_len=64, page_size=16)
+    small = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=4,
+                        max_len=64, page_size=16, kv_pages=5)
+    base = big.serve_queue(_growth_requests(6, temp))
+    reqs = _growth_requests(6, temp)
+    got = small.serve_queue(reqs)
+    assert small.stats["evictions"] > 0
+    assert big.stats["evictions"] == 0
+    assert got == base
+    assert sum(r.preemptions for r in reqs) == small.stats["evictions"]
+    assert small.stats["peak_pages_in_use"] <= 5
+    # nothing dropped or truncated
+    assert all(len(got[r.uid]) == r.max_new_tokens for r in reqs)
+
+
+def test_chunked_admissions_never_deadlock_the_pool():
+    """Several half-admitted slots can each hold partial pages and all
+    block on the exhausted pool with no decode running; the engine must
+    preempt one admission (requeue) rather than drop everything: every
+    request completes with the big-pool engine's exact tokens."""
+    mk = lambda: [Request(uid=i, prompt=(np.arange(30, dtype=np.int32) + i)
+                          % POCKET.vocab_size, max_new_tokens=4)
+                  for i in range(5)]
+    tight = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=4,
+                        max_len=64, page_size=16, kv_pages=4,
+                        prefill_chunk=16)
+    big = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=4,
+                      max_len=64, page_size=16, prefill_chunk=16)
+    got = tight.serve_queue(mk())
+    assert tight.stats["evictions"] > 0
+    assert got == big.serve_queue(mk())
+
+
+def test_eviction_multiple_preemptions_same_request():
+    """A request preempted repeatedly must fold each generated prefix into
+    its prompt exactly once (no duplicated prefix on the second eviction)."""
+    small = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=4,
+                        max_len=64, page_size=16, kv_pages=5)
+    reqs = _growth_requests(6)
+    got = small.serve_queue(reqs)
+    assert any(r.preemptions >= 2 for r in reqs)
+    for r in reqs:
+        # prompt grew to original 10 rows + the folded prefix — never past
+        # 10 + generated budget
+        assert len(r.prompt) <= 10 + r.max_new_tokens
+        assert len(got[r.uid]) == r.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# per-request rejection (engine.py:382 bugfix)
+# ---------------------------------------------------------------------------
+
+def test_over_budget_request_rejected_not_crashed():
+    """A request whose prompt + budget exceeds capacity is rejected with an
+    error surfaced on the Request; co-scheduled requests are unaffected.
+    (Previously a bare assert: disabled under python -O, and it killed the
+    whole engine instead of the one request.)"""
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=2, max_len=64)
+    good = [Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                    max_new_tokens=4),
+            Request(uid=2, prompt=np.arange(8, dtype=np.int32) + 1,
+                    max_new_tokens=4)]
+    bad = Request(uid=1, prompt=np.arange(50, dtype=np.int32),
+                  max_new_tokens=30)               # 80 rows > 64
+    res = eng.serve_queue([good[0], bad, good[1]])
+    assert res[1] == [] and bad.error is not None and bad.done
+    assert "80" in bad.error and "64" in bad.error
+    assert eng.stats["rejected_requests"] == 1
+    assert len(res[0]) == 4 and len(res[2]) == 4
+    solo = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=2,
+                       max_len=64, kv_layout="contiguous")
+    alone = solo.serve_queue([Request(uid=0,
+                                      prompt=np.arange(8, dtype=np.int32),
+                                      max_new_tokens=4),
+                              Request(uid=2,
+                                      prompt=np.arange(8, dtype=np.int32) + 1,
+                                      max_new_tokens=4)])
+    assert res[0] == alone[0] and res[2] == alone[2]
+
+
+def test_paged_pool_capacity_rejection():
+    """With an undersized pool the capacity bound is the POOL, not max_len:
+    a request that can never fit is rejected up front (no livelock)."""
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=2, max_len=64,
+                      page_size=16, kv_pages=2)    # pool: 32 rows
+    req = Request(uid=0, prompt=np.arange(20, dtype=np.int32),
+                  max_new_tokens=20)               # needs 40 rows
+    res = eng.serve_queue([req])
+    assert res[0] == [] and req.error is not None
+    assert eng.stats["rejected_requests"] == 1
+
+
+def test_generate_over_budget_raises_value_error():
+    """The synchronous path raises a real exception (asserts vanish under
+    python -O and would overrun the cache silently)."""
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_len=64)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(np.zeros((1, 60), np.int32), max_new_tokens=30)
+
+
+# ---------------------------------------------------------------------------
+# stats surface
+# ---------------------------------------------------------------------------
+
+def test_paged_stats_exposed():
+    eng = ServeEngine(POCKET, PARAMS, scheme="bf16", max_batch=2, max_len=64,
+                      page_size=16)
+    for key in ("pages_in_use", "peak_pages_in_use", "evictions",
+                "rejected_requests", "peak_active_slots"):
+        assert key in eng.stats
+    eng.serve_queue(_mixed_requests(4))
+    assert eng.stats["peak_pages_in_use"] > 0
+    assert eng.stats["peak_active_slots"] >= 1
+    assert eng.stats["pages_in_use"] == 0          # drained queue: all freed

@@ -338,6 +338,139 @@ def test_spec_accept_greedy_is_argmax():
 
 
 # ---------------------------------------------------------------------------
+# EOS inside an accepted window (ISSUE 4 regression): tokens drafted AFTER
+# an accepted EOS must never reach the emitted history, the committed cache
+# length, the accepted_tokens stat, or the bigram table
+# ---------------------------------------------------------------------------
+
+def test_spec_eos_mid_fully_accepted_window_greedy():
+    """Self-draft (100% acceptance) forces full windows, so an EOS landing
+    mid-window is followed by accepted drafts that must ALL be discarded:
+    emitted sequence, accepted_tokens, and the committed cache length have
+    to match non-speculative serving exactly."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=2,
+                      max_len=96, spec_len=4, draft=POCKET,
+                      draft_params=PARAMS32)
+    prompt = np.arange(9, dtype=np.int32)
+    full = eng.serve_queue([Request(uid=0, prompt=prompt,
+                                    max_new_tokens=24)], spec_len=0)[0]
+    # an EOS position past the first macro-probe so a FULL window spans it
+    pos = next(i for i in range(3, 20) if full[i] not in full[:i])
+    eos = full[pos]
+    vanilla = eng.serve_queue([Request(uid=0, prompt=prompt,
+                                       max_new_tokens=24,
+                                       eos_id=int(eos))], spec_len=0)[0]
+    assert vanilla == full[:pos + 1]
+    eng.reset_stats()
+    spec = eng.serve_queue([Request(uid=0, prompt=prompt, max_new_tokens=24,
+                                    eos_id=int(eos))])[0]
+    assert spec == vanilla                      # nothing after the EOS
+    s = eng.stats
+    # accepted_tokens counts only COMMITTED drafts: with the emitted count
+    # fixed, accepted can never exceed emitted-minus-admission
+    assert s["accepted_tokens"] <= len(spec) - 1
+    assert s["useful_slot_steps"] == len(spec) - 1
+    # the committed cache stops AT the EOS row — rejected/post-EOS draft
+    # rows were rolled back (length decrement), not committed
+    lens = np.asarray(eng._final_cache["len"])
+    assert int(lens.max()) == len(prompt) + len(spec) - 1
+
+
+def test_spec_eos_mid_window_temperature_never_overruns():
+    """Temperature + EOS mid-window across seeds: per-uid PRNG streams make
+    the sampled trajectory deterministic, so declaring a mid-stream token
+    the EOS must truncate the SAME trajectory at its first occurrence —
+    drafts accepted after it in the same window never leak."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=2,
+                      max_len=96)
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        prompt = rng.integers(0, POCKET.vocab_size, (7,)).astype(np.int32)
+        mk = lambda eos=None: Request(uid=seed, prompt=prompt,
+                                      max_new_tokens=24, temperature=0.9,
+                                      eos_id=eos)
+        ref = eng.serve_queue([mk()], spec_len=4)[seed]
+        # an EOS position deep enough that full windows span it
+        pos = next(i for i in range(3, len(ref))
+                   if ref[i] not in ref[:i])
+        res = eng.serve_queue([mk(int(ref[pos]))], spec_len=4)[seed]
+        assert res == ref[:pos + 1], (seed, res, ref)
+
+
+def test_spec_eos_bigram_table_not_polluted_past_eos():
+    """The on-device bigram table learns only COMMITTED transitions: after
+    an EOS-truncated window, rerunning the same queue must still match
+    vanilla (a polluted table would draft from post-EOS tokens and can
+    surface as acceptance-dependent divergence)."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=2,
+                      max_len=96)
+    prompt = np.arange(9, dtype=np.int32)
+    full = eng.serve_queue([Request(uid=0, prompt=prompt,
+                                    max_new_tokens=16)], spec_len=0)[0]
+    eos = full[3]
+    mk = lambda u: Request(uid=u, prompt=prompt, max_new_tokens=16,
+                           eos_id=int(eos))
+    vanilla = eng.serve_queue([mk(0)], spec_len=0)[0]
+    # same engine, repeated spec runs (tables rebuilt per serve_queue call)
+    for _ in range(2):
+        assert eng.serve_queue([mk(0)], spec_len=4)[0] == vanilla
+
+
+# ---------------------------------------------------------------------------
+# draft-model speculation x chunked admission (ISSUE 4): the draft cache is
+# chunk-resumed alongside the target's, never stale
+# ---------------------------------------------------------------------------
+
+def test_draft_model_composes_with_chunked_admission():
+    """Draft-model speculation + chunked admission used to force
+    whole-prompt admission (warning) because the draft cache was only
+    filled by whole-prompt prefill.  Now every target chunk chunk-resumes
+    the draft cache too: no warning, results identical to whole-prompt
+    admission, and — with the target as its own draft — acceptance stays
+    100%, which a stale draft cache could not produce."""
+    import warnings as _w
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=2,
+                      max_len=96, spec_len=3, draft=POCKET,
+                      draft_params=PARAMS32)
+    mk = lambda: [Request(uid=i,
+                          prompt=(np.arange(21, dtype=np.int32) + 5 * i)
+                          % POCKET.vocab_size,
+                          max_new_tokens=10) for i in range(3)]
+    whole = eng.serve_queue(mk(), prefill_chunk=0)
+    eng.reset_stats()
+    with _w.catch_warnings():
+        _w.simplefilter("error")                 # any warning -> failure
+        chunked = eng.serve_queue(mk(), prefill_chunk=6)
+    assert chunked == whole
+    assert eng.stats["chunked_prefills"] > 0     # chunking actually ran
+    s = eng.stats
+    assert s["draft_tokens"] > 0
+    # a STALE draft cache (the old bug: only whole-prompt prefill filled
+    # it) proposes from the wrong context and accepts ~nothing; the
+    # chunk-resumed cache keeps the self-draft near-perfect (not exactly
+    # 100%: draft rows come from (1,D) decode matmuls, verify rows from
+    # (S,D) ones — the usual reassociation ulps flip rare near-ties)
+    assert s["accepted_tokens"] >= 0.8 * s["draft_tokens"], s
+
+
+def test_draft_model_chunked_admission_slot_reuse():
+    """A re-admitted slot's draft cache must resume from the NEW prompt's
+    chunks, not leak the previous occupant's rows (forced reuse: 1 slot)."""
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=1,
+                      max_len=96, spec_len=3, draft=POCKET,
+                      draft_params=PARAMS32)
+    mk = lambda u: Request(uid=u, prompt=(np.arange(17, dtype=np.int32)
+                                          + 7 * u) % POCKET.vocab_size,
+                           max_new_tokens=8)
+    shared = eng.serve_queue([mk(0), mk(1), mk(2)], prefill_chunk=6)
+    for u in range(3):
+        alone = eng.serve_queue([mk(u)], prefill_chunk=6)
+        assert shared[u] == alone[u], u
+    assert (eng.stats["accepted_tokens"]
+            >= 0.8 * eng.stats["draft_tokens"]), eng.stats
+
+
+# ---------------------------------------------------------------------------
 # admission token budget
 # ---------------------------------------------------------------------------
 
