@@ -27,6 +27,11 @@ tokens per request):
   defeats any deterministic draft).  Reports accepted-tokens/step and
   tokens/s; criteria: >= 1.5x decode throughput at high acceptance with
   BIT-EXACT greedy parity, <= 1.1x slowdown at near-zero acceptance.
+* ``queue/prefix_*`` — the copy-on-write prefix cache (ISSUE 5) on a mixed
+  workload where 75% of requests share a long system prompt: warm (cache
+  populated) vs cold (cache off) shared-request TTFT, prefill tokens
+  saved, pages shared.  Criteria: warm TTFT >= 1.5x lower, tokens saved
+  >= 50% of all prompt tokens, and BIT-EXACT warm-vs-cold token parity.
 * ``queue/step_flatness`` — per-decode-step wall time across the run; the
   batcher's step time must NOT grow with generated length.
 * ``queue/unroll_gap`` — scanned vs python-unrolled decode-step latency
@@ -219,6 +224,100 @@ def _paged_section(bench: Dict, rows: List[Row], ci: bool,
                 f"{page_size} rows; parity="
                 f"{'ok' if ev['parity'] else 'FAIL'}; "
                 f"complete={'ok' if ev['all_complete'] else 'FAIL'}"))
+
+
+def _prefix_section(bench: Dict, rows: List[Row], ci: bool) -> None:
+    """Prefix cache (ISSUE 5): a mixed workload where 75% of requests share
+    a long system prompt, served cache-off (cold) vs cache-on after a
+    populating run (warm).
+
+    Criteria: warm shared-prefix TTFT >= 1.5x lower than cold,
+    ``prefill_tokens_saved`` >= 50% of the measured run's total prompt
+    tokens, and token-for-token parity between the cache-on and cache-off
+    runs (f32 weights: the shared pages hold exactly the rows a cold
+    prefill would write, so warm output is bit-exact, not approximate).
+    """
+    params32 = tfm.init_params(jax.random.PRNGKey(0), POCKET,
+                               dtype=jnp.float32)
+    sys_len = 96 if ci else 192
+    new_tokens = 6 if ci else 12
+    n = 8 if ci else 16
+    ps, slots = 16, 4
+    max_len = sys_len + 16 + new_tokens + 8
+
+    def mk():
+        rng = np.random.default_rng(17)
+        sysp = rng.integers(0, POCKET.vocab_size,
+                            (sys_len,)).astype(np.int32)
+        reqs = []
+        for i in range(n):
+            tail = rng.integers(0, POCKET.vocab_size,
+                                (int(rng.integers(4, 13)),)).astype(np.int32)
+            solo = rng.integers(0, POCKET.vocab_size,
+                                (sys_len // 2,)).astype(np.int32)
+            if i % 4 == 3:                       # every 4th: no shared part
+                prompt = solo
+            else:
+                prompt = np.concatenate([sysp, tail])
+            reqs.append(Request(uid=i, prompt=prompt,
+                                max_new_tokens=new_tokens))
+        return reqs
+
+    shared_uids = [i for i in range(n) if i % 4 != 3]
+
+    def ttfts(reqs, uids):
+        return float(np.mean([r.first_token_at - r.submitted_at
+                              for r in reqs if r.uid in uids]))
+
+    off = ServeEngine(POCKET, params32, scheme="bf16", max_batch=slots,
+                      max_len=max_len, page_size=ps, prefix_cache=False)
+    on = ServeEngine(POCKET, params32, scheme="bf16", max_batch=slots,
+                     max_len=max_len, page_size=ps)
+    off.serve_queue(mk())                            # compile warmup
+    on.serve_queue(mk())                             # compile + populate
+    cold_ttft = warm_ttft = float("inf")
+    res_off = res_on = None
+    for _ in range(2 if ci else 3):                  # best-of: TTFT ratios
+        off.reset_stats()                            # on a noisy host
+        on.reset_stats()
+        reqs_off = mk()
+        res_off = off.serve_queue(reqs_off)
+        cold_ttft = min(cold_ttft, ttfts(reqs_off, shared_uids))
+        reqs_on = mk()
+        res_on = on.serve_queue(reqs_on)
+        warm_ttft = min(warm_ttft, ttfts(reqs_on, shared_uids))
+    total_prompt = sum(len(r.prompt) for r in mk())
+    s = on.stats
+    out = {
+        "workload": {"requests": n, "shared_frac": len(shared_uids) / n,
+                     "system_prompt_tokens": sys_len,
+                     "total_prompt_tokens": total_prompt},
+        "cold_shared_ttft_s": cold_ttft,
+        "warm_shared_ttft_s": warm_ttft,
+        "warm_ttft_speedup": cold_ttft / max(warm_ttft, 1e-9),
+        "prefix_hits": s["prefix_hits"],
+        "prefill_tokens_saved": s["prefill_tokens_saved"],
+        "saved_frac_of_prompt_tokens": s["prefill_tokens_saved"]
+        / max(total_prompt, 1),
+        "pages_shared": s["pages_shared"],
+        "cached_pages": s["cached_pages"],       # end-of-run gauge
+        "prefix_cow": s["prefix_cow"],
+        "parity": bool(res_on == res_off),
+    }
+    out["ttft_ok"] = bool(out["warm_ttft_speedup"] >= 1.5)
+    out["saved_ok"] = bool(out["saved_frac_of_prompt_tokens"] >= 0.5)
+    out["hits_nonzero"] = bool(s["prefix_hits"] > 0)
+    bench["prefix"] = out
+    rows.append(Row(
+        name="serve_queue/prefix_warm_vs_cold",
+        us_per_call=warm_ttft * 1e6,
+        derived=f"warm shared TTFT {warm_ttft * 1e3:.0f}ms vs cold "
+                f"{cold_ttft * 1e3:.0f}ms "
+                f"({out['warm_ttft_speedup']:.2f}x); saved "
+                f"{s['prefill_tokens_saved']} prefill tokens "
+                f"({out['saved_frac_of_prompt_tokens']:.0%} of prompts); "
+                f"{s['pages_shared']} pages shared; "
+                f"parity={'ok' if out['parity'] else 'FAIL'}"))
 
 
 def _pertoken_pr1(engine: ServeEngine, requests: List[Request],
@@ -583,6 +682,9 @@ def run(scale: str = None, ci: bool = False, spec_len: int = 4,
     # -- paged vs contiguous KV cache (concurrency + eviction smoke) --------
     _paged_section(bench, rows, ci, page_size=page_size, kv_pages=kv_pages)
 
+    # -- prefix cache: warm vs cold TTFT on a 75%-shared-prompt workload ----
+    _prefix_section(bench, rows, ci)
+
     # -- PR 1 per-token scheduler (one host round-trip per token) -----------
     eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
                       max_len=PROMPT_LEN + new_tokens + 8,
@@ -773,6 +875,16 @@ def main() -> None:
             if not sp["accepted_nonzero"]:
                 failures.append("speculative decode accepted zero draft "
                                 "tokens on the greedy workload")
+        px = bench["prefix"]
+        if not px["hits_nonzero"]:
+            failures.append("prefix cache recorded ZERO hits on the "
+                            "75%-shared-prompt workload")
+        if px["prefill_tokens_saved"] <= 0:
+            failures.append("prefix cache saved ZERO prefill tokens")
+        if not px["parity"]:
+            failures.append(
+                "warm prefix-cache run did not match the cache-off run's "
+                "tokens exactly")
         pg = bench["paged"]
         if not pg["more_concurrent_ok"]:
             failures.append(

@@ -257,8 +257,10 @@ def serve_space() -> SearchSpace:
     speculative-decode schedule, the paged-KV pool geometry (page size and
     pool fraction — the per-platform memory knob a hardware-aware agent
     tunes against the device's HBM budget: a smaller pool admits the same
-    traffic in less memory at the cost of evictions), and the flash-decode /
-    flash-verify kernel tiles.  These are exactly the counterintuitive,
+    traffic in less memory at the cost of evictions), the prefix-cache
+    budget (cache fraction and minimum shareable prefix — prefill skipped
+    vs pool headroom), and the flash-decode / flash-verify kernel
+    tiles.  These are exactly the counterintuitive,
     hardware-dependent knobs the paper's agent is built to tune — the
     optimal draft length trades verify-step arithmetic intensity against
     acceptance rate, and the optimal split-K point moves with it."""
@@ -286,6 +288,19 @@ def serve_space() -> SearchSpace:
                          "(max_batch x max_len rows); below 1.0 the engine "
                          "over-commits slots and relies on eviction+requeue "
                          "under pressure."),
+        UniformFloat("prefix_cache_frac", 0.0, 1.0, 0.5,
+                     doc="Fraction of the paged-KV pool that may be "
+                         "registered in the prefix index (shared system "
+                         "prompts / templates; floored at one page when "
+                         "nonzero); 0 disables the prefix cache "
+                         "entirely.  Trades pool headroom for skipped "
+                         "prefill — the right point depends on the "
+                         "platform's HBM budget and the traffic's prefix "
+                         "reuse."),
+        UniformInt("min_shared_pages", 1, 8, 1,
+                   doc="Smallest cached prefix (in pages) worth mapping at "
+                       "admission; short matches save little prefill but "
+                       "still pin pages and pay table bookkeeping."),
         Categorical("flash_decode_block_k", fd["block_k"], 128,
                     doc="flash_decode key-block tile."),
         Categorical("flash_decode_k_splits", fd["k_splits"], 4,

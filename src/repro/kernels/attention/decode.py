@@ -99,16 +99,20 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, *rest,
 
 def flash_decode(q, k, v, lengths, k_scale=None, v_scale=None,
                  cfg: DecodeAttentionConfig = None, *, cap: float = 0.0,
-                 window: int = 0, interpret: bool = False):
+                 window: int = 0, interpret: bool = False,
+                 scale: float = None):
     """q: (B, KV, G, D); k/v: (B, T, KV, D) [int8 or float]; lengths: (B,)
     int32 valid cache length per sequence; k_scale/v_scale: (B, T, KV) f32
-    per-(token, head) dequant scales (required iff k/v are int8).
+    per-(token, head) dequant scales (required iff k/v are int8);
+    ``scale``: score scale (default D ** -0.5 — the ops wrapper passes the
+    TRUE head dim's scale when it pads D up to the TPU lane tile).
 
     Returns (B, KV, G, D) in q.dtype.
     """
     cfg = cfg or DecodeAttentionConfig()
     b, kv, g, d = q.shape
     t = k.shape[1]
+    scale = d ** -0.5 if scale is None else float(scale)
     quantized = k_scale is not None
 
     bk = min(cfg.block_k, round_up(t, common.SUBLANE))
@@ -148,7 +152,7 @@ def flash_decode(q, k, v, lengths, k_scale=None, v_scale=None,
     )
     o_part, m_part, l_part = pl.pallas_call(
         functools.partial(_decode_kernel, block_k=bk, split_len=split_len,
-                          scale=d ** -0.5, cap=cap, window=window,
+                          scale=scale, cap=cap, window=window,
                           quantized=quantized),
         grid_spec=grid_spec,
         out_shape=[

@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import (
-    AttentionConfig, DecodeAttentionConfig, PagedDecodeConfig,
-    PagedVerifyConfig, VerifyAttentionConfig,
+    LANE, AttentionConfig, DecodeAttentionConfig, PagedDecodeConfig,
+    PagedVerifyConfig, VerifyAttentionConfig, round_up,
 )
 from repro.kernels.attention import decode as D
 from repro.kernels.attention import kernel as K
@@ -20,6 +20,34 @@ from repro.kernels.attention import verify as V
 _DEFAULT_CFG = AttentionConfig()
 _DEFAULT_DECODE_CFG = DecodeAttentionConfig()
 _DEFAULT_VERIFY_CFG = VerifyAttentionConfig()
+
+
+def _lane_pad(*arrays):
+    """Zero-pad every array's LAST dim (head_dim) up to the TPU lane tile.
+
+    TPU tiles the minormost dimension in LANE (= 128) lanes, so a
+    ``head_dim < 128`` model (tiny-100m's 64, POCKET's 32) would misalign
+    every K/V BlockSpec tile — previously such models could only take the
+    XLA path, silently losing the Pallas decode/verify kernels (the open
+    ROADMAP tile-alignment item).  Zero lanes are exact: they add nothing
+    to the q·k dot products and produce zero output lanes the wrapper
+    slices off; the kernel receives the TRUE head dim's softmax scale
+    explicitly (``scale=d ** -0.5``) so padding never touches the math.
+    Returns (padded_dim, *padded_arrays).
+
+    Cost note: this pads the whole cache/pool per dispatch (an O(cache)
+    copy XLA may or may not fuse away), which is fine for the current
+    interpret-mode validation but should move to lane-padded pool
+    ALLOCATION (pad rows once at init, pad only q per step) before the
+    Pallas path is burned in on real TPU for small-head models — tracked
+    with the ROADMAP "flash-decode on real TPU" item.
+    """
+    d = arrays[0].shape[-1]
+    dp = round_up(d, LANE)
+    if dp == d:
+        return (d,) + arrays
+    return (dp,) + tuple(
+        jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, dp - d)]) for a in arrays)
 
 
 def set_default_config(cfg: AttentionConfig) -> None:
@@ -77,9 +105,11 @@ def flash_decode(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
     if k_scale is not None and k_scale.ndim == 4:
         k_scale = k_scale[..., 0]
         v_scale = v_scale[..., 0]
+    _, qg, k_cache, v_cache = _lane_pad(qg, k_cache, v_cache)
     out = D.flash_decode(qg, k_cache, v_cache, lengths, k_scale, v_scale,
-                         cfg, cap=cap, window=window, interpret=interpret)
-    return out.reshape(b, 1, h, d)
+                         cfg, cap=cap, window=window, interpret=interpret,
+                         scale=d ** -0.5)
+    return out[..., :d].reshape(b, 1, h, d)
 
 
 def paged_flash_decode(q, k_pool, v_pool, block_table, lengths, page_size,
@@ -98,10 +128,12 @@ def paged_flash_decode(q, k_pool, v_pool, block_table, lengths, page_size,
     b, s1, h, d = q.shape
     kv = k_pool.shape[1]
     qg = q[:, 0].reshape(b, kv, h // kv, d)
+    _, qg, k_pool, v_pool = _lane_pad(qg, k_pool, v_pool)
     out = P.paged_flash_decode(qg, k_pool, v_pool, block_table, lengths,
                                page_size, k_scale, v_scale, cfg, cap=cap,
-                               window=window, interpret=interpret)
-    return out.reshape(b, 1, h, d)
+                               window=window, interpret=interpret,
+                               scale=d ** -0.5)
+    return out[..., :d].reshape(b, 1, h, d)
 
 
 def paged_flash_verify(q, k_pool, v_pool, block_table, lengths, page_size,
@@ -119,10 +151,12 @@ def paged_flash_verify(q, k_pool, v_pool, block_table, lengths, page_size,
     g = h // kv
     qg = (q.reshape(b, s, kv, g, d).transpose(0, 2, 1, 3, 4)
           .reshape(b, kv, s * g, d))
+    _, qg, k_pool, v_pool = _lane_pad(qg, k_pool, v_pool)
     out = P.paged_flash_verify(qg, k_pool, v_pool, block_table, lengths,
                                page_size, g, k_scale, v_scale, cfg, cap=cap,
-                               window=window, interpret=interpret)
-    return (out.reshape(b, kv, s, g, d).transpose(0, 2, 1, 3, 4)
+                               window=window, interpret=interpret,
+                               scale=d ** -0.5)
+    return (out[..., :d].reshape(b, kv, s, g, d).transpose(0, 2, 1, 3, 4)
             .reshape(b, s, h, d))
 
 
@@ -150,7 +184,9 @@ def flash_verify(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
     if k_scale is not None and k_scale.ndim == 4:
         k_scale = k_scale[..., 0]
         v_scale = v_scale[..., 0]
+    _, qg, k_cache, v_cache = _lane_pad(qg, k_cache, v_cache)
     out = V.flash_verify(qg, k_cache, v_cache, lengths, g, k_scale, v_scale,
-                         cfg, cap=cap, window=window, interpret=interpret)
-    return (out.reshape(b, kv, s, g, d).transpose(0, 2, 1, 3, 4)
+                         cfg, cap=cap, window=window, interpret=interpret,
+                         scale=d ** -0.5)
+    return (out[..., :d].reshape(b, kv, s, g, d).transpose(0, 2, 1, 3, 4)
             .reshape(b, s, h, d))

@@ -194,7 +194,8 @@ def _page_pools(k, v, k_scale, v_scale, page_size):
 def paged_flash_decode(q, k, v, block_table, lengths, page_size,
                        k_scale=None, v_scale=None,
                        cfg: PagedDecodeConfig = None, *, cap: float = 0.0,
-                       window: int = 0, interpret: bool = False):
+                       window: int = 0, interpret: bool = False,
+                       scale: float = None):
     """q: (B, KV, G, D); k/v: (pool_rows, KV, D) paged pools [int8 or float];
     block_table: (B, max_pages) int32 (-1 = unallocated); lengths: (B,) int32
     valid LOGICAL cache length per slot INCLUDING the current token;
@@ -204,6 +205,7 @@ def paged_flash_decode(q, k, v, block_table, lengths, page_size,
     """
     cfg = cfg or PagedDecodeConfig()
     b, kv, g, d = q.shape
+    scale = d ** -0.5 if scale is None else float(scale)
     quantized = k_scale is not None
     if k_scale is not None and k_scale.ndim == 3:
         k_scale, v_scale = k_scale[..., 0], v_scale[..., 0]
@@ -246,7 +248,7 @@ def paged_flash_decode(q, k, v, block_table, lengths, page_size,
     )
     o_part, m_part, l_part = pl.pallas_call(
         functools.partial(_paged_decode_kernel, block_k=bk,
-                          page_size=page_size, scale=d ** -0.5, cap=cap,
+                          page_size=page_size, scale=scale, cap=cap,
                           window=window, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=[
@@ -264,7 +266,8 @@ def paged_flash_decode(q, k, v, block_table, lengths, page_size,
 def paged_flash_verify(q, k, v, block_table, lengths, page_size, gq,
                        k_scale=None, v_scale=None,
                        cfg: PagedVerifyConfig = None, *, cap: float = 0.0,
-                       window: int = 0, interpret: bool = False):
+                       window: int = 0, interpret: bool = False,
+                       scale: float = None):
     """q: (B, KV, S*G, D) — S draft positions x G grouped query heads,
     position-major (row r = position r // G); k/v: (pool_rows, KV, D) paged
     pools with the S new rows already scattered at logical rows
@@ -276,6 +279,7 @@ def paged_flash_verify(q, k, v, block_table, lengths, page_size, gq,
     cfg = cfg or PagedVerifyConfig()
     b, kv, rows, d = q.shape
     assert rows % gq == 0, (rows, gq)
+    scale = d ** -0.5 if scale is None else float(scale)
     quantized = k_scale is not None
     if k_scale is not None and k_scale.ndim == 3:
         k_scale, v_scale = k_scale[..., 0], v_scale[..., 0]
@@ -319,7 +323,7 @@ def paged_flash_verify(q, k, v, block_table, lengths, page_size, gq,
     )
     o_part, m_part, l_part = pl.pallas_call(
         functools.partial(_paged_verify_kernel, block_k=bk,
-                          page_size=page_size, gq=gq, scale=d ** -0.5,
+                          page_size=page_size, gq=gq, scale=scale,
                           cap=cap, window=window, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=[

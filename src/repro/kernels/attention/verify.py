@@ -106,7 +106,8 @@ def _verify_kernel(len_ref, q_ref, k_ref, v_ref, *rest,
 
 def flash_verify(q, k, v, lengths, gq, k_scale=None, v_scale=None,
                  cfg: VerifyAttentionConfig = None, *, cap: float = 0.0,
-                 window: int = 0, interpret: bool = False):
+                 window: int = 0, interpret: bool = False,
+                 scale: float = None):
     """q: (B, KV, S*G, D) — S draft positions x G grouped query heads per
     kv-head, flattened position-major (row r = position r // G, head
     r % G); k/v: (B, T, KV, D) [int8 or float] with the S new rows already
@@ -121,6 +122,7 @@ def flash_verify(q, k, v, lengths, gq, k_scale=None, v_scale=None,
     b, kv, rows, d = q.shape
     assert rows % gq == 0, (rows, gq)
     t = k.shape[1]
+    scale = d ** -0.5 if scale is None else float(scale)
     quantized = k_scale is not None
 
     bk = min(cfg.block_k, round_up(t, common.SUBLANE))
@@ -165,7 +167,7 @@ def flash_verify(q, k, v, lengths, gq, k_scale=None, v_scale=None,
     )
     o_part, m_part, l_part = pl.pallas_call(
         functools.partial(_verify_kernel, block_k=bk, split_len=split_len,
-                          gq=gq, scale=d ** -0.5, cap=cap, window=window,
+                          gq=gq, scale=scale, cap=cap, window=window,
                           quantized=quantized),
         grid_spec=grid_spec,
         out_shape=[

@@ -55,7 +55,19 @@ evict+requeue the youngest requests under pressure (``evictions`` in the
 stats line; evicted requests resume with their generated prefix, never
 dropped).  Ring-buffer/SSM plans keep the contiguous layout.  Requests
 whose prompt+budget exceed capacity are rejected per-request with
-``Request.error`` instead of crashing the batch.
+``Request.error`` instead of crashing the batch (count + reasons in the
+stats line).
+
+Paged layouts also run a copy-on-write **prefix cache** by default: full
+pages of a prompt's K/V are indexed by their token-block hash chain, and a
+later request sharing that page-aligned prefix maps the pages read-only
+and resumes prefill from the match offset — a shared system prompt is
+prefilled once, not per request (``prefix_hits`` /
+``prefill_tokens_saved`` / ``pages_shared`` in the stats line).
+``--no-prefix-cache`` disables it, ``--prefix-cache-frac`` bounds the pool
+fraction parked as cache, ``--min-shared-pages`` sets the smallest match
+taken, and ``--shared-prefix N`` prepends N shared system-prompt tokens to
+every queued request to exercise it.
 """
 from __future__ import annotations
 
@@ -120,6 +132,20 @@ def main():
                          "contiguous layout's worst-case memory; smaller "
                          "over-commits slots and evicts+requeues under "
                          "pressure)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the copy-on-write prefix cache (paged "
+                         "layouts share full pages of common prompt "
+                         "prefixes and skip their prefill by default)")
+    ap.add_argument("--prefix-cache-frac", type=float, default=1.0,
+                    help="fraction of the KV pool that may register in "
+                         "the prefix index (0 disables the cache)")
+    ap.add_argument("--min-shared-pages", type=int, default=1,
+                    help="smallest cached prefix (in pages) worth mapping "
+                         "at admission")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many SHARED system-prompt tokens to "
+                         "every queued request (exercises the prefix "
+                         "cache; 0 = fully random prompts)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -142,21 +168,29 @@ def main():
     if draft not in ("ngram", "none"):
         draft = (get_smoke_config(draft) if args.smoke else get_config(draft))
     engine = ServeEngine(cfg, params, scheme=scheme, max_batch=args.batch,
-                         max_len=args.prompt_len + args.new_tokens + 8,
+                         max_len=args.shared_prefix + args.prompt_len
+                         + args.new_tokens + 8,
                          macro_steps=args.macro_steps,
                          prefill_chunk=args.prefill_chunk,
                          admit_budget=args.admit_budget,
                          spec_len=args.spec_len, draft=draft,
                          kv_layout=args.kv_layout, page_size=args.page_size,
-                         kv_pages=args.kv_pages)
+                         kv_pages=args.kv_pages,
+                         prefix_cache=not args.no_prefix_cache,
+                         prefix_cache_frac=args.prefix_cache_frac,
+                         min_shared_pages=args.min_shared_pages)
 
     if args.queue > 0:
         rng = np.random.default_rng(args.seed)
+        sys_prompt = rng.integers(0, cfg.vocab_size,
+                                  (args.shared_prefix,)).astype(np.int32)
         reqs = []
         for uid in range(args.queue):
             plen = int(rng.integers(max(4, args.prompt_len // 2),
                                     args.prompt_len + 1))
             prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+            if args.shared_prefix > 0:
+                prompt = np.concatenate([sys_prompt, prompt])
             reqs.append(Request(uid=uid, prompt=prompt,
                                 max_new_tokens=args.new_tokens))
         stats = queue_throughput(engine, reqs)
@@ -173,6 +207,14 @@ def main():
               f"decode_steps={engine.stats['decode_steps']}, "
               f"useful_slot_steps={engine.stats['useful_slot_steps']}, "
               f"host_syncs/token={stats['host_syncs_per_token']:.3f}")
+        # per-request rejections: surface the count AND the reasons (the
+        # errors otherwise live only on the Request objects)
+        rejected = [r for r in reqs if r.error]
+        print(f"  rejected_requests={engine.stats['rejected_requests']}"
+              + ("" if not rejected else " — "
+                 + "; ".join(f"uid {r.uid}: {r.error}"
+                             for r in rejected[:3])
+                 + (" ..." if len(rejected) > 3 else "")))
         if engine.paged:
             print(f"  paged kv: page_size={engine.page_size}, "
                   f"pool={engine.kv_pages} pages "
@@ -181,6 +223,13 @@ def main():
                   f"evictions={engine.stats['evictions']}, "
                   f"rejected={engine.stats['rejected_requests']}, "
                   f"peak_active_slots={engine.stats['peak_active_slots']}")
+        if engine.prefix_cache:
+            print(f"  prefix cache: hits={engine.stats['prefix_hits']}, "
+                  f"prefill_tokens_saved="
+                  f"{engine.stats['prefill_tokens_saved']}, "
+                  f"pages_shared={engine.stats['pages_shared']}, "
+                  f"cow={engine.stats['prefix_cow']}, "
+                  f"cached_pages={engine.stats['cached_pages']}")
         if args.spec_len > 0:
             drafted = max(engine.stats["draft_tokens"], 1)
             print(f"  spec: spec_steps={engine.stats['spec_steps']}, "

@@ -371,6 +371,28 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
             "block_table": jnp.full((batch, pages_per_slot), -1, jnp.int32)}
 
 
+def copy_cache_page(blocks, src_page, dst_page, page_size: int):
+    """Copy one physical pool page (``page_size`` rows) to another across
+    every layer's K/V (and scale) pools.  ``blocks`` is the paged cache's
+    ``cache["blocks"]`` pytree — leaves are (count, pool_rows, ...) stacked
+    pools, so the copy slices along axis 1.  ``src_page``/``dst_page`` are
+    traced page indices: one compilation serves every copy-on-write.
+
+    This is the device half of the prefix cache's COW: when an admission's
+    matched prefix covers the whole prompt, the last matched page must be
+    privatized before the 1-token resume chunk rewrites its final row —
+    shared (refcounted) pages are only ever read.
+    """
+    def cp(pool):
+        tile = jax.lax.dynamic_slice_in_dim(pool, src_page * page_size,
+                                            page_size, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(pool, tile,
+                                                   dst_page * page_size,
+                                                   axis=1)
+
+    return jax.tree.map(cp, blocks)
+
+
 def paged_phys_rows(block_table, rows, page_size: int, t_logical: int,
                     pool_rows: int):
     """Physical pool row for each logical row in ``rows`` (B,) or (B, S).

@@ -38,6 +38,31 @@ Paged KV cache (vLLM-style block table)
     ``page_size`` and the pool fraction are HAQA-tunable serving knobs
     (``core.search_space.serve_space``).
 
+Prefix cache (copy-on-write page sharing)
+    Serving traffic is dominated by requests sharing a long common prefix
+    (system prompt, few-shot template, re-sent conversation history), and
+    on a linear layout a FULL page's K/V content is a pure function of the
+    token prefix that produced it.  The engine therefore keeps a host-side
+    hash-chain index over full, immutable pages (``prefix_block_hashes``:
+    block i's hash commits to tokens[: (i+1) * page_size]).  Admission
+    matches the longest cached page-aligned prefix, maps those pages
+    READ-ONLY into the slot's block-table row (pages are refcounted — the
+    old "one owner per page" invariant becomes "exactly one WRITER"), and
+    resumes prefill from the match offset through the traced-offset
+    ``tfm.prefill_chunk`` path — the shared prefix is never re-prefilled
+    (``stats["prefix_hits"]`` / ``prefill_tokens_saved`` / ``pages_shared``).
+    When the match covers the whole prompt, the last matched page is
+    privatized by copy-on-write (``tfm.copy_cache_page``) before the
+    1-token resume chunk rewrites its final row — a shared page is never
+    written, which is what makes warm-cache output BIT-EXACT vs cold-cache
+    (greedy and per-uid-PRNG temperature).  Released pages that are
+    registered in the index park in an LRU instead of freeing; the
+    allocator reclaims them before the engine preempts any live slot
+    (eviction priority: cached-but-unreferenced pages first, then the
+    youngest slot).  The index + pools persist across ``serve_queue``
+    calls; ``prefix_cache_frac`` bounds the cached fraction of the pool
+    and ``min_shared_pages`` the smallest match taken — both HAQA-tunable.
+
 Decode macro-steps
     The scheduler does not dispatch one decode per token.  A jitted
     ``jax.lax.scan`` over ``macro_steps`` (k) decode steps runs — entirely
@@ -116,6 +141,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
@@ -247,51 +273,227 @@ def _spec_accept_greedy(logits, drafts, vocab):
     return tokens, n_acc
 
 
+def prefix_block_hashes(tokens, page_size: int) -> List[bytes]:
+    """Chain hashes of a prompt's FULL token blocks: ``h_i =
+    blake2b(h_{i-1} || tokens[i*P:(i+1)*P])``.  Block i's hash therefore
+    commits to the whole prefix ``tokens[: (i+1)*P]`` — exactly what
+    determines the K/V content of page i on a linear (global-attention)
+    layout, RoPE included — so two prompts share page i iff their first
+    ``(i+1)*P`` tokens are identical.  The trailing partial block is never
+    hashed (partial pages are mutable: decode keeps appending rows).
+
+    blake2b-128 rather than Python's builtin ``hash``: a chain collision
+    would silently map another prompt's K/V into a request, so the index
+    key must be collision-resistant (the 64-bit birthday bound over cached
+    pages is astronomically safe at 128 bits), and the builtin's
+    PYTHONHASHSEED randomization would make a persisted index unmatchable
+    across processes — this digest is stable, so the ROADMAP's
+    cross-process persistence follow-on can serialize it as-is."""
+    arr = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    h = b"repro-prefix-cache-v1"                 # fixed chain seed
+    out = []
+    for i in range(len(arr) // page_size):
+        h = hashlib.blake2b(
+            h + arr[i * page_size:(i + 1) * page_size].tobytes(),
+            digest_size=16).digest()
+        out.append(h)
+    return out
+
+
 class PageAllocator:
-    """Host-side page allocator for the paged KV cache.
+    """Host-side page allocator for the paged KV cache, with refcounted
+    prefix-cache sharing.
 
     The device holds one global pool of ``num_pages`` fixed-size pages per
     layer plus ONE (max_batch, pages_per_slot) int32 block table shared by
-    every layer; this class owns the table.  Pages move strictly between the
-    free list and exactly one slot's allocation (never two — the scatter
-    conflict-freedom of the paged cache writes rests on that), allocation is
-    all-or-nothing, and releasing a slot invalidates its whole table row.
-    The engine mirrors ``table`` to the device before every jitted call that
-    reads it.
+    every layer; this class owns the table.  Allocation is all-or-nothing
+    and releasing a slot invalidates its whole table row.  The engine
+    mirrors ``table`` to the device before every jitted call that reads it.
+
+    Write-conflict freedom: without the prefix cache a page belongs to at
+    most one slot.  With it, a FULL, immutable page (its content is a pure
+    function of the token prefix that produced it) may be mapped read-only
+    into many slots' table rows at once; ``ref[p]`` counts the mappings and
+    the invariant becomes "exactly one *writer*" — a page is writable only
+    while it is mapped by a single slot AND not registered in the prefix
+    index.  Admissions that would write a shared/cached page (the resume
+    chunk of a whole-prompt match) must privatize it first via ``cow``.
+
+    Registered pages whose refcount drops to 0 are not freed: they park in
+    an LRU (``self.lru``, content intact on device) and serve future prefix
+    matches.  ``ensure`` reclaims LRU pages transparently when the free
+    list runs dry — cached-but-unreferenced pages are always evicted before
+    the engine preempts any live slot.
     """
 
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
-                 pages_per_slot: int):
+                 pages_per_slot: int, prefix_cache: bool = False,
+                 cache_frac: float = 1.0, min_shared_pages: int = 1):
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self.free: List[int] = list(range(self.num_pages - 1, -1, -1))
         self.owned: List[List[int]] = [[] for _ in range(max_batch)]
         self.table = np.full((max_batch, pages_per_slot), -1, np.int32)
+        self.ref: List[int] = [0] * self.num_pages
+        self.prefix_cache = bool(prefix_cache)
+        # budget over REGISTERED pages (parked or still referenced); floor
+        # at one page so any enabled cache can actually cache — flooring
+        # to 0 at small frac x pool would leave matching/hashing running
+        # forever hitless, the contaminated "off" point frac == 0 exists
+        # to avoid
+        self.max_cached = (max(1, int(float(cache_frac) * self.num_pages))
+                           if self.prefix_cache else 0)
+        self.min_shared_pages = max(1, int(min_shared_pages))
+        self.index: Dict[bytes, int] = {}   # chain hash -> physical page
+        self.hash_of: Dict[int, bytes] = {}  # physical page -> chain hash
+        # refcount-0 cached pages, least-recently-used first (reclaim order)
+        self.lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
 
     def pages_in_use(self) -> int:
-        return self.num_pages - len(self.free)
+        """Pages referenced by at least one slot (cached-but-unreferenced
+        LRU pages are reclaimable, so they don't count as in use)."""
+        return self.num_pages - len(self.free) - len(self.lru)
+
+    def cached_pages(self) -> int:
+        return len(self.hash_of)
 
     def pages_for(self, rows: int) -> int:
         return -(-int(rows) // self.page_size)
 
+    def _uncache(self, page: int) -> None:
+        h = self.hash_of.pop(page)
+        del self.index[h]
+
+    def _take_page(self) -> Optional[int]:
+        """Pop a writable page: free list first, then reclaim the oldest
+        cached refcount-0 page (dropping it from the prefix index)."""
+        if self.free:
+            return self.free.pop()
+        if self.lru:
+            page, _ = self.lru.popitem(last=False)
+            self._uncache(page)
+            return page
+        return None
+
     def ensure(self, slot: int, rows: int) -> bool:
-        """Grow ``slot``'s allocation to cover ``rows`` logical cache rows.
-        All-or-nothing: on False neither the free list nor the table moved."""
+        """Grow ``slot``'s allocation to cover ``rows`` logical cache rows
+        with PRIVATE (refcount-1, writable) pages.  All-or-nothing: on
+        False nothing moved.  May reclaim cached refcount-0 pages."""
         need = self.pages_for(rows) - len(self.owned[slot])
         if need <= 0:
             return True
-        if need > len(self.free) or self.pages_for(rows) > self.table.shape[1]:
+        if need > len(self.free) + len(self.lru) \
+                or self.pages_for(rows) > self.table.shape[1]:
             return False
         for _ in range(need):
-            p = self.free.pop()
+            p = self._take_page()
+            self.ref[p] = 1
             self.table[slot, len(self.owned[slot])] = p
             self.owned[slot].append(p)
         return True
 
+    def _unref(self, page: int) -> None:
+        """Drop one mapping of ``page``.  At refcount 0 a registered page
+        parks in the LRU (newest at the end, still matchable); an
+        unregistered one returns to the free list.  Every unmap path
+        (release / unmap_last / cow) funnels through here so the
+        park-or-free rule lives in exactly one place."""
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            if page in self.hash_of:
+                self.lru[page] = None
+            else:
+                self.free.append(page)
+
     def release(self, slot: int) -> None:
-        self.free.extend(reversed(self.owned[slot]))
+        """Unmap the slot's whole table row.  Shared pages DECREMENT their
+        refcount instead of freeing; a registered page whose count hits 0
+        parks in the LRU (still matchable), an unregistered one frees."""
+        for p in reversed(self.owned[slot]):
+            self._unref(p)
         self.owned[slot] = []
         self.table[slot, :] = -1
+
+    # -- prefix cache ------------------------------------------------------
+
+    def match_prefix(self, hashes: List[bytes]) -> List[int]:
+        """Longest cached chain of full pages for a prompt's block hashes
+        (``prefix_block_hashes``).  Returns the matched physical pages in
+        logical order; [] when shorter than ``min_shared_pages``."""
+        if not self.prefix_cache:
+            return []
+        pages = []
+        for h in hashes:
+            p = self.index.get(h)
+            if p is None:
+                break
+            pages.append(p)
+        if len(pages) < self.min_shared_pages:
+            return []
+        return pages
+
+    def map_shared(self, slot: int, pages: List[int]) -> None:
+        """Map matched pages read-only into the slot's table row (must be
+        empty).  Each mapping bumps the page's refcount; an LRU-parked page
+        becomes referenced again."""
+        assert not self.owned[slot], "map_shared: slot row must be empty"
+        for i, p in enumerate(pages):
+            if p in self.lru:
+                del self.lru[p]
+            self.ref[p] += 1
+            self.table[slot, i] = p
+            self.owned[slot].append(p)
+
+    def unmap_last(self, slot: int) -> None:
+        """Drop the slot's last mapped page (refcount decrement — the
+        fallback when ``cow`` cannot get a page)."""
+        p = self.owned[slot].pop()
+        self.table[slot, len(self.owned[slot])] = -1
+        self._unref(p)
+
+    def cow(self, slot: int) -> Optional[tuple]:
+        """Copy-on-write the slot's LAST mapped page: allocate a private
+        page, remap the table entry, and decrement the shared page's count
+        — the caller copies the rows on device (``tfm.copy_cache_page``)
+        BEFORE any write.  Returns (src_page, dst_page) or None when no
+        page is available (the caller then drops the match instead).  The
+        shared source page itself is never mutated."""
+        dst = self._take_page()
+        if dst is None:
+            return None
+        idx = len(self.owned[slot]) - 1
+        src = self.owned[slot][idx]
+        self._unref(src)
+        self.ref[dst] = 1
+        self.owned[slot][idx] = dst
+        self.table[slot, idx] = dst
+        return src, dst
+
+    def register(self, slot: int, hashes: List[bytes]) -> int:
+        """Register the slot's full prompt pages in the prefix index (page
+        i under chain hash i).  First writer wins: a hash already indexed
+        keeps its existing page (the slot's copy stays private).  The cache
+        budget (``max_cached`` = cache_frac * pool) evicts LRU refcount-0
+        pages to make room; when even that cannot fit, registration stops.
+        Returns how many pages were registered."""
+        if not self.prefix_cache:
+            return 0
+        n = 0
+        for i, h in enumerate(hashes[:len(self.owned[slot])]):
+            p = self.owned[slot][i]
+            if h in self.index or p in self.hash_of:
+                continue
+            while self.cached_pages() >= self.max_cached and self.lru:
+                old, _ = self.lru.popitem(last=False)
+                self._uncache(old)
+                self.free.append(old)
+            if self.cached_pages() >= self.max_cached:
+                break
+            self.index[h] = p
+            self.hash_of[p] = h
+            n += 1
+        return n
 
 
 class _CompiledLRU:
@@ -338,7 +540,9 @@ class ServeEngine:
                  spec_throttle_min: float = 0.1,
                  spec_probe_every: int = 32,
                  page_size: int = 64, kv_pages: int = 0,
-                 kv_layout: str = "auto"):
+                 kv_layout: str = "auto", prefix_cache: bool = True,
+                 prefix_cache_frac: float = 1.0,
+                 min_shared_pages: int = 1):
         self.cfg = cfg
         self.scheme = scheme
         if scheme in ("int8", "int4", "nf4", "w8a8"):
@@ -384,6 +588,31 @@ class ServeEngine:
         self.kv_pages = int(kv_pages) or max_batch * self.pages_per_slot
         self._paged_layout = (tfm.PagedLayout(self.page_size, max_len)
                               if self.paged else None)
+        # prefix cache: a host-side hash-chain index over full, immutable
+        # pages of the pool — admissions match the longest cached
+        # page-aligned prompt prefix, map those pages READ-ONLY into the
+        # slot's block-table row (refcounted), and resume prefill from the
+        # match offset; redundant prefill of shared system prompts /
+        # few-shot templates is skipped entirely.  Paged layouts only (the
+        # contiguous layout has nothing to share).  ``prefix_cache_frac``
+        # bounds how much of the pool may hold refcount-0 cached pages and
+        # ``min_shared_pages`` sets the smallest match worth taking — both
+        # HAQA-tunable (``serve_space``).
+        # frac == 0 fully disables (nothing could ever register, so the
+        # per-admission hashing/matching would be pure overhead — the HAQA
+        # loop's "off" point must measure OFF, not off-plus-bookkeeping)
+        self.prefix_cache = (bool(prefix_cache) and self.paged
+                             and float(prefix_cache_frac) > 0.0)
+        self.prefix_cache_frac = float(prefix_cache_frac)
+        self.min_shared_pages = max(1, int(min_shared_pages))
+        # persistent prefix-cache state: (device cache, allocator) carried
+        # across serve_queue calls so later batches hit earlier batches'
+        # prompts; None until the first paged serve_queue run
+        self._pc_state = None
+        ps = self.page_size
+        self._copy_page_fn = jax.jit(
+            lambda blocks, src, dst: tfm.copy_cache_page(blocks, src, dst,
+                                                         ps))
         # speculative decode: rollback must be a pure length decrement,
         # which only linear (global-attention) cache layouts give us — a
         # ring-buffer row write destroys the window's oldest live position
@@ -449,7 +678,14 @@ class ServeEngine:
                       # per-request admission rejections (over-capacity)
                       "evictions": 0, "pages_in_use": 0,
                       "peak_pages_in_use": 0, "peak_active_slots": 0,
-                      "rejected_requests": 0}
+                      "rejected_requests": 0,
+                      # prefix cache: admissions that matched a cached
+                      # prefix, prompt tokens whose prefill was skipped,
+                      # shared-page mappings served from the index,
+                      # copy-on-write privatizations, and the cached-page
+                      # gauge (refcounted pages held by the index)
+                      "prefix_hits": 0, "prefill_tokens_saved": 0,
+                      "pages_shared": 0, "prefix_cow": 0, "cached_pages": 0}
         self._admit_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._chunk_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._draft_admit_fns = _CompiledLRU(admit_cache_size, self.stats)
@@ -460,6 +696,11 @@ class ServeEngine:
     def reset_stats(self) -> None:
         for k in self.stats:
             self.stats[k] = 0
+
+    def reset_prefix_cache(self) -> None:
+        """Drop the persistent prefix-cache state (pool contents + index):
+        the next ``serve_queue`` call starts cold."""
+        self._pc_state = None
 
     # -- low-level steps (also what the dry-run lowers) ----------------------
 
@@ -950,7 +1191,16 @@ class ServeEngine:
         pending = list(requests)
         results: Dict[int, List[int]] = {}
         B = self.max_batch
-        cache = self._empty_batched_cache()
+        if self.prefix_cache and self._pc_state is not None:
+            # warm start: reuse the device pools + allocator/index from the
+            # previous serve_queue call — every slot was released at the end
+            # of that run, so only cached (refcount-0) pages carry over.
+            # Stale per-slot lengths are zeroed; stale table rows are -1.
+            cache, pc_alloc = self._pc_state
+            cache = dict(cache, len=jnp.zeros_like(cache["len"]),
+                         block_table=jnp.asarray(pc_alloc.table))
+        else:
+            cache, pc_alloc = self._empty_batched_cache(), None
         # paged pool bookkeeping: the host-side allocator owns the block
         # table; slot_rows mirrors each slot's committed cache length so
         # page growth never needs a device sync; order[b] is the admission
@@ -959,8 +1209,13 @@ class ServeEngine:
         # the most re-prefill work to lose); resume_keys preserves an
         # evicted request's PRNG stream so its re-admitted continuation
         # samples exactly as the uninterrupted run would
-        alloc = (PageAllocator(self.kv_pages, self.page_size, B,
-                               self.pages_per_slot) if self.paged else None)
+        alloc = pc_alloc
+        if alloc is None and self.paged:
+            alloc = PageAllocator(self.kv_pages, self.page_size, B,
+                                  self.pages_per_slot,
+                                  prefix_cache=self.prefix_cache,
+                                  cache_frac=self.prefix_cache_frac,
+                                  min_shared_pages=self.min_shared_pages)
         slot_rows = np.zeros((B,), np.int64)
         order = [0] * B
         admit_seq = 0
@@ -975,10 +1230,17 @@ class ServeEngine:
             self.stats["pages_in_use"] = used
             self.stats["peak_pages_in_use"] = max(
                 self.stats["peak_pages_in_use"], used)
+            self.stats["cached_pages"] = alloc.cached_pages()
 
         slots: List[Optional[Request]] = [None] * B
         admitting = [False] * B
         admit_off = [0] * B
+        # prefix cache per-admission state: the matched resume offset (the
+        # slot prefills only [prefix_off, plen)) and the prompt's chain
+        # hashes, kept for registration once the admission completes
+        prefix_off = [0] * B
+        slot_shared = [0] * B
+        slot_hashes: List[List[bytes]] = [[] for _ in range(B)]
         slot_key: List[Any] = [None] * B     # device PRNG key while admitting
         last_tokens = np.zeros((B, 1), np.int32)
         temps = np.zeros((B,), np.float32)
@@ -1164,6 +1426,52 @@ class ServeEngine:
                         slot_key[b] = (jnp.asarray(rk) if rk is not None
                                        else jax.random.fold_in(base_key,
                                                                req.uid))
+                        # prefix cache: match the longest cached chain of
+                        # full pages, map them read-only into the slot's
+                        # table row, and resume prefill from the match
+                        # offset — the skipped rows are exactly the shared
+                        # system prompt / template / re-sent history
+                        prefix_off[b] = 0
+                        slot_shared[b] = 0
+                        slot_hashes[b] = []
+                        if alloc is not None and alloc.prefix_cache:
+                            slot_hashes[b] = prefix_block_hashes(
+                                req.prompt, self.page_size)
+                            pages = alloc.match_prefix(slot_hashes[b])
+                            if pages:
+                                alloc.map_shared(b, pages)
+                                n_shared = len(pages)
+                                off = len(pages) * self.page_size
+                                if off == plen:
+                                    # the match covers the WHOLE prompt: the
+                                    # last token must still be re-run for
+                                    # its logits, and its K/V row write
+                                    # lands in the last matched page —
+                                    # privatize it first (copy-on-write),
+                                    # shared pages are only ever READ
+                                    pair = alloc.cow(b)
+                                    # either way the last matched page no
+                                    # longer serves shared (dropped, or
+                                    # swapped for a private COW copy)
+                                    n_shared -= 1
+                                    if pair is None:      # pool exhausted:
+                                        alloc.unmap_last(b)   # drop a page
+                                        off -= self.page_size  # instead
+                                    else:
+                                        cache["blocks"] = self._copy_page_fn(
+                                            cache["blocks"],
+                                            np.int32(pair[0]),
+                                            np.int32(pair[1]))
+                                        self.stats["prefix_cow"] += 1
+                                        off = plen - 1
+                                # hit/saved/shared stats are bumped when
+                                # the admission COMPLETES (a preempted
+                                # mid-admission slot re-matches at
+                                # re-admission — counting at assignment
+                                # would double-count that request)
+                                prefix_off[b] = off
+                                slot_shared[b] = n_shared
+                                admit_off[b] = off
                     if slots[b] is None or not admitting[b]:
                         continue
                     req = slots[b]
@@ -1171,10 +1479,14 @@ class ServeEngine:
                     # prompts that fit in one chunk take the whole-prompt
                     # bucketed admission (chunk attention would scan the
                     # full — empty — cache prefix for nothing); chunking
-                    # only pays for itself on multi-chunk prompts
-                    whole = chunk <= 0 or (admit_off[b] == 0
-                                           and plen <= chunk)
-                    cost = plen if whole else min(chunk, plen - admit_off[b])
+                    # only pays for itself on multi-chunk prompts.  A
+                    # prefix-matched admission ALWAYS goes through the
+                    # chunk-resume path: with chunking off the whole
+                    # remainder is one final chunk at the match offset
+                    whole = admit_off[b] == 0 and (chunk <= 0
+                                                   or plen <= chunk)
+                    step = chunk if chunk > 0 else plen - admit_off[b]
+                    cost = plen if whole else min(step, plen - admit_off[b])
                     if budget > 0 and spent > 0 and spent + cost > budget:
                         deferred_slots.add(b)
                         continue
@@ -1185,7 +1497,7 @@ class ServeEngine:
                         # the admission until decode frees pages — deferral
                         # here is pool pressure, NOT the token budget, so it
                         # stays out of budget_deferred_admissions
-                        rows_now = plen if whole else min(admit_off[b] + chunk,
+                        rows_now = plen if whole else min(admit_off[b] + step,
                                                           plen)
                         if not alloc.ensure(b, rows_now):
                             continue
@@ -1202,20 +1514,30 @@ class ServeEngine:
                         tok, key2 = jax.device_get((tok, key2))
                         self.stats["host_syncs"] += 1
                         admitting[b] = False
+                        if alloc is not None and alloc.prefix_cache:
+                            # register BEFORE start_slot: a request that
+                            # finishes on its first token releases the slot
+                            # immediately, and only registered pages
+                            # survive that release (LRU) for later matches
+                            alloc.register(b, slot_hashes[b])
                         start_slot(b, tok, key2)
                         admit_spec_state(b, req, int(tok))
                     else:
                         off = admit_off[b]
-                        end = min(off + chunk, plen)
+                        end = min(off + step, plen)
                         final = end == plen
                         if self._pad_safe:
                             # one compiled chunk shape for ANY prompt
                             # length: the remainder is right-padded; pad
                             # rows sit beyond every real query position, so
                             # causal masking keeps them inert and decode
-                            # overwrites them row by row
-                            c_shape = chunk
-                            toks_np = np.zeros((1, chunk), np.int32)
+                            # overwrites them row by row.  Prefix-resumed
+                            # single-chunk admissions (chunking off) pad to
+                            # the remainder's power-of-two bucket instead,
+                            # so their compile count stays bounded too
+                            c_shape = chunk if chunk > 0 \
+                                else self._bucket_for(end - off)
+                            toks_np = np.zeros((1, c_shape), np.int32)
                             toks_np[0, :end - off] = req.prompt[off:end]
                         else:
                             c_shape = end - off
@@ -1228,7 +1550,22 @@ class ServeEngine:
                                 np.int32(b), np.int32(off),
                                 np.int32(plen - 1 - off), np.int32(plen),
                                 np.float32(req.temperature), slot_key[b])
-                            if draft_model:
+                            if draft_model and prefix_off[b] > 0:
+                                # the TARGET skipped its shared prefix, but
+                                # the draft's contiguous per-slot cache has
+                                # no sharing to lean on — prefill the whole
+                                # prompt through the draft in one dispatch
+                                # (the draft is small by construction), so
+                                # its cache is dense and acceptance stays
+                                # high
+                                dbucket = self._bucket_for(plen)
+                                dpad = np.zeros((1, dbucket), np.int32)
+                                dpad[0, :plen] = req.prompt
+                                spec_aux = self._draft_admit_fn(dbucket)(
+                                    self.draft_params, spec_aux,
+                                    jnp.asarray(dpad), np.int32(b),
+                                    np.int32(plen))
+                            elif draft_model:
                                 # chunk-resume the draft cache alongside the
                                 # target's: its last chunk publishes the
                                 # draft length, so the in-macro draft decode
@@ -1242,6 +1579,14 @@ class ServeEngine:
                             tok, key2 = jax.device_get((tok, key2))
                             self.stats["host_syncs"] += 1
                             admitting[b] = False
+                            if alloc is not None and alloc.prefix_cache:
+                                if prefix_off[b] > 0:
+                                    self.stats["prefix_hits"] += 1
+                                    self.stats["prefill_tokens_saved"] += \
+                                        prefix_off[b]
+                                    self.stats["pages_shared"] += \
+                                        slot_shared[b]
+                                alloc.register(b, slot_hashes[b])
                             start_slot(b, tok, key2)
                             if not draft_model:
                                 admit_spec_state(b, req, int(tok))
@@ -1249,7 +1594,9 @@ class ServeEngine:
                             cache = self._chunk_fn(c_shape, False)(
                                 self.params, cache, jnp.asarray(toks_np),
                                 np.int32(b), np.int32(off))
-                            if draft_model:
+                            if draft_model and prefix_off[b] == 0:
+                                # (prefix-matched admissions defer the whole
+                                # draft prefill to the final chunk instead)
                                 spec_aux = self._draft_chunk_fn(
                                     c_shape, False)(
                                     self.draft_params, spec_aux,
@@ -1420,7 +1767,13 @@ class ServeEngine:
             results.setdefault(req.uid, list(req.tokens or []))
         if alloc is not None:
             self.stats["pages_in_use"] = alloc.pages_in_use()
+            self.stats["cached_pages"] = alloc.cached_pages()
         self._final_cache = cache          # introspection (rollback tests)
+        if self.prefix_cache and alloc is not None:
+            # carry the pools + allocator/index over: the next serve_queue
+            # call starts warm (every slot was released above, so only
+            # cached refcount-0 pages persist)
+            self._pc_state = (cache, alloc)
         return results
 
 

@@ -243,6 +243,72 @@ def test_flash_verify_reduces_to_decode_at_s1():
     assert _rel_err(out_v, out_d) < 1e-5
 
 
+# ---------------------------------------------------------------------------
+# head_dim < 128 lane alignment (ROADMAP tile-alignment item)
+# ---------------------------------------------------------------------------
+#
+# TPU tiles the minormost dim in 128 lanes, so head dims below 128 (POCKET's
+# 32, tiny-100m's 64) would misalign every K/V BlockSpec tile.  The ops
+# wrappers zero-pad D up to the lane tile and pass the TRUE head dim's
+# softmax scale down, so small-head models route through the Pallas path
+# instead of silently falling back to XLA; these interpret-mode parity
+# sweeps pin the padded path against the unpadded oracle.
+
+@pytest.mark.parametrize("d", [16, 32, 64, 96])
+def test_flash_decode_small_head_dim_lane_padded(d):
+    q, k, v, lens = _decode_inputs(d=d)
+    out = aops.flash_decode(q, k, v, lens, interpret=True)
+    assert out.shape == q.shape                      # padding sliced off
+    assert _rel_err(out, _decode_ref(q, k, v, lens)) < 1e-4
+
+
+def test_flash_decode_small_head_dim_int8_cap():
+    """Padded lanes must stay exact through tile-wise dequant and the
+    logit softcap (the cap sees correctly-scaled scores)."""
+    q, k, v, lens = _decode_inputs(d=64)
+    kq, ks = _quantize_cache(k)
+    vq, vs = _quantize_cache(v)
+    out = aops.flash_decode(q, kq, vq, lens, ks, vs, cap=30.0,
+                            interpret=True)
+    assert _rel_err(out, _decode_ref(q, kq, vq, lens, ks, vs,
+                                     cap=30.0)) < 1e-4
+
+
+@pytest.mark.parametrize("d", [32, 64])
+def test_flash_verify_small_head_dim_lane_padded(d):
+    q, k, v, lens = _verify_inputs(d=d)
+    out = aops.flash_verify(q, k, v, lens, interpret=True)
+    assert out.shape == q.shape
+    assert _rel_err(out, _verify_ref(q, k, v, lens)) < 1e-4
+
+
+@pytest.mark.parametrize("d", [32, 64])
+def test_paged_kernels_small_head_dim_lane_padded(d):
+    """Paged decode + verify through the block table at small head dims:
+    the padded Pallas path must match the XLA gather fallback."""
+    import numpy as np
+    from repro.models import attention as attn_lib
+    b, h, kv, ps = 2, 4, 2, 16
+    k = jax.random.normal(jax.random.PRNGKey(1), (8 * ps, kv, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (8 * ps, kv, d),
+                          jnp.float32)
+    bt = jnp.asarray(np.array([[3, 0, 5, 1], [7, 2, 6, 4]], np.int32))
+    kw = dict(block_table=bt, page_size=ps, t_logical=64)
+    q1 = jax.random.normal(jax.random.PRNGKey(3), (b, 1, h, d), jnp.float32)
+    lens = jnp.array([37, 64], jnp.int32)
+    o_x = attn_lib.decode_attention(q1, k, v, lens, backend="xla", **kw)
+    o_p = attn_lib.decode_attention(q1, k, v, lens,
+                                    backend="pallas_interpret", **kw)
+    assert _rel_err(o_p, o_x) < 1e-4
+    qs = jax.random.normal(jax.random.PRNGKey(4), (b, 3, h, d), jnp.float32)
+    lens = jnp.array([29, 55], jnp.int32)
+    o_x = attn_lib.verify_attention(qs, k, v, lens, backend="xla", **kw)
+    o_p = attn_lib.verify_attention(qs, k, v, lens,
+                                    backend="pallas_interpret", **kw)
+    assert _rel_err(o_p, o_x) < 1e-4
+
+
 def test_flash_verify_registry_space():
     """flash_verify is a tunable kernel: (block_k, k_splits, spec_len) all
     come from the registry for the HAQA deployment loop."""

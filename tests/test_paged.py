@@ -31,7 +31,7 @@ from repro.configs.paper_models import POCKET
 from repro.models import attention as attn_lib
 from repro.models import transformer as tfm
 from repro.serve import Request, ServeEngine
-from repro.serve.engine import PageAllocator
+from repro.serve.engine import PageAllocator, prefix_block_hashes
 
 PARAMS = tfm.init_params(jax.random.PRNGKey(0), POCKET)
 PARAMS32 = tfm.init_params(jax.random.PRNGKey(0), POCKET, dtype=jnp.float32)
@@ -53,11 +53,32 @@ def _mixed_requests(n, temp=0.0, seed=11, plen_hi=24, max_new=9):
 # ---------------------------------------------------------------------------
 
 def _check_invariants(alloc: PageAllocator):
-    owned = [p for ps in alloc.owned for p in ps]
-    # a page is free XOR owned by exactly one slot — never double-assigned
-    assert len(owned) == len(set(owned))
-    assert not set(owned) & set(alloc.free)
-    assert sorted(owned + alloc.free) == list(range(alloc.num_pages))
+    """Refcount-regime pool invariants (degenerate to the old one-owner
+    rules when the prefix cache is off: lru empty, every ref <= 1)."""
+    import collections
+    owned = collections.Counter(p for ps in alloc.owned for p in ps)
+    # every page is exactly one of: free, LRU-parked (cached, ref 0), or
+    # referenced by >= 1 slot — and the partition covers the whole pool
+    assert not set(alloc.free) & set(owned)
+    assert not set(alloc.free) & set(alloc.lru)
+    assert not set(alloc.lru) & set(owned)
+    assert len(alloc.free) == len(set(alloc.free))
+    assert sorted(list(alloc.free) + list(alloc.lru) + sorted(set(owned))) \
+        == list(range(alloc.num_pages))
+    for p in range(alloc.num_pages):
+        # the refcount IS the number of slot mappings, and a page is never
+        # freed (or LRU-reclaimed) while someone still references it
+        assert alloc.ref[p] == owned.get(p, 0)
+    for p in alloc.lru:
+        assert p in alloc.hash_of             # only registered pages park
+    for h, p in alloc.index.items():          # index <-> reverse map agree
+        assert alloc.hash_of.get(p) == h
+    assert alloc.cached_pages() == len(alloc.index)
+    if alloc.prefix_cache:
+        assert alloc.cached_pages() <= alloc.max_cached
+    # pool accounting: pages_in_use counts referenced pages only (cached
+    # refcount-0 pages are reclaimable, not in use)
+    assert alloc.pages_in_use() == len(set(owned))
     # the block table mirrors ownership exactly: slot rows hold the slot's
     # pages in allocation order, then -1
     for s, pages in enumerate(alloc.owned):
@@ -115,6 +136,158 @@ def test_allocator_fixed_seed_op_sequences():
         ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 3)),
                 int(rng.integers(1, 41))) for _ in range(80)]
         _allocator_op_sequence(alloc, ops)
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator invariants under the refcount/prefix-cache regime
+# ---------------------------------------------------------------------------
+
+def _prefix_library(page: int):
+    """Synthetic prompts with genuinely shared page-aligned prefixes."""
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 500, (4 * page,)).astype(np.int32)
+    return [
+        base[:2 * page],                                   # exactly 2 pages
+        np.concatenate([base[:2 * page],                   # 2 shared + tail
+                        rng.integers(0, 500, (5,)).astype(np.int32)]),
+        base[:3 * page + 2],                               # 3 shared + tail
+        rng.integers(0, 500, (2 * page + 3,)).astype(np.int32),  # unrelated
+    ]
+
+
+def _prefix_op_sequence(alloc: PageAllocator, prompts, ops):
+    """Replay (slot, op, arg) triples through the engine's admission flow
+    (match -> map_shared -> COW -> ensure -> register / grow / release),
+    asserting after every step that: no page is freed while refcount > 0,
+    COW never touches the shared source page, release decrements instead
+    of freeing, and the pool partition / pages_in_use accounting stays
+    consistent."""
+    page = alloc.page_size
+    for slot, op, arg in ops:
+        if op == 0:                                   # admit prompts[arg]
+            if alloc.owned[slot]:
+                alloc.release(slot)
+            toks = prompts[arg % len(prompts)]
+            plen = len(toks)
+            hashes = prefix_block_hashes(toks, page)
+            pages = alloc.match_prefix(hashes)
+            before = {p: alloc.ref[p] for p in pages}
+            alloc.map_shared(slot, pages)
+            for p in pages:                           # one ref per mapping
+                assert alloc.ref[p] == before[p] + 1
+            if pages and len(pages) * page == plen:
+                lru_before = list(alloc.lru)
+                pair = alloc.cow(slot)
+                if pair is None:
+                    # pool exhausted: the fallback drops the last matched
+                    # page instead (and may park it back in the LRU)
+                    assert not alloc.free and not lru_before
+                    alloc.unmap_last(slot)
+                else:
+                    src, dst = pair
+                    # COW never mutates the shared page: the source stays
+                    # registered (still matchable) and merely lost the
+                    # slot's mapping; the copy is private and unregistered
+                    assert src in alloc.hash_of
+                    assert dst not in alloc.hash_of
+                    assert alloc.ref[dst] == 1
+                    assert alloc.owned[slot][-1] == dst
+            if alloc.ensure(slot, plen):
+                alloc.register(slot, hashes)
+            else:
+                alloc.release(slot)
+        elif op == 1 and alloc.owned[slot]:           # decode growth
+            alloc.ensure(slot,
+                         len(alloc.owned[slot]) * page + arg % page + 1)
+        elif op == 2:
+            # release decrements; a page another slot still maps must NOT
+            # return to the free list (or the LRU)
+            shared = [p for p in alloc.owned[slot] if alloc.ref[p] > 1]
+            alloc.release(slot)
+            for p in shared:
+                assert alloc.ref[p] >= 1
+                assert p not in alloc.free and p not in alloc.lru
+        _check_invariants(alloc)
+    for s in range(len(alloc.owned)):
+        alloc.release(s)
+    _check_invariants(alloc)
+    # everything returned: free + LRU-cached covers the pool again
+    assert len(alloc.free) + len(alloc.lru) == alloc.num_pages
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3),      # slot
+                              st.integers(0, 2),      # admit / grow / release
+                              st.integers(0, 40)),    # prompt pick / rows
+                    min_size=1, max_size=50))
+    def test_prefix_allocator_random_ops_keep_invariants(ops):
+        _prefix_op_sequence(
+            PageAllocator(num_pages=8, page_size=8, max_batch=4,
+                          pages_per_slot=6, prefix_cache=True,
+                          cache_frac=0.75),
+            _prefix_library(8), ops)
+
+
+def test_prefix_allocator_fixed_seed_op_sequences():
+    """Hypothesis-free fallback: long pseudo-random admit/match/release/
+    evict sequences over several pool geometries and cache fractions."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        alloc = PageAllocator(num_pages=int(rng.integers(4, 12)),
+                              page_size=8, max_batch=4, pages_per_slot=6,
+                              prefix_cache=True,
+                              cache_frac=float(rng.uniform(0.3, 1.0)))
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 3)),
+                int(rng.integers(0, 41))) for _ in range(100)]
+        _prefix_op_sequence(alloc, _prefix_library(8), ops)
+
+
+def test_prefix_allocator_share_and_release_semantics():
+    """Directed version of the core refcount rules: two slots map the same
+    cached pages, the first release only decrements, the second parks the
+    pages in the LRU (not the free list), and a new private allocation
+    reclaims LRU pages before failing."""
+    page = 8
+    lib = _prefix_library(page)
+    alloc = PageAllocator(num_pages=6, page_size=page, max_batch=3,
+                          pages_per_slot=6, prefix_cache=True)
+    toks = lib[1]                                     # 2 full pages + tail
+    hashes = prefix_block_hashes(toks, page)
+    assert alloc.ensure(0, len(toks))
+    assert alloc.register(0, hashes) == 2
+    pages = alloc.match_prefix(hashes)
+    assert pages == alloc.owned[0][:2]
+    alloc.map_shared(1, pages)
+    assert all(alloc.ref[p] == 2 for p in pages)
+    assert alloc.ensure(1, len(toks))                 # private tail page
+    alloc.release(0)
+    assert all(alloc.ref[p] == 1 for p in pages)      # decrement, not free
+    assert not set(pages) & set(alloc.free)
+    alloc.release(1)
+    assert all(alloc.ref[p] == 0 for p in pages)
+    assert set(pages) <= set(alloc.lru)               # parked, matchable
+    assert alloc.match_prefix(hashes) == pages
+    assert alloc.pages_in_use() == 0
+    # exhausting the free list reclaims the LRU (and drops the index)
+    assert alloc.ensure(2, 6 * page)
+    assert alloc.cached_pages() == 0 and alloc.match_prefix(hashes) == []
+
+
+def test_prefix_allocator_min_shared_pages_and_cache_frac():
+    page = 8
+    lib = _prefix_library(page)
+    alloc = PageAllocator(num_pages=8, page_size=page, max_batch=2,
+                          pages_per_slot=6, prefix_cache=True,
+                          cache_frac=0.25, min_shared_pages=3)
+    toks = lib[2]                                     # 3 full pages + tail
+    hashes = prefix_block_hashes(toks, page)
+    assert alloc.ensure(0, len(toks))
+    # cache_frac 0.25 of 8 pages = 2 cached pages max
+    assert alloc.register(0, hashes) == 2
+    assert alloc.cached_pages() == 2
+    # a 2-page match is below min_shared_pages=3 -> not taken
+    assert alloc.match_prefix(hashes) == []
 
 
 def test_allocator_grow_is_incremental_and_release_frees():
