@@ -32,6 +32,16 @@ tokens per request):
   populated) vs cold (cache off) shared-request TTFT, prefill tokens
   saved, pages shared.  Criteria: warm TTFT >= 1.5x lower, tokens saved
   >= 50% of all prompt tokens, and BIT-EXACT warm-vs-cold token parity.
+* ``queue/chaos`` (``--chaos``) — fault-injection smoke (ISSUE 6): one
+  injected NaN macro-step (quarantine + requeue must finish token-exact),
+  a double NaN on the same request (rejected with
+  ``finish_reason="quarantined"``), a transient page-pool exhaustion
+  (preempt/requeue, exact recovery), and a process kill between
+  macro-steps followed by ``load_state`` on a fresh engine (the restored
+  run completes the batch with the fault-free run's tokens).  Criteria:
+  no crash, every faulted request carries a non-empty ``finish_reason``,
+  unfaulted co-scheduled requests stay token-exact, and kill+restore
+  completes the batch.
 * ``queue/step_flatness`` — per-decode-step wall time across the run; the
   batcher's step time must NOT grow with generated length.
 * ``queue/unroll_gap`` — scanned vs python-unrolled decode-step latency
@@ -52,7 +62,7 @@ Everything is also written machine-readably to ``benchmarks/BENCH_serve.json``
 (tokens/s, TTFT p50/p99, host_syncs/token, criteria booleans).
 
     PYTHONPATH=src:. python benchmarks/serve_queue_bench.py [--ci]
-        [--spec-len L] [--draft ngram]
+        [--spec-len L] [--draft ngram] [--chaos]
 
 ``--ci`` runs a tiny configuration and exits non-zero if host syncs per
 token exceed 1/K, the chunked-admission TTFT bound fails, speculative
@@ -318,6 +328,133 @@ def _prefix_section(bench: Dict, rows: List[Row], ci: bool) -> None:
                 f"({out['saved_frac_of_prompt_tokens']:.0%} of prompts); "
                 f"{s['pages_shared']} pages shared; "
                 f"parity={'ok' if out['parity'] else 'FAIL'}"))
+
+
+def _chaos_section(bench: Dict, rows: List[Row], ci: bool) -> None:
+    """Fault-injection smoke (ISSUE 6): the engine under injected faults
+    must degrade per-request — never crash, never corrupt a co-scheduled
+    request — and a killed process must resume bit-exact from its saved
+    state.  f32 weights so "token-exact" means exact (bf16 re-prefill
+    reassociates near-ties; see the spec sweep's rationale).
+
+    Four runs against one fault-free baseline:
+
+    * ``nan_requeue``    — one poisoned macro-step; the quarantined slot
+      requeues once and EVERY request finishes with baseline tokens.
+    * ``nan_quarantined``— the same request faulted twice; it is rejected
+      with ``finish_reason="quarantined"`` while bystanders stay exact.
+    * ``exhaust``        — pages stolen from the pool mid-run and later
+      returned; preemption absorbs the pressure, recovery is exact.
+    * ``kill_restore``   — ``ServeKilled`` between macro-steps with a
+      state dir; a FRESH engine restores and completes the batch.
+    """
+    import shutil
+    import tempfile
+
+    from repro.serve.fault import FaultInjector, FaultPlan, ServeKilled
+
+    params32 = tfm.init_params(jax.random.PRNGKey(0), POCKET,
+                               dtype=jnp.float32)
+    n, max_new = 4, 12
+
+    def mk():
+        rng = np.random.default_rng(11)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, POCKET.vocab_size,
+                                            (10,)).astype(np.int32),
+                        max_new_tokens=max_new) for i in range(n)]
+
+    def engine(**kw):
+        return ServeEngine(POCKET, params32, scheme="bf16", max_batch=3,
+                           max_len=64, page_size=16, **kw)
+
+    base = engine().serve_queue(mk())
+    out: Dict[str, object] = {"runs": {}}
+    bench["chaos"] = out
+    crashes: List[str] = []
+    reasons_ok = True
+    bystanders_ok = True
+
+    def faulted_run(name, plan, faulted_uids, expect_exact):
+        nonlocal reasons_ok, bystanders_ok
+        try:
+            eng = engine(faults=FaultInjector(plan))
+            reqs = mk()
+            got = eng.serve_queue(reqs)
+        except Exception as exc:                     # noqa: BLE001 — the
+            crashes.append(f"{name}: {exc!r}")       # smoke IS "no crash"
+            out["runs"][name] = {"crashed": repr(exc)}
+            return
+        by_uid = {r.uid: r for r in reqs}
+        bystanders = [u for u in base if u not in faulted_uids]
+        rec = {
+            "finish_reasons": {str(r.uid): r.finish_reason for r in reqs},
+            "nan_events": eng.stats["nan_events"],
+            "quarantine_requeues": eng.stats["quarantine_requeues"],
+            "quarantined": eng.stats["quarantined_requests"],
+            "evictions": eng.stats["evictions"],
+            "bystanders_exact": bool(all(got.get(u) == base[u]
+                                         for u in bystanders)),
+            "faulted_reasons_nonempty": bool(all(
+                by_uid[u].finish_reason for u in faulted_uids)),
+        }
+        if expect_exact:
+            rec["exact"] = bool(got == base)
+        out["runs"][name] = rec
+        reasons_ok &= rec["faulted_reasons_nonempty"]
+        bystanders_ok &= rec["bystanders_exact"] \
+            and rec.get("exact", True)
+
+    faulted_run("nan_requeue", FaultPlan(nan_at={1: 1}),
+                faulted_uids=[1], expect_exact=True)
+    faulted_run("nan_quarantined", FaultPlan(nan_at={1: 1, 2: 1}),
+                faulted_uids=[1], expect_exact=False)
+    faulted_run("exhaust", FaultPlan(exhaust_at={1: 6}, restore_at=3),
+                faulted_uids=[], expect_exact=True)
+
+    # -- kill between macro-steps, restore on a FRESH engine ----------------
+    state_dir = tempfile.mkdtemp(prefix="serve_chaos_state_")
+    kill_ok = False
+    try:
+        eng = engine(faults=FaultInjector(FaultPlan(kill_at=2)))
+        killed = False
+        try:
+            eng.serve_queue(mk(), state_dir=state_dir)
+        except ServeKilled:
+            killed = True
+        eng2 = engine()
+        reqs2 = eng2.load_state(state_dir)
+        got = eng2.serve_queue(reqs2)
+        kill_ok = bool(killed and got == base
+                       and eng.stats["state_saves"] == 1
+                       and eng2.stats["state_restores"] == 1)
+        out["runs"]["kill_restore"] = {
+            "killed": killed,
+            "state_saves": eng.stats["state_saves"],
+            "state_restores": eng2.stats["state_restores"],
+            "restored_requests": len(reqs2),
+            "exact": bool(got == base),
+        }
+    except Exception as exc:                         # noqa: BLE001
+        crashes.append(f"kill_restore: {exc!r}")
+        out["runs"]["kill_restore"] = {"crashed": repr(exc)}
+    finally:
+        shutil.rmtree(state_dir, ignore_errors=True)
+
+    out["no_crash"] = bool(not crashes)
+    out["crashes"] = crashes
+    out["faulted_reasons_ok"] = bool(reasons_ok)
+    out["unfaulted_token_exact"] = bool(bystanders_ok)
+    out["kill_restore_ok"] = kill_ok
+    ok = (out["no_crash"] and reasons_ok and bystanders_ok and kill_ok)
+    rows.append(Row(
+        name="serve_queue/chaos",
+        us_per_call=0.0,
+        derived=f"crash={'none' if out['no_crash'] else 'FAIL'}; "
+                f"reasons={'ok' if reasons_ok else 'FAIL'}; "
+                f"bystanders={'exact' if bystanders_ok else 'FAIL'}; "
+                f"kill+restore={'ok' if kill_ok else 'FAIL'}"
+                + ("" if ok else " -- CHAOS SMOKE FAILED")))
 
 
 def _pertoken_pr1(engine: ServeEngine, requests: List[Request],
@@ -658,7 +795,7 @@ def _longprompt_scenario(params, short_len: int, new_tokens: int,
 
 def run(scale: str = None, ci: bool = False, spec_len: int = 4,
         draft: str = "ngram", page_size: int = 32,
-        kv_pages: int = 0) -> List[Row]:
+        kv_pages: int = 0, chaos: bool = False) -> List[Row]:
     batch = 4 if ci else BATCH
     new_tokens = 16 if ci else NEW_TOKENS
     num_reqs = 6 if ci else NUM_REQS
@@ -681,6 +818,10 @@ def run(scale: str = None, ci: bool = False, spec_len: int = 4,
 
     # -- paged vs contiguous KV cache (concurrency + eviction smoke) --------
     _paged_section(bench, rows, ci, page_size=page_size, kv_pages=kv_pages)
+
+    # -- fault-injection smoke (deadlines/quarantine/kill+restore) ----------
+    if chaos:
+        _chaos_section(bench, rows, ci)
 
     # -- prefix cache: warm vs cold TTFT on a 75%-shared-prompt workload ----
     _prefix_section(bench, rows, ci)
@@ -846,9 +987,14 @@ def main() -> None:
     ap.add_argument("--kv-pages", type=int, default=0,
                     help="pool pages for the paged-KV eviction smoke "
                          "(0 = slots+1, small enough to force evictions)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection smoke (NaN quarantine, "
+                         "pool exhaustion, kill+restore); with --ci its "
+                         "criteria gate the exit code")
     args = ap.parse_args()
     for r in run(ci=args.ci, spec_len=args.spec_len, draft=args.draft,
-                 page_size=args.page_size, kv_pages=args.kv_pages):
+                 page_size=args.page_size, kv_pages=args.kv_pages,
+                 chaos=args.chaos):
         print(r.csv())
     if args.ci:
         path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -898,6 +1044,21 @@ def main() -> None:
             failures.append(
                 "paged run under eviction did not match the contiguous "
                 "run's tokens (or dropped requests)")
+        if "chaos" in bench:
+            ch = bench["chaos"]
+            if not ch["no_crash"]:
+                failures.append("chaos smoke CRASHED: "
+                                + "; ".join(ch["crashes"]))
+            if not ch["faulted_reasons_ok"]:
+                failures.append("an injected-fault request finished with "
+                                "an EMPTY finish_reason")
+            if not ch["unfaulted_token_exact"]:
+                failures.append("a fault-injection run corrupted the "
+                                "tokens of an unfaulted co-scheduled "
+                                "request")
+            if not ch["kill_restore_ok"]:
+                failures.append("kill+restore did not complete the batch "
+                                "with the fault-free run's tokens")
         if failures:
             print("CI smoke FAILED:\n  " + "\n  ".join(failures),
                   file=sys.stderr)

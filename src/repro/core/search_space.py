@@ -309,6 +309,33 @@ def serve_space() -> SearchSpace:
                     doc="flash_verify key-block tile."),
         Categorical("flash_verify_k_splits", fv["k_splits"], 4,
                     doc="flash_verify split-K factor."),
+        UniformFloat("deadline_ms", 0.0, 60000.0, 0.0,
+                     doc="Default per-request total wall-clock deadline in "
+                         "ms (0 disables); expired requests release their "
+                         "slot with finish_reason='deadline'.  The SLO half "
+                         "of the robustness/throughput frontier: tight "
+                         "deadlines bound tail latency but waste the work "
+                         "already spent on expired requests."),
+        UniformFloat("ladder_spec_util", 0.5, 1.0, 0.85,
+                     doc="Pool-utilization fraction above which the "
+                         "degradation ladder's first rung fires: shrink the "
+                         "speculative draft to its L=1 probe so each "
+                         "macro-step grows the KV footprint by at most one "
+                         "row per slot."),
+        UniformFloat("ladder_admit_util", 0.5, 1.0, 0.92,
+                     doc="Second rung: throttle chunked-prefill admission "
+                         "to one slot per scheduler iteration, keeping "
+                         "decode progress ahead of new-page demand."),
+        UniformFloat("ladder_prefix_util", 0.5, 1.0, 0.96,
+                     doc="Third rung: stop prefix-cache admissions (no new "
+                         "registrations or matches) so every reclaimable "
+                         "LRU page stays reclaimable."),
+        UniformFloat("ladder_reject_util", 0.5, 1.0, 1.0,
+                     doc="Last rung: reject FRESH requests with a "
+                         "backpressure error (finish_reason='rejected') "
+                         "instead of admitting work the pool cannot hold; "
+                         "requests with progress (preempted/quarantined) "
+                         "are never backpressure-rejected."),
     ], name="serve_deploy")
 
 

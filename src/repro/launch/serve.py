@@ -68,6 +68,15 @@ prefilled once, not per request (``prefix_hits`` /
 fraction parked as cache, ``--min-shared-pages`` sets the smallest match
 taken, and ``--shared-prefix N`` prepends N shared system-prompt tokens to
 every queued request to exercise it.
+
+Failure semantics (see serve/README.md): ``--deadline-ms`` /
+``--ttft-deadline-ms`` set per-request wall-clock deadlines, ``--chaos``
+injects a deterministic fault schedule at the engine's seams
+(``exhaust@1:4,nan@2:7,kill@5``), and ``--state-dir`` makes a chaos kill
+checkpoint the engine state so the launcher restores into a fresh engine
+and resumes the batch.  Every request leaves with a ``finish_reason``
+(eos/budget/step_budget/deadline/cancelled/rejected/quarantined), printed
+as a histogram in the stats lines along with the fault counters.
 """
 from __future__ import annotations
 
@@ -82,6 +91,7 @@ from repro.core import adaptive, get_hardware
 from repro.models import transformer as tfm
 from repro.serve import Request, ServeEngine, throughput_tokens_per_s
 from repro.serve.engine import queue_throughput
+from repro.serve.fault import ServeKilled, parse_chaos
 
 
 def main():
@@ -146,6 +156,23 @@ def main():
                     help="prepend this many SHARED system-prompt tokens to "
                          "every queued request (exercises the prefix "
                          "cache; 0 = fully random prompts)")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="per-request total wall-clock deadline in ms; "
+                         "expired requests release their slot with "
+                         "finish_reason='deadline' (0 = no deadline)")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=0,
+                    help="time-to-first-token deadline in ms (0 = none)")
+    ap.add_argument("--chaos", default="",
+                    help="inject faults at the engine's seams: "
+                         "comma-separated kind@macro[:arg] events, e.g. "
+                         "'exhaust@1:4,nan@2:7,kill@5' (see "
+                         "serve/fault.py; kinds: nan corrupt exhaust "
+                         "restore slow cancel kill)")
+    ap.add_argument("--state-dir", default="",
+                    help="checkpoint the engine state here when a kill "
+                         "fault fires, then restore into a fresh engine "
+                         "and resume the batch (also exercised by "
+                         "--chaos '...,kill@M')")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -167,18 +194,24 @@ def main():
     draft = args.draft
     if draft not in ("ngram", "none"):
         draft = (get_smoke_config(draft) if args.smoke else get_config(draft))
-    engine = ServeEngine(cfg, params, scheme=scheme, max_batch=args.batch,
-                         max_len=args.shared_prefix + args.prompt_len
-                         + args.new_tokens + 8,
-                         macro_steps=args.macro_steps,
-                         prefill_chunk=args.prefill_chunk,
-                         admit_budget=args.admit_budget,
-                         spec_len=args.spec_len, draft=draft,
-                         kv_layout=args.kv_layout, page_size=args.page_size,
-                         kv_pages=args.kv_pages,
-                         prefix_cache=not args.no_prefix_cache,
-                         prefix_cache_frac=args.prefix_cache_frac,
-                         min_shared_pages=args.min_shared_pages)
+    def make_engine():
+        return ServeEngine(cfg, params, scheme=scheme, max_batch=args.batch,
+                           max_len=args.shared_prefix + args.prompt_len
+                           + args.new_tokens + 8,
+                           macro_steps=args.macro_steps,
+                           prefill_chunk=args.prefill_chunk,
+                           admit_budget=args.admit_budget,
+                           spec_len=args.spec_len, draft=draft,
+                           kv_layout=args.kv_layout,
+                           page_size=args.page_size,
+                           kv_pages=args.kv_pages,
+                           prefix_cache=not args.no_prefix_cache,
+                           prefix_cache_frac=args.prefix_cache_frac,
+                           min_shared_pages=args.min_shared_pages,
+                           deadline_ms=args.deadline_ms or None,
+                           ttft_deadline_ms=args.ttft_deadline_ms or None)
+
+    engine = make_engine()
 
     if args.queue > 0:
         rng = np.random.default_rng(args.seed)
@@ -193,7 +226,21 @@ def main():
                 prompt = np.concatenate([sys_prompt, prompt])
             reqs.append(Request(uid=uid, prompt=prompt,
                                 max_new_tokens=args.new_tokens))
-        stats = queue_throughput(engine, reqs)
+        faults = parse_chaos(args.chaos) if args.chaos else None
+        state_dir = args.state_dir or None
+        try:
+            stats = queue_throughput(engine, reqs, faults=faults,
+                                     state_dir=state_dir)
+        except ServeKilled as exc:
+            # chaos kill fired: the engine checkpointed on the way down
+            # (when --state-dir is set); restore into a fresh engine and
+            # resume the batch from the saved per-request progress
+            if not state_dir:
+                raise SystemExit(f"killed with no --state-dir: {exc}")
+            print(f"  chaos kill: {exc}; restoring from {state_dir}")
+            engine = make_engine()
+            reqs = engine.load_state(state_dir)
+            stats = queue_throughput(engine, reqs)
         print(f"{cfg.name} [{scheme}, kv={args.kv_dtype}] queue: "
               f"{stats['tokens_per_s']:.1f} tokens/s over {args.queue} "
               f"requests ({engine.max_batch} slots, "
@@ -215,6 +262,26 @@ def main():
                  + "; ".join(f"uid {r.uid}: {r.error}"
                              for r in rejected[:3])
                  + (" ..." if len(rejected) > 3 else "")))
+        # failure semantics: how every request LEFT the engine, plus the
+        # fault/robustness counters (zero in a healthy run)
+        reasons: dict = {}
+        for r in reqs:
+            reasons[r.finish_reason or "none"] = \
+                reasons.get(r.finish_reason or "none", 0) + 1
+        es = engine.stats
+        print("  finish_reasons: "
+              + ", ".join(f"{k}={v}" for k, v in sorted(reasons.items())))
+        print(f"  failures: deadline={es['deadline_expirations']}, "
+              f"cancelled={es['cancelled_requests']}, "
+              f"nan_events={es['nan_events']}, "
+              f"quarantine_requeues={es['quarantine_requeues']}, "
+              f"quarantined={es['quarantined_requests']}, "
+              f"table_quarantines={es['table_quarantines']}, "
+              f"backpressure={es['backpressure_rejections']}, "
+              f"ladder(spec/admit/prefix)={es['ladder_spec_shrinks']}/"
+              f"{es['ladder_admit_throttles']}/{es['ladder_prefix_stops']}, "
+              f"state(saves/restores)={es['state_saves']}/"
+              f"{es['state_restores']}")
         if engine.paged:
             print(f"  paged kv: page_size={engine.page_size}, "
                   f"pool={engine.kv_pages} pages "

@@ -545,7 +545,8 @@ DECODE_UNROLL_MAX_LAYERS = int(
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
-                active=None, unroll=None, paged: Optional[PagedLayout] = None):
+                active=None, unroll=None, paged: Optional[PagedLayout] = None,
+                logit_hook=None):
     """One-token decode.  tokens: (B, 1) int32 (or embeds (B, 1, D)).
 
     ``cache["len"]`` may be a scalar (homogeneous batch, as produced by
@@ -565,6 +566,10 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
     ``paged`` (static ``PagedLayout``) must be given iff ``cache`` is an
     ``init_paged_cache`` pytree: K/V rows are then written/read through
     ``cache["block_table"]``.
+
+    ``logit_hook`` (optional callable) is applied to the logits right
+    before they are returned; the serving engine uses it as the seam for
+    NaN/Inf fault injection and logit guards.
 
     Returns (logits (B, V_padded), new_cache).
     """
@@ -615,6 +620,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
             x, new_c = jax.lax.scan(body, x, (stacked, ccache))
         new_blocks.append(new_c)
     logits = _logits(params, cfg, x)[:, 0]
+    if logit_hook is not None:
+        logits = logit_hook(logits)
     if active is not None:
         new_len = cur_len + active.astype(cur_len.dtype)
     else:
@@ -769,7 +776,8 @@ def _apply_layer_verify(x, p, spec, cfg, lcache, lens, active=None,
 
 
 def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
-                unroll=None, paged: Optional[PagedLayout] = None):
+                unroll=None, paged: Optional[PagedLayout] = None,
+                logit_hook=None):
     """Speculative multi-position verify.  tokens: (B, S) int32 — column 0
     is each slot's last emitted token (whose K/V is not yet cached, exactly
     as in ``decode_step``), columns 1..S-1 are draft proposals.
@@ -789,8 +797,8 @@ def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
     to roll back) — are NOT supported; the engine falls back to vanilla
     decode for them.
 
-    ``active``/``unroll`` behave as in ``decode_step``.  Returns
-    (logits (B, S, V_padded), new_cache).
+    ``active``/``unroll``/``logit_hook`` behave as in ``decode_step``.
+    Returns (logits (B, S, V_padded), new_cache).
     """
     plan = block_plan(cfg)
     assert all(spec.mixer == "attn" and not spec.local
@@ -840,6 +848,8 @@ def verify_step(params, cfg: ModelConfig, cache, tokens, active=None,
             x, new_c = jax.lax.scan(body, x, (stacked, ccache))
         new_blocks.append(new_c)
     logits = _logits(params, cfg, x)                           # (B, S, V)
+    if logit_hook is not None:
+        logits = logit_hook(logits)
     new_cache = {"blocks": new_blocks, "len": cache["len"]}
     if paged is not None:
         new_cache["block_table"] = cache["block_table"]

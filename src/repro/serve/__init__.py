@@ -2,6 +2,10 @@ from repro.serve.engine import (
     PageAllocator, Request, ServeEngine, queue_throughput,
     throughput_tokens_per_s,
 )
+from repro.serve.fault import (
+    FaultInjector, FaultPlan, ServeKilled, parse_chaos,
+)
 
 __all__ = ["PageAllocator", "Request", "ServeEngine", "queue_throughput",
-           "throughput_tokens_per_s"]
+           "throughput_tokens_per_s",
+           "FaultInjector", "FaultPlan", "ServeKilled", "parse_chaos"]

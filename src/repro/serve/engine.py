@@ -142,6 +142,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import json
+import os
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
@@ -153,6 +155,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.quant import PTQConfig, QuantScheme, quantize_tree
+from repro.serve.fault import ServeKilled
+from repro.train.checkpoint import _flatten, _unflatten_into
 
 
 @dataclasses.dataclass
@@ -170,6 +174,32 @@ class Request:
     finished_at: float = 0.0
     error: Optional[str] = None        # set when the engine REJECTS the request
     preemptions: int = 0               # paged pool evict->requeue count
+    # why the request left the engine — set on EVERY exit path, so a
+    # truncated request is never mistaken for a completed one:
+    #   eos         emitted its eos_id
+    #   budget      emitted max_new_tokens
+    #   step_budget serve_queue's scheduler step_budget ran out first
+    #   deadline    total or TTFT wall-clock deadline expired
+    #   cancelled   host-side cancellation (Request.cancel())
+    #   rejected    over capacity, or backpressure under the degradation
+    #               ladder (Request.error carries the reason)
+    #   quarantined two fault events (non-finite logits / corrupted block-
+    #               table row) followed this request; gave up after the
+    #               requeue retry
+    finish_reason: Optional[str] = None
+    # per-request deadlines (ms, wall-clock from submitted_at); None falls
+    # back to the engine-level defaults.  Checked host-side once per
+    # scheduler iteration — granularity is one macro-step
+    deadline_ms: Optional[float] = None
+    ttft_deadline_ms: Optional[float] = None
+    cancelled: bool = False
+    quarantines: int = 0               # fault events charged to this request
+
+    def cancel(self) -> None:
+        """Host-side cancellation: the engine releases the request's slot at
+        the next scheduler iteration, keeps whatever tokens were emitted,
+        and sets ``finish_reason='cancelled'``."""
+        self.cancelled = True
 
 
 def _prompt_buckets(max_len: int, smallest: int = 16) -> List[int]:
@@ -406,6 +436,20 @@ class PageAllocator:
             else:
                 self.free.append(page)
 
+    def row_consistent(self, slot: int) -> bool:
+        """Validate the slot's block-table row against the ``owned`` mirror:
+        the first ``len(owned)`` entries must be exactly the owned pages (in
+        range) and the rest the -1 sentinel.  The engine checks every live
+        slot before scattering the table to the device — a corrupted row
+        would otherwise route that slot's K/V writes into pages another
+        slot owns."""
+        own = self.owned[slot]
+        row = self.table[slot]
+        if any(p < 0 or p >= self.num_pages for p in own):
+            return False
+        return (list(row[:len(own)]) == own
+                and bool((row[len(own):] == -1).all()))
+
     def release(self, slot: int) -> None:
         """Unmap the slot's whole table row.  Shared pages DECREMENT their
         refcount instead of freeing; a registered page whose count hits 0
@@ -542,7 +586,15 @@ class ServeEngine:
                  page_size: int = 64, kv_pages: int = 0,
                  kv_layout: str = "auto", prefix_cache: bool = True,
                  prefix_cache_frac: float = 1.0,
-                 min_shared_pages: int = 1):
+                 min_shared_pages: int = 1,
+                 deadline_ms: Optional[float] = None,
+                 ttft_deadline_ms: Optional[float] = None,
+                 ladder_spec_util: float = 1.0,
+                 ladder_admit_util: float = 1.0,
+                 ladder_prefix_util: float = 1.0,
+                 ladder_reject_util: float = 1.0,
+                 state_dir: Optional[str] = None,
+                 faults: Any = None):
         self.cfg = cfg
         self.scheme = scheme
         if scheme in ("int8", "int4", "nf4", "w8a8"):
@@ -609,6 +661,26 @@ class ServeEngine:
         # across serve_queue calls so later batches hit earlier batches'
         # prompts; None until the first paged serve_queue run
         self._pc_state = None
+        # fault tolerance: engine-level deadline defaults (per-request
+        # fields override), the pressure-driven degradation ladder (rungs
+        # fire when pages_in_use / num_pages EXCEEDS the threshold; 1.0
+        # disables a rung — strict '>' so full-pool transients under the
+        # normal eviction path don't trip a disabled ladder), a default
+        # checkpoint dir for kill-recovery, and an optional FaultInjector
+        # (serve/fault.py) consulted at the scheduler's seams
+        self.deadline_ms = deadline_ms
+        self.ttft_deadline_ms = ttft_deadline_ms
+        self.ladder_spec_util = float(ladder_spec_util)
+        self.ladder_admit_util = float(ladder_admit_util)
+        self.ladder_prefix_util = float(ladder_prefix_util)
+        self.ladder_reject_util = float(ladder_reject_util)
+        self.state_dir = state_dir
+        self.faults = faults
+        # PRNG streams + folded-token counts of requests restored by
+        # load_state: merged into the next serve_queue call's preemption
+        # bookkeeping so restored requests resume their saved streams
+        self._restored_keys: Dict[int, np.ndarray] = {}
+        self._restored_folded: Dict[int, int] = {}
         ps = self.page_size
         self._copy_page_fn = jax.jit(
             lambda blocks, src, dst: tfm.copy_cache_page(blocks, src, dst,
@@ -685,7 +757,21 @@ class ServeEngine:
                       # copy-on-write privatizations, and the cached-page
                       # gauge (refcounted pages held by the index)
                       "prefix_hits": 0, "prefill_tokens_saved": 0,
-                      "pages_shared": 0, "prefix_cow": 0, "cached_pages": 0}
+                      "pages_shared": 0, "prefix_cow": 0, "cached_pages": 0,
+                      # fault tolerance: scheduler truncations surfaced as
+                      # finish_reason="step_budget", deadline/cancel exits,
+                      # non-finite-logit events and the quarantine
+                      # requeue/reject split, corrupted-block-table
+                      # quarantines, per-rung degradation-ladder firings,
+                      # backpressure rejections, and state checkpoint
+                      # save/restore counts
+                      "step_budget_truncations": 0,
+                      "deadline_expirations": 0, "cancelled_requests": 0,
+                      "nan_events": 0, "quarantine_requeues": 0,
+                      "quarantined_requests": 0, "table_quarantines": 0,
+                      "ladder_spec_shrinks": 0, "ladder_admit_throttles": 0,
+                      "ladder_prefix_stops": 0, "backpressure_rejections": 0,
+                      "state_saves": 0, "state_restores": 0}
         self._admit_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._chunk_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._draft_admit_fns = _CompiledLRU(admit_cache_size, self.stats)
@@ -698,9 +784,26 @@ class ServeEngine:
             self.stats[k] = 0
 
     def reset_prefix_cache(self) -> None:
-        """Drop the persistent prefix-cache state (pool contents + index):
-        the next ``serve_queue`` call starts cold."""
+        """Drop the persistent prefix-cache state (pool contents + index)
+        AND its bookkeeping, so the next ``serve_queue`` call starts truly
+        cold.  Dropping only ``_pc_state`` is not enough: the allocator's
+        prefix index / LRU parking would die with it, but the
+        ``cached_pages`` / ``pages_in_use`` stats gauges kept reporting the
+        dead allocator's values — back-to-back bench sections then start
+        from a seemingly warm pool."""
+        if self._pc_state is not None:
+            _, alloc = self._pc_state
+            # defensively empty the old allocator's cache bookkeeping (it is
+            # about to be unreachable, but a caller holding a reference must
+            # not be able to match against freed pool contents)
+            alloc.index.clear()
+            alloc.hash_of.clear()
+            for p in alloc.lru:
+                alloc.free.append(p)
+            alloc.lru.clear()
         self._pc_state = None
+        self.stats["cached_pages"] = 0
+        self.stats["pages_in_use"] = 0
 
     # -- low-level steps (also what the dry-run lowers) ----------------------
 
@@ -944,46 +1047,73 @@ class ServeEngine:
         """Jitted k-step decode macro-step: a ``lax.scan`` over batched
         decode + per-slot sampling + per-slot stop detection, with tokens
         accumulated into a (B, k) buffer on device.  Steps after every slot
-        has drained are skipped via ``lax.cond``."""
+        has drained are skipped via ``lax.cond``.
+
+        ``fault_mask`` ((B,) bool, normally all-false) poisons the marked
+        slots' logits through the ``decode_step`` logit_hook seam — the
+        fault-injection path of ``serve/fault.py``.  Independently of
+        injection, an always-on logit GUARD checks every step's logits for
+        NaN/Inf: a slot whose step went non-finite is flagged sticky-``bad``
+        and emits nothing from that step on (its PRNG key stays at the
+        PRE-sample value, so the host-side quarantine requeue redoes the
+        faulted emission bit-exactly), while every other slot's math is
+        untouched — one poisoned slot cannot corrupt co-scheduled output."""
         if k in self._macro_fns:
             return self._macro_fns[k]
         cfg = self.cfg
         vocab = cfg.vocab_size
 
-        def macro(params, cache, last, temps, active, remaining, eos, keys):
+        def macro(params, cache, last, temps, active, remaining, eos, keys,
+                  fault_mask):
+            def hook(lg):
+                return jnp.where(fault_mask[:, None],
+                                 jnp.asarray(jnp.nan, lg.dtype), lg)
+
             def step(carry, _):
                 def do(op):
-                    cache, last, active, remaining, keys = op
+                    cache, last, active, bad, remaining, keys = op
                     logits, cache = tfm.decode_step(params, cfg, cache,
                                                     tokens=last, active=active,
                                                     unroll=self.decode_unroll,
-                                                    paged=self._paged_layout)
+                                                    paged=self._paged_layout,
+                                                    logit_hook=hook)
+                    finite = jnp.all(jnp.isfinite(
+                        logits[:, :vocab].astype(jnp.float32)), axis=-1)
+                    newly_bad = active & ~finite
                     # one _sample_token per slot: the same primitive (and
                     # key-split discipline) admission uses, so macro and
                     # per-token scheduling share one sampling definition
-                    toks, keys = jax.vmap(
+                    toks, keys2 = jax.vmap(
                         lambda lg, t, kk: _sample_token(lg, t, kk, vocab))(
                             logits, temps, keys)
-                    toks = jnp.where(active, toks, last[:, 0])
-                    emitted = active
-                    remaining = remaining - active.astype(remaining.dtype)
-                    hit_eos = (eos >= 0) & (toks == eos)
-                    active = active & (remaining > 0) & ~hit_eos
-                    return ((cache, toks[:, None], active, remaining, keys),
+                    emitted = active & ~newly_bad
+                    # a slot's key advances ONLY when it emits: a bad slot
+                    # keeps the pre-sample key for the rest of the scan
+                    # (sticky — the quarantine replay depends on it), and
+                    # drained slots stop consuming their stream
+                    keys = jnp.where(emitted[:, None], keys2, keys)
+                    toks = jnp.where(emitted, toks, last[:, 0])
+                    bad = bad | newly_bad
+                    remaining = remaining - emitted.astype(remaining.dtype)
+                    hit_eos = (eos >= 0) & (toks == eos) & emitted
+                    active = emitted & (remaining > 0) & ~hit_eos
+                    return ((cache, toks[:, None], active, bad, remaining,
+                             keys),
                             (toks, emitted, jnp.int32(1)))
 
                 def skip(op):
-                    _, last, active, _, _ = op
+                    _, last, active, _, _, _ = op
                     return op, (last[:, 0], jnp.zeros_like(active),
                                 jnp.int32(0))
 
                 return jax.lax.cond(jnp.any(carry[2]), do, skip, carry)
 
-            carry = (cache, last, active, remaining, keys)
-            (cache, last, active, remaining, keys), ys = jax.lax.scan(
+            carry = (cache, last, active, jnp.zeros_like(active), remaining,
+                     keys)
+            (cache, last, active, bad, remaining, keys), ys = jax.lax.scan(
                 step, carry, None, length=k)
             toks_k, emitted_k, execd = ys                      # (k, B), .., (k,)
-            return (cache, last, active, remaining, keys,
+            return (cache, last, active, bad, remaining, keys,
                     toks_k.T, emitted_k.T, jnp.sum(execd))
 
         fn = jax.jit(macro)
@@ -1004,7 +1134,11 @@ class ServeEngine:
         draft-model mode.  ``all_greedy`` specializes the compilation for
         a queue with no temperature sampling — the acceptance drops its
         softmax / proposal-distribution / PRNG work, which is measurable
-        per-iteration overhead on small models."""
+        per-iteration overhead on small models.  ``fault_mask`` and the
+        sticky ``bad`` flags behave as in ``_macro_fn``: the logit guard
+        checks the verify logits, and a bad slot commits NOTHING that
+        iteration (its PRNG stream rewinds to the iteration start) so the
+        host can quarantine it without touching co-scheduled slots."""
         L = spec_len
         mode = "model" if self._draft_cfg is not None else "ngram"
         cache_key = (k, L, mode, all_greedy)
@@ -1015,10 +1149,15 @@ class ServeEngine:
         dcfg = self._draft_cfg
 
         def macro(params, dparams, cache, aux, last, temps, active,
-                  remaining, eos, keys):
+                  remaining, eos, keys, fault_mask):
+            def hook(lg):
+                return jnp.where(fault_mask[:, None, None],
+                                 jnp.asarray(jnp.nan, lg.dtype), lg)
+
             def step(carry, _):
                 def spec_it(op):
-                    cache, aux, last, active, remaining, keys = op
+                    cache, aux, last, active, bad, remaining, keys = op
+                    keys0 = keys       # pre-iteration streams (NaN freeze)
                     B = last.shape[0]
                     # ---- draft: propose L tokens per slot ----------------
                     if mode == "ngram":
@@ -1073,7 +1212,17 @@ class ServeEngine:
                     logits, cache = tfm.verify_step(params, cfg, cache,
                                                     ver_toks, active=active,
                                                     unroll=self.decode_unroll,
-                                                    paged=self._paged_layout)
+                                                    paged=self._paged_layout,
+                                                    logit_hook=hook)
+                    # logit guard (see _macro_fn): a non-finite verify row
+                    # flags the slot sticky-bad — it commits NOTHING this
+                    # iteration (c = 0 below: lens stay, no emission, last
+                    # token unchanged) and its PRNG stream rewinds to the
+                    # iteration start so the quarantine requeue replays it
+                    finite = jnp.all(jnp.isfinite(
+                        logits[..., :vocab].astype(jnp.float32)),
+                        axis=(1, 2))
+                    newly_bad = active & ~finite
                     if all_greedy:
                         toks, n_acc = jax.vmap(
                             lambda lg, d: _spec_accept_greedy(lg, d, vocab))(
@@ -1090,7 +1239,15 @@ class ServeEngine:
                         & (pos < c[:, None])
                     eos_idx = jnp.min(jnp.where(is_eos, pos, L + 1), axis=1)
                     c = jnp.minimum(c, eos_idx + 1)
-                    c = jnp.where(active, c, 0)
+                    c = jnp.where(active & ~newly_bad, c, 0)
+                    # a slot's stream advances ONLY when it commits this
+                    # iteration: bad slots rewind to the iteration start
+                    # and STAY there for the rest of the scan (they are
+                    # inactive from here on), so the quarantine requeue
+                    # replays the faulted iteration from the exact key
+                    keys = jnp.where((active & ~newly_bad)[:, None],
+                                     keys, keys0)
+                    bad = bad | newly_bad
                     emitted = pos < c[:, None]                     # (B, L+1)
                     # ---- commit: the length bump IS the rollback ---------
                     lens = cache["len"] + c.astype(cache["len"].dtype)
@@ -1100,9 +1257,11 @@ class ServeEngine:
                                    "len": dlens0 + c.astype(dlens0.dtype)}
                     new_last = jnp.take_along_axis(
                         toks, jnp.maximum(c - 1, 0)[:, None], axis=1)
-                    new_last = jnp.where(active[:, None], new_last, last)
+                    new_last = jnp.where((active & ~newly_bad)[:, None],
+                                         new_last, last)
                     remaining = remaining - c.astype(remaining.dtype)
-                    active = active & (remaining > 0) & ~jnp.any(is_eos, 1)
+                    active = active & ~newly_bad & (remaining > 0) \
+                        & ~jnp.any(is_eos, 1)
                     if mode == "ngram":
                         # learn emitted transitions on device so repeated
                         # phrases in the OUTPUT draft well too: ONE scatter
@@ -1118,8 +1277,8 @@ class ServeEngine:
                     accepted = jnp.sum(jnp.minimum(n_acc, c))
                     drafted = jnp.sum(jnp.where(c > 0, L, 0))
                     out_toks = jnp.where(emitted, toks, last[:, :1])
-                    return ((cache, new_aux, new_last, active, remaining,
-                             keys),
+                    return ((cache, new_aux, new_last, active, bad,
+                             remaining, keys),
                             (out_toks, emitted, accepted, drafted,
                              jnp.int32(1)))
 
@@ -1132,14 +1291,15 @@ class ServeEngine:
 
                 return jax.lax.cond(jnp.any(carry[3]), spec_it, skip, carry)
 
-            carry = (cache, aux, last, active, remaining, keys)
-            (cache, aux, last, active, remaining, keys), ys = jax.lax.scan(
-                step, carry, None, length=k)
+            carry = (cache, aux, last, active, jnp.zeros_like(active),
+                     remaining, keys)
+            (cache, aux, last, active, bad, remaining, keys), ys = \
+                jax.lax.scan(step, carry, None, length=k)
             toks_k, emit_k, acc_k, drf_k, execd = ys   # (k,B,L+1) .. (k,)
             w = k * (L + 1)
             toks_flat = jnp.moveaxis(toks_k, 0, 1).reshape(-1, w)
             emit_flat = jnp.moveaxis(emit_k, 0, 1).reshape(-1, w)
-            return (cache, aux, last, active, remaining, keys,
+            return (cache, aux, last, active, bad, remaining, keys,
                     toks_flat, emit_flat, jnp.sum(acc_k), jnp.sum(drf_k),
                     jnp.sum(execd))
 
@@ -1153,17 +1313,37 @@ class ServeEngine:
                     macro_steps: Optional[int] = None,
                     prefill_chunk: Optional[int] = None,
                     spec_len: Optional[int] = None,
-                    admit_budget: Optional[int] = None) -> Dict[int, List[int]]:
+                    admit_budget: Optional[int] = None,
+                    state_dir: Optional[str] = None,
+                    faults: Any = None) -> Dict[int, List[int]]:
         """Continuous batcher over ``max_batch`` persistent cache slots.
 
-        Every scheduler iteration (a) admits pending requests — whole
-        bucketed prefills, or prompt *chunks* under the shared
-        ``admit_budget`` token budget when chunked admission is on — and
-        (b) advances ALL active slots with a single jitted k-step decode
+        Every scheduler iteration (a) expires deadlined/cancelled requests
+        (host-side, so granularity is one macro-step), (b) admits pending
+        requests — whole bucketed prefills, or prompt *chunks* under the
+        shared ``admit_budget`` token budget when chunked admission is on —
+        and (c) advances ALL active slots with a single jitted k-step decode
         macro-step (speculative draft-then-verify inside the same scan when
         ``spec_len > 0`` on a linear-layout plan), syncing with the host
         once per macro-step.  Returns {uid: generated tokens}; per-request
-        TTFT/latency timestamps are recorded on the Request objects.
+        TTFT/latency timestamps and a ``finish_reason`` are recorded on the
+        Request objects — EVERY exit path is surfaced, including the
+        scheduler's own ``step_budget`` running out.
+
+        Under paged-pool pressure a degradation ladder sheds load before
+        anything breaks (utilization thresholds from the constructor, each
+        rung independently HAQA-tunable via ``serve_space``): above
+        ``ladder_spec_util`` speculation shrinks to 1-token probes, above
+        ``ladder_admit_util`` only one admission proceeds per iteration,
+        above ``ladder_prefix_util`` prefix-cache matching/registration
+        stops, and above ``ladder_reject_util`` FRESH requests are rejected
+        with a backpressure error (requeued/preempted requests are never
+        dropped).
+
+        ``faults`` (a ``serve.fault.FaultInjector``, default
+        ``self.faults``) fires injected faults at the scheduler's seams.  A
+        ``ServeKilled`` fault checkpoints to ``state_dir`` (default
+        ``self.state_dir``) on the way out; ``load_state`` restores.
         """
         k = max(1, int(self.macro_steps if macro_steps is None else macro_steps))
         chunk = int(self.prefill_chunk if prefill_chunk is None
@@ -1184,12 +1364,27 @@ class ServeEngine:
         # target chunk is mirrored by a ``_draft_chunk_fn`` call resuming
         # the DRAFT cache from its own prefix, so the two caches stay in
         # lockstep without forcing whole-prompt admission
+        faults = self.faults if faults is None else faults
+        state_dir = self.state_dir if state_dir is None else state_dir
         now = time.perf_counter()
         for req in requests:
             if not req.submitted_at:
                 req.submitted_at = now
-        pending = list(requests)
         results: Dict[int, List[int]] = {}
+        # terminal Request objects by uid — what a kill-checkpoint persists
+        # so a restored process can return results for requests that had
+        # already finished before the crash
+        done_reqs: Dict[int, Request] = {}
+        pending = []
+        for req in requests:
+            if req.done:
+                # already-terminal (e.g. restored by load_state from a
+                # pre-kill completion): pass its result straight through
+                results[req.uid] = (req.tokens if req.tokens is not None
+                                    else [])
+                done_reqs[req.uid] = req
+            else:
+                pending.append(req)
         B = self.max_batch
         if self.prefix_cache and self._pc_state is not None:
             # warm start: reuse the device pools + allocator/index from the
@@ -1219,10 +1414,15 @@ class ServeEngine:
         slot_rows = np.zeros((B,), np.int64)
         order = [0] * B
         admit_seq = 0
-        resume_keys: Dict[int, np.ndarray] = {}
+        # preemption PRNG streams / folded-token counts, seeded from any
+        # state load_state restored (a restored request resumes its saved
+        # stream exactly like an evicted one resumes across iterations)
+        resume_keys: Dict[int, np.ndarray] = dict(self._restored_keys)
         # tokens already folded into req.prompt by earlier preemptions, so a
         # second preemption never re-appends an already-folded prefix
-        folded: Dict[int, int] = {}
+        folded: Dict[int, int] = dict(self._restored_folded)
+        self._restored_keys = {}
+        self._restored_folded = {}
 
         def push_table():
             cache["block_table"] = jnp.asarray(alloc.table)
@@ -1269,25 +1469,70 @@ class ServeEngine:
         throttle_backoff = 2
         steps = 0
 
-        def finish(b: int):
-            req = slots[b]
+        def retire(req: Request, reason: str):
+            """Terminal bookkeeping shared by every exit path: mark done,
+            stamp the finish_reason (first writer wins) and time, publish
+            the result, and drop preemption state so a later request
+            reusing the uid can't inherit a stale stream."""
             req.done = True
+            req.finish_reason = req.finish_reason or reason
             req.finished_at = time.perf_counter()
-            results[req.uid] = req.tokens
+            results[req.uid] = req.tokens if req.tokens is not None else []
+            done_reqs[req.uid] = req
+            resume_keys.pop(req.uid, None)
+            folded.pop(req.uid, None)
+
+        def finish(b: int, reason: Optional[str] = None):
+            req = slots[b]
+            if reason is None:
+                # natural slot drain — name why: eos / token budget / the
+                # scheduler's own step_budget truncation (the old silent
+                # case: exhausted requests looked identical to completed)
+                if req.eos_id is not None and req.tokens \
+                        and req.tokens[-1] == req.eos_id:
+                    reason = "eos"
+                elif len(req.tokens or []) >= req.max_new_tokens:
+                    reason = "budget"
+                else:
+                    reason = "step_budget"
+                    self.stats["step_budget_truncations"] += 1
+            retire(req, reason)
             slots[b] = None
             active[b] = False
+            admitting[b] = False
             if alloc is not None:
                 alloc.release(b)
 
-        def reject(req: Request, why: str):
+        def reject(req: Request, why: str, reason: str = "rejected"):
             """Per-request rejection: the error is surfaced on the Request
             (and its result stays empty) instead of crashing the engine —
             the queued mirror of ``generate``'s ValueError."""
             req.error = why
-            req.done = True
-            req.finished_at = time.perf_counter()
-            results[req.uid] = list(req.tokens or [])
+            retire(req, reason)
             self.stats["rejected_requests"] += 1
+
+        def release_slot(b: int, reason: str):
+            """Deadline/cancellation teardown: free the slot NOW (pages,
+            mask, admission state) and retire the request with whatever
+            tokens it already emitted."""
+            req = slots[b]
+            if req.tokens is None:
+                req.tokens = []
+            finish(b, reason)
+
+        def expiry_reason(req: Request, nowt: float) -> Optional[str]:
+            if req.cancelled:
+                return "cancelled"
+            dl = (req.deadline_ms if req.deadline_ms is not None
+                  else self.deadline_ms)
+            if dl is not None and (nowt - req.submitted_at) * 1e3 > dl:
+                return "deadline"
+            tdl = (req.ttft_deadline_ms if req.ttft_deadline_ms is not None
+                   else self.ttft_deadline_ms)
+            if tdl is not None and not req.first_token_at \
+                    and (nowt - req.submitted_at) * 1e3 > tdl:
+                return "deadline"
+            return None
 
         def start_slot(b: int, tok: int, key_arr):
             """The prompt's last logits just yielded the next token.  For a
@@ -1314,13 +1559,16 @@ class ServeEngine:
             eos[b] = -1 if req.eos_id is None else int(req.eos_id)
             keys[b] = np.asarray(key_arr)
 
-        def preempt(b: int):
+        def preempt(b: int, count_eviction: bool = True):
             """Evict slot b under pool pressure and REQUEUE it (head of the
             queue): its generated prefix becomes part of the prompt, so
             re-admission prefills prompt+prefix and decoding continues where
             it stopped — the request is delayed, never dropped.  The PRNG
             stream is preserved, so greedy continuations are bit-identical
-            to an uninterrupted run and sampled ones draw the same stream."""
+            to an uninterrupted run and sampled ones draw the same stream.
+            ``count_eviction=False`` reuses the machinery for quarantine
+            requeues and kill-checkpoints without skewing the eviction
+            stat."""
             req = slots[b]
             new_toks = (req.tokens or [])[folded.get(req.uid, 0):]
             if new_toks:
@@ -1334,13 +1582,39 @@ class ServeEngine:
             resume_keys[req.uid] = (np.asarray(slot_key[b]) if admitting[b]
                                     else np.array(keys[b], copy=True))
             req.preemptions += 1
-            alloc.release(b)
+            if alloc is not None:
+                alloc.release(b)
             slots[b] = None
             active[b] = False
             admitting[b] = False
             admit_off[b] = 0
             pending.insert(0, req)
-            self.stats["evictions"] += 1
+            if count_eviction:
+                self.stats["evictions"] += 1
+
+        def quarantine(b: int, why: str):
+            """Requeue-once-then-reject for a slot whose step went bad
+            (non-finite logits / corrupted block-table row).  First event:
+            the preemption path requeues it at the queue head — generated
+            prefix folds into the prompt, PRNG stream preserved (frozen
+            pre-sample by the macro's logit guard) — so the continuation is
+            replayed cleanly, bit-exact for greedy and vanilla-temperature
+            requests.  Second event: the fault follows the request; give up
+            and surface ``finish_reason='quarantined'``."""
+            req = slots[b]
+            req.quarantines += 1
+            if req.quarantines > 1:
+                if alloc is not None:
+                    alloc.release(b)
+                slots[b] = None
+                active[b] = False
+                admitting[b] = False
+                self.stats["quarantined_requests"] += 1
+                reject(req, why + " (second fault event; giving up)",
+                       reason="quarantined")
+            else:
+                self.stats["quarantine_requeues"] += 1
+                preempt(b, count_eviction=False)
 
         def make_room(b: int, rows: int) -> bool:
             """Grow slot b's pages to cover ``rows`` logical rows, evicting
@@ -1376,9 +1650,50 @@ class ServeEngine:
                 row[int(req.prompt[-1])] = int(first_tok)
                 spec_aux = spec_aux.at[b].set(jnp.asarray(row))
 
-        while (pending or any(s is not None for s in slots)) \
+        macro_idx = 0                  # fault schedules key on this index
+        try:
+          while (pending or any(s is not None for s in slots)) \
                 and steps < step_budget:
             progressed = False
+            # -- deadlines & cancellation (host-side, once per scheduler
+            #    iteration — granularity is one macro-step; a hung macro
+            #    cannot be interrupted, only observed on return) -----------
+            nowt = time.perf_counter()
+            for req in list(pending):
+                why = expiry_reason(req, nowt)
+                if why is not None:
+                    pending.remove(req)
+                    self.stats["deadline_expirations" if why == "deadline"
+                               else "cancelled_requests"] += 1
+                    retire(req, why)
+                    progressed = True
+            for b in range(B):
+                if slots[b] is None:
+                    continue
+                why = expiry_reason(slots[b], nowt)
+                if why is not None:
+                    self.stats["deadline_expirations" if why == "deadline"
+                               else "cancelled_requests"] += 1
+                    release_slot(b, why)
+                    progressed = True
+            # -- pressure-driven degradation ladder: shed load in order of
+            #    how much each rung costs — draft width first, admission
+            #    concurrency second, prefix-cache admissions third, and only
+            #    then reject FRESH work with a backpressure error ----------
+            util = (alloc.pages_in_use() / alloc.num_pages
+                    if alloc is not None else 0.0)
+            degrade_spec = util > self.ladder_spec_util
+            degrade_admit = util > self.ladder_admit_util
+            degrade_prefix = util > self.ladder_prefix_util
+            degrade_reject = util > self.ladder_reject_util
+            if degrade_admit:
+                self.stats["ladder_admit_throttles"] += 1
+            if degrade_prefix:
+                self.stats["ladder_prefix_stops"] += 1
+            # budget 1: the first admission of an iteration always proceeds
+            # (spent == 0), every further one defers — admission throttled
+            # to minimum concurrency without starving anyone
+            budget_now = 1 if degrade_admit else budget
             # -- admission: fill free slots; advance admissions under the
             #    shared token budget.  Without a budget this is one pass —
             #    one chunk (or whole prompt) per admitting slot; with one,
@@ -1394,6 +1709,19 @@ class ServeEngine:
                     while slots[b] is None and pending:
                         req = pending.pop(0)
                         plen = len(req.prompt)
+                        if degrade_reject and not (req.tokens
+                                                   or req.preemptions
+                                                   or req.quarantines):
+                            # ladder's last rung: shed FRESH work with a
+                            # backpressure error; anything already admitted
+                            # once (evicted/quarantined) is never dropped
+                            self.stats["backpressure_rejections"] += 1
+                            reject(req, f"backpressure: kv pool utilization "
+                                        f"{util:.2f} exceeds "
+                                        f"ladder_reject_util "
+                                        f"{self.ladder_reject_util:.2f}")
+                            progressed = True
+                            continue
                         budget_rows = plen + req.max_new_tokens \
                             - len(req.tokens or [])
                         cap_rows = self.max_len
@@ -1419,6 +1747,9 @@ class ServeEngine:
                         admit_off[b] = 0
                         admit_seq += 1
                         order[b] = admit_seq
+                        # a stale reason from a previous truncated run must
+                        # not survive re-serving the same Request object
+                        req.finish_reason = None
                         # per-slot PRNG stream seeded from the request uid
                         # (one slot's sampling can never perturb another's);
                         # evicted requests resume their saved stream instead
@@ -1434,7 +1765,8 @@ class ServeEngine:
                         prefix_off[b] = 0
                         slot_shared[b] = 0
                         slot_hashes[b] = []
-                        if alloc is not None and alloc.prefix_cache:
+                        if alloc is not None and alloc.prefix_cache \
+                                and not degrade_prefix:
                             slot_hashes[b] = prefix_block_hashes(
                                 req.prompt, self.page_size)
                             pages = alloc.match_prefix(slot_hashes[b])
@@ -1487,7 +1819,8 @@ class ServeEngine:
                                                    or plen <= chunk)
                     step = chunk if chunk > 0 else plen - admit_off[b]
                     cost = plen if whole else min(step, plen - admit_off[b])
-                    if budget > 0 and spent > 0 and spent + cost > budget:
+                    if budget_now > 0 and spent > 0 \
+                            and spent + cost > budget_now:
                         deferred_slots.add(b)
                         continue
                     if self.paged:
@@ -1607,7 +1940,7 @@ class ServeEngine:
                     advanced_slots.add(b)
                     advanced = True
                     progressed = True
-                if budget <= 0 or not advanced or spent >= budget:
+                if budget_now <= 0 or not advanced or spent >= budget_now:
                     break
             # a deferral = a slot whose admission made NO progress this
             # iteration because the shared budget ran out (a slot that got
@@ -1617,6 +1950,13 @@ class ServeEngine:
 
             # -- one decode macro-step across all active slots ---------------
             if active.any():
+                if faults is not None:
+                    # the injector's seam: slow/cancel/exhaust/corrupt/kill
+                    # events scheduled for this macro index fire HERE —
+                    # before page growth, so an exhaustion fault is what the
+                    # growth loop (and the ladder next iteration) sees
+                    faults.before_macro(macro_idx, self, alloc, slots,
+                                        pending)
                 spec_now = L > 0 and throttle_wait == 0
                 if L > 0 and not spec_now:
                     throttle_wait -= 1
@@ -1637,8 +1977,16 @@ class ServeEngine:
                                 np.asarray(tail[1:], np.int32))
                 # after a failed probe (backoff > 1) probe at L=1 — a
                 # verify barely wider than a decode step — and only
-                # restore the full draft length once acceptance is back
-                probing = spec_now and throttle_backoff > 1 and L > 1
+                # restore the full draft length once acceptance is back.
+                # The degradation ladder's first rung reuses the same
+                # 1-token machinery: under pool pressure every spec macro
+                # runs at the probe width (fewer uncommitted verify rows ->
+                # less worst-case page growth per macro)
+                shrink = degrade_spec and spec_now and L > 1
+                if shrink:
+                    self.stats["ladder_spec_shrinks"] += 1
+                probing = spec_now and (throttle_backoff > 1 or shrink) \
+                    and L > 1
                 width_L = 1 if probing else L
                 width = k * (width_L + 1) if spec_now else k
                 if self.paged:
@@ -1656,6 +2004,18 @@ class ServeEngine:
                                                        int(remaining[b]))
                         if not make_room(b, rows):
                             preempt(b)       # defensive; see make_room
+                    # host-structure guard: a block-table row that no longer
+                    # matches the allocator's owned mirror must NEVER be
+                    # scattered to the device — decode through it would
+                    # write into pages other slots own.  Quarantine the slot
+                    # (requeue rebuilds the row from scratch); everyone else
+                    # proceeds
+                    for b in range(B):
+                        if slots[b] is not None \
+                                and not alloc.row_consistent(b):
+                            self.stats["table_quarantines"] += 1
+                            quarantine(b, "corrupted block-table row for "
+                                          f"slot {b}")
                     push_table()
                     progressed = True
                 self.stats["peak_active_slots"] = max(
@@ -1664,20 +2024,26 @@ class ServeEngine:
                     steps += 1
                     continue
                 was_active = active.copy()
+                fault_mask = np.zeros((B,), bool)
+                if faults is not None:
+                    m = faults.nan_mask(macro_idx, slots)
+                    if m is not None:
+                        fault_mask = m
                 if spec_now:
                     if probing and probe_macro is None:
                         probe_macro = self._spec_macro_fn(k, 1, all_greedy)
                     fn = probe_macro if probing else macro
-                    (cache, spec_aux, last_d, act_d, rem_d, keys_d,
+                    (cache, spec_aux, last_d, act_d, bad_d, rem_d, keys_d,
                      toks_bk, emit_bk, acc_n, drf_n, execd) = fn(
                         self.params, self.draft_params, cache, spec_aux,
                         jnp.asarray(last_tokens), jnp.asarray(temps),
                         jnp.asarray(active), jnp.asarray(remaining),
-                        jnp.asarray(eos), jnp.asarray(keys))
-                    (last_np, act_np, rem_np, keys_np, toks_np, emit_np,
-                     acc_np, drf_np, nexec) = jax.device_get(
-                        (last_d, act_d, rem_d, keys_d, toks_bk, emit_bk,
-                         acc_n, drf_n, execd))
+                        jnp.asarray(eos), jnp.asarray(keys),
+                        jnp.asarray(fault_mask))
+                    (last_np, act_np, bad_np, rem_np, keys_np, toks_np,
+                     emit_np, acc_np, drf_np, nexec) = jax.device_get(
+                        (last_d, act_d, bad_d, rem_d, keys_d, toks_bk,
+                         emit_bk, acc_n, drf_n, execd))
                     self.stats["spec_steps"] += int(nexec)
                     self.stats["accepted_tokens"] += int(acc_np)
                     self.stats["draft_tokens"] += int(drf_np)
@@ -1705,20 +2071,21 @@ class ServeEngine:
                         throttle_backoff = 1
                 else:
                     fn = van_macro if L > 0 else macro   # throttled == plain
-                    (cache, last_d, act_d, rem_d, keys_d,
+                    (cache, last_d, act_d, bad_d, rem_d, keys_d,
                      toks_bk, emit_bk, execd) = fn(
                         self.params, cache, jnp.asarray(last_tokens),
                         jnp.asarray(temps), jnp.asarray(active),
                         jnp.asarray(remaining), jnp.asarray(eos),
-                        jnp.asarray(keys))
-                    (last_np, act_np, rem_np, keys_np,
+                        jnp.asarray(keys), jnp.asarray(fault_mask))
+                    (last_np, act_np, bad_np, rem_np, keys_np,
                      toks_np, emit_np, nexec) = jax.device_get(
-                        (last_d, act_d, rem_d, keys_d, toks_bk, emit_bk,
-                         execd))
+                        (last_d, act_d, bad_d, rem_d, keys_d, toks_bk,
+                         emit_bk, execd))
                 self.stats["host_syncs"] += 1
                 self.stats["macro_steps"] += 1
                 self.stats["decode_steps"] += int(nexec)
                 self.stats["useful_slot_steps"] += int(emit_np.sum())
+                macro_idx += 1
                 for b in range(B):
                     if slots[b] is None or not was_active[b]:
                         continue
@@ -1729,10 +2096,22 @@ class ServeEngine:
                             req.tokens.append(int(toks_np[b, i]))
                             n_emit += 1
                     slot_rows[b] += n_emit     # every emitted token == one
-                    active[b] = bool(act_np[b])  # committed cache row
-                    remaining[b] = int(rem_np[b])
+                    remaining[b] = int(rem_np[b])  # committed cache row
                     last_tokens[b, 0] = int(last_np[b, 0])
                     keys[b] = keys_np[b]
+                    if bad_np[b]:
+                        # the macro's logit guard flagged this slot: its
+                        # step produced NaN/Inf logits.  Tokens emitted
+                        # BEFORE the bad step were kept above; the slot's
+                        # key is frozen pre-sample, so the quarantine
+                        # requeue replays the faulted emission exactly.
+                        # Only this slot pays — co-scheduled slots' math
+                        # never saw its logits
+                        self.stats["nan_events"] += 1
+                        quarantine(b, "non-finite logits for request "
+                                      f"{req.uid}")
+                        continue
+                    active[b] = bool(act_np[b])
                     if not active[b]:
                         finish(b)
                 steps += k
@@ -1756,6 +2135,23 @@ class ServeEngine:
 
             if not progressed:
                 break                                # nothing left to drive
+        except ServeKilled:
+            # simulated process death between macro-steps: checkpoint the
+            # full engine state on the way down (when given somewhere to
+            # put it) and re-raise — the supervising process builds a fresh
+            # engine, calls load_state, and re-runs serve_queue on the
+            # returned requests.  Every live slot is preempted first (its
+            # generated prefix folds into the prompt, its PRNG stream is
+            # saved), so the checkpoint only has to describe released
+            # pools + the request queue — the restored continuation is the
+            # PR-proven preemption path, f32 bit-exact
+            if state_dir is not None:
+                for b in reversed(range(B)):
+                    if slots[b] is not None:
+                        preempt(b, count_eviction=False)
+                self._write_state(state_dir, cache, alloc, pending,
+                                  done_reqs, resume_keys, folded)
+            raise
 
         for b in range(B):                           # step budget exhausted
             if slots[b] is not None:
@@ -1763,8 +2159,19 @@ class ServeEngine:
                     slots[b].tokens = []
                 finish(b)
         for req in pending:
-            # an evicted request still queued keeps the prefix it generated
+            # an evicted request still queued keeps the prefix it
+            # generated; surface WHY it did not finish (the scheduler's
+            # step budget ran out) instead of silently truncating —
+            # ``done`` stays False so a later serve_queue call can resume it
+            if not req.done and req.finish_reason is None:
+                req.finish_reason = "step_budget"
+                self.stats["step_budget_truncations"] += 1
             results.setdefault(req.uid, list(req.tokens or []))
+        # preemption state of still-pending (step-budget truncated)
+        # requests survives to the next serve_queue call, so resuming them
+        # continues their PRNG streams exactly
+        self._restored_keys.update(resume_keys)
+        self._restored_folded.update(folded)
         if alloc is not None:
             self.stats["pages_in_use"] = alloc.pages_in_use()
             self.stats["cached_pages"] = alloc.cached_pages()
@@ -1775,6 +2182,177 @@ class ServeEngine:
             # cached refcount-0 pages persist)
             self._pc_state = (cache, alloc)
         return results
+
+    # -- engine-state checkpoint/restore --------------------------------------
+
+    def _write_state(self, state_dir: str, cache, alloc,
+                     pending: List[Request], done_reqs: Dict[int, Request],
+                     resume_keys: Dict[int, np.ndarray],
+                     folded: Dict[int, int]) -> None:
+        """Serialize the engine's serving state: K/V pools + allocator
+        (free list, refcounts, LRU parking, prefix hash-chain index, block
+        table) and every request's progress (folded prompt, emitted tokens,
+        PRNG stream, retry counters).  Published atomically (tmp +
+        ``os.replace``, manifest last) so a crash mid-write never leaves a
+        half checkpoint — the same discipline as ``train/checkpoint.py``,
+        whose npz codec (bf16 as uint16 views) is reused for the pools.
+
+        Every slot must already be released (the kill path preempts live
+        slots first): the pool content that matters is exactly the
+        LRU-parked prefix-cache pages, which the blake2b hash-chain index
+        was designed to survive process boundaries for."""
+        os.makedirs(state_dir, exist_ok=True)
+        arrays: Dict[str, np.ndarray] = {}
+        save_pool = alloc is not None and self.prefix_cache
+        if save_pool:
+            for name, arr in _flatten(jax.device_get(cache)).items():
+                arrays["cache/" + name] = arr
+        alloc_meta = None
+        if alloc is not None:
+            alloc_meta = {
+                "free": [int(p) for p in alloc.free],
+                "ref": [int(r) for r in alloc.ref],
+                "lru": [int(p) for p in alloc.lru],
+                "index": {h.hex(): int(p) for h, p in alloc.index.items()},
+                "table": np.asarray(alloc.table).tolist(),
+                "owned": [[int(p) for p in row] for row in alloc.owned],
+            }
+
+        def rec(req: Request) -> Dict[str, Any]:
+            arrays[f"req{req.uid}/prompt"] = \
+                np.asarray(req.prompt, np.int32)
+            arrays[f"req{req.uid}/tokens"] = \
+                np.asarray(req.tokens if req.tokens is not None else [],
+                           np.int32)
+            if req.uid in resume_keys:
+                arrays[f"req{req.uid}/key"] = \
+                    np.asarray(resume_keys[req.uid])
+            return {"uid": int(req.uid),
+                    "max_new_tokens": int(req.max_new_tokens),
+                    "temperature": float(req.temperature),
+                    "eos_id": (None if req.eos_id is None
+                               else int(req.eos_id)),
+                    "preemptions": int(req.preemptions),
+                    "quarantines": int(req.quarantines),
+                    "deadline_ms": req.deadline_ms,
+                    "ttft_deadline_ms": req.ttft_deadline_ms,
+                    "error": req.error,
+                    "finish_reason": req.finish_reason,
+                    "done": bool(req.done),
+                    "had_tokens": req.tokens is not None}
+
+        meta = {
+            "version": 1,
+            "cfg_name": self.cfg.name, "scheme": self.scheme,
+            "max_batch": self.max_batch, "max_len": self.max_len,
+            "page_size": self.page_size, "kv_pages": self.kv_pages,
+            "paged": self.paged, "seed": self.seed,
+            "pool_saved": save_pool,
+            "alloc": alloc_meta,
+            "pending": [rec(r) for r in pending],
+            "done": [rec(r) for r in done_reqs.values()],
+            "folded": {str(u): int(n) for u, n in folded.items()},
+        }
+        npz_path = os.path.join(state_dir, "serve_state.npz")
+        json_path = os.path.join(state_dir, "serve_state.json")
+        tmp_tag = f".tmp.{os.getpid()}"
+        with open(npz_path + tmp_tag, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(npz_path + tmp_tag, npz_path)
+        with open(json_path + tmp_tag, "w") as f:
+            json.dump(meta, f)
+        os.replace(json_path + tmp_tag, json_path)   # manifest = commit
+        self.stats["state_saves"] += 1
+
+    def save_state(self, state_dir: str) -> None:
+        """Checkpoint the engine's between-runs serving state — the
+        persistent prefix-cache pools, allocator + refcounts + LRU, block
+        tables, and hash-chain index — so a fresh process can
+        ``load_state`` and serve warm.  (``serve_queue`` calls the same
+        writer automatically when a ``ServeKilled`` fault fires mid-run,
+        additionally capturing every in-flight request's progress and PRNG
+        stream.)"""
+        cache, alloc = (self._pc_state if self._pc_state is not None
+                        else (None, None))
+        self._write_state(state_dir, cache, alloc, [], {},
+                          dict(self._restored_keys),
+                          dict(self._restored_folded))
+
+    def load_state(self, state_dir: str) -> List[Request]:
+        """Restore a ``save_state``/kill checkpoint into THIS engine (which
+        must have the same model config and cache geometry) and return the
+        checkpointed requests, queue order preserved: already-finished ones
+        first (terminal, results pass straight through), then the pending
+        queue.  Feed them to ``serve_queue`` to resume the batch — restored
+        requests continue their saved PRNG streams and folded prompts, so
+        an interrupted f32 run completes bit-exact vs an uninterrupted one
+        (bf16 caches re-prefill under different reassociation; see
+        serve/README).  Deadlines restart: ``submitted_at`` is re-stamped
+        on resume, since wall-clocks don't survive processes."""
+        json_path = os.path.join(state_dir, "serve_state.json")
+        with open(json_path) as f:
+            meta = json.load(f)
+        for field in ("cfg_name", "max_batch", "max_len", "page_size",
+                      "kv_pages", "paged"):
+            want = {"cfg_name": self.cfg.name, "max_batch": self.max_batch,
+                    "max_len": self.max_len, "page_size": self.page_size,
+                    "kv_pages": self.kv_pages, "paged": self.paged}[field]
+            if meta[field] != want:
+                raise ValueError(
+                    f"load_state: checkpoint {field}={meta[field]!r} does "
+                    f"not match this engine's {want!r}")
+        arrays = np.load(os.path.join(state_dir, "serve_state.npz"))
+        if meta["pool_saved"] and self.prefix_cache:
+            a = meta["alloc"]
+            alloc = PageAllocator(self.kv_pages, self.page_size,
+                                  self.max_batch, self.pages_per_slot,
+                                  prefix_cache=self.prefix_cache,
+                                  cache_frac=self.prefix_cache_frac,
+                                  min_shared_pages=self.min_shared_pages)
+            alloc.free = [int(p) for p in a["free"]]
+            alloc.ref = [int(r) for r in a["ref"]]
+            alloc.lru = collections.OrderedDict(
+                (int(p), None) for p in a["lru"])
+            alloc.index = {bytes.fromhex(h): int(p)
+                           for h, p in a["index"].items()}
+            alloc.hash_of = {p: h for h, p in alloc.index.items()}
+            alloc.table = np.asarray(a["table"], np.int32)
+            alloc.owned = [[int(p) for p in row] for row in a["owned"]]
+            template = jax.device_get(self._empty_batched_cache())
+            flat = {k[len("cache/"):]: arrays[k] for k in arrays.files
+                    if k.startswith("cache/")}
+            cache = jax.tree.map(jnp.asarray,
+                                 _unflatten_into(template, flat))
+            self._pc_state = (cache, alloc)
+
+        def mk(r: Dict[str, Any]) -> Request:
+            req = Request(uid=int(r["uid"]),
+                          prompt=np.asarray(arrays[f"req{r['uid']}/prompt"],
+                                            np.int32),
+                          max_new_tokens=int(r["max_new_tokens"]),
+                          temperature=float(r["temperature"]),
+                          eos_id=r["eos_id"])
+            toks = arrays[f"req{r['uid']}/tokens"]
+            if len(toks) or r.get("had_tokens"):
+                req.tokens = [int(t) for t in toks]
+            req.preemptions = int(r["preemptions"])
+            req.quarantines = int(r["quarantines"])
+            req.deadline_ms = r["deadline_ms"]
+            req.ttft_deadline_ms = r["ttft_deadline_ms"]
+            req.error = r["error"]
+            req.finish_reason = r["finish_reason"]
+            req.done = bool(r["done"])
+            if f"req{r['uid']}/key" in arrays.files:
+                self._restored_keys[req.uid] = \
+                    np.asarray(arrays[f"req{r['uid']}/key"])
+            return req
+
+        self._restored_folded.update(
+            {int(u): int(n) for u, n in meta["folded"].items()})
+        reqs = [mk(r) for r in meta["done"]] + \
+            [mk(r) for r in meta["pending"]]
+        self.stats["state_restores"] += 1
+        return reqs
 
 
 def throughput_tokens_per_s(engine: ServeEngine, batch: int, prompt_len: int,

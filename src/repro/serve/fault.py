@@ -1,0 +1,195 @@
+"""Serving-side fault injection — the queue-path mirror of ``train/fault.py``.
+
+The training loop earns its fault-tolerance claims with ``preempt_at`` /
+``resilient_run``: inject a crash, restore from the latest checkpoint, and
+assert the loss curve is identical.  This module gives ``serve_queue`` the
+same treatment.  A ``FaultInjector`` is handed to the engine
+(``ServeEngine(faults=...)`` or ``serve_queue(faults=...)``) and fires a
+``FaultPlan``'s events at the engine's REAL seams — not mocked internals, so
+every injected fault exercises exactly the code path a production incident
+would:
+
+``nan_at``      non-finite logits from a decode/verify macro-step, injected
+                through the ``logit_hook`` seam of ``transformer.decode_step``
+                / ``verify_step``.  Exercises the engine's always-on logit
+                guard: the offending slot is quarantined
+                (requeue-once-then-reject) while co-scheduled slots finish
+                bit-exact.
+``corrupt_at``  a scribbled block-table row (host-side structure corruption).
+                Exercises the pre-dispatch row validation: the corrupted row
+                never reaches the device, the slot is quarantined and its row
+                rebuilt by re-admission.
+``exhaust_at``  page-pool exhaustion: pages are stolen from the allocator's
+                free list/LRU, so the next macro-step's growth sees a full
+                pool.  Exercises eviction/requeue and the degradation ladder.
+``restore_at``  gives the stolen pages back (transient pressure).
+``slow_at``     a slow/hung scheduler iteration (``time.sleep``).  Exercises
+                deadline expiry.
+``cancel_at``   host-side cancellation of one request mid-run.
+``kill_at``     process death between macro-steps (``ServeKilled``).
+                Exercises ``save_state``/``load_state``: the engine
+                checkpoints on the way down (when a ``state_dir`` is set) and
+                a fresh process resumes the batch f32 bit-exact.
+
+All events are keyed by MACRO-STEP index (the engine's unit of host-visible
+progress): fault ``i`` fires immediately before the ``i``-th decode
+macro-step of the run.  The injector is deliberately dumb — pure schedule
+replay, no feedback — so a chaos run is deterministic and its assertions
+(token-exactness of unfaulted slots, finish_reason accounting) are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class ServeKilled(RuntimeError):
+    """Simulated process death between decode macro-steps.  ``serve_queue``
+    checkpoints the engine state (when given a ``state_dir``) and re-raises;
+    the supervising process restores via ``ServeEngine.load_state`` and
+    re-runs ``serve_queue`` on the returned requests."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault schedule, keyed by macro-step index.
+
+    ``nan_at[i] = uid`` poisons request ``uid``'s logits in macro ``i``
+    (``None``: the first live slot).  ``corrupt_at[i] = slot`` scribbles that
+    block-table row (``None``: the first live slot).  ``exhaust_at[i] = n``
+    steals ``n`` pages before macro ``i``; ``restore_at`` returns them.
+    ``slow_at[i] = s`` sleeps ``s`` seconds.  ``cancel_at[i] = uid`` flips
+    that request's ``cancelled`` flag.  ``kill_at = i`` raises
+    ``ServeKilled`` before macro ``i`` (once)."""
+    nan_at: Dict[int, Optional[int]] = dataclasses.field(default_factory=dict)
+    corrupt_at: Dict[int, Optional[int]] = \
+        dataclasses.field(default_factory=dict)
+    exhaust_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    restore_at: Optional[int] = None
+    slow_at: Dict[int, float] = dataclasses.field(default_factory=dict)
+    cancel_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    kill_at: Optional[int] = None
+
+
+class FaultInjector:
+    """Replays a ``FaultPlan`` against a running engine.
+
+    ``before_macro`` is called by ``serve_queue`` immediately before every
+    decode macro-step (after deadline checks, before page growth — so an
+    exhaustion fault is visible to that macro's allocation) and fires the
+    slow/cancel/exhaust/restore/corrupt/kill events scheduled for that
+    index.  ``nan_mask`` is consulted at dispatch and feeds the macro's
+    ``logit_hook``.  ``self.log`` records every fired event as
+    ``(macro_idx, kind, detail)`` for test/bench assertions."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.held: List[int] = []        # pages stolen by exhaust_at
+        self.killed = False
+        self.log: List[Tuple[int, str, object]] = []
+
+    def before_macro(self, macro_idx: int, engine, alloc, slots,
+                     pending) -> None:
+        p = self.plan
+        s = p.slow_at.get(macro_idx)
+        if s:
+            time.sleep(float(s))
+            self.log.append((macro_idx, "slow", float(s)))
+        uid = p.cancel_at.get(macro_idx)
+        if uid is not None:
+            for req in list(slots) + list(pending):
+                if req is not None and req.uid == uid and not req.done:
+                    req.cancelled = True
+                    self.log.append((macro_idx, "cancel", uid))
+                    break
+        n = p.exhaust_at.get(macro_idx)
+        if n and alloc is not None:
+            taken = []
+            for _ in range(int(n)):
+                pg = alloc._take_page()
+                if pg is None:
+                    break
+                # mark referenced so no release path ever double-frees a
+                # held page (nothing owns it, so nothing unrefs it)
+                alloc.ref[pg] = 1
+                taken.append(pg)
+            self.held.extend(taken)
+            self.log.append((macro_idx, "exhaust", len(taken)))
+        if p.restore_at == macro_idx and alloc is not None and self.held:
+            for pg in self.held:
+                alloc.ref[pg] = 0
+                alloc.free.append(pg)
+            self.log.append((macro_idx, "restore", len(self.held)))
+            self.held = []
+        if macro_idx in p.corrupt_at and alloc is not None:
+            tgt = p.corrupt_at[macro_idx]
+            if tgt is None:
+                live = [b for b in range(len(slots)) if slots[b] is not None]
+                tgt = live[0] if live else None
+            if tgt is not None and alloc.owned[tgt]:
+                alloc.table[tgt, 0] = \
+                    (int(alloc.table[tgt, 0]) + 1) % alloc.num_pages
+                self.log.append((macro_idx, "corrupt", tgt))
+        if p.kill_at == macro_idx and not self.killed:
+            self.killed = True
+            self.log.append((macro_idx, "kill", None))
+            raise ServeKilled(
+                f"injected process kill before macro-step {macro_idx}")
+
+    def nan_mask(self, macro_idx: int, slots) -> Optional[np.ndarray]:
+        """(B,) bool mask of slots whose logits this macro-step poisons, or
+        None when no NaN fault is scheduled for ``macro_idx``."""
+        if macro_idx not in self.plan.nan_at:
+            return None
+        uid = self.plan.nan_at[macro_idx]
+        mask = np.zeros((len(slots),), bool)
+        for b, req in enumerate(slots):
+            if req is None:
+                continue
+            if uid is None or req.uid == uid:
+                mask[b] = True
+                self.log.append((macro_idx, "nan", req.uid))
+                if uid is None:
+                    break
+        return mask
+
+
+def parse_chaos(spec: str) -> FaultInjector:
+    """Build a ``FaultInjector`` from a launcher ``--chaos`` spec string:
+    comma-separated ``kind@macro[:arg]`` events —
+
+    ``nan@M[:UID]``, ``corrupt@M[:SLOT]``, ``exhaust@M:N``, ``restore@M``,
+    ``slow@M:SECONDS``, ``cancel@M:UID``, ``kill@M``
+
+    e.g. ``--chaos "exhaust@1:4,nan@2:7,kill@5"`` steals 4 pages before
+    macro 1, poisons request 7's logits in macro 2, and kills the process
+    before macro 5."""
+    plan = FaultPlan()
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, rest = part.partition("@")
+        at, _, arg = rest.partition(":")
+        kind, m = kind.strip(), int(at)
+        if kind == "nan":
+            plan.nan_at[m] = int(arg) if arg else None
+        elif kind == "corrupt":
+            plan.corrupt_at[m] = int(arg) if arg else None
+        elif kind == "exhaust":
+            plan.exhaust_at[m] = int(arg) if arg else 1
+        elif kind == "restore":
+            plan.restore_at = m
+        elif kind == "slow":
+            plan.slow_at[m] = float(arg) if arg else 0.1
+        elif kind == "cancel":
+            plan.cancel_at[m] = int(arg)
+        elif kind == "kill":
+            plan.kill_at = m
+        else:
+            raise ValueError(f"unknown chaos event {part!r} (want "
+                             "nan|corrupt|exhaust|restore|slow|cancel|kill)")
+    return FaultInjector(plan)

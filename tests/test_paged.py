@@ -157,11 +157,11 @@ def _prefix_library(page: int):
 
 def _prefix_op_sequence(alloc: PageAllocator, prompts, ops):
     """Replay (slot, op, arg) triples through the engine's admission flow
-    (match -> map_shared -> COW -> ensure -> register / grow / release),
-    asserting after every step that: no page is freed while refcount > 0,
-    COW never touches the shared source page, release decrements instead
-    of freeing, and the pool partition / pages_in_use accounting stays
-    consistent."""
+    (match -> map_shared -> COW -> ensure -> register / grow / release /
+    deadline-release), asserting after every step that: no page is freed
+    while refcount > 0, COW never touches the shared source page, release
+    decrements instead of freeing, and the pool partition / pages_in_use
+    accounting stays consistent."""
     page = alloc.page_size
     for slot, op, arg in ops:
         if op == 0:                                   # admit prompts[arg]
@@ -207,6 +207,23 @@ def _prefix_op_sequence(alloc: PageAllocator, prompts, ops):
             for p in shared:
                 assert alloc.ref[p] >= 1
                 assert p not in alloc.free and p not in alloc.lru
+        elif op == 3 and alloc.owned[slot]:
+            # deadline/cancel teardown MID-DECODE: the slot grows a private
+            # tail first (it was decoding), then releases NOW rather than
+            # draining.  Shared prefix pages must only decrement — never
+            # drop below the other readers' count — while the private
+            # growth pages return to the pool immediately
+            alloc.ensure(slot, len(alloc.owned[slot]) * page + 1)
+            shared_refs = {p: alloc.ref[p] for p in alloc.owned[slot]
+                           if alloc.ref[p] > 1}
+            private = [p for p in alloc.owned[slot]
+                       if alloc.ref[p] == 1 and p not in alloc.hash_of]
+            alloc.release(slot)
+            for p, r in shared_refs.items():
+                assert alloc.ref[p] == r - 1 >= 1
+                assert p not in alloc.free and p not in alloc.lru
+            for p in private:
+                assert p in alloc.free
         _check_invariants(alloc)
     for s in range(len(alloc.owned)):
         alloc.release(s)
@@ -218,7 +235,8 @@ def _prefix_op_sequence(alloc: PageAllocator, prompts, ops):
 if HAVE_HYPOTHESIS:
     @settings(max_examples=50, deadline=None)
     @given(st.lists(st.tuples(st.integers(0, 3),      # slot
-                              st.integers(0, 2),      # admit / grow / release
+                              st.integers(0, 3),      # admit / grow /
+                              #                         release / deadline
                               st.integers(0, 40)),    # prompt pick / rows
                     min_size=1, max_size=50))
     def test_prefix_allocator_random_ops_keep_invariants(ops):
@@ -238,7 +256,7 @@ def test_prefix_allocator_fixed_seed_op_sequences():
                               page_size=8, max_batch=4, pages_per_slot=6,
                               prefix_cache=True,
                               cache_frac=float(rng.uniform(0.3, 1.0)))
-        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 3)),
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 4)),
                 int(rng.integers(0, 41))) for _ in range(100)]
         _prefix_op_sequence(alloc, _prefix_library(8), ops)
 

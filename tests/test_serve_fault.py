@@ -1,0 +1,399 @@
+"""Fault-tolerant serving (ISSUE 6): deadlines, cancellation, fault
+injection, NaN quarantine, the degradation ladder, and crash-recoverable
+engine state.
+
+The correctness bar mirrors the paged/prefix suites: every recovery path
+must complete with EXACTLY the tokens of an unfaulted run (f32 weights —
+the preemption/requeue machinery underneath is the PR-4 path already proven
+bit-exact; bf16 re-prefill reassociation is a backend ulp artifact, not
+scheduler behavior), and every request must leave the engine with an
+accurate ``finish_reason`` — no exit path is silent.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import POCKET
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+from repro.serve.fault import (
+    FaultInjector, FaultPlan, ServeKilled, parse_chaos,
+)
+
+PARAMS32 = tfm.init_params(jax.random.PRNGKey(0), POCKET, dtype=jnp.float32)
+SYS = (np.arange(40, dtype=np.int32) * 3 + 1) % POCKET.vocab_size
+
+
+def _engine(**kw):
+    base = dict(scheme="bf16", max_batch=3, max_len=64, page_size=16)
+    base.update(kw)
+    return ServeEngine(POCKET, PARAMS32, **base)
+
+
+def _requests(n=4, temp=0.0, max_new=12, seed=5, plen=10):
+    rng = np.random.default_rng(seed)
+    return [Request(
+        uid=i,
+        prompt=rng.integers(0, POCKET.vocab_size, (plen,)).astype(np.int32),
+        max_new_tokens=max_new, temperature=temp) for i in range(n)]
+
+
+def _shared_requests(n=4, temp=0.0, max_new=6, seed=2):
+    rng = np.random.default_rng(seed)
+    return [Request(
+        uid=i,
+        prompt=np.concatenate([SYS,
+                               rng.integers(0, POCKET.vocab_size,
+                                            (int(rng.integers(2, 8)),))
+                               .astype(np.int32)]),
+        max_new_tokens=max_new, temperature=temp) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# finish_reason taxonomy: no exit path is silent
+# ---------------------------------------------------------------------------
+
+def test_finish_reason_eos_and_budget():
+    eng = _engine(max_batch=2)
+    [r] = _requests(1, max_new=6)
+    res = eng.serve_queue([r])
+    assert r.finish_reason == "budget" and len(res[0]) == 6
+    # an eos_id picked FROM the greedy output stops the rerun early with
+    # reason 'eos' (greedy: same prompt -> same tokens, uid-independent)
+    eos_tok = res[0][2]
+    [r2] = _requests(1, max_new=6)
+    r2.uid, r2.eos_id = 9, int(eos_tok)
+    res2 = eng.serve_queue([r2])
+    assert r2.finish_reason == "eos"
+    assert res2[9][-1] == eos_tok and len(res2[9]) <= 3
+
+
+def test_step_budget_truncation_surfaced_and_resumable():
+    """The old silent case: ``step_budget`` runs out and exhausted requests
+    looked identical to completed ones.  Now every one carries
+    finish_reason='step_budget'; a never-admitted request stays not-done
+    and a later serve_queue call completes it."""
+    eng = _engine(max_batch=2)
+    reqs = _requests(3, max_new=30, plen=8)
+    res = eng.serve_queue(reqs, step_budget=8)        # one k=8 macro
+    assert eng.stats["step_budget_truncations"] == 3
+    for r in reqs:
+        assert r.finish_reason == "step_budget"
+    assert reqs[0].done and reqs[1].done              # slot-held: truncated
+    assert 0 < len(res[0]) < 30
+    assert not reqs[2].done and res[2] == []          # never admitted
+    res2 = eng.serve_queue([reqs[2]])
+    assert reqs[2].finish_reason == "budget" and len(res2[2]) == 30
+
+
+# ---------------------------------------------------------------------------
+# deadlines + cancellation
+# ---------------------------------------------------------------------------
+
+def test_total_deadline_expires_pending_and_engine_default():
+    eng = _engine(deadline_ms=0.0)                    # engine-level default
+    reqs = _requests(2, max_new=8)
+    res = eng.serve_queue(reqs)
+    for r in reqs:
+        assert r.finish_reason == "deadline" and r.done
+        assert res[r.uid] == []
+    assert eng.stats["deadline_expirations"] == 2
+    # per-request override beats the engine default
+    eng2 = _engine(deadline_ms=0.0)
+    [ok] = _requests(1, max_new=4)
+    ok.deadline_ms = 60_000.0
+    res2 = eng2.serve_queue([ok])
+    assert ok.finish_reason == "budget" and len(res2[0]) == 4
+
+
+def test_ttft_deadline_expires_before_first_token():
+    eng = _engine()
+    [r] = _requests(1, max_new=8)
+    r.ttft_deadline_ms = 0.0
+    res = eng.serve_queue([r])
+    assert r.finish_reason == "deadline" and res[0] == []
+    assert eng.stats["deadline_expirations"] == 1
+
+
+def test_deadline_mid_run_keeps_partial_tokens():
+    """A slow macro-step (injected hang) pushes a live slot past its
+    deadline: the NEXT scheduler iteration releases the slot, keeping the
+    tokens already emitted."""
+    eng = _engine(max_batch=2, deadline_ms=20.0,
+                  faults=FaultInjector(FaultPlan(slow_at={0: 0.05})))
+    reqs = _requests(2, max_new=32, plen=8)
+    res = eng.serve_queue(reqs)
+    for r in reqs:
+        assert r.finish_reason == "deadline"
+        assert 0 < len(res[r.uid]) < 32               # partial, kept
+    assert eng.stats["deadline_expirations"] == 2
+
+
+def test_cancel_before_run_and_mid_run():
+    eng = _engine(max_batch=2)
+    pre, mid = _requests(2, max_new=32, plen=8)
+    pre.cancel()                                      # host-side, pre-run
+    faults = FaultInjector(FaultPlan(cancel_at={1: mid.uid}))
+    res = eng.serve_queue([pre, mid], faults=faults)
+    assert pre.finish_reason == "cancelled" and res[pre.uid] == []
+    assert mid.finish_reason == "cancelled"
+    assert 0 < len(res[mid.uid]) < 32                 # partial, kept
+    assert eng.stats["cancelled_requests"] == 2
+    assert (1, "cancel", mid.uid) in faults.log
+
+
+# ---------------------------------------------------------------------------
+# NaN/Inf quarantine: only the offending slot pays
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temp", [0.0, 0.8], ids=["greedy", "temperature"])
+def test_nan_quarantine_requeue_completes_bitexact(temp):
+    """One injected non-finite macro-step: the faulted slot is quarantined
+    (requeue-once via the preemption path, PRNG key frozen pre-sample so
+    the faulted emission replays exactly) and EVERY request — faulted and
+    co-scheduled — finishes with the fault-free run's exact tokens."""
+    base = _engine().serve_queue(_requests(3, temp=temp, max_new=12))
+    eng = _engine(faults=FaultInjector(FaultPlan(nan_at={1: 1})))
+    reqs = _requests(3, temp=temp, max_new=12)
+    got = eng.serve_queue(reqs)
+    assert got == base
+    assert eng.stats["nan_events"] == 1
+    assert eng.stats["quarantine_requeues"] == 1
+    assert eng.stats["quarantined_requests"] == 0
+    assert reqs[1].quarantines == 1
+    assert reqs[1].finish_reason == "budget"          # recovered fully
+
+
+def test_nan_twice_gives_up_with_quarantined_reason():
+    """The fault follows the request (poisoned again right after its
+    requeue): the second event rejects it with finish_reason='quarantined'
+    while co-scheduled requests still finish token-exact."""
+    base = _engine().serve_queue(_requests(3, max_new=12))
+    eng = _engine(faults=FaultInjector(FaultPlan(nan_at={1: 1, 2: 1})))
+    reqs = _requests(3, max_new=12)
+    got = eng.serve_queue(reqs)
+    assert reqs[1].finish_reason == "quarantined"
+    assert reqs[1].error and "second fault" in reqs[1].error
+    assert eng.stats["quarantined_requests"] == 1
+    assert eng.stats["nan_events"] == 2
+    for uid in (0, 2):                                # bystanders unharmed
+        assert got[uid] == base[uid]
+
+
+def test_nan_quarantine_during_speculation():
+    """The same guard covers the spec verify path: greedy spec with one
+    poisoned verify still equals the fault-free spec run (== vanilla).
+    The fault lands on macro 0 — the FIRST spec dispatch, a genuine
+    full-width verify (throttle_backoff starts at 1, throttle disabled) —
+    because at high greedy acceptance the whole budget can drain inside
+    macro 0 and a later index would never fire."""
+    base = _engine(spec_throttle_min=0.0).serve_queue(
+        _requests(3, max_new=12), spec_len=3)
+    vanilla = _engine().serve_queue(_requests(3, max_new=12), spec_len=0)
+    eng = _engine(spec_throttle_min=0.0,
+                  faults=FaultInjector(FaultPlan(nan_at={0: 1})))
+    reqs = _requests(3, max_new=12)
+    got = eng.serve_queue(reqs, spec_len=3)
+    assert got == base == vanilla
+    assert eng.stats["nan_events"] == 1
+    assert reqs[1].quarantines == 1
+
+
+def test_corrupted_block_table_row_quarantined():
+    """A scribbled block-table row is caught by the pre-dispatch
+    table-vs-owned validation — the corruption never reaches the device,
+    the slot requeues and rebuilds, and output parity holds."""
+    base = _engine().serve_queue(_requests(3, max_new=12))
+    eng = _engine(faults=FaultInjector(FaultPlan(corrupt_at={1: 0})))
+    reqs = _requests(3, max_new=12)
+    got = eng.serve_queue(reqs)
+    assert got == base
+    assert eng.stats["table_quarantines"] == 1
+    assert eng.stats["quarantine_requeues"] == 1
+    assert sum(r.quarantines for r in reqs) == 1
+
+
+def test_pool_exhaustion_fault_recovers_exactly():
+    """Transiently stolen pages force eviction/requeue mid-run; once
+    restored the batch completes with the unfaulted run's exact tokens."""
+    mk = lambda: _requests(4, max_new=16, plen=10)
+    base = _engine().serve_queue(mk())
+    faults = FaultInjector(FaultPlan(exhaust_at={1: 6}, restore_at=3))
+    eng = _engine(faults=faults)
+    reqs = mk()
+    got = eng.serve_queue(reqs)
+    assert got == base
+    assert not faults.held                            # pages given back
+    assert any(ev[1] == "exhaust" for ev in faults.log)
+    assert all(r.finish_reason == "budget" for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_ladder_rungs_fire_without_changing_output():
+    """Spec-shrink, admit-throttle, and prefix-stop rungs all fire under an
+    always-on threshold — and greedy output is STILL bit-identical to the
+    unladdered engine (each rung sheds throughput, never correctness).
+    The spec throttle is disabled so later macros stay speculative and the
+    shrink rung actually gets exercised."""
+    base = _engine(max_len=96, spec_throttle_min=0.0).serve_queue(
+        _requests(4, max_new=20), spec_len=3)
+    lad = _engine(max_len=96, spec_throttle_min=0.0,
+                  ladder_spec_util=0.01, ladder_admit_util=0.01,
+                  ladder_prefix_util=0.01)
+    got = lad.serve_queue(_requests(4, max_new=20), spec_len=3)
+    assert got == base
+    assert lad.stats["ladder_spec_shrinks"] > 0
+    assert lad.stats["ladder_admit_throttles"] > 0
+    assert lad.stats["ladder_prefix_stops"] > 0
+
+
+def test_backpressure_rejects_only_fresh_requests():
+    """The last rung sheds FRESH work: a request arriving while the pool
+    is over the reject threshold gets finish_reason='rejected' with a
+    backpressure error; already-running requests finish normally."""
+    eng = _engine(max_batch=2, ladder_reject_util=0.05)
+    short, long_, late = _requests(3, max_new=4, plen=8)
+    long_.max_new_tokens = 24
+    res = eng.serve_queue([short, long_, late])
+    assert late.finish_reason == "rejected" and res[late.uid] == []
+    assert late.error and "backpressure" in late.error
+    assert eng.stats["backpressure_rejections"] == 1
+    assert len(res[short.uid]) == 4 and len(res[long_.uid]) == 24
+
+
+def test_ladder_disabled_by_default():
+    """Defaults (1.0, strict >) mean a transiently FULL pool — the normal
+    eviction path — never trips any rung."""
+    eng = _engine(max_batch=4, kv_pages=5)
+    reqs = _requests(6, max_new=20, plen=10)
+    eng.serve_queue(reqs)
+    assert eng.stats["evictions"] > 0                 # real pressure
+    assert eng.stats["backpressure_rejections"] == 0
+    assert eng.stats["ladder_admit_throttles"] == 0
+    assert all(r.finish_reason == "budget" for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# kill + checkpoint/restore
+# ---------------------------------------------------------------------------
+
+def test_kill_restore_completes_batch_bitexact(tmp_path):
+    """Process death between macro-steps: the engine checkpoints on the way
+    down; a FRESH engine restores and completes the batch with the
+    uninterrupted run's exact tokens — pre-kill finishers pass through,
+    in-flight requests resume their saved PRNG streams and folded
+    prompts."""
+    mk = lambda: [Request(uid=i, prompt=(np.arange(10, dtype=np.int32)
+                                         + 7 * i) % POCKET.vocab_size,
+                          max_new_tokens=4 + 8 * i) for i in range(4)]
+    base = _engine().serve_queue(mk())
+    eng = _engine(state_dir=str(tmp_path),
+                  faults=FaultInjector(FaultPlan(kill_at=2)))
+    with pytest.raises(ServeKilled):
+        eng.serve_queue(mk())
+    assert eng.stats["state_saves"] == 1
+    assert (tmp_path / "serve_state.json").exists()
+    eng2 = _engine()
+    restored = eng2.load_state(str(tmp_path))
+    assert eng2.stats["state_restores"] == 1
+    got = eng2.serve_queue(restored)
+    assert got == base
+    # the short request finished BEFORE the kill and round-tripped as done
+    assert any(r.done and r.finish_reason == "budget" and r.preemptions == 0
+               for r in restored)
+
+
+def test_kill_restore_bitexact_with_temperature(tmp_path):
+    """Sampled requests resume their checkpointed PRNG streams: the
+    restored continuation draws the same stream, so vanilla-temperature
+    output is bit-exact too."""
+    mk = lambda: _requests(3, temp=0.9, max_new=14, plen=8)
+    base = _engine().serve_queue(mk())
+    eng = _engine(state_dir=str(tmp_path),
+                  faults=FaultInjector(FaultPlan(kill_at=1)))
+    with pytest.raises(ServeKilled):
+        eng.serve_queue(mk())
+    eng2 = _engine()
+    assert eng2.serve_queue(eng2.load_state(str(tmp_path))) == base
+
+
+def test_save_state_persists_prefix_cache_across_engines(tmp_path):
+    """Between-runs save_state/load_state is the first half of the
+    ROADMAP's cross-process prefix cache: a fresh engine restores the
+    pools + hash-chain index and serves the next batch WARM (prefix hits
+    with zero prior traffic of its own), bit-exact."""
+    warm = _engine(max_len=96)
+    base = warm.serve_queue(_shared_requests())
+    warm.save_state(str(tmp_path))
+    eng2 = _engine(max_len=96)
+    assert eng2.load_state(str(tmp_path)) == []       # no in-flight reqs
+    got = eng2.serve_queue(_shared_requests())
+    assert got == base
+    assert eng2.stats["prefix_hits"] > 0              # warm from the start
+
+
+def test_load_state_rejects_mismatched_geometry(tmp_path):
+    warm = _engine(max_len=96)
+    warm.serve_queue(_shared_requests(n=1))
+    warm.save_state(str(tmp_path))
+    other = _engine(max_len=96, page_size=32)
+    with pytest.raises(ValueError, match="page_size"):
+        other.load_state(str(tmp_path))
+
+
+def test_kill_without_state_dir_saves_nothing(tmp_path):
+    eng = _engine(faults=FaultInjector(FaultPlan(kill_at=1)))
+    with pytest.raises(ServeKilled):
+        eng.serve_queue(_requests(2, max_new=12))
+    assert eng.stats["state_saves"] == 0
+    assert not (tmp_path / "serve_state.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# satellites: reset_prefix_cache bookkeeping, chaos parsing, HAQA knobs
+# ---------------------------------------------------------------------------
+
+def test_reset_prefix_cache_resets_allocator_bookkeeping():
+    """Reset must clear the allocator's LRU parking + index and zero the
+    cached-page gauges — previously the stats kept reporting the dead
+    allocator's values across bench sections."""
+    warm = _engine(max_len=96)
+    warm.serve_queue(_shared_requests())
+    assert warm.stats["cached_pages"] > 0
+    _, alloc = warm._pc_state
+    warm.reset_prefix_cache()
+    assert warm._pc_state is None
+    assert warm.stats["cached_pages"] == 0
+    assert warm.stats["pages_in_use"] == 0
+    assert not alloc.lru and not alloc.index and not alloc.hash_of
+    assert len(alloc.free) == alloc.num_pages
+
+
+def test_parse_chaos_roundtrip_and_errors():
+    inj = parse_chaos("exhaust@1:4, nan@2:7, corrupt@3, slow@4:0.5, "
+                      "cancel@5:9, restore@6, kill@8")
+    p = inj.plan
+    assert p.exhaust_at == {1: 4}
+    assert p.nan_at == {2: 7}
+    assert p.corrupt_at == {3: None}
+    assert p.slow_at == {4: 0.5}
+    assert p.cancel_at == {5: 9}
+    assert p.restore_at == 6 and p.kill_at == 8
+    with pytest.raises(ValueError, match="unknown chaos event"):
+        parse_chaos("frobnicate@1")
+
+
+def test_serve_space_exposes_fault_knobs():
+    from repro.core import serve_space
+    sp = serve_space()
+    assert {"deadline_ms", "ladder_spec_util", "ladder_admit_util",
+            "ladder_prefix_util", "ladder_reject_util"} <= set(sp.names)
+    d = sp.defaults()
+    assert d["ladder_spec_util"] <= d["ladder_admit_util"] \
+        <= d["ladder_prefix_util"] <= d["ladder_reject_util"]
