@@ -441,20 +441,251 @@ def _chaos_section(bench: Dict, rows: List[Row], ci: bool) -> None:
     finally:
         shutil.rmtree(state_dir, ignore_errors=True)
 
+    # -- swap-path chaos (ISSUE 8): faults on the KV-tier seams -------------
+    # (a) corrupt_spill@k under a tight pool: flipped bytes in spilled
+    #     entries must be detected on read, never served — output exact.
+    # (b) a fully corrupted DURABLE store: a sibling engine detects every
+    #     entry (nonzero tier_integrity_failures) and recomputes, exact.
+    # (c) kill-then-sibling-rehydrate: the dying engine's spilled pages
+    #     warm-start a sibling (prefill_tokens_saved > 0), exact.
+    swap_ok = True
+
+    def growth_engine(**kw):
+        return ServeEngine(POCKET, params32, scheme="bf16", max_batch=4,
+                           max_len=64, page_size=16, **kw)
+
+    def mk_growth():
+        rng = np.random.default_rng(13)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, POCKET.vocab_size,
+                                            (10,)).astype(np.int32),
+                        max_new_tokens=20) for i in range(6)]
+
+    sys_ids = (np.arange(40, dtype=np.int32) * 3 + 1) % POCKET.vocab_size
+
+    def mk_shared():
+        # 16 new tokens = two k=8 macro-steps, so kill_at=1 fires MID-run
+        # (prompt <= 47 rows + 16 stays inside max_len=64)
+        rng = np.random.default_rng(17)
+        return [Request(uid=i,
+                        prompt=np.concatenate(
+                            [sys_ids,
+                             rng.integers(0, POCKET.vocab_size,
+                                          (int(rng.integers(2, 8)),))
+                             .astype(np.int32)]),
+                        max_new_tokens=16) for i in range(4)]
+
+    try:
+        growth_base = growth_engine().serve_queue(mk_growth())
+        plan = FaultPlan(corrupt_spill_at={m: 99 for m in range(1, 12)},
+                         tier_fail_at={13: 5})
+        eng = growth_engine(kv_pages=5, faults=FaultInjector(plan))
+        got = eng.serve_queue(mk_growth())
+        rec = {"exact": bool(got == growth_base),
+               "evictions": eng.stats["evictions"],
+               "corrupt_events": sum(ev[2] for ev in eng.faults.log
+                                     if ev[1] == "corrupt_spill"),
+               "tier_integrity_failures":
+                   eng.stats["tier_integrity_failures"],
+               "tier_io_errors": eng.stats["tier_io_errors"]}
+        out["runs"]["corrupt_spill"] = rec
+        swap_ok &= rec["exact"] and rec["corrupt_events"] > 0
+    except Exception as exc:                         # noqa: BLE001
+        crashes.append(f"corrupt_spill: {exc!r}")
+        out["runs"]["corrupt_spill"] = {"crashed": repr(exc)}
+        swap_ok = False
+
+    tier_dir = tempfile.mkdtemp(prefix="serve_chaos_tier_")
+    shared_base = None
+    try:
+        shared_base = growth_engine(
+            state_dir=tier_dir).serve_queue(mk_shared())
+        # flip a byte in EVERY durable page: the sibling must detect each
+        # read (counted), serve nothing corrupted, and recompute exactly
+        kv_dir = os.path.join(tier_dir, "kv_tier")
+        for fname in os.listdir(kv_dir):
+            if fname.startswith("page_"):
+                path = os.path.join(kv_dir, fname)
+                with open(path, "r+b") as f:
+                    f.seek(os.path.getsize(path) // 2)
+                    byte = f.read(1)
+                    f.seek(-1, 1)
+                    f.write(bytes([byte[0] ^ 0xFF]))
+        sib = growth_engine(state_dir=tier_dir)
+        got = sib.serve_queue(mk_shared())
+        rec = {"exact": bool(got == shared_base),
+               "tier_integrity_failures":
+                   sib.stats["tier_integrity_failures"],
+               "tier_disk_loads": sib.stats["tier_disk_loads"]}
+        out["runs"]["corrupt_store_sibling"] = rec
+        swap_ok &= rec["exact"] and rec["tier_integrity_failures"] > 0
+    except Exception as exc:                         # noqa: BLE001
+        crashes.append(f"corrupt_store_sibling: {exc!r}")
+        out["runs"]["corrupt_store_sibling"] = {"crashed": repr(exc)}
+        swap_ok = False
+    finally:
+        shutil.rmtree(tier_dir, ignore_errors=True)
+
+    tier_dir = tempfile.mkdtemp(prefix="serve_chaos_tier_")
+    try:
+        eng = growth_engine(state_dir=tier_dir,
+                            faults=FaultInjector(FaultPlan(kill_at=1)))
+        killed = False
+        try:
+            eng.serve_queue(mk_shared())
+        except ServeKilled:
+            killed = True
+        sib = growth_engine(state_dir=tier_dir)     # NO load_state: the
+        got = sib.serve_queue(mk_shared())          # durable tier alone
+        rec = {"killed": killed,                    # warms the sibling
+               "exact": bool(shared_base is not None
+                             and got == shared_base),
+               "prefix_hits": sib.stats["prefix_hits"],
+               "tier_disk_loads": sib.stats["tier_disk_loads"],
+               "prefill_tokens_saved": sib.stats["prefill_tokens_saved"]}
+        out["runs"]["kill_sibling_rehydrate"] = rec
+        swap_ok &= (killed and rec["exact"]
+                    and rec["prefill_tokens_saved"] > 0)
+    except Exception as exc:                         # noqa: BLE001
+        crashes.append(f"kill_sibling_rehydrate: {exc!r}")
+        out["runs"]["kill_sibling_rehydrate"] = {"crashed": repr(exc)}
+        swap_ok = False
+    finally:
+        shutil.rmtree(tier_dir, ignore_errors=True)
+
     out["no_crash"] = bool(not crashes)
     out["crashes"] = crashes
     out["faulted_reasons_ok"] = bool(reasons_ok)
     out["unfaulted_token_exact"] = bool(bystanders_ok)
     out["kill_restore_ok"] = kill_ok
-    ok = (out["no_crash"] and reasons_ok and bystanders_ok and kill_ok)
+    out["swap_chaos_ok"] = bool(swap_ok)
+    ok = (out["no_crash"] and reasons_ok and bystanders_ok and kill_ok
+          and swap_ok)
     rows.append(Row(
         name="serve_queue/chaos",
         us_per_call=0.0,
         derived=f"crash={'none' if out['no_crash'] else 'FAIL'}; "
                 f"reasons={'ok' if reasons_ok else 'FAIL'}; "
                 f"bystanders={'exact' if bystanders_ok else 'FAIL'}; "
-                f"kill+restore={'ok' if kill_ok else 'FAIL'}"
+                f"kill+restore={'ok' if kill_ok else 'FAIL'}; "
+                f"swap={'ok' if swap_ok else 'FAIL'}"
                 + ("" if ok else " -- CHAOS SMOKE FAILED")))
+
+
+def _tier_section(bench: Dict, rows: List[Row], ci: bool) -> None:
+    """KV tiering (ISSUE 8): what the swap path buys.
+
+    * ``requeue_via_swap`` vs ``requeue_re_prefill`` — the same undersized
+      pool forces the same evictions; with the host tier on, requeued
+      admissions swap their committed pages back in instead of re-running
+      prefill (``prefill_tokens_saved`` >= rehydrated pages x page_size).
+      Both must match the big-pool run's tokens exactly.
+    * ``sibling`` — a fresh engine at a populated ``state_dir`` serves a
+      shared-prefix workload warm off the durable store: nonzero
+      ``prefix_hits``/``tier_disk_loads`` with zero traffic of its own,
+      token-exact vs the cold run.
+    """
+    import shutil
+    import tempfile
+
+    params32 = tfm.init_params(jax.random.PRNGKey(0), POCKET,
+                               dtype=jnp.float32)
+    page_size = 16
+
+    def engine(**kw):
+        return ServeEngine(POCKET, params32, scheme="bf16", max_batch=4,
+                           max_len=64, page_size=page_size, **kw)
+
+    def mk_growth():
+        rng = np.random.default_rng(13)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, POCKET.vocab_size,
+                                            (10,)).astype(np.int32),
+                        max_new_tokens=20) for i in range(6)]
+
+    out: Dict[str, object] = {}
+    bench["tier"] = out
+    base = engine().serve_queue(mk_growth())
+
+    def pressured(name, **kw):
+        eng = engine(kv_pages=5, **kw)
+        t0 = time.perf_counter()
+        got = eng.serve_queue(mk_growth())
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in got.values())
+        rec = {"duration_s": dt,
+               "tokens_per_s": toks / max(dt, 1e-9),
+               "evictions": eng.stats["evictions"],
+               "prefill_tokens_saved": eng.stats["prefill_tokens_saved"],
+               "tier_swap_ins": eng.stats["tier_swap_ins"],
+               "tier_rehydrates": eng.stats["tier_rehydrates"],
+               "exact": bool(got == base)}
+        out[name] = rec
+        return rec
+
+    swap = pressured("requeue_via_swap")
+    redo = pressured("requeue_re_prefill", host_tier_frac=0.0)
+    out["swap_parity_ok"] = bool(swap["exact"] and redo["exact"]
+                                 and swap["evictions"] > 0)
+    out["swap_saves_prefill_ok"] = bool(
+        swap["tier_rehydrates"] > 0
+        and swap["prefill_tokens_saved"]
+        >= swap["tier_rehydrates"] * page_size)
+    rows.append(Row(
+        name="serve_queue/tier_swap",
+        us_per_call=swap["duration_s"] * 1e6,
+        derived=f"swap {swap['tokens_per_s']:.1f} tok/s vs re-prefill "
+                f"{redo['tokens_per_s']:.1f}; "
+                f"{swap['tier_swap_ins']} swap-ins saved "
+                f"{swap['prefill_tokens_saved']} prefill tokens; "
+                f"parity={'ok' if out['swap_parity_ok'] else 'FAIL'}"))
+
+    sys_ids = (np.arange(40, dtype=np.int32) * 3 + 1) % POCKET.vocab_size
+
+    def mk_shared():
+        rng = np.random.default_rng(17)
+        return [Request(uid=i,
+                        prompt=np.concatenate(
+                            [sys_ids,
+                             rng.integers(0, POCKET.vocab_size,
+                                          (int(rng.integers(2, 8)),))
+                             .astype(np.int32)]),
+                        max_new_tokens=8) for i in range(4)]
+
+    state_dir = tempfile.mkdtemp(prefix="serve_tier_state_")
+    try:
+        cold_eng = engine(state_dir=state_dir)
+        t0 = time.perf_counter()
+        cold = cold_eng.serve_queue(mk_shared())
+        cold_dt = time.perf_counter() - t0
+        sib = engine(state_dir=state_dir)
+        t0 = time.perf_counter()
+        warm = sib.serve_queue(mk_shared())
+        warm_dt = time.perf_counter() - t0
+        n_req = len(cold)
+        rec = {"cold_duration_s": cold_dt,
+               "warm_duration_s": warm_dt,
+               "prefix_hits": sib.stats["prefix_hits"],
+               "hit_rate": sib.stats["prefix_hits"] / max(1, n_req),
+               "tier_disk_loads": sib.stats["tier_disk_loads"],
+               "prefill_tokens_saved": sib.stats["prefill_tokens_saved"],
+               "tier_integrity_failures":
+                   sib.stats["tier_integrity_failures"],
+               "exact": bool(warm == cold)}
+        out["sibling"] = rec
+        out["sibling_warm_ok"] = bool(
+            rec["exact"] and rec["prefill_tokens_saved"] > 0
+            and rec["tier_disk_loads"] > 0)
+        rows.append(Row(
+            name="serve_queue/tier_sibling",
+            us_per_call=warm_dt * 1e6,
+            derived=f"sibling warm-start hit rate "
+                    f"{rec['hit_rate']:.2f} ({rec['prefix_hits']}/{n_req} "
+                    f"requests), {rec['tier_disk_loads']} disk loads, "
+                    f"saved {rec['prefill_tokens_saved']} prefill tokens; "
+                    f"{'exact' if rec['exact'] else 'PARITY FAIL'}"))
+    finally:
+        shutil.rmtree(state_dir, ignore_errors=True)
 
 
 def _pertoken_pr1(engine: ServeEngine, requests: List[Request],
@@ -826,6 +1057,9 @@ def run(scale: str = None, ci: bool = False, spec_len: int = 4,
     # -- prefix cache: warm vs cold TTFT on a 75%-shared-prompt workload ----
     _prefix_section(bench, rows, ci)
 
+    # -- KV tier: requeue-via-swap vs re-prefill + sibling warm start -------
+    _tier_section(bench, rows, ci)
+
     # -- PR 1 per-token scheduler (one host round-trip per token) -----------
     eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
                       max_len=PROMPT_LEN + new_tokens + 8,
@@ -1044,6 +1278,20 @@ def main() -> None:
             failures.append(
                 "paged run under eviction did not match the contiguous "
                 "run's tokens (or dropped requests)")
+        tr = bench.get("tier", {})
+        if tr:
+            if not tr["swap_parity_ok"]:
+                failures.append(
+                    "requeue-via-swap (or its re-prefill control) did not "
+                    "match the big-pool run's tokens under eviction")
+            if not tr["swap_saves_prefill_ok"]:
+                failures.append(
+                    "tier swap-in saved ZERO prefill tokens (requeue is "
+                    "still re-running prefill)")
+            if not tr["sibling_warm_ok"]:
+                failures.append(
+                    "sibling engine did not warm-start from the durable "
+                    "tier (no disk loads / no saved prefill / parity)")
         if "chaos" in bench:
             ch = bench["chaos"]
             if not ch["no_crash"]:
@@ -1059,6 +1307,11 @@ def main() -> None:
             if not ch["kill_restore_ok"]:
                 failures.append("kill+restore did not complete the batch "
                                 "with the fault-free run's tokens")
+            if not ch.get("swap_chaos_ok", True):
+                failures.append(
+                    "swap-path chaos failed: a corrupted spill/store was "
+                    "served, went undetected, or the killed engine's "
+                    "sibling could not rehydrate (see chaos.runs)")
         if failures:
             print("CI smoke FAILED:\n  " + "\n  ".join(failures),
                   file=sys.stderr)

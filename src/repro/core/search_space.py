@@ -301,6 +301,16 @@ def serve_space() -> SearchSpace:
                    doc="Smallest cached prefix (in pages) worth mapping at "
                        "admission; short matches save little prefill but "
                        "still pin pages and pay table bookkeeping."),
+        UniformFloat("host_tier_frac", 0.0, 4.0, 1.0,
+                     doc="Host-memory KV-tier budget as a fraction of the "
+                         "device pool (0 disables tiering).  Preempted "
+                         "slots swap committed pages to host instead of "
+                         "losing them and dropped prefix pages spill there "
+                         "before eviction — requeue/re-admission swaps "
+                         "pages back in, skipping re-prefill at the cost "
+                         "of host RAM and PCIe traffic; the right budget "
+                         "is a per-platform call (host RAM vs recompute "
+                         "FLOPs) the hardware-aware agent makes."),
         Categorical("flash_decode_block_k", fd["block_k"], 128,
                     doc="flash_decode key-block tile."),
         Categorical("flash_decode_k_splits", fd["k_splits"], 4,
@@ -322,6 +332,14 @@ def serve_space() -> SearchSpace:
                          "speculative draft to its L=1 probe so each "
                          "macro-step grows the KV footprint by at most one "
                          "row per slot."),
+        UniformFloat("ladder_spill_util", 0.5, 1.0, 0.88,
+                     doc="Spill rung (between draft-shrink and "
+                         "admit-throttle): drop LRU-parked cached pages to "
+                         "the free list, spilling their contents to the "
+                         "host KV tier so the prefixes stay matchable — "
+                         "free-list headroom is bought with host memory "
+                         "and a possible swap-in later, not with lost "
+                         "prefill work."),
         UniformFloat("ladder_admit_util", 0.5, 1.0, 0.92,
                      doc="Second rung: throttle chunked-prefill admission "
                          "to one slot per scheduler iteration, keeping "

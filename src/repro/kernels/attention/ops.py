@@ -23,7 +23,7 @@ _DEFAULT_VERIFY_CFG = VerifyAttentionConfig()
 
 
 def _lane_pad(*arrays):
-    """Zero-pad every array's LAST dim (head_dim) up to the TPU lane tile.
+    """Zero-pad each array's LAST dim (head_dim) up to the TPU lane tile.
 
     TPU tiles the minormost dimension in LANE (= 128) lanes, so a
     ``head_dim < 128`` model (tiny-100m's 64, POCKET's 32) would misalign
@@ -35,19 +35,21 @@ def _lane_pad(*arrays):
     explicitly (``scale=d ** -0.5``) so padding never touches the math.
     Returns (padded_dim, *padded_arrays).
 
-    Cost note: this pads the whole cache/pool per dispatch (an O(cache)
-    copy XLA may or may not fuse away), which is fine for the current
-    interpret-mode validation but should move to lane-padded pool
-    ALLOCATION (pad rows once at init, pad only q per step) before the
-    Pallas path is burned in on real TPU for small-head models — tracked
-    with the ROADMAP "flash-decode on real TPU" item.
+    Each array is padded by its OWN deficit: ``init_paged_cache`` allocates
+    its pools lane-padded up front, so on the paged path only the per-step
+    queries still need the copy here — the pool (the O(cache) operand the
+    old all-from-``arrays[0]`` padding used to copy every dispatch) passes
+    through untouched.  Contiguous caches keep the legacy behavior.
     """
-    d = arrays[0].shape[-1]
-    dp = round_up(d, LANE)
-    if dp == d:
-        return (d,) + arrays
-    return (dp,) + tuple(
-        jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, dp - d)]) for a in arrays)
+    dp = round_up(max(a.shape[-1] for a in arrays), LANE)
+
+    def pad(a):
+        n = dp - a.shape[-1]
+        if n == 0:
+            return a
+        return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, n)])
+
+    return (dp,) + tuple(pad(a) for a in arrays)
 
 
 def set_default_config(cfg: AttentionConfig) -> None:

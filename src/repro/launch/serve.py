@@ -69,6 +69,17 @@ fraction parked as cache, ``--min-shared-pages`` sets the smallest match
 taken, and ``--shared-prefix N`` prepends N shared system-prompt tokens to
 every queued request to exercise it.
 
+Behind the device pool sits a two-level **KV tier** (``serve/tier.py``):
+``--host-tier-frac`` sizes a bounded host-memory store that preemption
+swap-outs and dropped prefix pages spill into (requeue/re-admission swaps
+pages back in instead of re-prefilling — bit-exact on f32), and with
+``--state-dir`` spilled pages persist to ``<state-dir>/kv_tier`` with a
+hash-chain digest per page, so a restarted or sibling engine rehydrates
+warm prefixes with every load integrity-verified (corrupt/torn/stale
+entries are quarantined and recomputed, never served).
+``--ladder-spill-util`` adds the ladder's spill rung between draft-shrink
+and admit-throttle.
+
 Failure semantics (see serve/README.md): ``--deadline-ms`` /
 ``--ttft-deadline-ms`` set per-request wall-clock deadlines, ``--chaos``
 injects a deterministic fault schedule at the engine's seams
@@ -152,6 +163,19 @@ def main():
     ap.add_argument("--min-shared-pages", type=int, default=1,
                     help="smallest cached prefix (in pages) worth mapping "
                          "at admission")
+    ap.add_argument("--host-tier-frac", type=float, default=1.0,
+                    help="host-memory KV-tier budget as a fraction of the "
+                         "device pool (0 disables tiering): preempted "
+                         "slots swap committed pages to host and requeue "
+                         "swaps them back instead of re-prefilling; with "
+                         "--state-dir the tier also persists spilled "
+                         "prefix pages to <state-dir>/kv_tier with "
+                         "integrity-verified restore")
+    ap.add_argument("--ladder-spill-util", type=float, default=1.0,
+                    help="degradation-ladder spill rung: pool-utilization "
+                         "fraction above which LRU-parked cached pages are "
+                         "dropped to the free list after spilling to the "
+                         "host tier (1.0 disables)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many SHARED system-prompt tokens to "
                          "every queued request (exercises the prefix "
@@ -167,7 +191,8 @@ def main():
                          "comma-separated kind@macro[:arg] events, e.g. "
                          "'exhaust@1:4,nan@2:7,kill@5' (see "
                          "serve/fault.py; kinds: nan corrupt exhaust "
-                         "restore slow cancel kill)")
+                         "restore slow cancel kill corrupt_spill "
+                         "tear_manifest tier_fail)")
     ap.add_argument("--state-dir", default="",
                     help="checkpoint the engine state here when a kill "
                          "fault fires, then restore into a fresh engine "
@@ -208,6 +233,8 @@ def main():
                            prefix_cache=not args.no_prefix_cache,
                            prefix_cache_frac=args.prefix_cache_frac,
                            min_shared_pages=args.min_shared_pages,
+                           host_tier_frac=args.host_tier_frac,
+                           ladder_spill_util=args.ladder_spill_util,
                            deadline_ms=args.deadline_ms or None,
                            ttft_deadline_ms=args.ttft_deadline_ms or None)
 
@@ -278,10 +305,21 @@ def main():
               f"quarantined={es['quarantined_requests']}, "
               f"table_quarantines={es['table_quarantines']}, "
               f"backpressure={es['backpressure_rejections']}, "
-              f"ladder(spec/admit/prefix)={es['ladder_spec_shrinks']}/"
-              f"{es['ladder_admit_throttles']}/{es['ladder_prefix_stops']}, "
+              f"ladder(spec/spill/admit/prefix)={es['ladder_spec_shrinks']}/"
+              f"{es['ladder_spills']}/{es['ladder_admit_throttles']}/"
+              f"{es['ladder_prefix_stops']}, "
               f"state(saves/restores)={es['state_saves']}/"
               f"{es['state_restores']}")
+        if engine.kv_tier:
+            print(f"  kv tier: swap_outs={es['tier_swap_outs']}, "
+                  f"spills={es['tier_spills']}, "
+                  f"swap_ins={es['tier_swap_ins']}, "
+                  f"rehydrates={es['tier_rehydrates']}, "
+                  f"host_pages={es['tier_host_pages']}, "
+                  f"disk(w/r)={es['tier_disk_writes']}/"
+                  f"{es['tier_disk_loads']}, "
+                  f"integrity_failures={es['tier_integrity_failures']}, "
+                  f"io_errors={es['tier_io_errors']}")
         if engine.paged:
             print(f"  paged kv: page_size={engine.page_size}, "
                   f"pool={engine.kv_pages} pages "

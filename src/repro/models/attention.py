@@ -204,8 +204,13 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
                 q, k_cache, v_cache, block_table, clen, page_size,
                 k_scale, v_scale, cap=logit_cap, window=window,
                 interpret=(mode == "pallas_interpret"))
-        k_cache = _paged_gather(k_cache, block_table, page_size, t_logical)
-        v_cache = _paged_gather(v_cache, block_table, page_size, t_logical)
+        # lane-padded pools (allocation-level tile alignment) view back to
+        # the true head dim: the sliced rows are identical to what an
+        # unpadded pool held, so paged stays bit-identical to contiguous
+        k_cache = _paged_gather(k_cache, block_table, page_size,
+                                t_logical)[..., :d]
+        v_cache = _paged_gather(v_cache, block_table, page_size,
+                                t_logical)[..., :d]
         if k_scale is not None:
             k_scale = _paged_gather(k_scale, block_table, page_size, t_logical)
             v_scale = _paged_gather(v_scale, block_table, page_size, t_logical)
@@ -269,8 +274,10 @@ def verify_attention(q, k_cache, v_cache, lens, *, window: int = 0,
                 q, k_cache, v_cache, block_table, lens, page_size,
                 k_scale, v_scale, cap=logit_cap, window=window,
                 interpret=(mode == "pallas_interpret"))
-        k_cache = _paged_gather(k_cache, block_table, page_size, t_logical)
-        v_cache = _paged_gather(v_cache, block_table, page_size, t_logical)
+        k_cache = _paged_gather(k_cache, block_table, page_size,
+                                t_logical)[..., :d]
+        v_cache = _paged_gather(v_cache, block_table, page_size,
+                                t_logical)[..., :d]
         if k_scale is not None:
             k_scale = _paged_gather(k_scale, block_table, page_size, t_logical)
             v_scale = _paged_gather(v_scale, block_table, page_size, t_logical)

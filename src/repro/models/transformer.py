@@ -325,6 +325,26 @@ class PagedLayout:
         return -(-self.max_len // self.page_size)
 
 
+def paged_pool_head_dim(cfg: ModelConfig) -> int:
+    """The paged pool's ALLOCATED head dim: the true head dim rounded up to
+    the TPU lane tile so Pallas BlockSpecs tile cleanly without a per-dispatch
+    pad of the whole pool (the allocation-level half of the ROADMAP lane-
+    alignment item)."""
+    from repro.kernels.common import LANE, round_up
+    return round_up(cfg.resolved_head_dim, LANE)
+
+
+def _pad_lanes(vals, width: int):
+    """Zero-pad ``vals``' last dim up to ``width`` (a pool's lane-padded head
+    dim).  No-op when they already match — contiguous caches, scale leaves
+    (last dim 1 on both sides), and models whose head dim is already
+    tile-aligned all pass straight through."""
+    d = vals.shape[-1]
+    if d == width:
+        return vals
+    return jnp.pad(vals, [(0, 0)] * (vals.ndim - 1) + [(0, width - d)])
+
+
 def paged_layout_supported(cfg: ModelConfig) -> bool:
     """Paging needs a linear cache layout: every row holds one global
     position forever.  Local-attention ring buffers reuse rows (row r holds
@@ -338,15 +358,25 @@ def paged_layout_supported(cfg: ModelConfig) -> bool:
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
                      page_size: int, num_pages: int, dtype=jnp.bfloat16):
     """Shared-pool paged decode cache: per layer a (num_pages * page_size,
-    KV, D) K/V pool (plus scale pools for int8), ONE (batch, pages_per_slot)
+    KV, Dp) K/V pool (plus scale pools for int8), ONE (batch, pages_per_slot)
     int32 block table shared by every layer (-1 = unallocated), and per-slot
     lengths.  Page allocation is host-side (``repro.serve.engine``); the
-    model code only translates logical rows to physical pool rows."""
+    model code only translates logical rows to physical pool rows.
+
+    The pool's head dim Dp is the TRUE head dim rounded up to the TPU lane
+    tile (128): padding once at allocation replaces the O(pool) per-dispatch
+    pad the Pallas wrappers used to make (``kernels/attention/ops._lane_pad``
+    now only pads the per-step queries).  Zero lanes are exact — they add
+    nothing to the q·k dots — and the XLA attention paths slice the gathered
+    views back to the true head dim, so paged output stays bit-identical to
+    the contiguous layout.  The trade-off is pool memory for small-head
+    models (e.g. head_dim 32 allocates 4x the K/V bytes on CPU, where XLA
+    would not have required the alignment)."""
     assert paged_layout_supported(cfg), \
         "paged KV cache: linear global-attention plans only " \
         "(ring-buffer/SSM plans keep the contiguous layout)"
     plan = block_plan(cfg)
-    hd = cfg.resolved_head_dim
+    hd = paged_pool_head_dim(cfg)
     rows = num_pages * page_size
     if cfg.kv_cache_dtype == "int8":
         leaf = {
@@ -391,6 +421,29 @@ def copy_cache_page(blocks, src_page, dst_page, page_size: int):
                                                    axis=1)
 
     return jax.tree.map(cp, blocks)
+
+
+def gather_cache_page(blocks, page, page_size: int):
+    """Slice one physical pool page out of every layer's K/V (and scale)
+    pools: leaves (count, pool_rows, ...) -> (count, page_size, ...) tiles.
+    ``page`` is a traced page index, so one compilation serves every
+    swap-out — the device half of spilling a page to the host KV tier."""
+    def g(pool):
+        return jax.lax.dynamic_slice_in_dim(pool, page * page_size,
+                                            page_size, axis=1)
+
+    return jax.tree.map(g, blocks)
+
+
+def scatter_cache_page(blocks, tile, page, page_size: int):
+    """Write a ``gather_cache_page`` tile back into every layer's pools at
+    physical page ``page`` (traced) — the device half of rehydrating a page
+    from the host KV tier."""
+    def s(pool, t):
+        return jax.lax.dynamic_update_slice_in_dim(pool, t.astype(pool.dtype),
+                                                   page * page_size, axis=1)
+
+    return jax.tree.map(s, blocks, tile)
 
 
 def paged_phys_rows(block_table, rows, page_size: int, t_logical: int,
@@ -453,8 +506,9 @@ def _attn_decode(h, p, spec, cfg, lcache, lens, active=None, paged=None):
             slots = jnp.where(active, slots, pool_rows)   # OOB -> dropped
 
         def write(pool, vals):
-            return pool.at[slots].set(vals[:, 0].astype(pool.dtype),
-                                      mode="drop")
+            return pool.at[slots].set(
+                _pad_lanes(vals[:, 0], pool.shape[-1]).astype(pool.dtype),
+                mode="drop")
 
         paged_kw = dict(block_table=bt, page_size=layout.page_size,
                         t_logical=layout.max_len)
@@ -730,7 +784,9 @@ def _attn_verify(h, p, spec, cfg, lcache, lens, active=None, paged=None):
             rows = jnp.where(active[:, None], rows, pool_rows)
 
         def write(pool, vals):
-            return pool.at[rows].set(vals.astype(pool.dtype), mode="drop")
+            return pool.at[rows].set(
+                _pad_lanes(vals, pool.shape[-1]).astype(pool.dtype),
+                mode="drop")
 
         paged_kw = dict(block_table=bt, page_size=layout.page_size,
                         t_logical=layout.max_len)
@@ -933,10 +989,12 @@ def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions, paged=None):
         v_scale = jnp.concatenate([take(lcache["v_scale"]), vs], axis=1)
     else:
         kw, vw = k, v
-    k_all = jnp.concatenate([take(lcache["k"]), kw.astype(lcache["k"].dtype)],
-                            axis=1)
-    v_all = jnp.concatenate([take(lcache["v"]), vw.astype(lcache["v"].dtype)],
-                            axis=1)
+    # lane-padded paged pools view back to the true head dim before the
+    # concat with the chunk's freshly-computed (unpadded) K/V
+    k_all = jnp.concatenate([take(lcache["k"])[..., :hd],
+                             kw.astype(lcache["k"].dtype)], axis=1)
+    v_all = jnp.concatenate([take(lcache["v"])[..., :hd],
+                             vw.astype(lcache["v"].dtype)], axis=1)
     o = attn_lib.prefix_chunk_attention(
         q, k_all, v_all,
         q_positions=chunk_pos,
@@ -949,7 +1007,9 @@ def _attn_chunk(h, p, spec, cfg, lcache, slot, offset, positions, paged=None):
         # rows beyond the buffer (padded remainder near max_len) are dropped;
         # paged pools scatter by physical row, contiguous stripes by slot
         if paged is not None:
-            return full.at[rows].set(vals[0].astype(full.dtype), mode="drop")
+            return full.at[rows].set(
+                _pad_lanes(vals[0], full.shape[-1]).astype(full.dtype),
+                mode="drop")
         return full.at[slot, rows].set(vals[0].astype(full.dtype), mode="drop")
 
     new_cache = {"k": put(lcache["k"], kw), "v": put(lcache["v"], vw)}

@@ -156,6 +156,7 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.quant import PTQConfig, QuantScheme, quantize_tree
 from repro.serve.fault import ServeKilled
+from repro.serve.tier import KVTier, tile_header
 from repro.train.checkpoint import _flatten, _unflatten_into
 
 
@@ -379,6 +380,11 @@ class PageAllocator:
         # refcount-0 cached pages, least-recently-used first (reclaim order)
         self.lru: "collections.OrderedDict[int, None]" = \
             collections.OrderedDict()
+        # spill seam: called with (page, chain_hash) just before a cached
+        # refcount-0 page is dropped from the index — the page is still
+        # resident on device at that point, so the engine can copy its rows
+        # into the host KV tier instead of losing them.  Must not raise.
+        self.spill_hook: Optional[Callable[[int, bytes], None]] = None
 
     def pages_in_use(self) -> int:
         """Pages referenced by at least one slot (cached-but-unreferenced
@@ -395,16 +401,24 @@ class PageAllocator:
         h = self.hash_of.pop(page)
         del self.index[h]
 
+    def _drop_lru_page(self) -> Optional[int]:
+        """Pop the oldest refcount-0 cached page, spilling its content
+        through ``spill_hook`` (while it is still device-resident) before
+        dropping it from the prefix index."""
+        if not self.lru:
+            return None
+        page, _ = self.lru.popitem(last=False)
+        if self.spill_hook is not None:
+            self.spill_hook(page, self.hash_of[page])
+        self._uncache(page)
+        return page
+
     def _take_page(self) -> Optional[int]:
         """Pop a writable page: free list first, then reclaim the oldest
         cached refcount-0 page (dropping it from the prefix index)."""
         if self.free:
             return self.free.pop()
-        if self.lru:
-            page, _ = self.lru.popitem(last=False)
-            self._uncache(page)
-            return page
-        return None
+        return self._drop_lru_page()
 
     def ensure(self, slot: int, rows: int) -> bool:
         """Grow ``slot``'s allocation to cover ``rows`` logical cache rows
@@ -529,8 +543,7 @@ class PageAllocator:
             if h in self.index or p in self.hash_of:
                 continue
             while self.cached_pages() >= self.max_cached and self.lru:
-                old, _ = self.lru.popitem(last=False)
-                self._uncache(old)
+                old = self._drop_lru_page()
                 self.free.append(old)
             if self.cached_pages() >= self.max_cached:
                 break
@@ -538,6 +551,47 @@ class PageAllocator:
             self.hash_of[p] = h
             n += 1
         return n
+
+    def adopt_cached(self, h: bytes) -> Optional[int]:
+        """Install a page REHYDRATED from the KV tier into the prefix
+        index: take a physical page (same cache-budget eviction as
+        ``register``), bind it to chain hash ``h``, and PIN it (refcount 1,
+        owned by no slot) so interleaved allocation cannot reclaim it before
+        the caller scatters the tier tile into it on device, maps it with
+        ``map_shared``, and drops the pin with ``unpin``.  Returns the page,
+        or None (hash already resident / no budget / no page)."""
+        if not self.prefix_cache or h in self.index:
+            return None
+        while self.cached_pages() >= self.max_cached and self.lru:
+            old = self._drop_lru_page()
+            self.free.append(old)
+        if self.cached_pages() >= self.max_cached:
+            return None
+        page = self._take_page()
+        if page is None:
+            return None
+        self.ref[page] = 1
+        self.index[h] = page
+        self.hash_of[page] = h
+        return page
+
+    def unpin(self, page: int) -> None:
+        """Drop an ``adopt_cached`` pin: the page parks in the LRU if no
+        slot mapped it, or stays referenced by its mappers."""
+        self._unref(page)
+
+    def drop_cached(self, n: Optional[int] = None) -> int:
+        """Drop up to ``n`` (default: all) LRU-parked cached pages to the
+        free list, spilling each through ``spill_hook`` first — the
+        degradation ladder's spill rung.  Cheaper than letting allocation
+        reclaim them one at a time under pressure, and it opens free-list
+        headroom before the admit rung has to throttle concurrency."""
+        dropped = 0
+        while self.lru and (n is None or dropped < n):
+            page = self._drop_lru_page()
+            self.free.append(page)
+            dropped += 1
+        return dropped
 
 
 class _CompiledLRU:
@@ -590,9 +644,11 @@ class ServeEngine:
                  deadline_ms: Optional[float] = None,
                  ttft_deadline_ms: Optional[float] = None,
                  ladder_spec_util: float = 1.0,
+                 ladder_spill_util: float = 1.0,
                  ladder_admit_util: float = 1.0,
                  ladder_prefix_util: float = 1.0,
                  ladder_reject_util: float = 1.0,
+                 host_tier_frac: float = 1.0,
                  state_dir: Optional[str] = None,
                  faults: Any = None):
         self.cfg = cfg
@@ -671,11 +727,22 @@ class ServeEngine:
         self.deadline_ms = deadline_ms
         self.ttft_deadline_ms = ttft_deadline_ms
         self.ladder_spec_util = float(ladder_spec_util)
+        self.ladder_spill_util = float(ladder_spill_util)
         self.ladder_admit_util = float(ladder_admit_util)
         self.ladder_prefix_util = float(ladder_prefix_util)
         self.ladder_reject_util = float(ladder_reject_util)
         self.state_dir = state_dir
         self.faults = faults
+        # KV tier (serve/tier.py): bounded host memory + optional durable
+        # disk under <state_dir>/kv_tier.  Preemption swaps committed pages
+        # out instead of losing them (requeue swaps them back in, skipping
+        # re-prefill); dropped refcount-0 prefix pages spill through the
+        # allocator's spill_hook.  ``host_tier_frac`` sizes the host budget
+        # as a fraction of the device pool; 0 disables the tier entirely.
+        self.host_tier_frac = max(0.0, float(host_tier_frac))
+        self.kv_tier = (self.prefix_cache and self.host_tier_frac > 0.0)
+        self._tier = None            # created lazily by serve_queue
+        self._tile_template = None   # eval_shape page-tile tree (geometry)
         # PRNG streams + folded-token counts of requests restored by
         # load_state: merged into the next serve_queue call's preemption
         # bookkeeping so restored requests resume their saved streams
@@ -685,6 +752,13 @@ class ServeEngine:
         self._copy_page_fn = jax.jit(
             lambda blocks, src, dst: tfm.copy_cache_page(blocks, src, dst,
                                                          ps))
+        # page <-> host-tier transfers: one traced-page-index gather/scatter
+        # each, so every swap-out/rehydrate reuses a single compilation
+        self._gather_page_fn = jax.jit(
+            lambda blocks, page: tfm.gather_cache_page(blocks, page, ps))
+        self._scatter_page_fn = jax.jit(
+            lambda blocks, tile, page: tfm.scatter_cache_page(blocks, tile,
+                                                              page, ps))
         # speculative decode: rollback must be a pure length decrement,
         # which only linear (global-attention) cache layouts give us — a
         # ring-buffer row write destroys the window's oldest live position
@@ -771,7 +845,21 @@ class ServeEngine:
                       "quarantined_requests": 0, "table_quarantines": 0,
                       "ladder_spec_shrinks": 0, "ladder_admit_throttles": 0,
                       "ladder_prefix_stops": 0, "backpressure_rejections": 0,
-                      "state_saves": 0, "state_restores": 0}
+                      "state_saves": 0, "state_restores": 0,
+                      # KV tier: preemption swap-outs (pages copied to host
+                      # before a slot's row is released), LRU-drop spills,
+                      # ladder spill-rung firings, pages rehydrated from the
+                      # tier at admission (tier_swap_ins counts the subset
+                      # for previously-preempted requests), host-LRU
+                      # evictions, durable-store traffic, quarantined
+                      # entries (integrity failures NEVER served), absorbed
+                      # I/O errors, and the host-entry gauge
+                      "tier_swap_outs": 0, "tier_spills": 0,
+                      "ladder_spills": 0, "tier_rehydrates": 0,
+                      "tier_swap_ins": 0, "tier_evictions": 0,
+                      "tier_disk_writes": 0, "tier_disk_loads": 0,
+                      "tier_integrity_failures": 0, "tier_io_errors": 0,
+                      "tier_host_pages": 0}
         self._admit_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._chunk_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._draft_admit_fns = _CompiledLRU(admit_cache_size, self.stats)
@@ -802,8 +890,15 @@ class ServeEngine:
                 alloc.free.append(p)
             alloc.lru.clear()
         self._pc_state = None
+        if self._tier is not None:
+            # the host tier is in-memory prefix state too — a reset that
+            # kept it would "cold start" straight into tier rehydrates.
+            # The durable store survives (clearing disk is an operator
+            # action, not a cache reset).
+            self._tier.reset_host()
         self.stats["cached_pages"] = 0
         self.stats["pages_in_use"] = 0
+        self.stats["tier_host_pages"] = 0
 
     # -- low-level steps (also what the dry-run lowers) ----------------------
 
@@ -911,8 +1006,12 @@ class ServeEngine:
                         jnp.minimum(true_len, layout.max_len), pool_rows)[0]
 
                     def write(big, new):
+                        # pools are lane-padded at allocation; pad only the
+                        # freshly-prefilled rows up to the pool width
                         return big.at[:, rows].set(
-                            new[:, 0].astype(big.dtype), mode="drop")
+                            tfm._pad_lanes(new[:, 0],
+                                           big.shape[-1]).astype(big.dtype),
+                            mode="drop")
                 else:
                     def write(big, new):
                         # leaves are (count, B, rows, ...) vs
@@ -1411,6 +1510,33 @@ class ServeEngine:
                                   prefix_cache=self.prefix_cache,
                                   cache_frac=self.prefix_cache_frac,
                                   min_shared_pages=self.min_shared_pages)
+        # KV tier: host (+ optional disk) store behind the device pool.
+        # Created once and carried across serve_queue calls like _pc_state;
+        # binding to the durable store happens on the first call that has a
+        # state_dir (so an engine constructed without one still persists
+        # when serve_queue is pointed at a directory later).
+        tier = None
+        if alloc is not None and self.kv_tier:
+            if self._tile_template is None:
+                # geometry template for one page tile across every layer —
+                # eval_shape structs carry shape/dtype without allocating,
+                # which is all the codec and the tier header need
+                ps = self.page_size
+                self._tile_template = jax.eval_shape(
+                    lambda blks: tfm.gather_cache_page(blks, jnp.int32(0),
+                                                       ps),
+                    cache["blocks"])
+            if self._tier is None:
+                self._tier = KVTier(
+                    page_size=self.page_size,
+                    host_pages=max(1, int(self.host_tier_frac
+                                          * self.kv_pages)),
+                    expect_header=tile_header(self._tile_template,
+                                              self.page_size),
+                    stats=self.stats)
+            tier = self._tier
+            if state_dir:
+                tier.attach_dir(state_dir)
         slot_rows = np.zeros((B,), np.int64)
         order = [0] * B
         admit_seq = 0
@@ -1431,6 +1557,94 @@ class ServeEngine:
             self.stats["peak_pages_in_use"] = max(
                 self.stats["peak_pages_in_use"], used)
             self.stats["cached_pages"] = alloc.cached_pages()
+            if tier is not None:
+                self.stats["tier_host_pages"] = tier.host_entries()
+
+        def tier_put(h: bytes, page: int) -> bool:
+            """Spill one device page into the tier: gather its rows (one
+            jitted dynamic-slice), flatten with the checkpoint codec, and
+            store under the chain hash.  Tier errors degrade to a lost
+            spill (recomputed later), never an exception."""
+            if tier is None or tier.has(h):
+                return False
+            tile = self._gather_page_fn(cache["blocks"], jnp.int32(page))
+            return tier.put(h, _flatten(tile))
+
+        def spill_page(page: int, h: bytes) -> None:
+            # allocator spill seam: a refcount-0 cached page is about to be
+            # dropped from the prefix index — copy it to the host tier
+            # first so its prefix stays matchable
+            if tier_put(h, page):
+                self.stats["tier_spills"] += 1
+
+        if alloc is not None:
+            alloc.spill_hook = spill_page if tier is not None else None
+
+        def swap_out(b: int) -> None:
+            """Copy slot ``b``'s fully-committed pages into the tier before
+            preemption releases its table row, keyed by the FOLDED prompt's
+            chain hashes (the fold has already run, so the hashes commit to
+            prompt+emitted tokens) — requeue admission then swaps them back
+            in instead of re-prefilling them."""
+            req = slots[b]
+            if tier is None or req is None or admitting[b]:
+                return
+            full = min(int(slot_rows[b]) // self.page_size,
+                       len(alloc.owned[b]))
+            if full <= 0:
+                return
+            hashes = prefix_block_hashes(req.prompt, self.page_size)[:full]
+            n = 0
+            for i, h in enumerate(hashes):
+                if alloc.owned[b][i] in alloc.hash_of:
+                    # registered prefix page: the spill hook covers it if
+                    # the index ever drops it
+                    continue
+                if tier_put(h, alloc.owned[b][i]):
+                    n += 1
+            self.stats["tier_swap_outs"] += n
+
+        def tier_extend(b: int, req: Request) -> List[int]:
+            """Walk the prompt's chain past the device-resident prefix and
+            rehydrate matching pages from the tier (verified tile ->
+            adopted page -> jitted scatter), so the ``match_prefix`` that
+            follows sees the longest possible chain.  Returns the adopted
+            pages — PINNED by ``adopt_cached`` until the caller unpins them
+            after mapping."""
+            hashes = slot_hashes[b]
+            j = 0
+            while j < len(hashes) and hashes[j] in alloc.index:
+                j += 1
+            adopted: List[int] = []
+            while j < len(hashes):
+                flat = tier.get(hashes[j])
+                if flat is None:         # miss / quarantined / I/O error
+                    break
+                page = alloc.adopt_cached(hashes[j])
+                if page is None:         # no budget or no free page
+                    break
+                tile = _unflatten_into(self._tile_template, flat)
+                cache["blocks"] = self._scatter_page_fn(
+                    cache["blocks"], tile, jnp.int32(page))
+                adopted.append(page)
+                j += 1
+            if adopted:
+                self.stats["tier_rehydrates"] += len(adopted)
+                if req.preemptions > 0:
+                    self.stats["tier_swap_ins"] += len(adopted)
+            return adopted
+
+        def flush_cached_to_tier() -> None:
+            """Persist every still-registered cached page to the tier (and
+            through it to the durable store).  Runs at drain/kill when a
+            state_dir is attached: spills and swap-outs already persisted
+            everything DROPPED along the way; this covers pages whose only
+            copy is still on device, so a sibling or restarted engine can
+            rehydrate prefixes this one never had to evict."""
+            if tier is None or tier.dir is None or alloc is None:
+                return
+            for page, h in list(alloc.hash_of.items()):
+                tier_put(h, page)
 
         slots: List[Optional[Request]] = [None] * B
         admitting = [False] * B
@@ -1559,7 +1773,7 @@ class ServeEngine:
             eos[b] = -1 if req.eos_id is None else int(req.eos_id)
             keys[b] = np.asarray(key_arr)
 
-        def preempt(b: int, count_eviction: bool = True):
+        def preempt(b: int, count_eviction: bool = True, swap: bool = True):
             """Evict slot b under pool pressure and REQUEUE it (head of the
             queue): its generated prefix becomes part of the prompt, so
             re-admission prefills prompt+prefix and decoding continues where
@@ -1568,7 +1782,8 @@ class ServeEngine:
             to an uninterrupted run and sampled ones draw the same stream.
             ``count_eviction=False`` reuses the machinery for quarantine
             requeues and kill-checkpoints without skewing the eviction
-            stat."""
+            stat; ``swap=False`` skips the tier swap-out (quarantine: the
+            slot's pages may carry the very corruption being quarantined)."""
             req = slots[b]
             new_toks = (req.tokens or [])[folded.get(req.uid, 0):]
             if new_toks:
@@ -1583,6 +1798,11 @@ class ServeEngine:
                                     else np.array(keys[b], copy=True))
             req.preemptions += 1
             if alloc is not None:
+                if swap:
+                    # swap-to-host: committed pages move to the tier (keyed
+                    # by the folded prompt's chain) BEFORE release frees
+                    # them — requeue admission swaps them back in
+                    swap_out(b)
                 alloc.release(b)
             slots[b] = None
             active[b] = False
@@ -1614,7 +1834,7 @@ class ServeEngine:
                        reason="quarantined")
             else:
                 self.stats["quarantine_requeues"] += 1
-                preempt(b, count_eviction=False)
+                preempt(b, count_eviction=False, swap=False)
 
         def make_room(b: int, rows: int) -> bool:
             """Grow slot b's pages to cover ``rows`` logical rows, evicting
@@ -1683,9 +1903,18 @@ class ServeEngine:
             util = (alloc.pages_in_use() / alloc.num_pages
                     if alloc is not None else 0.0)
             degrade_spec = util > self.ladder_spec_util
+            degrade_spill = util > self.ladder_spill_util
             degrade_admit = util > self.ladder_admit_util
             degrade_prefix = util > self.ladder_prefix_util
             degrade_reject = util > self.ladder_reject_util
+            if degrade_spill and alloc is not None and alloc.lru:
+                # spill rung (between draft-width and admit-throttle): drop
+                # LRU-parked cached pages to the free list — their contents
+                # spill to the host tier via the hook, so the prefixes stay
+                # matchable — opening allocation headroom before the admit
+                # rung has to throttle concurrency
+                alloc.drop_cached()
+                self.stats["ladder_spills"] += 1
             if degrade_admit:
                 self.stats["ladder_admit_throttles"] += 1
             if degrade_prefix:
@@ -1769,9 +1998,21 @@ class ServeEngine:
                                 and not degrade_prefix:
                             slot_hashes[b] = prefix_block_hashes(
                                 req.prompt, self.page_size)
+                            # KV tier: extend the device-resident chain
+                            # with verified tiles swapped/spilled to the
+                            # host (or durable) tier, so a preempted
+                            # request's requeue — or a sibling engine's
+                            # shared prefix — resumes without re-prefill
+                            adopted = (tier_extend(b, req)
+                                       if tier is not None else [])
                             pages = alloc.match_prefix(slot_hashes[b])
                             if pages:
                                 alloc.map_shared(b, pages)
+                            # mapped (or LRU-parked for a later admission)
+                            # either way — drop the adoption pins
+                            for page in adopted:
+                                alloc.unpin(page)
+                            if pages:
                                 n_shared = len(pages)
                                 off = len(pages) * self.page_size
                                 if off == plen:
@@ -2149,6 +2390,11 @@ class ServeEngine:
                 for b in reversed(range(B)):
                     if slots[b] is not None:
                         preempt(b, count_eviction=False)
+                # the preempts above swapped committed pages to the tier
+                # (write-through to disk); this persists the still-cached
+                # rest, so a SIBLING engine sharing the state_dir can
+                # rehydrate warm prefixes without running load_state
+                flush_cached_to_tier()
                 self._write_state(state_dir, cache, alloc, pending,
                                   done_reqs, resume_keys, folded)
             raise
@@ -2175,6 +2421,13 @@ class ServeEngine:
         if alloc is not None:
             self.stats["pages_in_use"] = alloc.pages_in_use()
             self.stats["cached_pages"] = alloc.cached_pages()
+        # durable prefix store: persist the registered cached pages on the
+        # way out (spills/swap-outs already wrote everything that was
+        # DROPPED mid-run) so a restarted or sibling engine pointed at the
+        # same state_dir rehydrates this run's warm prefixes
+        flush_cached_to_tier()
+        if tier is not None:
+            self.stats["tier_host_pages"] = tier.host_entries()
         self._final_cache = cache          # introspection (rollback tests)
         if self.prefix_cache and alloc is not None:
             # carry the pools + allocator/index over: the next serve_queue

@@ -30,6 +30,18 @@ would:
                 Exercises ``save_state``/``load_state``: the engine
                 checkpoints on the way down (when a ``state_dir`` is set) and
                 a fresh process resumes the batch f32 bit-exact.
+``corrupt_spill_at``  flipped bytes in spilled KV-tier entries (host copy AND
+                durable file).  Exercises the tier's per-read digest check:
+                the entry is quarantined (counted, never served) and the
+                affected admission falls back to plain prefill, token-exact.
+``tear_manifest_at``  truncates the durable tier's ``tier_index.json``
+                mid-write (a torn commit).  Exercises manifest validation:
+                the store reads back empty, counted as ONE integrity
+                failure, and serving continues on recompute.
+``tier_fail_at``  the next N tier operations raise internally (slow/failed
+                host or disk I/O).  Exercises the tier's absorb-and-degrade
+                guards: puts lose the spill, gets miss — recompute covers
+                both, the engine never crashes.
 
 All events are keyed by MACRO-STEP index (the engine's unit of host-visible
 progress): fault ``i`` fires immediately before the ``i``-th decode
@@ -63,7 +75,10 @@ class FaultPlan:
     steals ``n`` pages before macro ``i``; ``restore_at`` returns them.
     ``slow_at[i] = s`` sleeps ``s`` seconds.  ``cancel_at[i] = uid`` flips
     that request's ``cancelled`` flag.  ``kill_at = i`` raises
-    ``ServeKilled`` before macro ``i`` (once)."""
+    ``ServeKilled`` before macro ``i`` (once).  ``corrupt_spill_at[i] = n``
+    flips a byte in ``n`` spilled KV-tier entries; ``tear_manifest_at = i``
+    truncates the durable tier manifest; ``tier_fail_at[i] = n`` makes the
+    next ``n`` tier operations fail with an internal I/O error."""
     nan_at: Dict[int, Optional[int]] = dataclasses.field(default_factory=dict)
     corrupt_at: Dict[int, Optional[int]] = \
         dataclasses.field(default_factory=dict)
@@ -72,6 +87,10 @@ class FaultPlan:
     slow_at: Dict[int, float] = dataclasses.field(default_factory=dict)
     cancel_at: Dict[int, int] = dataclasses.field(default_factory=dict)
     kill_at: Optional[int] = None
+    corrupt_spill_at: Dict[int, int] = \
+        dataclasses.field(default_factory=dict)
+    tear_manifest_at: Optional[int] = None
+    tier_fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class FaultInjector:
@@ -133,6 +152,18 @@ class FaultInjector:
                 alloc.table[tgt, 0] = \
                     (int(alloc.table[tgt, 0]) + 1) % alloc.num_pages
                 self.log.append((macro_idx, "corrupt", tgt))
+        tier = getattr(engine, "_tier", None)
+        n = p.corrupt_spill_at.get(macro_idx)
+        if n and tier is not None:
+            done = tier.corrupt_entries(int(n))
+            self.log.append((macro_idx, "corrupt_spill", done))
+        if p.tear_manifest_at == macro_idx and tier is not None:
+            tier.tear_manifest()
+            self.log.append((macro_idx, "tear_manifest", None))
+        n = p.tier_fail_at.get(macro_idx)
+        if n and tier is not None:
+            tier.fail_ops += int(n)
+            self.log.append((macro_idx, "tier_fail", int(n)))
         if p.kill_at == macro_idx and not self.killed:
             self.killed = True
             self.log.append((macro_idx, "kill", None))
@@ -162,7 +193,8 @@ def parse_chaos(spec: str) -> FaultInjector:
     comma-separated ``kind@macro[:arg]`` events —
 
     ``nan@M[:UID]``, ``corrupt@M[:SLOT]``, ``exhaust@M:N``, ``restore@M``,
-    ``slow@M:SECONDS``, ``cancel@M:UID``, ``kill@M``
+    ``slow@M:SECONDS``, ``cancel@M:UID``, ``kill@M``,
+    ``corrupt_spill@M[:N]``, ``tear_manifest@M``, ``tier_fail@M[:N]``
 
     e.g. ``--chaos "exhaust@1:4,nan@2:7,kill@5"`` steals 4 pages before
     macro 1, poisons request 7's logits in macro 2, and kills the process
@@ -189,7 +221,14 @@ def parse_chaos(spec: str) -> FaultInjector:
             plan.cancel_at[m] = int(arg)
         elif kind == "kill":
             plan.kill_at = m
+        elif kind == "corrupt_spill":
+            plan.corrupt_spill_at[m] = int(arg) if arg else 1
+        elif kind == "tear_manifest":
+            plan.tear_manifest_at = m
+        elif kind == "tier_fail":
+            plan.tier_fail_at[m] = int(arg) if arg else 1
         else:
             raise ValueError(f"unknown chaos event {part!r} (want "
-                             "nan|corrupt|exhaust|restore|slow|cancel|kill)")
+                             "nan|corrupt|exhaust|restore|slow|cancel|kill"
+                             "|corrupt_spill|tear_manifest|tier_fail)")
     return FaultInjector(plan)

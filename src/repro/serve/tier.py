@@ -1,0 +1,419 @@
+"""Two-level KV tier behind the paged pool: bounded host memory + durable disk.
+
+The device page pool (``repro.serve.engine.PageAllocator``) is tier 0.  This
+module adds:
+
+* **tier 1 — host memory**: spilled page tiles (one physical page's K/V rows
+  across every layer, flattened with the checkpoint codec so bf16 survives
+  as uint16 views) in an LRU bounded by ``host_pages`` entries.  Preemption
+  swap-outs and refcount-0 prefix-page drops land here instead of being
+  recomputed from tokens.
+* **tier 2 — disk** (optional, under ``<state_dir>/kv_tier/``): every hosted
+  tile is written through as ``page_<hash>.npz`` plus a ``tier_index.json``
+  manifest committed last (tmp + ``os.replace``, the PR-6 atomic pattern), so
+  a restarted or sibling engine rehydrates warm prefixes it never computed.
+
+Integrity: each tile is keyed by its prefix-chain hash (the PR-5
+``prefix_block_hashes`` chain, which commits to every token that produced the
+page) and carries a format-version/geometry header plus a blake2b digest over
+``chain_hash || header || sorted array bytes``.  ``get`` re-verifies the
+digest on EVERY read — host hits included — and validates the header against
+the engine's expected geometry, so bitrot, torn writes, truncation, and
+version mismatches are each detected, the entry quarantined (dropped and
+counted under ``tier_integrity_failures``, never served), and the caller
+falls back to plain prefill.  I/O failures (injected via ``fail_ops`` or
+real) are absorbed the same way: a failed put loses the spill, a failed get
+is a miss — the engine recomputes, it never crashes.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.train.checkpoint import _BF16, _key_str
+
+TIER_FORMAT_VERSION = 1
+
+
+def tile_header(tile, page_size: int) -> Dict:
+    """Format-version/geometry header for a page tile (or an ``eval_shape``
+    template of one): per-array shapes and STORAGE dtypes, named exactly as
+    the checkpoint codec flattens them (bf16 leaves become ``::bf16``-tagged
+    uint16), so a header computed from a template matches one computed from
+    real arrays bit for bit."""
+    import jax
+
+    arrays = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tile)[0]:
+        name = "/".join(_key_str(k) for k in path)
+        if np.dtype(leaf.dtype) == _BF16:
+            name += "::bf16"
+            dtype = "uint16"
+        else:
+            dtype = str(np.dtype(leaf.dtype))
+        arrays[name] = [list(leaf.shape), dtype]
+    return {"version": TIER_FORMAT_VERSION, "page_size": int(page_size),
+            "arrays": arrays}
+
+
+def flat_header(flat: Dict[str, np.ndarray], page_size: int) -> Dict:
+    """``tile_header`` over an already-flattened tile."""
+    arrays = {name: [list(a.shape), str(a.dtype)]
+              for name, a in flat.items()}
+    return {"version": TIER_FORMAT_VERSION, "page_size": int(page_size),
+            "arrays": arrays}
+
+
+def tile_digest(chain_hash: bytes, header: Dict,
+                flat: Dict[str, np.ndarray]) -> bytes:
+    """blake2b-128 over ``chain_hash || header || sorted array bytes``.
+
+    Binding the CHAIN hash in makes the digest position-aware: a valid tile
+    filed under the wrong key fails verification just like a flipped byte —
+    an entry can never serve a prefix it was not computed for."""
+    d = hashlib.blake2b(digest_size=16)
+    d.update(chain_hash)
+    d.update(json.dumps(header, sort_keys=True).encode())
+    for name in sorted(flat):
+        d.update(name.encode())
+        d.update(np.ascontiguousarray(flat[name]).tobytes())
+    return d.digest()
+
+
+@dataclasses.dataclass
+class _HostEntry:
+    flat: Dict[str, np.ndarray]
+    header: Dict
+    digest: bytes
+    nbytes: int
+
+
+class KVTier:
+    """Bounded host-memory tier with optional durable disk store.
+
+    ``stats`` is a mutable mapping the tier bumps in place (the engine hands
+    it ``self.stats``); standalone use gets a private dict.  ``fail_ops`` is
+    the fault-injection seam: while positive, every tier operation raises an
+    internal ``IOError`` which the tier absorbs (put -> spill lost, get ->
+    miss) and counts under ``tier_io_errors`` — degradation to recompute,
+    never a crash."""
+
+    COUNTERS = ("tier_evictions", "tier_disk_writes", "tier_disk_loads",
+                "tier_integrity_failures", "tier_io_errors")
+
+    def __init__(self, page_size: int, host_pages: int,
+                 directory: Optional[str] = None,
+                 expect_header: Optional[Dict] = None,
+                 stats: Optional[Dict] = None):
+        self.page_size = int(page_size)
+        self.host_pages = max(0, int(host_pages))
+        self.expect_header = expect_header
+        self.stats = stats if stats is not None else {}
+        for key in self.COUNTERS:
+            self.stats.setdefault(key, 0)
+        self.host: "collections.OrderedDict[bytes, _HostEntry]" = \
+            collections.OrderedDict()
+        self.fail_ops = 0
+        self.dir: Optional[str] = None
+        # disk manifest cache: hash hex -> {"file", "digest", "header"};
+        # None = not yet read (lazy, so a sibling sees our writes and we see
+        # a predecessor's)
+        self._disk_index: Optional[Dict[str, Dict]] = None
+        if directory:
+            self.attach_dir(directory)
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self.stats[key] = self.stats.get(key, 0) + n
+
+    def _maybe_fail(self) -> None:
+        if self.fail_ops > 0:
+            self.fail_ops -= 1
+            raise IOError("injected tier I/O failure")
+
+    def attach_dir(self, directory: str) -> None:
+        """Bind (or rebind) the durable store to ``<directory>/kv_tier``."""
+        path = os.path.join(directory, "kv_tier")
+        if path != self.dir:
+            self.dir = path
+            self._disk_index = None
+
+    def _manifest_path(self) -> str:
+        return os.path.join(self.dir, "tier_index.json")
+
+    def _load_disk_index(self) -> Dict[str, Dict]:
+        """Read (and cache) the manifest.  A torn/corrupt manifest counts as
+        ONE integrity failure and yields an empty store — the tier keeps
+        serving, admission falls back to prefill, and the next write-through
+        replaces the manifest wholesale."""
+        if self._disk_index is not None:
+            return self._disk_index
+        self._disk_index = {}
+        if self.dir is None:
+            return self._disk_index
+        path = self._manifest_path()
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    manifest = json.load(f)
+                if manifest.get("version") != TIER_FORMAT_VERSION \
+                        or manifest.get("page_size") != self.page_size:
+                    raise ValueError(
+                        f"tier manifest geometry mismatch: "
+                        f"{manifest.get('version')}/"
+                        f"{manifest.get('page_size')} vs "
+                        f"{TIER_FORMAT_VERSION}/{self.page_size}")
+                self._disk_index = dict(manifest.get("entries", {}))
+            except Exception:
+                # torn write / bitrot / version skew: quarantine the whole
+                # manifest (its entries are unreachable anyway) — never crash
+                self._bump("tier_integrity_failures")
+                self._disk_index = {}
+        return self._disk_index
+
+    def _write_manifest(self) -> None:
+        os.makedirs(self.dir, exist_ok=True)
+        manifest = {"version": TIER_FORMAT_VERSION,
+                    "page_size": self.page_size,
+                    "entries": self._load_disk_index()}
+        path = self._manifest_path()
+        tmp = path + f".tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, path)                      # atomic publish
+
+    # -- inventory ----------------------------------------------------------
+
+    def has(self, chain_hash: bytes) -> bool:
+        """Cheap membership probe (no verification, no promotion)."""
+        if chain_hash in self.host:
+            return True
+        if self.dir is None:
+            return False
+        try:
+            self._maybe_fail()
+            return chain_hash.hex() in self._load_disk_index()
+        except IOError:
+            self._bump("tier_io_errors")
+            return False
+
+    def host_entries(self) -> int:
+        return len(self.host)
+
+    def disk_entries(self) -> int:
+        if self.dir is None:
+            return 0
+        return len(self._load_disk_index())
+
+    # -- spill (put) --------------------------------------------------------
+
+    def put(self, chain_hash: bytes, flat: Dict[str, np.ndarray]) -> bool:
+        """Store one page tile under its chain hash: host LRU insert plus
+        disk write-through when a directory is attached.  Returns False when
+        the spill was lost to an I/O failure (the caller just recomputes
+        later); a duplicate put refreshes recency and is a cheap no-op."""
+        if chain_hash in self.host:
+            self.host.move_to_end(chain_hash)
+            return True
+        try:
+            self._maybe_fail()
+            header = flat_header(flat, self.page_size)
+            digest = tile_digest(chain_hash, header, flat)
+            entry = _HostEntry(
+                flat=dict(flat), header=header, digest=digest,
+                nbytes=int(sum(a.nbytes for a in flat.values())))
+            if self.dir is not None:
+                self._write_through(chain_hash, entry)
+            self.host[chain_hash] = entry
+            while len(self.host) > self.host_pages:
+                self.host.popitem(last=False)      # disk copy (if any) stays
+                self._bump("tier_evictions")
+            return True
+        except IOError:
+            self._bump("tier_io_errors")
+            return False
+
+    def _write_through(self, chain_hash: bytes, entry: _HostEntry) -> None:
+        """npz first, manifest last — a crash between the two leaves a
+        harmless orphan file, never a manifest entry pointing at garbage."""
+        os.makedirs(self.dir, exist_ok=True)
+        hexh = chain_hash.hex()
+        fname = f"page_{hexh}.npz"
+        final = os.path.join(self.dir, fname)
+        tmp = final + f".tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            np.savez(f, **entry.flat)
+        os.replace(tmp, final)
+        index = self._load_disk_index()
+        index[hexh] = {"file": fname, "digest": entry.digest.hex(),
+                       "header": entry.header}
+        self._write_manifest()
+        self._bump("tier_disk_writes")
+
+    # -- rehydrate (get) ----------------------------------------------------
+
+    def get(self, chain_hash: bytes) -> Optional[Dict[str, np.ndarray]]:
+        """Fetch a verified tile, or None (miss / integrity failure / I/O
+        failure — the caller falls back to plain prefill in every case).
+
+        Host hits re-verify the digest (a corrupt resident entry is dropped
+        from host AND disk, so it can never be served again); disk hits
+        additionally validate the geometry header before touching bytes and
+        promote to host on success."""
+        try:
+            self._maybe_fail()
+        except IOError:
+            self._bump("tier_io_errors")
+            return None
+        entry = self.host.get(chain_hash)
+        if entry is not None:
+            if self._verify(chain_hash, entry.header, entry.digest,
+                            entry.flat):
+                self.host.move_to_end(chain_hash)
+                return entry.flat
+            self._quarantine(chain_hash)
+            return None
+        return self._disk_get(chain_hash)
+
+    def _disk_get(self, chain_hash: bytes) -> Optional[Dict[str, np.ndarray]]:
+        if self.dir is None:
+            return None
+        try:
+            self._maybe_fail()
+            rec = self._load_disk_index().get(chain_hash.hex())
+            if rec is None:
+                return None
+            header = rec.get("header", {})
+            if not self._header_ok(header):
+                self._quarantine(chain_hash)
+                return None
+            path = os.path.join(self.dir, rec["file"])
+            # truncation/torn zip raises here; a flipped byte either fails
+            # the zip CRC or the digest below — every road leads to
+            # quarantine, never to serving the bytes
+            with np.load(path, allow_pickle=False) as data:
+                flat = {k: data[k] for k in data.files}
+            digest = bytes.fromhex(rec["digest"])
+            if not self._verify(chain_hash, header, digest, flat):
+                self._quarantine(chain_hash)
+                return None
+            entry = _HostEntry(
+                flat=flat, header=header, digest=digest,
+                nbytes=int(sum(a.nbytes for a in flat.values())))
+            self.host[chain_hash] = entry
+            while len(self.host) > self.host_pages:
+                self.host.popitem(last=False)
+                self._bump("tier_evictions")
+            self._bump("tier_disk_loads")
+            return flat
+        except IOError:
+            self._bump("tier_io_errors")
+            return None
+        except Exception:
+            # unreadable npz: torn write, truncation, bitrot in the zip
+            # structure — same quarantine as a digest mismatch
+            self._quarantine(chain_hash)
+            return None
+
+    def _header_ok(self, header: Dict) -> bool:
+        if header.get("version") != TIER_FORMAT_VERSION:
+            return False
+        if header.get("page_size") != self.page_size:
+            return False
+        if self.expect_header is not None \
+                and header.get("arrays") != self.expect_header.get("arrays"):
+            return False
+        return True
+
+    def _verify(self, chain_hash: bytes, header: Dict, digest: bytes,
+                flat: Dict[str, np.ndarray]) -> bool:
+        if not self._header_ok(header):
+            return False
+        return tile_digest(chain_hash, header, flat) == digest
+
+    def _quarantine(self, chain_hash: bytes) -> None:
+        """Drop a failed entry everywhere it exists and count it.  The
+        content is recomputable from tokens, so dropping is always safe —
+        serving it never is."""
+        self._bump("tier_integrity_failures")
+        self.host.pop(chain_hash, None)
+        if self.dir is None:
+            return
+        try:
+            index = self._load_disk_index()
+            rec = index.pop(chain_hash.hex(), None)
+            if rec is not None:
+                try:
+                    os.remove(os.path.join(self.dir, rec["file"]))
+                except OSError:
+                    pass
+                self._write_manifest()
+        except Exception:
+            pass
+
+    # -- maintenance & fault seams ------------------------------------------
+
+    def reset_host(self) -> None:
+        """Forget the in-memory tier (mirrors ``reset_prefix_cache``).  The
+        durable store is left intact — deleting it is an operator action,
+        not a cache reset."""
+        self.host.clear()
+        self._disk_index = None
+
+    def corrupt_entries(self, n: int = 1) -> int:
+        """Fault injection: flip one byte in up to ``n`` entries — in the
+        host copy AND its disk file, so the corruption survives promotion
+        paths.  Returns how many entries were corrupted."""
+        done = 0
+        for h in list(self.host)[:n]:
+            entry = self.host[h]
+            name = sorted(entry.flat)[0]
+            arr = np.array(entry.flat[name], copy=True)
+            view = arr.view(np.uint8).reshape(-1)
+            view[0] ^= 0xFF
+            entry.flat[name] = arr
+            self._corrupt_disk_file(h)
+            done += 1
+        if done < n and self.dir is not None:
+            for hexh in list(self._load_disk_index())[: n - done]:
+                if bytes.fromhex(hexh) in self.host:
+                    continue
+                self._corrupt_disk_file(bytes.fromhex(hexh))
+                done += 1
+        return done
+
+    def _corrupt_disk_file(self, chain_hash: bytes) -> None:
+        if self.dir is None:
+            return
+        rec = self._load_disk_index().get(chain_hash.hex())
+        if rec is None:
+            return
+        path = os.path.join(self.dir, rec["file"])
+        try:
+            with open(path, "r+b") as f:
+                f.seek(-1, os.SEEK_END)
+                byte = f.read(1)
+                f.seek(-1, os.SEEK_END)
+                f.write(bytes([byte[0] ^ 0xFF]))
+        except OSError:
+            pass
+
+    def tear_manifest(self) -> None:
+        """Fault injection: truncate the manifest mid-write (a torn commit)
+        and drop the cached index so the next access re-reads — and
+        detects — the tear."""
+        if self.dir is None:
+            return
+        path = self._manifest_path()
+        if os.path.exists(path):
+            size = os.path.getsize(path)
+            with open(path, "r+b") as f:
+                f.truncate(max(1, size // 2))
+        self._disk_index = None

@@ -54,7 +54,9 @@ def _key_str(k):
 
 
 def _unflatten_into(template, flat: Dict[str, np.ndarray]):
-    """Rebuild ``template``'s structure with arrays from ``flat``."""
+    """Rebuild ``template``'s structure with arrays from ``flat``.
+    ``template`` leaves only need ``.shape`` — ``jax.eval_shape`` structs
+    work, so callers can build templates without allocating."""
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in paths:
@@ -70,6 +72,14 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
                              f"ckpt {arr.shape} vs expected {leaf.shape}")
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# Public codec aliases: the serving KV tier (``repro/serve/tier.py``) and the
+# engine's kill-checkpoint reuse the checkpoint array codec (bf16 stored as
+# uint16 views under a ``::bf16`` name suffix, npz-compatible) for spilled
+# page tiles, so tier files and checkpoints share one on-disk dialect.
+flatten_tree = _flatten
+unflatten_tree = _unflatten_into
 
 
 class CheckpointManager:

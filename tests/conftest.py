@@ -6,3 +6,16 @@ import sys
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property-based tests degrade to fixed-seed replays when hypothesis is
+# missing (fine for a bare dev box).  CI sets REPRO_REQUIRE_HYPOTHESIS=1 so
+# a broken install there fails loudly instead of silently shrinking the
+# randomized coverage to the fallback seeds.
+if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+    try:
+        import hypothesis  # noqa: F401
+    except ImportError as e:                           # pragma: no cover
+        raise RuntimeError(
+            "REPRO_REQUIRE_HYPOTHESIS is set but hypothesis is not "
+            "importable — the property-based tests would silently fall "
+            "back to fixed seeds") from e

@@ -16,14 +16,25 @@ def test_resnet_qat_trial():
 
 
 def test_resnet_qat_high_lr_degrades_or_diverges():
-    good, _ = train_resnet_qat(
+    """A 10x learning rate + 0.99 momentum must hurt w2/a2 QAT.
+
+    Degradation is asserted on TRAINING LOSS, not accuracy: at TINY_SCALE
+    with 2-bit weights and activations neither run learns past chance
+    (~0.1 for 10 classes), so the two accuracies are chance-level samples
+    of a tiny eval split — the earlier accuracy-based assertion compared
+    noise against noise and failed whenever the bad run's coin flips
+    landed a few samples higher (observed: good 0.094 vs bad 0.156).  The
+    destabilized optimizer shows up reliably in the loss curve instead
+    (mean ~2.68 vs ~2.42 over 4 epochs)."""
+    good, good_losses = train_resnet_qat(
         {"learning_rate": 0.02, "batch_size": 32, "weight_decay": 5e-4,
          "momentum": 0.9, "num_epochs": 4}, wbits=2, abits=2, scale=TINY_SCALE)
-    bad, _ = train_resnet_qat(
+    bad, bad_losses = train_resnet_qat(
         {"learning_rate": 0.2, "batch_size": 32, "weight_decay": 5e-4,
          "momentum": 0.99, "num_epochs": 4}, wbits=2, abits=2, scale=TINY_SCALE)
-    assert (not np.isfinite(bad["accuracy"])) or \
-        bad["accuracy"] <= good["accuracy"] + 0.05
+    assert (not np.isfinite(bad["accuracy"])) \
+        or not all(np.isfinite(l) for l in bad_losses) \
+        or np.mean(bad_losses) >= np.mean(good_losses) + 0.1
 
 
 @pytest.mark.parametrize("scheme", [QuantScheme.NF4, QuantScheme.INT8])

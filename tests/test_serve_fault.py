@@ -377,7 +377,8 @@ def test_reset_prefix_cache_resets_allocator_bookkeeping():
 
 def test_parse_chaos_roundtrip_and_errors():
     inj = parse_chaos("exhaust@1:4, nan@2:7, corrupt@3, slow@4:0.5, "
-                      "cancel@5:9, restore@6, kill@8")
+                      "cancel@5:9, restore@6, kill@8, corrupt_spill@9:2, "
+                      "tear_manifest@10, tier_fail@11:3, corrupt_spill@12")
     p = inj.plan
     assert p.exhaust_at == {1: 4}
     assert p.nan_at == {2: 7}
@@ -385,6 +386,9 @@ def test_parse_chaos_roundtrip_and_errors():
     assert p.slow_at == {4: 0.5}
     assert p.cancel_at == {5: 9}
     assert p.restore_at == 6 and p.kill_at == 8
+    assert p.corrupt_spill_at == {9: 2, 12: 1}
+    assert p.tear_manifest_at == 10
+    assert p.tier_fail_at == {11: 3}
     with pytest.raises(ValueError, match="unknown chaos event"):
         parse_chaos("frobnicate@1")
 
@@ -392,8 +396,11 @@ def test_parse_chaos_roundtrip_and_errors():
 def test_serve_space_exposes_fault_knobs():
     from repro.core import serve_space
     sp = serve_space()
-    assert {"deadline_ms", "ladder_spec_util", "ladder_admit_util",
-            "ladder_prefix_util", "ladder_reject_util"} <= set(sp.names)
+    assert {"deadline_ms", "ladder_spec_util", "ladder_spill_util",
+            "ladder_admit_util", "ladder_prefix_util", "ladder_reject_util",
+            "host_tier_frac"} <= set(sp.names)
     d = sp.defaults()
-    assert d["ladder_spec_util"] <= d["ladder_admit_util"] \
-        <= d["ladder_prefix_util"] <= d["ladder_reject_util"]
+    assert d["ladder_spec_util"] <= d["ladder_spill_util"] \
+        <= d["ladder_admit_util"] <= d["ladder_prefix_util"] \
+        <= d["ladder_reject_util"]
+    assert d["host_tier_frac"] > 0                    # tier on by default
