@@ -42,6 +42,12 @@ tokens per request):
   no crash, every faulted request carries a non-empty ``finish_reason``,
   unfaulted co-scheduled requests stay token-exact, and kill+restore
   completes the batch.
+* ``queue/trace_guard`` — hot-path hygiene (ISSUE 9): the queue runs twice
+  under ``REPRO_TRACE_GUARD=1`` on one engine.  The cold run pays the jaxpr
+  traces / XLA compiles of warmup; the second, identical run must add ZERO
+  of either (any nonzero count is a shape/dtype/static-flag leak that
+  retraces the hot path — the bug class ``python -m repro.analysis`` flags
+  statically).
 * ``queue/step_flatness`` — per-decode-step wall time across the run; the
   batcher's step time must NOT grow with generated length.
 * ``queue/unroll_gap`` — scanned vs python-unrolled decode-step latency
@@ -66,7 +72,8 @@ Everything is also written machine-readably to ``benchmarks/BENCH_serve.json``
 
 ``--ci`` runs a tiny configuration and exits non-zero if host syncs per
 token exceed 1/K, the chunked-admission TTFT bound fails, speculative
-greedy parity breaks, or the accepted-token counter stays zero — the CI
+greedy parity breaks, the accepted-token counter stays zero, or the
+warmed-up trace-guard run adds any jaxpr trace / XLA compile — the CI
 smoke for the scheduler hot path.
 """
 from __future__ import annotations
@@ -117,6 +124,55 @@ def _warmup(engine: ServeEngine, base_len: int = PROMPT_LEN) -> None:
         Request(uid=9_001, prompt=np.arange(base_len, dtype=np.int32)
                 % POCKET.vocab_size, max_new_tokens=2),
     ])
+
+
+def _trace_guard_section(bench: Dict, rows: List[Row], ci: bool,
+                         params, batch: int, new_tokens: int) -> None:
+    """Hot-path hygiene (ISSUE 9): run a queue under ``REPRO_TRACE_GUARD=1``
+    twice.  The first (cold) run pays the jaxpr traces and XLA compiles of
+    warmup; the second, identical run on the warmed engine must add ZERO of
+    either — any nonzero count is a shape/dtype/static-flag leak that
+    retraces the hot path, exactly the bug class ``repro.analysis``'s
+    recompile checker flags statically.  The cold counts are recorded too so
+    the reduction is measurable in BENCH_serve.json.
+    """
+    prev = os.environ.get("REPRO_TRACE_GUARD")
+    os.environ["REPRO_TRACE_GUARD"] = "1"
+    try:
+        # earlier sections already populated the process-wide shared jit
+        # cache with this geometry; drop it so the cold run pays real traces
+        # (live engines keep their own references, so this is safe)
+        from repro.serve.engine import _shared_jit_cache
+        _shared_jit_cache.clear()
+        eng = ServeEngine(POCKET, params, scheme="bf16", max_batch=batch,
+                          max_len=PROMPT_LEN + new_tokens + 8, macro_steps=4)
+        n = 4 if ci else 8
+        eng.serve_queue(_requests(n, new_tokens))        # cold: traces+compiles
+        cold_traces = int(eng.stats["trace_events"])
+        cold_compiles = int(eng.stats["jit_cache_misses"])
+        eng.stats["trace_events"] = 0
+        eng.stats["jit_cache_misses"] = 0
+        eng.serve_queue(_requests(n, new_tokens))        # warm: must add zero
+        warm_traces = int(eng.stats["trace_events"])
+        warm_compiles = int(eng.stats["jit_cache_misses"])
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_TRACE_GUARD", None)
+        else:
+            os.environ["REPRO_TRACE_GUARD"] = prev
+    bench["trace_guard"] = {
+        "cold_trace_events": cold_traces,
+        "cold_jit_cache_misses": cold_compiles,
+        "post_warmup_trace_events": warm_traces,
+        "post_warmup_jit_cache_misses": warm_compiles,
+        "zero_recompile_ok": warm_traces == 0 and warm_compiles == 0,
+    }
+    rows.append(Row(
+        name="serve_queue/trace_guard",
+        us_per_call=0.0,
+        derived=f"cold {cold_traces} traces/{cold_compiles} compiles; "
+                f"post-warmup {warm_traces}/{warm_compiles} "
+                f"(target 0/0)"))
 
 
 def _paged_section(bench: Dict, rows: List[Row], ci: bool,
@@ -1196,6 +1252,9 @@ def run(scale: str = None, ci: bool = False, spec_len: int = 4,
     # -- scanned vs unrolled decode step (DECODE_UNROLL_MAX_LAYERS gap) -----
     _unroll_gap(params, batch, 8 if ci else new_tokens, bench, rows)
 
+    # -- trace guard: a warmed queue must add ZERO traces/compiles ----------
+    _trace_guard_section(bench, rows, ci, params, batch, new_tokens)
+
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "BENCH_serve.json")
     with open(path, "w") as f:
@@ -1312,6 +1371,13 @@ def main() -> None:
                     "swap-path chaos failed: a corrupted spill/store was "
                     "served, went undetected, or the killed engine's "
                     "sibling could not rehydrate (see chaos.runs)")
+        tg = bench["trace_guard"]
+        if not tg["zero_recompile_ok"]:
+            failures.append(
+                f"warmed-up queue is NOT trace-clean: second identical run "
+                f"added {tg['post_warmup_trace_events']} jaxpr traces / "
+                f"{tg['post_warmup_jit_cache_misses']} XLA compiles "
+                f"(must be 0/0)")
         if failures:
             print("CI smoke FAILED:\n  " + "\n  ".join(failures),
                   file=sys.stderr)

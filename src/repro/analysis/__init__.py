@@ -1,3 +1,13 @@
-from repro.analysis import hlo, roofline
+"""Static checkers + runtime trace guard + dry-run analysis tooling.
 
-__all__ = ["hlo", "roofline"]
+``python -m repro.analysis`` runs the four hot-path hygiene checkers
+(host-sync, recompile, kernel-contract, engine-invariant) — see
+README.md in this package.  The checker modules are imported lazily by
+``__main__`` so the AST pass stays importable without jax; this package
+root only re-exports the pieces the rest of the repo uses at runtime:
+``trace_guard`` (the REPRO_TRACE_GUARD counters the serve engine folds
+into its stats) and the older ``hlo``/``roofline`` dry-run walkers.
+"""
+from repro.analysis import hlo, roofline, trace_guard
+
+__all__ = ["hlo", "roofline", "trace_guard"]

@@ -1,0 +1,72 @@
+"""CLI: ``python -m repro.analysis [paths ...]``.
+
+Runs the four hot-path hygiene checkers over the given files/directories
+(default: ``src/`` if present, else the current directory), prints
+findings as ``file:line: [checker] message``, and exits non-zero if any
+survive suppression — the CI ``lint`` job is exactly this invocation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+from repro.analysis import engine_invariants, hostsync, kernelcontract, recompile
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.common import (CHECKERS, Finding, SourceTree,
+                                   apply_suppressions)
+
+_CHECKER_FNS = {
+    "host-sync": hostsync.check,
+    "recompile": recompile.check,
+    "kernel-contract": kernelcontract.check,
+    "engine-invariant": engine_invariants.check,
+}
+
+
+def run(paths: List[str], checkers: List[str]) -> List[Finding]:
+    tree = SourceTree.from_paths(Path(p) for p in paths)
+    findings: List[Finding] = list(tree.errors)
+    graph = CallGraph(tree)
+    for name in checkers:
+        findings.extend(_CHECKER_FNS[name](tree, graph))
+    findings = apply_suppressions(tree, findings)
+    return sorted(findings, key=lambda f: (f.file, f.line, f.checker))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro static checkers: host-sync, recompile, "
+                    "kernel-contract, engine-invariant")
+    ap.add_argument("paths", nargs="*", help="files or directories "
+                    "(default: src/ if present, else .)")
+    ap.add_argument("--checkers", default=",".join(CHECKERS),
+                    help="comma-separated subset of: " + ", ".join(CHECKERS))
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON array")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or (["src"] if Path("src").is_dir() else ["."])
+    checkers = [c.strip() for c in args.checkers.split(",") if c.strip()]
+    unknown = [c for c in checkers if c not in _CHECKER_FNS]
+    if unknown:
+        ap.error(f"unknown checkers: {', '.join(unknown)}")
+
+    findings = run(paths, checkers)
+    if args.json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        n = len(findings)
+        print(f"repro.analysis: {n} finding{'s' if n != 1 else ''} "
+              f"({', '.join(checkers)})")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

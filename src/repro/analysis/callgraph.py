@@ -1,0 +1,295 @@
+"""Module/function index and call-graph walk over a SourceTree.
+
+Purpose-built for the repro checkers, not a general points-to analysis:
+
+- every def/lambda gets a node keyed ``module:qualname``;
+- import aliases are resolved per module (``from repro.models import
+  transformer as tfm`` makes ``tfm.decode_step`` resolve across files);
+- ``self.method()`` resolves within the enclosing class;
+- functions passed to ``jax.jit`` (directly, via ``functools.partial``,
+  or as a decorator) are marked *jitted*; everything transitively
+  callable from a jitted function is the *traced set* — the region
+  where an implicit host sync means a sync per step (or a tracer leak);
+- a function whose body creates a ``jax.jit`` wrapper that escapes (a
+  *builder*, like the engine's cached step factories) is recorded so
+  callers know its result is a device-computing callable.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.common import SourceTree, call_name
+
+FuncAst = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@dataclasses.dataclass
+class FuncNode:
+    key: str                      # "module:Qual.Name"
+    file: str
+    module: str
+    qualname: str
+    node: ast.AST                 # FunctionDef / AsyncFunctionDef / Lambda
+    cls: Optional[str]            # enclosing class name, if a method
+    jitted: bool = False          # passed to jax.jit somewhere
+    builder: bool = False         # body constructs a jax.jit wrapper
+    calls: Set[str] = dataclasses.field(default_factory=set)   # resolved keys
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+
+class CallGraph:
+    def __init__(self, tree: SourceTree):
+        self.tree = tree
+        self.funcs: Dict[str, FuncNode] = {}
+        # module -> {local alias -> dotted target ("module" or "module:attr")}
+        self.aliases: Dict[str, Dict[str, str]] = {}
+        # module -> {class -> {method simple name -> key}}
+        self.methods: Dict[str, Dict[str, Dict[str, str]]] = {}
+        # module -> {top-level def simple name -> key}
+        self.toplevel: Dict[str, Dict[str, str]] = {}
+        for path, sf in tree.files.items():
+            self._index_file(path, sf)
+        for fn in list(self.funcs.values()):
+            self._resolve_calls(fn)
+        self._mark_jitted()
+
+    # ------------------------------------------------------------- indexing
+
+    def _index_file(self, path: str, sf) -> None:
+        module = self.tree.module_name(path)
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    aliases[a.asname or a.name] = f"{node.module}:{a.name}"
+        self.aliases[module] = aliases
+        self.methods.setdefault(module, {})
+        self.toplevel.setdefault(module, {})
+
+        graph = self
+
+        class Indexer(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[str] = []      # qualname parts
+                self.cls_stack: List[str] = []
+
+            def _add(self, node, name: str):
+                qual = ".".join(self.stack + [name])
+                key = f"{module}:{qual}"
+                fn = FuncNode(key, path, module, qual, node,
+                              self.cls_stack[-1] if self.cls_stack else None)
+                graph.funcs[key] = fn
+                if self.cls_stack and len(self.stack) == 1:
+                    graph.methods[module].setdefault(
+                        self.cls_stack[-1], {})[name] = key
+                elif not self.stack:
+                    graph.toplevel[module][name] = key
+                return fn
+
+            def visit_ClassDef(self, node):
+                self.stack.append(node.name)
+                self.cls_stack.append(node.name)
+                self.generic_visit(node)
+                self.cls_stack.pop()
+                self.stack.pop()
+
+            def _visit_func(self, node):
+                self._add(node, node.name)
+                self.stack.append(node.name)
+                saved = self.cls_stack
+                self.cls_stack = []   # nested defs are not methods
+                self.generic_visit(node)
+                self.cls_stack = saved
+                self.stack.pop()
+
+            visit_FunctionDef = _visit_func
+            visit_AsyncFunctionDef = _visit_func
+
+            def visit_Lambda(self, node):
+                self._add(node, f"<lambda:{node.lineno}>")
+                self.stack.append(f"<lambda:{node.lineno}>")
+                self.generic_visit(node)
+                self.stack.pop()
+
+        Indexer().visit(sf.tree)
+
+    # ----------------------------------------------------------- resolution
+
+    def resolve(self, module: str, dotted: str,
+                cls: Optional[str]) -> Optional[str]:
+        """Resolve a dotted call target to a function key, or None."""
+        if not dotted:
+            return None
+        parts = dotted.split(".")
+        head = parts[0]
+        if head == "self" and cls and len(parts) == 2:
+            return self.methods.get(module, {}).get(cls, {}).get(parts[1])
+        if len(parts) == 1:
+            return self.toplevel.get(module, {}).get(head)
+        target = self.aliases.get(module, {}).get(head)
+        if target is None:
+            return None
+        if ":" in target:  # from-import of a class/function
+            mod, attr = target.split(":", 1)
+            if len(parts) == 2:  # Alias.method — class from-import
+                return self.methods.get(mod, {}).get(attr, {}).get(parts[1])
+            return self.toplevel.get(mod, {}).get(attr)
+        # plain module import: alias.fn or alias.sub.fn
+        mod = target
+        if len(parts) == 2:
+            return self.toplevel.get(mod, {}).get(parts[1])
+        return None
+
+    def _enclosing(self, fn: FuncNode) -> List[ast.AST]:
+        """Direct statement body of fn, excluding nested def/lambda bodies."""
+        out: List[ast.AST] = []
+        body = fn.node.body if isinstance(fn.node, FuncAst) else [fn.node.body]
+        stack = list(body)
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            for child in ast.iter_child_nodes(n):
+                if isinstance(child, FuncAst + (ast.Lambda,)):
+                    continue  # separate node
+                stack.append(child)
+        return out
+
+    def _resolve_calls(self, fn: FuncNode) -> None:
+        for n in self._enclosing(fn):
+            if isinstance(n, ast.Call):
+                key = self.resolve(fn.module, call_name(n.func), fn.cls)
+                if key:
+                    fn.calls.add(key)
+        # link nested defs/lambdas as "called": their bodies run in the
+        # same tracing context often enough (scan bodies, builders)
+        for child in ast.walk(fn.node):
+            if child is fn.node:
+                continue
+            if isinstance(child, FuncAst + (ast.Lambda,)):
+                for k, other in self.funcs.items():
+                    if other.node is child and other.qualname.startswith(
+                            fn.qualname + "."):
+                        fn.calls.add(k)
+
+    # ------------------------------------------------------------ jit marks
+
+    def _jit_target_keys(self, fn: FuncNode, call: ast.Call) -> List[str]:
+        """Function keys named by the argument of a jax.jit(...) call."""
+        out: List[str] = []
+        if not call.args:
+            return out
+        arg = call.args[0]
+        if isinstance(arg, ast.Call) and call_name(arg.func).endswith("partial"):
+            arg = arg.args[0] if arg.args else arg
+        if isinstance(arg, ast.Lambda):
+            for k, other in self.funcs.items():
+                if other.node is arg:
+                    out.append(k)
+        else:
+            key = self.resolve(fn.module, call_name(arg), fn.cls)
+            if key:
+                out.append(key)
+            # bound method: self._impl
+            name = call_name(arg)
+            if not key and name.startswith("self.") and fn.cls:
+                key = self.methods.get(fn.module, {}).get(fn.cls, {}).get(
+                    name.split(".", 1)[1])
+                if key:
+                    out.append(key)
+        return out
+
+    @staticmethod
+    def is_jit_call(node: ast.Call) -> bool:
+        name = call_name(node.func)
+        return name in ("jax.jit", "jit") or name.endswith(".jit")
+
+    def _mark_jitted(self) -> None:
+        for fn in list(self.funcs.values()):
+            node = fn.node
+            # decorator form
+            if isinstance(node, FuncAst):
+                for dec in node.decorator_list:
+                    d = dec.func if isinstance(dec, ast.Call) else dec
+                    if call_name(d) in ("jax.jit", "jit"):
+                        fn.jitted = True
+                        if isinstance(dec, ast.Call):
+                            fn.static_params |= _static_names(dec, node)
+            # call form: scan every call lexically inside this function.
+            # Nested defs are revisited from their own nodes too — the
+            # marks are idempotent, and the *enclosing* function is the
+            # one that escapes the wrapper, so it carries `builder`.
+            for n in ast.walk(node):
+                if isinstance(n, ast.Call) and self.is_jit_call(n):
+                    for key in self._jit_target_keys(fn, n):
+                        tgt = self.funcs[key]
+                        tgt.jitted = True
+                        if isinstance(tgt.node, FuncAst):
+                            tgt.static_params |= _static_names(n, tgt.node)
+                    fn.builder = True
+        # module-level jit calls (``g = jax.jit(step)`` at top level) are
+        # lexically inside no FuncNode, so sweep each module root too; the
+        # marks are idempotent and there is no enclosing function to tag
+        # as a builder
+        for path, sf in self.tree.files.items():
+            scope = FuncNode("", path, self.tree.module_name(path),
+                             "<module>", sf.tree, None)
+            for n in ast.walk(sf.tree):
+                if isinstance(n, ast.Call) and self.is_jit_call(n):
+                    for key in self._jit_target_keys(scope, n):
+                        tgt = self.funcs[key]
+                        tgt.jitted = True
+                        if isinstance(tgt.node, FuncAst):
+                            tgt.static_params |= _static_names(n, tgt.node)
+
+    # --------------------------------------------------------- reachability
+
+    def traced_set(self) -> Set[str]:
+        """Keys of jitted functions plus everything they can call."""
+        seen: Set[str] = set()
+        stack = [k for k, f in self.funcs.items() if f.jitted]
+        while stack:
+            k = stack.pop()
+            if k in seen:
+                continue
+            seen.add(k)
+            stack.extend(self.funcs[k].calls - seen)
+        return seen
+
+    def jitted_set(self) -> Set[str]:
+        return {k for k, f in self.funcs.items() if f.jitted}
+
+    def builder_set(self) -> Set[str]:
+        """Functions that construct-and-escape a jax.jit wrapper."""
+        return {k for k, f in self.funcs.items() if f.builder and not f.jitted}
+
+
+def _static_names(jit_call: ast.Call, func: ast.AST) -> Set[str]:
+    """Parameter names declared static on a jax.jit(...) call."""
+    names: Set[str] = set()
+    params: List[str] = []
+    if isinstance(func, FuncAst + (ast.Lambda,)):
+        a = func.args
+        params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    for kw in jit_call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    if 0 <= n.value < len(params):
+                        names.add(params[n.value])
+    return names

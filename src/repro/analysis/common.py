@@ -1,0 +1,142 @@
+"""Shared infrastructure for the repro static checkers.
+
+A checker is a callable ``(tree: SourceTree) -> List[Finding]``.  The
+CLI in ``__main__`` parses the target files once into a ``SourceTree``
+(path -> AST + raw lines + suppression table) and hands it to every
+checker, then filters findings through the suppression table.
+
+Suppression syntax, at or immediately above the offending line::
+
+    x = int(logits.max())  # repro: allow[host-sync] one readback per request
+
+An empty reason is itself reported (checker slug ``suppression``): the
+point of the gate is that every deliberate violation is documented.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+CHECKERS = ("host-sync", "recompile", "kernel-contract", "engine-invariant")
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*allow\[([a-z0-9-]+)\]\s*(.*?)\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    file: str
+    line: int
+    checker: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.file}:{self.line}: [{self.checker}] {self.message}"
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    checker: str
+    reason: str
+    used: bool = False
+
+
+class SourceFile:
+    """One parsed python file: AST, raw lines, suppression table."""
+
+    def __init__(self, path: Path, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=str(path))
+        self.suppressions: List[Suppression] = []
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                self.suppressions.append(Suppression(i, m.group(1), m.group(2)))
+
+    def suppressed(self, checker: str, line: int) -> Optional[Suppression]:
+        """A suppression covers its own line and the line below it.
+
+        The "line below" rule lets a comment-only line annotate the
+        statement that follows; for multi-line statements the finding is
+        reported at the statement's first line, so annotating above the
+        statement always works.
+        """
+        for s in self.suppressions:
+            if s.checker == checker and line in (s.line, s.line + 1):
+                s.used = True
+                return s
+        return None
+
+
+class SourceTree:
+    """All files under analysis, parsed once."""
+
+    def __init__(self, files: Iterable[Tuple[Path, str]]):
+        self.files: Dict[str, SourceFile] = {}
+        self.errors: List[Finding] = []
+        for path, text in files:
+            try:
+                self.files[str(path)] = SourceFile(path, text)
+            except SyntaxError as e:  # surfaced as a finding, not a crash
+                self.errors.append(
+                    Finding(str(path), e.lineno or 1, "parse", f"syntax error: {e.msg}")
+                )
+
+    @classmethod
+    def from_paths(cls, roots: Iterable[Path]) -> "SourceTree":
+        seen = {}
+        for root in roots:
+            root = Path(root)
+            if root.is_file() and root.suffix == ".py":
+                seen[root.resolve()] = root
+            elif root.is_dir():
+                for p in sorted(root.rglob("*.py")):
+                    seen[p.resolve()] = p
+        return cls((p, p.read_text()) for p in seen.values())
+
+    def module_name(self, path: str) -> str:
+        """Dotted module name guess from the path (rooted at 'repro')."""
+        parts = Path(path).with_suffix("").parts
+        if "repro" in parts:
+            parts = parts[parts.index("repro"):]
+        name = ".".join(parts)
+        if name.endswith(".__init__"):
+            name = name[: -len(".__init__")]
+        return name
+
+
+def apply_suppressions(tree: SourceTree, findings: List[Finding]) -> List[Finding]:
+    """Drop suppressed findings; report suppressions with empty reasons."""
+    kept: List[Finding] = []
+    for f in findings:
+        sf = tree.files.get(f.file)
+        if sf is None:
+            kept.append(f)
+            continue
+        sup = sf.suppressed(f.checker, f.line)
+        if sup is None:
+            kept.append(f)
+        elif not sup.reason:
+            kept.append(
+                Finding(f.file, sup.line, "suppression",
+                        f"allow[{sup.checker}] needs a reason documenting why")
+            )
+    return kept
+
+
+def call_name(node: ast.AST) -> str:
+    """Dotted name of a call target, '' if not a plain name/attr chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""

@@ -1,0 +1,165 @@
+"""Engine-invariant checker: allocator state mutates only through seams.
+
+The paged-KV ``PageAllocator`` owns refcounts, the free list, the LRU
+park, the prefix-cache index, and the block table.  Every correctness
+property of prefix sharing, eviction, and tiering (PRs 4-7) is an
+invariant over that state, and the named seams
+(``adopt_cached``/``unpin``/``drop_cached``/``spill_hook``/``_take_page``
+and friends) are where those invariants are maintained.  A direct
+``alloc.ref[p] -= 1`` from scheduler code bypasses them silently.
+
+This checker flags any store/del/mutating-method-call on a protected
+allocator attribute outside the ``PageAllocator`` class itself.  The
+protected set is derived from ``PageAllocator.__init__``'s ``self.X``
+assignments when the class is in the analyzed tree (falling back to a
+hardcoded list), minus ``spill_hook`` — an intentional late-bound
+callback seam.  Allocator-valued names are recognized by construction
+(``X = PageAllocator(...)``) or by the conventional names the engine
+uses (``alloc``/``pc_alloc``/``allocator``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.common import Finding, SourceTree, call_name
+
+CHECKER = "engine-invariant"
+
+_ALLOC_NAMES = {"alloc", "allocator", "pc_alloc", "page_alloc"}
+_SEAM_ATTRS = {"spill_hook"}
+_FALLBACK_ATTRS = {"free", "ref", "lru", "index", "hash_of", "table",
+                   "owned", "num_pages", "page_size", "max_cached"}
+_MUTATORS = {"append", "extend", "insert", "remove", "pop", "popitem",
+             "clear", "update", "setdefault", "move_to_end", "add",
+             "discard", "sort", "reverse"}
+
+
+def check(tree: SourceTree, graph=None) -> List[Finding]:
+    protected = _protected_attrs(tree)
+    findings: List[Finding] = []
+    for path, sf in tree.files.items():
+        _scan(path, sf.tree, protected, findings)
+    return findings
+
+
+def _protected_attrs(tree: SourceTree) -> Set[str]:
+    for sf in tree.files.values():
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef) and \
+                    node.name == "PageAllocator":
+                attrs: Set[str] = set()
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef) and \
+                            item.name == "__init__":
+                        for n in ast.walk(item):
+                            if isinstance(n, (ast.Assign, ast.AnnAssign)):
+                                targets = (n.targets
+                                           if isinstance(n, ast.Assign)
+                                           else [n.target])
+                                for t in targets:
+                                    if isinstance(t, ast.Attribute) and \
+                                            isinstance(t.value, ast.Name) \
+                                            and t.value.id == "self":
+                                        attrs.add(t.attr)
+                if attrs:
+                    return attrs - _SEAM_ATTRS
+    return _FALLBACK_ATTRS - _SEAM_ATTRS
+
+
+def _scan(path: str, root: ast.AST, protected: Set[str],
+          findings: List[Finding]):
+
+    class Scanner(ast.NodeVisitor):
+        def __init__(self):
+            self.in_allocator = 0
+            self.alloc_names: List[Set[str]] = [set(_ALLOC_NAMES)]
+
+        def visit_ClassDef(self, node):
+            if node.name == "PageAllocator":
+                self.in_allocator += 1
+                self.generic_visit(node)
+                self.in_allocator -= 1
+            else:
+                self.generic_visit(node)
+
+        def _visit_func(self, node):
+            self.alloc_names.append(set(self.alloc_names[-1]))
+            self.generic_visit(node)
+            self.alloc_names.pop()
+
+        visit_FunctionDef = _visit_func
+        visit_AsyncFunctionDef = _visit_func
+
+        def visit_Assign(self, node):
+            for t in node.targets:
+                # track X = PageAllocator(...)
+                if isinstance(t, ast.Name) and \
+                        isinstance(node.value, ast.Call) and \
+                        call_name(node.value.func).endswith("PageAllocator"):
+                    self.alloc_names[-1].add(t.id)
+                self._check_store(t, node.lineno)
+            self.generic_visit(node)
+
+        def visit_AugAssign(self, node):
+            self._check_store(node.target, node.lineno)
+            self.generic_visit(node)
+
+        def visit_AnnAssign(self, node):
+            if node.value is not None:
+                self._check_store(node.target, node.lineno)
+            self.generic_visit(node)
+
+        def visit_Delete(self, node):
+            for t in node.targets:
+                self._check_store(t, node.lineno, verb="del of")
+            self.generic_visit(node)
+
+        def visit_Call(self, node):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in _MUTATORS:
+                attr = self._protected_attr(f.value)
+                if attr:
+                    self._flag(node.lineno,
+                               f"mutating call .{f.attr}() on allocator "
+                               f".{attr}")
+            self.generic_visit(node)
+
+        # ------------------------------------------------------------ utils
+
+        def _check_store(self, target: ast.expr, line: int,
+                         verb: str = "store to") -> None:
+            attr = self._protected_attr(target, store=True)
+            if attr:
+                self._flag(line, f"{verb} allocator .{attr}")
+
+        def _protected_attr(self, node: ast.expr,
+                            store: bool = False) -> Optional[str]:
+            """Protected attr name if node is alloc.<attr> (or a subscript
+            of it), else None."""
+            while isinstance(node, ast.Subscript):
+                node = node.value
+            if not isinstance(node, ast.Attribute):
+                return None
+            if not isinstance(node.value, ast.Name) or \
+                    node.value.id not in self.alloc_names[-1]:
+                return None
+            if node.attr in _SEAM_ATTRS:
+                return None
+            if node.attr in protected:
+                return node.attr
+            # unknown attr stored onto an allocator: still outside the seams
+            return node.attr if store and isinstance(node.ctx, ast.Store) \
+                else None
+
+        def _flag(self, line: int, what: str) -> None:
+            if self.in_allocator:
+                return  # the class maintains its own invariants
+            findings.append(Finding(
+                path, line, CHECKER,
+                f"{what} outside PageAllocator — route through the named "
+                "seams (adopt_cached/unpin/drop_cached/spill_hook/"
+                "_take_page) so refcount/LRU/index invariants hold"))
+
+    Scanner().visit(root)

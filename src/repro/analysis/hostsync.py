@@ -1,0 +1,406 @@
+"""Host-sync detector.
+
+Flags *implicit* device→host synchronizations — ``int()``/``float()``/
+``bool()`` on array values, ``.item()``/``.tolist()``/``.tobytes()``,
+``np.asarray``/``np.array`` over device arrays, iterating a device
+array, and branching (``if``/``while``/``assert``) on one.  Explicit
+syncs via ``jax.device_get`` / ``jax.block_until_ready`` are the
+sanctioned idiom (that is the allowlist for the deliberate
+once-per-macro-step readback) and are never flagged; their results are
+treated as host values.
+
+Scope: every function in the tree, with two taint regimes.
+
+- **Traced functions** (passed to ``jax.jit`` or reachable from one via
+  the call graph): parameters are tainted device values (minus declared
+  static args), so ``if x > 0:`` on a traced arg is flagged — inside a
+  trace that is a concretization error or a silent per-call sync.
+  Exception: parameters of *transitively* reached functions are not
+  tainted (they commonly receive static config objects through the
+  jitted wrapper's closure); only device-valued locals are tracked
+  there.
+- **Host functions** (everything else, e.g. the scheduler loop):
+  parameters are host values; taint enters through calls into jnp/jax
+  namespaces, calls to traced functions, or calls through jit-builder
+  results (the engine's cached step callables).
+
+The tracker is a forward pass per function (loop bodies get two passes
+for loop-carried taint), intentionally intraprocedural beyond the
+device-source call classification.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.common import Finding, SourceTree, call_name
+from repro.analysis.callgraph import CallGraph, FuncAst, FuncNode
+
+CHECKER = "host-sync"
+
+# call roots whose results live on device
+_DEVICE_ROOTS = ("jnp.", "jax.lax.", "jax.random.", "jax.nn.", "jax.numpy.")
+# explicit sync / host-transfer: allowed, result is a host value
+_SANITIZERS = ("jax.device_get", "jax.block_until_ready", "jax.device_put")
+# numpy namespaces: calling these on a device array syncs implicitly
+_NP_ROOTS = ("np.", "numpy.", "onp.")
+# pytree container ops: return HOST containers (of device leaves) —
+# iterating the returned list/dict is not a per-element device sync
+_CONTAINER_ROOTS = ("jax.tree.", "jax.tree_util.")
+# attribute reads that yield static Python metadata, not array data
+_META_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "nbytes"}
+# builtins that force a scalar readback
+_SCALAR_CASTS = {"int", "float", "bool", "complex"}
+# method calls that force a full readback
+_SYNC_METHODS = {"item", "tolist", "tobytes", "__array__"}
+
+
+def check(tree: SourceTree, graph: Optional[CallGraph] = None) -> List[Finding]:
+    graph = graph or CallGraph(tree)
+    traced = graph.traced_set()
+    jitted = graph.jitted_set()
+    builders = graph.builder_set()
+    # functions nested inside another function are analyzed from their
+    # enclosing tracker (inheriting closure taint), not as roots
+    nested = {k for k, f in graph.funcs.items()
+              if any(o.module == f.module and isinstance(o.node, FuncAst)
+                     and k != ok and f.qualname.startswith(o.qualname + ".")
+                     for ok, o in graph.funcs.items())}
+    findings: List[Finding] = []
+    for key, fn in graph.funcs.items():
+        if not isinstance(fn.node, FuncAst) or key in nested:
+            continue  # lambdas: too little body to taint-track usefully
+        _Tracker(tree, graph, fn,
+                 directly_jitted=key in jitted,
+                 traced=key in traced,
+                 traced_keys=traced,
+                 jitted_keys=jitted,
+                 builder_keys=builders,
+                 findings=findings).run()
+    return findings
+
+
+class _Tracker:
+    """Forward taint pass over one function body."""
+
+    def __init__(self, tree, graph, fn: FuncNode, *, directly_jitted: bool,
+                 traced: bool, traced_keys: Set[str], jitted_keys: Set[str],
+                 builder_keys: Set[str], findings: List[Finding]):
+        self.tree = tree
+        self.graph = graph
+        self.fn = fn
+        self.traced = traced
+        self.traced_keys = traced_keys
+        self.jitted_keys = jitted_keys
+        self.builder_keys = builder_keys
+        self.findings = findings
+        self.taint: Set[str] = set()       # device-valued local names
+        self.devcall: Set[str] = set()     # locals holding jitted callables
+        if directly_jitted:
+            a = fn.node.args
+            for p in a.posonlyargs + a.args + a.kwonlyargs:
+                if p.arg not in fn.static_params and p.arg != "self":
+                    self.taint.add(p.arg)
+        # device-callable attributes of the enclosing class (self._decode …)
+        self.devcall_attrs: Set[str] = set()
+        if fn.cls:
+            self.devcall_attrs = _devcall_attrs(graph, fn, builder_keys)
+
+    # --------------------------------------------------------------- driver
+
+    def run(self) -> None:
+        self._pending_nested: List[ast.AST] = []
+        self._block(self.fn.node.body, report=True)
+        # nested defs run with the closure env as of the END of the body:
+        # helpers are defined before the loop that taints their free vars
+        for st in self._pending_nested:
+            self._nested(st)
+
+    def _block(self, stmts, report: bool) -> None:
+        for st in stmts:
+            self._stmt(st, report)
+
+    def _stmt(self, st: ast.stmt, report: bool) -> None:
+        if isinstance(st, (ast.For, ast.AsyncFor)):
+            if self._tainted(st.iter) and report:
+                self._flag(st, "iterating a device array on host "
+                               "(one sync per element)")
+            self._assign_target(st.target, self._tainted(st.iter))
+            # two passes: pick up loop-carried taint, report on the second
+            self._block(st.body, report=False)
+            self._block(st.body, report=report)
+            self._block(st.orelse, report)
+        elif isinstance(st, ast.While):
+            if self._tainted(st.test) and report:
+                self._flag(st, "while-condition on a device value syncs "
+                               "every iteration")
+            self._expr(st.test, report)
+            self._block(st.body, report=False)
+            self._block(st.body, report=report)
+            self._block(st.orelse, report)
+        elif isinstance(st, ast.If):
+            if self._tainted(st.test) and report:
+                self._flag(st, "branching on a device value forces a sync "
+                               "(or a tracer error under jit)")
+            self._expr(st.test, report)
+            self._block(st.body, report)
+            self._block(st.orelse, report)
+        elif isinstance(st, ast.Assert):
+            if self._tainted(st.test) and report:
+                self._flag(st, "assert on a device value forces a sync")
+            self._expr(st.test, report)
+        elif isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign,
+                             ast.NamedExpr)):
+            value = st.value
+            if value is None:
+                return
+            self._expr(value, report)
+            t = self._tainted(value)
+            targets = (st.targets if isinstance(st, ast.Assign)
+                       else [st.target])
+            if (isinstance(st, ast.Assign) and len(targets) == 1
+                    and isinstance(targets[0], ast.Tuple)
+                    and isinstance(value, ast.Tuple)
+                    and len(targets[0].elts) == len(value.elts)):
+                for tgt, v in zip(targets[0].elts, value.elts):
+                    self._assign_target(tgt, self._tainted(v))
+            else:
+                for tgt in targets:
+                    if isinstance(st, ast.AugAssign):
+                        t = t or self._tainted(tgt)
+                    self._assign_target(tgt, t)
+        elif isinstance(st, (ast.Return, ast.Expr)):
+            if st.value is not None:
+                self._expr(st.value, report)
+        elif isinstance(st, ast.With):
+            for item in st.items:
+                self._expr(item.context_expr, report)
+            self._block(st.body, report)
+        elif isinstance(st, ast.Try):
+            self._block(st.body, report)
+            for h in st.handlers:
+                self._block(h.body, report)
+            self._block(st.orelse, report)
+            self._block(st.finalbody, report)
+        elif isinstance(st, FuncAst):
+            if st not in self._pending_nested:
+                self._pending_nested.append(st)
+        elif isinstance(st, ast.ClassDef):
+            return  # methods are roots of their own
+        else:
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, ast.expr):
+                    self._expr(child, report)
+
+    def _nested(self, st: ast.AST) -> None:
+        """Analyze a nested def with the enclosing closure taint."""
+        key = next((k for k, f in self.graph.funcs.items()
+                    if f.node is st), None)
+        if key is None:
+            return
+        sub_fn = self.graph.funcs[key]
+        sub = _Tracker(self.tree, self.graph, sub_fn,
+                       directly_jitted=key in self.jitted_keys,
+                       traced=key in self.traced_keys,
+                       traced_keys=self.traced_keys,
+                       jitted_keys=self.jitted_keys,
+                       builder_keys=self.builder_keys,
+                       findings=self.findings)
+        a = st.args
+        params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        sub.taint |= self.taint - params          # closure over device values
+        sub.devcall |= self.devcall - params
+        sub.devcall_attrs |= self.devcall_attrs   # closure over self.<jitted>
+        sub.run()
+
+    # ---------------------------------------------------------- assignment
+
+    def _assign_target(self, tgt: ast.expr, tainted: bool) -> None:
+        if isinstance(tgt, ast.Name):
+            (self.taint.add if tainted else self.taint.discard)(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                self._assign_target(e, tainted)
+        elif isinstance(tgt, ast.Starred):
+            self._assign_target(tgt.value, tainted)
+        elif isinstance(tgt, ast.Subscript) and tainted:
+            # a host container holding device values: reads of any element
+            # are device values (the scheduler's per-slot key list)
+            base = tgt.value
+            while isinstance(base, ast.Subscript):
+                base = base.value
+            if isinstance(base, ast.Name):
+                self.taint.add(base.id)
+        # stores into attributes don't create local taint
+
+    # --------------------------------------------------------- expressions
+
+    def _expr(self, e: ast.expr, report: bool) -> None:
+        """Walk an expression, reporting sink hits."""
+        for node in ast.walk(e):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node.func)
+            # scalar casts: int(x) / float(x) / bool(x)
+            if name in _SCALAR_CASTS and node.args and \
+                    self._tainted(node.args[0]):
+                if report:
+                    self._flag(node, f"{name}() on a device value is an "
+                                     "implicit blocking sync")
+            # .item() / .tolist() / ...
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _SYNC_METHODS and \
+                    self._tainted(node.func.value):
+                if report:
+                    self._flag(node, f".{node.func.attr}() on a device value "
+                                     "is an implicit blocking sync")
+            # np.* over device arrays
+            elif name.startswith(_NP_ROOTS) and any(
+                    self._tainted(a) for a in
+                    list(node.args) + [kw.value for kw in node.keywords]):
+                if report:
+                    self._flag(node, f"{name}(...) on a device value syncs "
+                                     "implicitly; use jax.device_get for an "
+                                     "explicit transfer")
+        # comprehension iteration over device arrays
+        for node in ast.walk(e):
+            if isinstance(node, ast.comprehension) and \
+                    self._tainted(node.iter):
+                if report:
+                    self._flag(node.iter, "iterating a device array on host "
+                                          "(one sync per element)")
+                self._assign_target(node.target, True)
+            elif isinstance(node, ast.IfExp) and self._tainted(node.test):
+                if report:
+                    self._flag(node, "conditional on a device value forces "
+                                     "a sync")
+
+    # --------------------------------------------------------------- taint
+
+    def _tainted(self, e: Optional[ast.expr]) -> bool:
+        if e is None:
+            return False
+        if isinstance(e, ast.Name):
+            return e.id in self.taint
+        if isinstance(e, ast.Attribute):
+            if e.attr in _META_ATTRS:
+                return False
+            return self._tainted(e.value)
+        if isinstance(e, ast.Subscript):
+            return self._tainted(e.value)
+        if isinstance(e, ast.Call):
+            return self._call_tainted(e)
+        if isinstance(e, (ast.BinOp,)):
+            return self._tainted(e.left) or self._tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self._tainted(e.operand)
+        if isinstance(e, ast.Compare):
+            return self._tainted(e.left) or any(
+                self._tainted(c) for c in e.comparators)
+        if isinstance(e, ast.BoolOp):
+            return any(self._tainted(v) for v in e.values)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self._tainted(v) for v in e.elts)
+        if isinstance(e, ast.Dict):
+            return any(self._tainted(v) for v in e.values if v is not None)
+        if isinstance(e, ast.IfExp):
+            return self._tainted(e.body) or self._tainted(e.orelse)
+        if isinstance(e, ast.Starred):
+            return self._tainted(e.value)
+        if isinstance(e, ast.NamedExpr):
+            return self._tainted(e.value)
+        return False
+
+    def _call_tainted(self, e: ast.Call) -> bool:
+        name = call_name(e.func)
+        if name in _SANITIZERS or name.endswith(".block_until_ready"):
+            return False                       # explicit sync → host value
+        if name in _SCALAR_CASTS or name in ("len", "repr", "str", "hash"):
+            return False                       # host scalar out (sink handled)
+        if name.startswith(_NP_ROOTS):
+            return False                       # numpy result is host
+        if name.startswith(_CONTAINER_ROOTS):
+            return False                       # host container of leaves
+        if name.startswith(_DEVICE_ROOTS) or name in ("jax.jit",):
+            return True
+        if isinstance(e.func, ast.Attribute) and e.func.attr in _SYNC_METHODS:
+            return False
+        # method call on a device value → device value (e.g. x.at[i].set(v))
+        if isinstance(e.func, ast.Attribute) and self._tainted(e.func.value):
+            return True
+        # self._decode(...) where _decode holds a jitted callable
+        if name.startswith("self.") and \
+                name.split(".", 1)[1] in self.devcall_attrs:
+            return True
+        if isinstance(e.func, ast.Name) and e.func.id in self.devcall:
+            return True
+        # call through a builder result: self._macro_fn(k)(...)
+        if isinstance(e.func, ast.Call):
+            inner = self.graph.resolve(self.fn.module,
+                                       call_name(e.func.func), self.fn.cls)
+            if inner in self.builder_keys:
+                return True
+            if self._devcall_expr(e.func):
+                return True
+        key = self.graph.resolve(self.fn.module, name, self.fn.cls)
+        if key is not None:
+            if key in self.traced_keys:
+                return True
+            if key in self.builder_keys:
+                return False  # returns a callable, tracked via devcall
+            return False      # resolved host function → trust its hygiene
+        # unresolved call with tainted args: conservatively device
+        return any(self._tainted(a) for a in e.args) or any(
+            self._tainted(kw.value) for kw in e.keywords)
+
+    def _devcall_expr(self, e: ast.expr) -> bool:
+        """Does this expression evaluate to a jitted callable?"""
+        if isinstance(e, ast.Name):
+            return e.id in self.devcall
+        if isinstance(e, ast.Call):
+            key = self.graph.resolve(self.fn.module, call_name(e.func),
+                                     self.fn.cls)
+            return key in self.builder_keys
+        if isinstance(e, ast.Attribute):
+            full = call_name(e)
+            return full.startswith("self.") and \
+                full.split(".", 1)[1] in self.devcall_attrs
+        return False
+
+    def _flag(self, node: ast.AST, msg: str) -> None:
+        where = "traced (jit) code" if self.traced else "the host loop"
+        self.findings.append(Finding(
+            self.fn.file, getattr(node, "lineno", 1), CHECKER,
+            f"{msg} [in {where}: {self.fn.qualname}]"))
+
+
+def _devcall_attrs(graph: CallGraph, fn: FuncNode,
+                   builder_keys: Set[str]) -> Set[str]:
+    """Attributes of fn's class assigned from jax.jit or a builder call."""
+    attrs: Set[str] = set()
+    for other in graph.funcs.values():
+        if other.module != fn.module or other.cls != fn.cls:
+            continue
+        if not isinstance(other.node, FuncAst):
+            continue
+        for node in ast.walk(other.node):
+            if not isinstance(node, ast.Assign) or \
+                    not isinstance(node.value, ast.Call):
+                continue
+            value_name = call_name(node.value.func)
+            # jax.jit(...) anywhere in the assigned expression covers both
+            # the direct form and shared-cache indirection like
+            # ``self._decode = _shared_jit(key, lambda: jax.jit(...))``
+            is_dev = any(isinstance(n, ast.Call) and CallGraph.is_jit_call(n)
+                         for n in ast.walk(node.value)) or \
+                graph.resolve(other.module, value_name, other.cls) \
+                in builder_keys
+            if not is_dev:
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute) and \
+                        isinstance(tgt.value, ast.Name) and \
+                        tgt.value.id == "self":
+                    attrs.add(tgt.attr)
+    return attrs

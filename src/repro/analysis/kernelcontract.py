@@ -1,0 +1,198 @@
+"""Pallas kernel contract checker.
+
+Two halves:
+
+- **Registry sweep** (needs the repo importable): every candidate value
+  in every registered kernel's tuning space must construct a config
+  that passes its own ``validate()`` — the 128-lane / 8-sublane tile
+  alignment and grid-divisibility contract from ``kernels/common.py``.
+  A candidate the HAQA agent can propose but the kernel would reject at
+  trace time is a landmine in the tuning loop.
+
+- **AST checks** over ``kernels/``: each ``pl.BlockSpec(shape, idx)``
+  index map's positional arity must match the enclosing grid's rank
+  (scalar-prefetch refs ride in via ``*_refs`` varargs or explicit
+  trailing params), and its returned index tuple must have one entry
+  per block-shape dimension.  Attention wrapper call sites must thread
+  the explicit ``scale=`` keyword into the underlying kernels — the
+  int8 KV path folds the softmax scale into dequantization, so an
+  implicit ``d**-0.5`` default recomputed from a *padded* head dim
+  would silently change the math.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from repro.analysis.common import Finding, SourceTree, call_name
+
+CHECKER = "kernel-contract"
+
+_ATTN_KERNELS = ("flash_decode", "flash_verify", "paged_flash_decode",
+                 "paged_flash_verify", "flash_attention")
+
+
+def check(tree: SourceTree, graph=None) -> List[Finding]:
+    findings: List[Finding] = []
+    findings.extend(_registry_sweep(tree))
+    for path, sf in tree.files.items():
+        norm = path.replace("\\", "/")
+        if "/kernels/" not in norm and not norm.startswith("kernels/"):
+            continue
+        _check_blockspecs(path, sf.tree, findings)
+        _check_scale_threading(path, sf.tree, findings)
+    return findings
+
+
+# ---------------------------------------------------------------- registry
+
+def _registry_sweep(tree: SourceTree) -> List[Finding]:
+    reg_path = next((p for p in tree.files
+                     if p.replace("\\", "/").endswith("kernels/registry.py")),
+                    None)
+    if reg_path is None:
+        return []
+    try:
+        from repro.kernels import registry
+    except Exception:
+        return []  # analyzing a tree that isn't this repo / no jax: skip
+    findings: List[Finding] = []
+    for name, info in registry.KERNELS.items():
+        try:
+            registry.make_config(name)
+        except Exception as e:
+            findings.append(Finding(
+                reg_path, 1, CHECKER,
+                f"kernel '{name}': default config fails validate(): {e}"))
+            continue
+        for field, candidates in info.space.items():
+            for cand in candidates:
+                try:
+                    registry.make_config(name, **{field: cand})
+                except Exception as e:
+                    findings.append(Finding(
+                        reg_path, 1, CHECKER,
+                        f"kernel '{name}': tuning candidate {field}={cand!r} "
+                        f"fails validate(): {e}"))
+    return findings
+
+
+# --------------------------------------------------------------- blockspec
+
+def _check_blockspecs(path: str, root: ast.AST, findings: List[Finding]):
+    for fn in [n for n in ast.walk(root)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        grid, prefetch = _grid_of(fn)
+        if grid is None:
+            continue
+        local_defs = {n.name: n for n in ast.walk(fn)
+                      if isinstance(n, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef))}
+        for call in [n for n in ast.walk(fn) if isinstance(n, ast.Call)
+                     and call_name(n.func).endswith("BlockSpec")]:
+            shape_len = _block_shape_len(call)
+            idx = _index_map(call, local_defs)
+            if idx is None:
+                continue
+            a = idx.args
+            npos = len(a.posonlyargs) + len(a.args)
+            # index maps receive the grid indices, then the scalar-prefetch
+            # refs; a trailing vararg may absorb any suffix of the refs
+            ok = (grid <= npos <= grid + prefetch) if a.vararg is not None \
+                else npos in (grid, grid + prefetch)
+            if not ok:
+                findings.append(Finding(
+                    path, idx.lineno, CHECKER,
+                    f"BlockSpec index map takes {npos} positional args but "
+                    f"the grid has rank {grid}"
+                    + (f" (+{prefetch} scalar-prefetch refs)" if prefetch
+                       else "")
+                    + " — out-of-order block indexing"))
+            ret = _index_return_tuple(idx)
+            if shape_len is not None and ret is not None and \
+                    len(ret.elts) != shape_len:
+                findings.append(Finding(
+                    path, idx.lineno, CHECKER,
+                    f"BlockSpec index map returns {len(ret.elts)} "
+                    f"indices for a {shape_len}-dimensional block shape"))
+
+
+def _grid_of(fn: ast.AST) -> Tuple[Optional[int], int]:
+    """(grid rank, num_scalar_prefetch) from pallas_call/GridSpec in fn."""
+    grid: Optional[int] = None
+    prefetch = 0
+    for call in [n for n in ast.walk(fn) if isinstance(n, ast.Call)]:
+        name = call_name(call.func)
+        if not (name.endswith("pallas_call") or name.endswith("GridSpec")):
+            continue
+        for kw in call.keywords:
+            if kw.arg == "grid" and isinstance(kw.value, ast.Tuple):
+                grid = len(kw.value.elts)
+            elif kw.arg == "num_scalar_prefetch" and \
+                    isinstance(kw.value, ast.Constant) and \
+                    isinstance(kw.value.value, int):
+                prefetch = kw.value.value
+    return grid, prefetch
+
+
+def _block_shape_len(call: ast.Call) -> Optional[int]:
+    if call.args and isinstance(call.args[0], ast.Tuple):
+        return len(call.args[0].elts)
+    for kw in call.keywords:
+        if kw.arg == "block_shape" and isinstance(kw.value, ast.Tuple):
+            return len(kw.value.elts)
+    return None
+
+
+def _index_map(call: ast.Call, local_defs) -> Optional[ast.AST]:
+    """The index-map lambda or locally-defined function, if recognizable."""
+    cand = None
+    if len(call.args) >= 2:
+        cand = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "index_map":
+            cand = kw.value
+    if isinstance(cand, ast.Lambda):
+        return cand
+    if isinstance(cand, ast.Name) and cand.id in local_defs:
+        return local_defs[cand.id]
+    return None
+
+
+def _index_return_tuple(idx: ast.AST) -> Optional[ast.Tuple]:
+    if isinstance(idx, ast.Lambda):
+        return idx.body if isinstance(idx.body, ast.Tuple) else None
+    rets = [n.value for n in ast.walk(idx)
+            if isinstance(n, ast.Return) and n.value is not None]
+    if len(rets) == 1 and isinstance(rets[0], ast.Tuple):
+        return rets[0]
+    return None
+
+
+# ----------------------------------------------------------- scale thread
+
+def _check_scale_threading(path: str, root: ast.AST,
+                           findings: List[Finding]):
+    # kernel entry points must expose an explicit `scale` parameter …
+    for fn in [n for n in ast.walk(root)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        if fn.name in _ATTN_KERNELS:
+            params = {p.arg for p in fn.args.args + fn.args.kwonlyargs}
+            if "scale" not in params:
+                findings.append(Finding(
+                    path, fn.lineno, CHECKER,
+                    f"attention kernel '{fn.name}' has no explicit 'scale' "
+                    "parameter — int8 paths must thread the softmax scale"))
+    # … and module-qualified call sites (the ops.py wrappers) must pass it
+    for call in [n for n in ast.walk(root) if isinstance(n, ast.Call)]:
+        name = call_name(call.func)
+        if "." not in name:
+            continue  # local recursion/def, not a cross-module dispatch
+        if name.rsplit(".", 1)[-1] in _ATTN_KERNELS:
+            if not any(kw.arg == "scale" for kw in call.keywords):
+                findings.append(Finding(
+                    path, call.lineno, CHECKER,
+                    f"call to {name} without explicit scale= — the padded "
+                    "head dim makes the d**-0.5 default wrong for int8/"
+                    "lane-padded paths"))

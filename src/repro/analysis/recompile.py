@@ -1,0 +1,237 @@
+"""Recompile-hazard detector.
+
+``jax.jit`` caches on the identity of the wrapped callable plus the
+hash of static arguments, so three patterns silently retrace on every
+use — the exact tax the runtime trace-guard measures:
+
+1. **closure over mutable host state** — a jitted lambda/def reading
+   ``self.x`` where ``x`` is reassigned outside ``__init__``: the trace
+   bakes in a stale value (or worse, keeps recompiling if the closure
+   is rebuilt per call);
+2. **throwaway wrappers** — ``jax.jit(f)(x)`` invoked immediately, or a
+   ``jax.jit`` call inside a loop body: a fresh wrapper (fresh cache)
+   per call/iteration;
+3. **unhashable/varying statics** — ``functools.partial`` with
+   list/dict/set args passed to ``jax.jit`` (a new, unhashable partial
+   object each time), a loop variable fed to a jitted callable's
+   parameter that isn't declared static (a new trace per value), or
+   list/dict/set literals at call sites for declared-static params.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.common import Finding, SourceTree, call_name
+from repro.analysis.callgraph import CallGraph, FuncAst
+
+CHECKER = "recompile"
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+
+
+def check(tree: SourceTree, graph: Optional[CallGraph] = None) -> List[Finding]:
+    graph = graph or CallGraph(tree)
+    findings: List[Finding] = []
+    for path, sf in tree.files.items():
+        module = tree.module_name(path)
+        _scan_file(tree, graph, path, module, sf.tree, findings)
+    return findings
+
+
+def _scan_file(tree, graph, path, module, root, findings: List[Finding]):
+    # class name -> attrs assigned outside __init__ (mutable host state)
+    mutable_attrs: Dict[str, Set[str]] = {}
+    for node in ast.walk(root):
+        if isinstance(node, ast.ClassDef):
+            mutable_attrs[node.name] = _attrs_assigned_outside_init(node)
+
+    class Scanner(ast.NodeVisitor):
+        def __init__(self):
+            self.loop_depth = 0
+            self.cls: List[str] = []
+            self.loop_vars: List[Set[str]] = [set()]
+
+        def visit_ClassDef(self, node):
+            self.cls.append(node.name)
+            self.generic_visit(node)
+            self.cls.pop()
+
+        def _visit_loop(self, node):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                self.loop_vars.append(self.loop_vars[-1] |
+                                      _names_in(node.target))
+            else:
+                self.loop_vars.append(set(self.loop_vars[-1]))
+            self.loop_depth += 1
+            self.generic_visit(node)
+            self.loop_depth -= 1
+            self.loop_vars.pop()
+
+        visit_For = _visit_loop
+        visit_AsyncFor = _visit_loop
+        visit_While = _visit_loop
+
+        def _visit_func(self, node):
+            # function bodies reset the loop context (deferred execution)
+            saved_depth, self.loop_depth = self.loop_depth, 0
+            self.loop_vars.append(set())
+            self.generic_visit(node)
+            self.loop_vars.pop()
+            self.loop_depth = saved_depth
+
+        visit_FunctionDef = _visit_func
+        visit_AsyncFunctionDef = _visit_func
+        visit_Lambda = _visit_func
+
+        def visit_Call(self, node):
+            if CallGraph.is_jit_call(node):
+                self._check_jit_site(node)
+            else:
+                self._check_jitted_call_site(node)
+            self.generic_visit(node)
+
+        # ---------------------------------------------------- jit sites
+
+        def _check_jit_site(self, node: ast.Call):
+            if self.loop_depth > 0:
+                findings.append(Finding(
+                    path, node.lineno, CHECKER,
+                    "jax.jit inside a loop body builds a fresh wrapper "
+                    "(fresh trace cache) every iteration — hoist it"))
+            if node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Call) and \
+                        call_name(arg.func).endswith("partial"):
+                    bad = [a for a in list(arg.args[1:]) +
+                           [kw.value for kw in arg.keywords]
+                           if isinstance(a, _UNHASHABLE)]
+                    if bad:
+                        findings.append(Finding(
+                            path, node.lineno, CHECKER,
+                            "functools.partial passed to jax.jit with an "
+                            "unhashable (list/dict/set) bound argument — "
+                            "each partial is a new cache key"))
+                self._check_closure(node, arg)
+
+        def _check_closure(self, jit_call: ast.Call, arg: ast.expr):
+            """Jitted callable reading self.X where X mutates post-init."""
+            target = arg
+            if isinstance(target, ast.Call) and \
+                    call_name(target.func).endswith("partial") and \
+                    target.args:
+                target = target.args[0]
+            body: Optional[ast.AST] = None
+            if isinstance(target, ast.Lambda):
+                body = target
+            elif isinstance(target, ast.Name):
+                # local def in the same file
+                for fn in graph.funcs.values():
+                    if fn.file == path and isinstance(fn.node, FuncAst) and \
+                            fn.name == target.id:
+                        body = fn.node
+                        break
+            elif isinstance(target, ast.Attribute) and \
+                    isinstance(target.value, ast.Name) and \
+                    target.value.id == "self" and self.cls:
+                key = graph.methods.get(module, {}).get(
+                    self.cls[-1], {}).get(target.attr)
+                if key:
+                    body = graph.funcs[key].node
+            if body is None:
+                return
+            cls = self.cls[-1] if self.cls else None
+            mut = mutable_attrs.get(cls or "", set())
+            seen: Set[str] = set()
+            for n in ast.walk(body):
+                if isinstance(n, ast.Attribute) and \
+                        isinstance(n.value, ast.Name) and \
+                        n.value.id == "self" and \
+                        isinstance(n.ctx, ast.Load) and \
+                        n.attr in mut and n.attr not in seen:
+                    seen.add(n.attr)
+                    findings.append(Finding(
+                        path, jit_call.lineno, CHECKER,
+                        f"jitted callable closes over self.{n.attr}, which "
+                        "is reassigned outside __init__ — the trace bakes "
+                        "in a stale value; pass it as an argument or key "
+                        "the wrapper on it"))
+
+        # ----------------------------------- call sites of jitted callables
+
+        def _check_jitted_call_site(self, node: ast.Call):
+            # jax.jit(f)(x): throwaway wrapper invoked immediately
+            if isinstance(node.func, ast.Call) and \
+                    CallGraph.is_jit_call(node.func):
+                findings.append(Finding(
+                    path, node.lineno, CHECKER,
+                    "jax.jit(...) invoked immediately — the wrapper (and "
+                    "its trace cache) is discarded after one call"))
+                return
+            key = graph.resolve(module, call_name(node.func),
+                                self.cls[-1] if self.cls else None)
+            if key is None:
+                return
+            fn = graph.funcs[key]
+            if not fn.jitted or not isinstance(fn.node, FuncAst):
+                return
+            params = _param_names(fn.node)
+            loop_vars = self.loop_vars[-1]
+            for i, a in enumerate(node.args):
+                if isinstance(a, ast.Name) and a.id in loop_vars:
+                    pname = params[i] if i < len(params) else a.id
+                    if pname not in fn.static_params:
+                        findings.append(Finding(
+                            path, node.lineno, CHECKER,
+                            f"loop variable '{a.id}' passed to jitted "
+                            f"'{fn.name}' parameter '{pname}' — a varying "
+                            "Python scalar retraces per value; declare it "
+                            "static or pass an array"))
+                if isinstance(a, _UNHASHABLE) and i < len(params) and \
+                        params[i] in fn.static_params:
+                    findings.append(Finding(
+                        path, node.lineno, CHECKER,
+                        f"unhashable literal for static parameter "
+                        f"'{params[i]}' of jitted '{fn.name}'"))
+            for kw in node.keywords:
+                if isinstance(kw.value, ast.Name) and \
+                        kw.value.id in loop_vars and kw.arg and \
+                        kw.arg in params and kw.arg not in fn.static_params:
+                    findings.append(Finding(
+                        path, node.lineno, CHECKER,
+                        f"loop variable '{kw.value.id}' passed to jitted "
+                        f"'{fn.name}' parameter '{kw.arg}' — a varying "
+                        "Python scalar retraces per value; declare it "
+                        "static or pass an array"))
+
+    Scanner().visit(root)
+
+
+def _attrs_assigned_outside_init(cls: ast.ClassDef) -> Set[str]:
+    out: Set[str] = set()
+    for item in cls.body:
+        if not isinstance(item, FuncAst):
+            continue
+        if item.name == "__init__":
+            continue
+        for n in ast.walk(item):
+            if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = n.targets if isinstance(n, ast.Assign) else [n.target]
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self":
+                        out.add(t.attr)
+    return out
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args
+            if p.arg != "self"] + [p.arg for p in a.kwonlyargs]
+
+
+def _names_in(target: ast.expr) -> Set[str]:
+    return {n.id for n in ast.walk(target) if isinstance(n, ast.Name)}

@@ -1,0 +1,93 @@
+"""Runtime trace-guard: count jit traces and backend compiles as they happen.
+
+The static checkers in this package reason about *potential* recompile
+hazards; this module measures the real thing.  JAX fires a monitoring
+event every time it traces a jitted callable to a jaxpr
+(``/jax/core/compile/jaxpr_trace_duration``) and every time a traced
+computation misses the executable cache and goes to XLA
+(``/jax/core/compile/backend_compile_duration``).  We register one
+process-global duration listener and keep two monotonic counters; the
+serve engine snapshots them around its scheduler loop and folds the
+deltas into ``stats["trace_events"]`` / ``stats["jit_cache_misses"]``.
+
+Enable with ``REPRO_TRACE_GUARD=1``.  When enabled, serve-smoke CI runs
+a warmup workload, snapshots, replays an identical workload, and gates
+on zero new backend compiles — the runtime cross-check of the static
+recompile-hazard checker.  The listener itself is cheap (two int adds
+per trace), but it is only installed when the env var is set so the
+default path stays untouched.
+
+Counters are process-global because jax's listener registry is global:
+``jax.monitoring.clear_event_listeners()`` would drop everyone's
+listeners, so we install exactly once and never remove.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Tuple
+
+# Event names are stable public monitoring keys (jax >= 0.4.x).
+_TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_lock = threading.Lock()
+_installed = False
+_trace_events = 0
+_backend_compiles = 0
+
+
+def enabled() -> bool:
+    """True when REPRO_TRACE_GUARD=1 (or any non-empty, non-"0" value)."""
+    val = os.environ.get("REPRO_TRACE_GUARD", "")
+    return val not in ("", "0", "false", "False")
+
+
+def _listener(event: str, duration_secs: float, **_kwargs) -> None:
+    global _trace_events, _backend_compiles
+    if event == _TRACE_EVENT:
+        with _lock:
+            _trace_events += 1
+    elif event == _COMPILE_EVENT:
+        with _lock:
+            _backend_compiles += 1
+
+
+def install() -> bool:
+    """Register the monitoring listener (idempotent).
+
+    Returns True if the listener is active after the call.  Safe to call
+    unconditionally; the import of jax is deferred so the static
+    checkers can run in environments without jax.
+    """
+    global _installed
+    with _lock:
+        if _installed:
+            return True
+    try:
+        from jax import monitoring  # deferred: keep static analysis jax-free
+    except Exception:  # pragma: no cover - jax is a hard dep of the repo
+        return False
+    with _lock:
+        if not _installed:
+            monitoring.register_event_duration_secs_listener(_listener)
+            _installed = True
+    return True
+
+
+def counters() -> Tuple[int, int]:
+    """(trace_events, backend_compiles) since process start."""
+    with _lock:
+        return _trace_events, _backend_compiles
+
+
+def snapshot() -> Tuple[int, int]:
+    """Alias of counters() — read a baseline before a region of interest."""
+    return counters()
+
+
+def delta(since: Tuple[int, int]) -> Tuple[int, int]:
+    """Counter deltas relative to a snapshot()."""
+    now_t, now_c = counters()
+    return now_t - since[0], now_c - since[1]

@@ -76,16 +76,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
 def flash_attention(q, k, v, cfg: AttentionConfig, *, causal: bool = True,
                     window: int = 0, cap: float = 0.0,
-                    interpret: bool = False):
-    """q: (BH, S, D); k/v: (BH, T, D)."""
+                    interpret: bool = False, scale: float = None):
+    """q: (BH, S, D); k/v: (BH, T, D).
+
+    ``scale`` is the softmax scale for the TRUE head dim; callers that pad
+    the lane dim must pass it explicitly or the default would be computed
+    from the padded d.
+    """
     bh, s, d = q.shape
     t = k.shape[1]
+    scale = d ** -0.5 if scale is None else float(scale)
     bq = min(cfg.block_q, s)
     bk = min(cfg.block_k, t)
     assert s % bq == 0 and t % bk == 0
     grid = (bh, s // bq, t // bk)
     return pl.pallas_call(
-        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=d ** -0.5,
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
                           cap=cap, window=window, causal=causal),
         grid=grid,
         in_specs=[

@@ -72,11 +72,12 @@ def set_default_verify_config(cfg: VerifyAttentionConfig) -> None:
 
 def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
                     cfg: Optional[AttentionConfig] = None,
-                    interpret: bool = False):
+                    interpret: bool = False, scale: Optional[float] = None):
     """q: (B, S, H, D); k/v: (B, T, KV, D) with H % KV == 0."""
     cfg = cfg or _DEFAULT_CFG
     b, s, h, d = q.shape
     t, kv = k.shape[1], k.shape[2]
+    scale = d ** -0.5 if scale is None else float(scale)
     if kv != h:                                  # GQA -> expand kv heads
         rep = h // kv
         k = jnp.repeat(k, rep, axis=2)
@@ -85,14 +86,14 @@ def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
     kf = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, t, d)
     out = K.flash_attention(qf, kf, vf, cfg, causal=causal, window=window,
-                            cap=cap, interpret=interpret)
+                            cap=cap, interpret=interpret, scale=scale)
     return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
 
 
 def flash_decode(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
                  *, cap=0.0, window=0,
                  cfg: Optional[DecodeAttentionConfig] = None,
-                 interpret: bool = False):
+                 interpret: bool = False, scale: Optional[float] = None):
     """Single-token decode against a (possibly int8) KV cache.
 
     q: (B, 1, H, D); k/v_cache: (B, T, KV, D) with H % KV == 0;
@@ -102,6 +103,7 @@ def flash_decode(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
     """
     cfg = cfg or _DEFAULT_DECODE_CFG
     b, s1, h, d = q.shape
+    scale = d ** -0.5 if scale is None else float(scale)
     kv = k_cache.shape[2]
     qg = q[:, 0].reshape(b, kv, h // kv, d)
     if k_scale is not None and k_scale.ndim == 4:
@@ -110,14 +112,15 @@ def flash_decode(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
     _, qg, k_cache, v_cache = _lane_pad(qg, k_cache, v_cache)
     out = D.flash_decode(qg, k_cache, v_cache, lengths, k_scale, v_scale,
                          cfg, cap=cap, window=window, interpret=interpret,
-                         scale=d ** -0.5)
+                         scale=scale)
     return out[..., :d].reshape(b, 1, h, d)
 
 
 def paged_flash_decode(q, k_pool, v_pool, block_table, lengths, page_size,
                        k_scale=None, v_scale=None, *, cap=0.0, window=0,
                        cfg: Optional[PagedDecodeConfig] = None,
-                       interpret: bool = False):
+                       interpret: bool = False,
+                       scale: Optional[float] = None):
     """Single-token decode against a PAGED (possibly int8) KV pool.
 
     q: (B, 1, H, D); k/v_pool: (pool_rows, KV, D) with H % KV == 0;
@@ -128,20 +131,22 @@ def paged_flash_decode(q, k_pool, v_pool, block_table, lengths, page_size,
     for int8 pools.  Returns (B, 1, H, D).
     """
     b, s1, h, d = q.shape
+    scale = d ** -0.5 if scale is None else float(scale)
     kv = k_pool.shape[1]
     qg = q[:, 0].reshape(b, kv, h // kv, d)
     _, qg, k_pool, v_pool = _lane_pad(qg, k_pool, v_pool)
     out = P.paged_flash_decode(qg, k_pool, v_pool, block_table, lengths,
                                page_size, k_scale, v_scale, cfg, cap=cap,
                                window=window, interpret=interpret,
-                               scale=d ** -0.5)
+                               scale=scale)
     return out[..., :d].reshape(b, 1, h, d)
 
 
 def paged_flash_verify(q, k_pool, v_pool, block_table, lengths, page_size,
                        k_scale=None, v_scale=None, *, cap=0.0, window=0,
                        cfg: Optional[PagedVerifyConfig] = None,
-                       interpret: bool = False):
+                       interpret: bool = False,
+                       scale: Optional[float] = None):
     """Multi-position speculative verify against a PAGED (possibly int8) KV
     pool.  q: (B, S, H, D) — S = spec_len + 1 query rows per slot at logical
     positions lengths[b] + i, whose K/V rows are already scattered into the
@@ -149,6 +154,7 @@ def paged_flash_verify(q, k_pool, v_pool, block_table, lengths, page_size,
     BEFORE the verify (EXCLUDING the S new rows).  Returns (B, S, H, D).
     """
     b, s, h, d = q.shape
+    scale = d ** -0.5 if scale is None else float(scale)
     kv = k_pool.shape[1]
     g = h // kv
     qg = (q.reshape(b, s, kv, g, d).transpose(0, 2, 1, 3, 4)
@@ -157,7 +163,7 @@ def paged_flash_verify(q, k_pool, v_pool, block_table, lengths, page_size,
     out = P.paged_flash_verify(qg, k_pool, v_pool, block_table, lengths,
                                page_size, g, k_scale, v_scale, cfg, cap=cap,
                                window=window, interpret=interpret,
-                               scale=d ** -0.5)
+                               scale=scale)
     return (out[..., :d].reshape(b, kv, s, g, d).transpose(0, 2, 1, 3, 4)
             .reshape(b, s, h, d))
 
@@ -165,7 +171,7 @@ def paged_flash_verify(q, k_pool, v_pool, block_table, lengths, page_size,
 def flash_verify(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
                  *, cap=0.0, window=0,
                  cfg: Optional[VerifyAttentionConfig] = None,
-                 interpret: bool = False):
+                 interpret: bool = False, scale: Optional[float] = None):
     """Multi-position speculative verify against a (possibly int8) KV cache.
 
     q: (B, S, H, D) — S = spec_len + 1 query rows per slot at global
@@ -177,6 +183,7 @@ def flash_verify(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
     """
     cfg = cfg or _DEFAULT_VERIFY_CFG
     b, s, h, d = q.shape
+    scale = d ** -0.5 if scale is None else float(scale)
     kv = k_cache.shape[2]
     g = h // kv
     # (B,S,H,D) -> (B,KV,S*G,D), position-major rows (row r: pos r//G, head
@@ -189,6 +196,6 @@ def flash_verify(q, k_cache, v_cache, lengths, k_scale=None, v_scale=None,
     _, qg, k_cache, v_cache = _lane_pad(qg, k_cache, v_cache)
     out = V.flash_verify(qg, k_cache, v_cache, lengths, g, k_scale, v_scale,
                          cfg, cap=cap, window=window, interpret=interpret,
-                         scale=d ** -0.5)
+                         scale=scale)
     return (out[..., :d].reshape(b, kv, s, g, d).transpose(0, 2, 1, 3, 4)
             .reshape(b, s, h, d))

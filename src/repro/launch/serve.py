@@ -97,6 +97,7 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro.analysis import trace_guard
 from repro.configs import get_config, get_smoke_config
 from repro.core import adaptive, get_hardware
 from repro.models import transformer as tfm
@@ -281,6 +282,12 @@ def main():
               f"decode_steps={engine.stats['decode_steps']}, "
               f"useful_slot_steps={engine.stats['useful_slot_steps']}, "
               f"host_syncs/token={stats['host_syncs_per_token']:.3f}")
+        if trace_guard.enabled():
+            # REPRO_TRACE_GUARD=1: jaxpr traces / XLA compiles the queue run
+            # incurred — a warmed engine must report 0/0 (CI asserts it)
+            print(f"  trace guard: "
+                  f"trace_events={engine.stats['trace_events']}, "
+                  f"jit_cache_misses={engine.stats['jit_cache_misses']}")
         # per-request rejections: surface the count AND the reasons (the
         # errors otherwise live only on the Request objects)
         rejected = [r for r in reqs if r.error]

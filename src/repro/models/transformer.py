@@ -143,6 +143,7 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
     }
     if not cfg.tie_embeddings:
         params["unembed"] = init_dense(keys[1], cfg.d_model, v, dtype)
+    # repro: allow[host-sync] one-time param init: per-segment PRNG key unpack, never on the serving path
     for seg, k in zip(plan, keys[2:]):
         seg_keys = jax.random.split(k, seg.count * len(seg.layers))
         seg_keys = seg_keys.reshape(seg.count, len(seg.layers), 2)

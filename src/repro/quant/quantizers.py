@@ -175,7 +175,7 @@ def quantization_error(w: jax.Array, qt: QTensor) -> float:
     wd = dequantize(qt, dtype=jnp.float32)
     num = jnp.linalg.norm((w.astype(jnp.float32) - wd).reshape(-1))
     den = jnp.linalg.norm(w.astype(jnp.float32).reshape(-1)) + _EPS
-    return float(num / den)
+    return float(jax.device_get(num / den))
 
 
 # ---------------------------------------------------------------------------

@@ -152,6 +152,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import trace_guard
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.quant import PTQConfig, QuantScheme, quantize_tree
@@ -397,6 +398,41 @@ class PageAllocator:
     def pages_for(self, rows: int) -> int:
         return -(-int(rows) // self.page_size)
 
+    # -- whole-state seams: the only sanctioned bulk mutations ---------------
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-able copy of the mutable allocator state (checkpointing)."""
+        return {
+            "free": [int(p) for p in self.free],
+            "ref": [int(r) for r in self.ref],
+            "lru": [int(p) for p in self.lru],
+            "index": {h.hex(): int(p) for h, p in self.index.items()},
+            "table": np.asarray(self.table).tolist(),
+            "owned": [[int(p) for p in row] for row in self.owned],
+        }
+
+    def load_snapshot(self, a: Dict[str, Any]) -> None:
+        """Rebuild the mutable state wholesale from a ``snapshot()`` dict —
+        the checkpoint-restore seam; per-page invariants are the saved
+        engine's, re-validated page-by-page as slots adopt cached pages."""
+        self.free = [int(p) for p in a["free"]]
+        self.ref = [int(r) for r in a["ref"]]
+        self.lru = collections.OrderedDict((int(p), None) for p in a["lru"])
+        self.index = {bytes.fromhex(h): int(p) for h, p in a["index"].items()}
+        self.hash_of = {p: h for h, p in self.index.items()}
+        self.table = np.asarray(a["table"], np.int32)
+        self.owned = [[int(p) for p in row] for row in a["owned"]]
+
+    def reset_cache_state(self) -> None:
+        """Empty the prefix-cache bookkeeping (index, reverse map, LRU
+        parking) and return the parked pages to the free list — the
+        cache-reset seam for a pool whose contents are being discarded."""
+        self.index.clear()
+        self.hash_of.clear()
+        for p in self.lru:
+            self.free.append(p)
+        self.lru.clear()
+
     def _uncache(self, page: int) -> None:
         h = self.hash_of.pop(page)
         del self.index[h]
@@ -599,9 +635,12 @@ class _CompiledLRU:
 
     Pad-unsafe plans compile one admission per distinct prompt (or chunk
     remainder) length; unbounded length traffic would otherwise grow the
-    set of live XLA executables without limit.  Evicting drops our only
-    reference to the jitted callable (a re-admission at that length simply
-    re-traces) and bumps ``stats["admit_evictions"]``."""
+    set of live XLA executables without limit.  Evicting drops this
+    engine's reference to the jitted callable and bumps
+    ``stats["admit_evictions"]``; the process-wide ``_shared_jit`` cache
+    may still hold the callable for a while (its own LRU cap is the
+    global bound), so a re-admission at that length is usually a cache
+    hit rather than a re-trace."""
 
     def __init__(self, maxsize: int, stats: Dict[str, int]):
         self.maxsize = max(1, int(maxsize))
@@ -625,6 +664,192 @@ class _CompiledLRU:
             self._fns.popitem(last=False)
             self.stats["admit_evictions"] += 1
         return fn
+
+
+# ---------------------------------------------------------------------------
+# process-wide jitted-step cache
+# ---------------------------------------------------------------------------
+#
+# ``jax.jit`` caches compiled executables per *callable object*: a lambda
+# built inside ``ServeEngine.__init__`` is a fresh object per engine, so a
+# sibling engine with identical geometry (a restored engine after a kill, a
+# second engine in the same test module, every engine a parameter sweep
+# constructs) re-traces and re-compiles every step function from scratch.
+# The factories below close only over explicit arguments, and ``_shared_jit``
+# keys the jitted callables on the (geometry, dtype, static-flag) tuple that
+# actually determines the compiled program — every engine in the process
+# shares one callable, and therefore one trace and one executable, per
+# distinct configuration.  ``ModelConfig`` and ``PagedLayout`` are frozen
+# dataclasses, so keys hash by value.
+
+_SHARED_JIT_CAP = 512
+_shared_jit_cache: "collections.OrderedDict[Any, Any]" = \
+    collections.OrderedDict()
+
+
+def _shared_jit(key, build):
+    """Return the process-wide jitted callable for ``key``, building (and
+    LRU-bounding the cache) on first use."""
+    fn = _shared_jit_cache.get(key)
+    if fn is not None:
+        _shared_jit_cache.move_to_end(key)
+        return fn
+    fn = build()
+    _shared_jit_cache[key] = fn
+    while len(_shared_jit_cache) > _SHARED_JIT_CAP:
+        _shared_jit_cache.popitem(last=False)
+    return fn
+
+
+def _decode_body(cfg: ModelConfig, unroll):
+    def decode(params, cache, toks):
+        return tfm.decode_step(params, cfg, cache, tokens=toks, unroll=unroll)
+    return decode
+
+
+def _prefill_body(cfg: ModelConfig, max_len: int):
+    def prefill(params, toks):
+        return tfm.prefill(params, cfg, tokens=toks, max_len=max_len)
+    return prefill
+
+
+def _sample_slots_body(vocab: int):
+    def sample_slots(logits, temps, key):
+        """Per-slot sampling: greedy where temps[b] == 0, else categorical."""
+        logits = logits[..., :vocab]
+        greedy = jnp.argmax(logits, axis=-1)
+        safe_t = jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jax.random.categorical(key, logits / safe_t, axis=-1)
+        return jnp.where(temps > 0, sampled, greedy)
+    return sample_slots
+
+
+def _page_copy_body(ps: int):
+    def copy_page(blocks, src, dst):
+        return tfm.copy_cache_page(blocks, src, dst, ps)
+    return copy_page
+
+
+def _page_gather_body(ps: int):
+    def gather_page(blocks, page):
+        return tfm.gather_cache_page(blocks, page, ps)
+    return gather_page
+
+
+def _page_scatter_body(ps: int):
+    def scatter_page(blocks, tile, page):
+        return tfm.scatter_cache_page(blocks, tile, page, ps)
+    return scatter_page
+
+
+def _admit_body(cfg: ModelConfig, layout, bucket: int):
+    """Whole-prompt admission step (see ``ServeEngine._admit_fn``)."""
+    def admit(params, cache, tokens, slot, true_len, temp, key):
+        logits, small = tfm.prefill(params, cfg, tokens=tokens,
+                                    max_len=bucket)
+
+        if layout is not None:
+            bt_slot = jax.lax.dynamic_index_in_dim(
+                cache["block_table"], slot, axis=0, keepdims=True)
+            pool_rows = jax.tree.leaves(cache["blocks"])[0].shape[1]
+            # padded rows past true_len map to the OOB sentinel and
+            # drop — they never touch pages the allocator withheld
+            rows = tfm.paged_phys_rows(
+                bt_slot, jnp.arange(bucket)[None],
+                layout.page_size,
+                jnp.minimum(true_len, layout.max_len), pool_rows)[0]
+
+            def write(big, new):
+                # pools are lane-padded at allocation; pad only the
+                # freshly-prefilled rows up to the pool width
+                return big.at[:, rows].set(
+                    tfm._pad_lanes(new[:, 0],
+                                   big.shape[-1]).astype(big.dtype),
+                    mode="drop")
+        else:
+            def write(big, new):
+                # leaves are (count, B, rows, ...) vs
+                # (count, 1, rows', ...) with rows' <= rows; SSM
+                # states carry no row dim but share the
+                # (count, batch, ...) prefix, so the same write works
+                start = (0, slot) + (0,) * (big.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    big, new.astype(big.dtype), start)
+
+        new_blocks = jax.tree.map(write, cache["blocks"],
+                                  small["blocks"])
+        lens = cache["len"].at[slot].set(true_len)
+        last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1,
+                                            axis=0, keepdims=False)
+        tok, key = _sample_token(last, temp, key, cfg.vocab_size)
+        out = {"blocks": new_blocks, "len": lens}
+        if layout is not None:
+            out["block_table"] = cache["block_table"]
+        return tok, key, out
+
+    return admit
+
+
+def _chunk_body(cfg: ModelConfig, layout, final: bool):
+    """Admission-chunk step (see ``ServeEngine._chunk_fn``)."""
+    if not final:
+        def run(params, cache, tokens, slot, offset):
+            _, cache = tfm.prefill_chunk(params, cfg, cache, tokens,
+                                         slot, offset, paged=layout)
+            return cache
+        return run
+
+    def run_final(params, cache, tokens, slot, offset, last_idx,
+                  final_len, temp, key):
+        x, cache = tfm.prefill_chunk(params, cfg, cache, tokens,
+                                     slot, offset, paged=layout)
+        last_h = jax.lax.dynamic_index_in_dim(x[0], last_idx, axis=0,
+                                              keepdims=False)
+        logits = tfm.hidden_to_logits(params, cfg,
+                                      last_h[None, None])[0, 0]
+        tok, key = _sample_token(logits, temp, key, cfg.vocab_size)
+        out = dict(cache)
+        out["len"] = cache["len"].at[slot].set(final_len)
+        return tok, key, out
+
+    return run_final
+
+
+def _draft_admit_body(dcfg: ModelConfig, bucket: int):
+    """Draft-model admission step (see ``ServeEngine._draft_admit_fn``)."""
+    def admit(dparams, dcache, tokens, slot, true_len):
+        _, small = tfm.prefill(dparams, dcfg, tokens=tokens,
+                               max_len=bucket)
+
+        def write(big, new):
+            start = (0, slot) + (0,) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                big, new.astype(big.dtype), start)
+
+        new_blocks = jax.tree.map(write, dcache["blocks"],
+                                  small["blocks"])
+        lens = dcache["len"].at[slot].set(true_len)
+        return {"blocks": new_blocks, "len": lens}
+
+    return admit
+
+
+def _draft_chunk_body(dcfg: ModelConfig, final: bool):
+    """Draft-model admission-chunk step (see ``ServeEngine._draft_chunk_fn``)."""
+    if not final:
+        def run(dparams, dcache, tokens, slot, offset):
+            _, dcache = tfm.prefill_chunk(dparams, dcfg, dcache,
+                                          tokens, slot, offset)
+            return dcache
+        return run
+
+    def run_final(dparams, dcache, tokens, slot, offset, final_len):
+        _, dcache = tfm.prefill_chunk(dparams, dcfg, dcache, tokens,
+                                      slot, offset)
+        lens = dcache["len"].at[slot].set(final_len)
+        return {"blocks": dcache["blocks"], "len": lens}
+
+    return run_final
 
 
 class ServeEngine:
@@ -749,16 +974,14 @@ class ServeEngine:
         self._restored_keys: Dict[int, np.ndarray] = {}
         self._restored_folded: Dict[int, int] = {}
         ps = self.page_size
-        self._copy_page_fn = jax.jit(
-            lambda blocks, src, dst: tfm.copy_cache_page(blocks, src, dst,
-                                                         ps))
+        self._copy_page_fn = _shared_jit(
+            ("copy_page", ps), lambda: jax.jit(_page_copy_body(ps)))
         # page <-> host-tier transfers: one traced-page-index gather/scatter
         # each, so every swap-out/rehydrate reuses a single compilation
-        self._gather_page_fn = jax.jit(
-            lambda blocks, page: tfm.gather_cache_page(blocks, page, ps))
-        self._scatter_page_fn = jax.jit(
-            lambda blocks, tile, page: tfm.scatter_cache_page(blocks, tile,
-                                                              page, ps))
+        self._gather_page_fn = _shared_jit(
+            ("gather_page", ps), lambda: jax.jit(_page_gather_body(ps)))
+        self._scatter_page_fn = _shared_jit(
+            ("scatter_page", ps), lambda: jax.jit(_page_scatter_body(ps)))
         # speculative decode: rollback must be a pure length decrement,
         # which only linear (global-attention) cache layouts give us — a
         # ring-buffer row write destroys the window's oldest live position
@@ -802,13 +1025,15 @@ class ServeEngine:
                 draft_params = tfm.init_params(
                     jax.random.PRNGKey(seed + 1), draft)
             self.draft_params = draft_params
-        self._decode = jax.jit(
-            lambda p, cache, toks: tfm.decode_step(p, cfg, cache, tokens=toks,
-                                                   unroll=decode_unroll))
-        self._prefill = jax.jit(
-            lambda p, toks, ml=max_len: tfm.prefill(p, cfg, tokens=toks,
-                                                    max_len=ml))
-        self._sample_slots = jax.jit(self._sample_slots_impl)
+        self._decode = _shared_jit(
+            ("decode", cfg, decode_unroll),
+            lambda: jax.jit(_decode_body(cfg, decode_unroll)))
+        self._prefill = _shared_jit(
+            ("prefill", cfg, max_len),
+            lambda: jax.jit(_prefill_body(cfg, max_len)))
+        self._sample_slots = _shared_jit(
+            ("sample_slots", cfg.vocab_size),
+            lambda: jax.jit(_sample_slots_body(cfg.vocab_size)))
         # observability: serve_queue invariants ("no re-prefill after
         # admission", "<= 1/k host syncs per token") are asserted against
         # these counters in the tests and the CI bench smoke
@@ -859,7 +1084,13 @@ class ServeEngine:
                       "tier_swap_ins": 0, "tier_evictions": 0,
                       "tier_disk_writes": 0, "tier_disk_loads": 0,
                       "tier_integrity_failures": 0, "tier_io_errors": 0,
-                      "tier_host_pages": 0}
+                      "tier_host_pages": 0,
+                      # hot-path hygiene (REPRO_TRACE_GUARD=1): jaxpr traces
+                      # and XLA backend compiles observed across serve_queue
+                      # calls — a warmed-up steady-state queue must add zero
+                      # of either (the serve-smoke CI gate asserts it); both
+                      # stay 0 when the guard is off
+                      "trace_events": 0, "jit_cache_misses": 0}
         self._admit_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._chunk_fns = _CompiledLRU(admit_cache_size, self.stats)
         self._draft_admit_fns = _CompiledLRU(admit_cache_size, self.stats)
@@ -884,11 +1115,7 @@ class ServeEngine:
             # defensively empty the old allocator's cache bookkeeping (it is
             # about to be unreachable, but a caller holding a reference must
             # not be able to match against freed pool contents)
-            alloc.index.clear()
-            alloc.hash_of.clear()
-            for p in alloc.lru:
-                alloc.free.append(p)
-            alloc.lru.clear()
+            alloc.reset_cache_state()
         self._pc_state = None
         if self._tier is not None:
             # the host tier is in-memory prefix state too — a reset that
@@ -954,14 +1181,6 @@ class ServeEngine:
             return jax.random.categorical(key, logits / temperature, axis=-1)
         return jnp.argmax(logits, axis=-1)
 
-    def _sample_slots_impl(self, logits, temps, key):
-        """Per-slot sampling: greedy where temps[b] == 0, else categorical."""
-        logits = logits[..., :self.cfg.vocab_size]
-        greedy = jnp.argmax(logits, axis=-1)
-        safe_t = jnp.maximum(temps, 1e-6)[:, None]
-        sampled = jax.random.categorical(key, logits / safe_t, axis=-1)
-        return jnp.where(temps > 0, sampled, greedy)
-
     # -- admission -------------------------------------------------------------
 
     def _bucket_for(self, prompt_len: int) -> int:
@@ -990,50 +1209,9 @@ class ServeEngine:
         layout = self._paged_layout
 
         def build():
-            def admit(params, cache, tokens, slot, true_len, temp, key):
-                logits, small = tfm.prefill(params, cfg, tokens=tokens,
-                                            max_len=bucket)
-
-                if layout is not None:
-                    bt_slot = jax.lax.dynamic_index_in_dim(
-                        cache["block_table"], slot, axis=0, keepdims=True)
-                    pool_rows = jax.tree.leaves(cache["blocks"])[0].shape[1]
-                    # padded rows past true_len map to the OOB sentinel and
-                    # drop — they never touch pages the allocator withheld
-                    rows = tfm.paged_phys_rows(
-                        bt_slot, jnp.arange(bucket)[None],
-                        layout.page_size,
-                        jnp.minimum(true_len, layout.max_len), pool_rows)[0]
-
-                    def write(big, new):
-                        # pools are lane-padded at allocation; pad only the
-                        # freshly-prefilled rows up to the pool width
-                        return big.at[:, rows].set(
-                            tfm._pad_lanes(new[:, 0],
-                                           big.shape[-1]).astype(big.dtype),
-                            mode="drop")
-                else:
-                    def write(big, new):
-                        # leaves are (count, B, rows, ...) vs
-                        # (count, 1, rows', ...) with rows' <= rows; SSM
-                        # states carry no row dim but share the
-                        # (count, batch, ...) prefix, so the same write works
-                        start = (0, slot) + (0,) * (big.ndim - 2)
-                        return jax.lax.dynamic_update_slice(
-                            big, new.astype(big.dtype), start)
-
-                new_blocks = jax.tree.map(write, cache["blocks"],
-                                          small["blocks"])
-                lens = cache["len"].at[slot].set(true_len)
-                last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1,
-                                                    axis=0, keepdims=False)
-                tok, key = _sample_token(last, temp, key, cfg.vocab_size)
-                out = {"blocks": new_blocks, "len": lens}
-                if layout is not None:
-                    out["block_table"] = cache["block_table"]
-                return tok, key, out
-
-            return jax.jit(admit)
+            return _shared_jit(
+                ("admit", cfg, layout, bucket),
+                lambda: jax.jit(_admit_body(cfg, layout, bucket)))
 
         return self._admit_fns.get(bucket, build)
 
@@ -1047,27 +1225,12 @@ class ServeEngine:
         layout = self._paged_layout
 
         def build():
-            if not final:
-                def run(params, cache, tokens, slot, offset):
-                    _, cache = tfm.prefill_chunk(params, cfg, cache, tokens,
-                                                 slot, offset, paged=layout)
-                    return cache
-                return jax.jit(run)
-
-            def run_final(params, cache, tokens, slot, offset, last_idx,
-                          final_len, temp, key):
-                x, cache = tfm.prefill_chunk(params, cfg, cache, tokens,
-                                             slot, offset, paged=layout)
-                last_h = jax.lax.dynamic_index_in_dim(x[0], last_idx, axis=0,
-                                                      keepdims=False)
-                logits = tfm.hidden_to_logits(params, cfg,
-                                              last_h[None, None])[0, 0]
-                tok, key = _sample_token(logits, temp, key, cfg.vocab_size)
-                out = dict(cache)
-                out["len"] = cache["len"].at[slot].set(final_len)
-                return tok, key, out
-
-            return jax.jit(run_final)
+            # c enters the compiled program only through the token shape,
+            # but keying on it keeps one executable per wrapper — the LRU
+            # bound on live executables stays meaningful
+            return _shared_jit(
+                ("chunk", cfg, layout, c, final),
+                lambda: jax.jit(_chunk_body(cfg, layout, final)))
 
         return self._chunk_fns.get((c, final), build)
 
@@ -1079,21 +1242,9 @@ class ServeEngine:
         dcfg = self._draft_cfg
 
         def build():
-            def admit(dparams, dcache, tokens, slot, true_len):
-                _, small = tfm.prefill(dparams, dcfg, tokens=tokens,
-                                       max_len=bucket)
-
-                def write(big, new):
-                    start = (0, slot) + (0,) * (big.ndim - 2)
-                    return jax.lax.dynamic_update_slice(
-                        big, new.astype(big.dtype), start)
-
-                new_blocks = jax.tree.map(write, dcache["blocks"],
-                                          small["blocks"])
-                lens = dcache["len"].at[slot].set(true_len)
-                return {"blocks": new_blocks, "len": lens}
-
-            return jax.jit(admit)
+            return _shared_jit(
+                ("draft_admit", dcfg, bucket),
+                lambda: jax.jit(_draft_admit_body(dcfg, bucket)))
 
         return self._draft_admit_fns.get(bucket, build)
 
@@ -1107,20 +1258,9 @@ class ServeEngine:
         dcfg = self._draft_cfg
 
         def build():
-            if not final:
-                def run(dparams, dcache, tokens, slot, offset):
-                    _, dcache = tfm.prefill_chunk(dparams, dcfg, dcache,
-                                                  tokens, slot, offset)
-                    return dcache
-                return jax.jit(run)
-
-            def run_final(dparams, dcache, tokens, slot, offset, final_len):
-                _, dcache = tfm.prefill_chunk(dparams, dcfg, dcache, tokens,
-                                              slot, offset)
-                lens = dcache["len"].at[slot].set(final_len)
-                return {"blocks": dcache["blocks"], "len": lens}
-
-            return jax.jit(run_final)
+            return _shared_jit(
+                ("draft_chunk", dcfg, c, final),
+                lambda: jax.jit(_draft_chunk_body(dcfg, final)))
 
         return self._draft_chunk_fns.get((c, final), build)
 
@@ -1159,63 +1299,10 @@ class ServeEngine:
         untouched — one poisoned slot cannot corrupt co-scheduled output."""
         if k in self._macro_fns:
             return self._macro_fns[k]
-        cfg = self.cfg
-        vocab = cfg.vocab_size
-
-        def macro(params, cache, last, temps, active, remaining, eos, keys,
-                  fault_mask):
-            def hook(lg):
-                return jnp.where(fault_mask[:, None],
-                                 jnp.asarray(jnp.nan, lg.dtype), lg)
-
-            def step(carry, _):
-                def do(op):
-                    cache, last, active, bad, remaining, keys = op
-                    logits, cache = tfm.decode_step(params, cfg, cache,
-                                                    tokens=last, active=active,
-                                                    unroll=self.decode_unroll,
-                                                    paged=self._paged_layout,
-                                                    logit_hook=hook)
-                    finite = jnp.all(jnp.isfinite(
-                        logits[:, :vocab].astype(jnp.float32)), axis=-1)
-                    newly_bad = active & ~finite
-                    # one _sample_token per slot: the same primitive (and
-                    # key-split discipline) admission uses, so macro and
-                    # per-token scheduling share one sampling definition
-                    toks, keys2 = jax.vmap(
-                        lambda lg, t, kk: _sample_token(lg, t, kk, vocab))(
-                            logits, temps, keys)
-                    emitted = active & ~newly_bad
-                    # a slot's key advances ONLY when it emits: a bad slot
-                    # keeps the pre-sample key for the rest of the scan
-                    # (sticky — the quarantine replay depends on it), and
-                    # drained slots stop consuming their stream
-                    keys = jnp.where(emitted[:, None], keys2, keys)
-                    toks = jnp.where(emitted, toks, last[:, 0])
-                    bad = bad | newly_bad
-                    remaining = remaining - emitted.astype(remaining.dtype)
-                    hit_eos = (eos >= 0) & (toks == eos) & emitted
-                    active = emitted & (remaining > 0) & ~hit_eos
-                    return ((cache, toks[:, None], active, bad, remaining,
-                             keys),
-                            (toks, emitted, jnp.int32(1)))
-
-                def skip(op):
-                    _, last, active, _, _, _ = op
-                    return op, (last[:, 0], jnp.zeros_like(active),
-                                jnp.int32(0))
-
-                return jax.lax.cond(jnp.any(carry[2]), do, skip, carry)
-
-            carry = (cache, last, active, jnp.zeros_like(active), remaining,
-                     keys)
-            (cache, last, active, bad, remaining, keys), ys = jax.lax.scan(
-                step, carry, None, length=k)
-            toks_k, emitted_k, execd = ys                      # (k, B), .., (k,)
-            return (cache, last, active, bad, remaining, keys,
-                    toks_k.T, emitted_k.T, jnp.sum(execd))
-
-        fn = jax.jit(macro)
+        fn = _shared_jit(
+            ("macro", self.cfg, self._paged_layout, self.decode_unroll, k),
+            lambda: jax.jit(_macro_body(self.cfg, self._paged_layout,
+                                        self.decode_unroll, k)))
         self._macro_fns[k] = fn
         return fn
 
@@ -1238,171 +1325,16 @@ class ServeEngine:
         checks the verify logits, and a bad slot commits NOTHING that
         iteration (its PRNG stream rewinds to the iteration start) so the
         host can quarantine it without touching co-scheduled slots."""
-        L = spec_len
         mode = "model" if self._draft_cfg is not None else "ngram"
-        cache_key = (k, L, mode, all_greedy)
+        cache_key = (k, spec_len, mode, all_greedy)
         if cache_key in self._macro_fns:
             return self._macro_fns[cache_key]
-        cfg = self.cfg
-        vocab = cfg.vocab_size
-        dcfg = self._draft_cfg
-
-        def macro(params, dparams, cache, aux, last, temps, active,
-                  remaining, eos, keys, fault_mask):
-            def hook(lg):
-                return jnp.where(fault_mask[:, None, None],
-                                 jnp.asarray(jnp.nan, lg.dtype), lg)
-
-            def step(carry, _):
-                def spec_it(op):
-                    cache, aux, last, active, bad, remaining, keys = op
-                    keys0 = keys       # pre-iteration streams (NaN freeze)
-                    B = last.shape[0]
-                    # ---- draft: propose L tokens per slot ----------------
-                    if mode == "ngram":
-                        # bigram chain, unrolled (L is tiny and static):
-                        # d_{i+1} = table[b, d_i]
-                        ds = []
-                        cur = last[:, 0]
-                        for _i in range(L):
-                            cur = jnp.take_along_axis(
-                                aux, cur[:, None], axis=1)[:, 0]
-                            ds.append(cur)
-                        drafts = jnp.stack(ds, axis=1)              # (B, L)
-                        # deterministic draft: _spec_accept's q_dists=None
-                        # path — no (B, L, V) proposal tensor materialized
-                        q_dists = None
-                        new_aux = aux
-                    else:
-                        # draft model decodes L+1 steps in-line: the extra
-                        # step writes the last draft's K/V row so a fully
-                        # accepted window leaves the draft cache dense (its
-                        # sample is discarded)
-                        dcache = aux
-                        dlens0 = dcache["len"]
-                        dlast = last
-                        ds, qs = [], []
-                        for i in range(L + 1):
-                            dlg, dcache = tfm.decode_step(
-                                dparams, dcfg, dcache, tokens=dlast,
-                                active=active)
-                            if i == L:
-                                break
-                            if all_greedy:
-                                toks_i = jnp.argmax(
-                                    dlg[:, :vocab], -1).astype(jnp.int32)
-                            else:
-                                toks_i, keys = jax.vmap(
-                                    lambda lg, t, kk: _sample_token(
-                                        lg, t, kk, vocab))(dlg, temps, keys)
-                                qd = jax.nn.softmax(
-                                    dlg[:, :vocab].astype(jnp.float32)
-                                    / jnp.maximum(temps, 1e-6)[:, None], -1)
-                                # greedy slots accept on argmax equality;
-                                # their q row is irrelevant but normalized
-                                qs.append(qd)
-                            ds.append(toks_i)
-                            dlast = toks_i[:, None]
-                        drafts = jnp.stack(ds, axis=1)              # (B, L)
-                        q_dists = None if all_greedy else jnp.stack(qs, 1)
-                        new_aux = dcache
-                    # ---- one batched multi-position verify ---------------
-                    ver_toks = jnp.concatenate([last, drafts], axis=1)
-                    logits, cache = tfm.verify_step(params, cfg, cache,
-                                                    ver_toks, active=active,
-                                                    unroll=self.decode_unroll,
-                                                    paged=self._paged_layout,
-                                                    logit_hook=hook)
-                    # logit guard (see _macro_fn): a non-finite verify row
-                    # flags the slot sticky-bad — it commits NOTHING this
-                    # iteration (c = 0 below: lens stay, no emission, last
-                    # token unchanged) and its PRNG stream rewinds to the
-                    # iteration start so the quarantine requeue replays it
-                    finite = jnp.all(jnp.isfinite(
-                        logits[..., :vocab].astype(jnp.float32)),
-                        axis=(1, 2))
-                    newly_bad = active & ~finite
-                    if all_greedy:
-                        toks, n_acc = jax.vmap(
-                            lambda lg, d: _spec_accept_greedy(lg, d, vocab))(
-                            logits, drafts)
-                    else:
-                        toks, n_acc, keys = jax.vmap(
-                            lambda lg, d, qd, t, kk: _spec_accept(
-                                lg, d, qd, t, kk, vocab))(
-                            logits, drafts, q_dists, temps, keys)
-                    # ---- truncate to budget and first EOS ----------------
-                    pos = jnp.arange(L + 1)[None, :]
-                    c = jnp.minimum(n_acc + 1, remaining)
-                    is_eos = (eos[:, None] >= 0) & (toks == eos[:, None]) \
-                        & (pos < c[:, None])
-                    eos_idx = jnp.min(jnp.where(is_eos, pos, L + 1), axis=1)
-                    c = jnp.minimum(c, eos_idx + 1)
-                    c = jnp.where(active & ~newly_bad, c, 0)
-                    # a slot's stream advances ONLY when it commits this
-                    # iteration: bad slots rewind to the iteration start
-                    # and STAY there for the rest of the scan (they are
-                    # inactive from here on), so the quarantine requeue
-                    # replays the faulted iteration from the exact key
-                    keys = jnp.where((active & ~newly_bad)[:, None],
-                                     keys, keys0)
-                    bad = bad | newly_bad
-                    emitted = pos < c[:, None]                     # (B, L+1)
-                    # ---- commit: the length bump IS the rollback ---------
-                    lens = cache["len"] + c.astype(cache["len"].dtype)
-                    cache = dict(cache, len=lens)
-                    if mode == "model":
-                        new_aux = {"blocks": new_aux["blocks"],
-                                   "len": dlens0 + c.astype(dlens0.dtype)}
-                    new_last = jnp.take_along_axis(
-                        toks, jnp.maximum(c - 1, 0)[:, None], axis=1)
-                    new_last = jnp.where((active & ~newly_bad)[:, None],
-                                         new_last, last)
-                    remaining = remaining - c.astype(remaining.dtype)
-                    active = active & ~newly_bad & (remaining > 0) \
-                        & ~jnp.any(is_eos, 1)
-                    if mode == "ngram":
-                        # learn emitted transitions on device so repeated
-                        # phrases in the OUTPUT draft well too: ONE scatter
-                        # of all (prev -> next) pairs (uncommitted and
-                        # inactive positions index out of bounds and drop)
-                        seq = jnp.concatenate([last, toks], axis=1)
-                        prev = jnp.where(jnp.arange(L + 1)[None, :]
-                                         < c[:, None], seq[:, :-1], vocab)
-                        new_aux = new_aux.at[
-                            jnp.arange(B)[:, None], prev].set(
-                            seq[:, 1:], mode="drop")
-                    # c > 0 marks slots that were active at step entry
-                    accepted = jnp.sum(jnp.minimum(n_acc, c))
-                    drafted = jnp.sum(jnp.where(c > 0, L, 0))
-                    out_toks = jnp.where(emitted, toks, last[:, :1])
-                    return ((cache, new_aux, new_last, active, bad,
-                             remaining, keys),
-                            (out_toks, emitted, accepted, drafted,
-                             jnp.int32(1)))
-
-                def skip(op):
-                    last, active = op[2], op[3]
-                    B, w = last.shape[0], L + 1
-                    return op, (jnp.broadcast_to(last[:, :1], (B, w)),
-                                jnp.zeros((B, w), bool), jnp.int32(0),
-                                jnp.int32(0), jnp.int32(0))
-
-                return jax.lax.cond(jnp.any(carry[3]), spec_it, skip, carry)
-
-            carry = (cache, aux, last, active, jnp.zeros_like(active),
-                     remaining, keys)
-            (cache, aux, last, active, bad, remaining, keys), ys = \
-                jax.lax.scan(step, carry, None, length=k)
-            toks_k, emit_k, acc_k, drf_k, execd = ys   # (k,B,L+1) .. (k,)
-            w = k * (L + 1)
-            toks_flat = jnp.moveaxis(toks_k, 0, 1).reshape(-1, w)
-            emit_flat = jnp.moveaxis(emit_k, 0, 1).reshape(-1, w)
-            return (cache, aux, last, active, bad, remaining, keys,
-                    toks_flat, emit_flat, jnp.sum(acc_k), jnp.sum(drf_k),
-                    jnp.sum(execd))
-
-        fn = jax.jit(macro)
+        fn = _shared_jit(
+            ("spec_macro", self.cfg, self._draft_cfg, self._paged_layout,
+             self.decode_unroll, k, spec_len, all_greedy),
+            lambda: jax.jit(_spec_macro_body(
+                self.cfg, self._draft_cfg, self._paged_layout,
+                self.decode_unroll, k, spec_len, all_greedy)))
         self._macro_fns[cache_key] = fn
         return fn
 
@@ -1443,7 +1375,40 @@ class ServeEngine:
         ``self.faults``) fires injected faults at the scheduler's seams.  A
         ``ServeKilled`` fault checkpoints to ``state_dir`` (default
         ``self.state_dir``) on the way out; ``load_state`` restores.
+
+        Under ``REPRO_TRACE_GUARD=1`` (``repro.analysis.trace_guard``) the
+        jaxpr traces and XLA backend compiles that happen during the call
+        are accumulated into ``stats["trace_events"]`` /
+        ``stats["jit_cache_misses"]`` — the serve-smoke CI gate asserts a
+        warmed-up queue adds ZERO of either, i.e. nothing on the steady
+        decode path retraces.
         """
+        if not trace_guard.enabled():
+            return self._serve_queue_run(
+                requests, step_budget=step_budget, macro_steps=macro_steps,
+                prefill_chunk=prefill_chunk, spec_len=spec_len,
+                admit_budget=admit_budget, state_dir=state_dir, faults=faults)
+        trace_guard.install()
+        before = trace_guard.snapshot()
+        try:
+            return self._serve_queue_run(
+                requests, step_budget=step_budget, macro_steps=macro_steps,
+                prefill_chunk=prefill_chunk, spec_len=spec_len,
+                admit_budget=admit_budget, state_dir=state_dir, faults=faults)
+        finally:
+            traces, compiles = trace_guard.delta(before)
+            self.stats["trace_events"] += traces
+            self.stats["jit_cache_misses"] += compiles
+
+    def _serve_queue_run(self, requests: List[Request],
+                         step_budget: int = 10_000,
+                         macro_steps: Optional[int] = None,
+                         prefill_chunk: Optional[int] = None,
+                         spec_len: Optional[int] = None,
+                         admit_budget: Optional[int] = None,
+                         state_dir: Optional[str] = None,
+                         faults: Any = None) -> Dict[int, List[int]]:
+        """The scheduler loop behind ``serve_queue`` (see its docstring)."""
         k = max(1, int(self.macro_steps if macro_steps is None else macro_steps))
         chunk = int(self.prefill_chunk if prefill_chunk is None
                     else prefill_chunk)
@@ -1793,8 +1758,11 @@ class ServeEngine:
                 folded[req.uid] = len(req.tokens)
             # preserve the PRNG stream: for an admitted slot the post-macro
             # key, for one preempted MID-admission the key the interrupted
-            # admission would have used (possibly itself a resumed key)
-            resume_keys[req.uid] = (np.asarray(slot_key[b]) if admitting[b]
+            # admission would have used (possibly itself a resumed key).
+            # Explicit transfer: one readback per preemption, off the
+            # steady-state macro loop.
+            resume_keys[req.uid] = (jax.device_get(slot_key[b])
+                                    if admitting[b]
                                     else np.array(keys[b], copy=True))
             req.preemptions += 1
             if alloc is not None:
@@ -2460,16 +2428,7 @@ class ServeEngine:
         if save_pool:
             for name, arr in _flatten(jax.device_get(cache)).items():
                 arrays["cache/" + name] = arr
-        alloc_meta = None
-        if alloc is not None:
-            alloc_meta = {
-                "free": [int(p) for p in alloc.free],
-                "ref": [int(r) for r in alloc.ref],
-                "lru": [int(p) for p in alloc.lru],
-                "index": {h.hex(): int(p) for h, p in alloc.index.items()},
-                "table": np.asarray(alloc.table).tolist(),
-                "owned": [[int(p) for p in row] for row in alloc.owned],
-            }
+        alloc_meta = alloc.snapshot() if alloc is not None else None
 
         def rec(req: Request) -> Dict[str, Any]:
             arrays[f"req{req.uid}/prompt"] = \
@@ -2562,15 +2521,7 @@ class ServeEngine:
                                   prefix_cache=self.prefix_cache,
                                   cache_frac=self.prefix_cache_frac,
                                   min_shared_pages=self.min_shared_pages)
-            alloc.free = [int(p) for p in a["free"]]
-            alloc.ref = [int(r) for r in a["ref"]]
-            alloc.lru = collections.OrderedDict(
-                (int(p), None) for p in a["lru"])
-            alloc.index = {bytes.fromhex(h): int(p)
-                           for h, p in a["index"].items()}
-            alloc.hash_of = {p: h for h, p in alloc.index.items()}
-            alloc.table = np.asarray(a["table"], np.int32)
-            alloc.owned = [[int(p) for p in row] for row in a["owned"]]
+            alloc.load_snapshot(a)
             template = jax.device_get(self._empty_batched_cache())
             flat = {k[len("cache/"):]: arrays[k] for k in arrays.files
                     if k.startswith("cache/")}
@@ -2606,6 +2557,231 @@ class ServeEngine:
             [mk(r) for r in meta["pending"]]
         self.stats["state_restores"] += 1
         return reqs
+
+
+def _macro_body(cfg: ModelConfig, layout, unroll, k: int):
+    """The k-step decode macro (see ``ServeEngine._macro_fn``)."""
+    vocab = cfg.vocab_size
+
+    def macro(params, cache, last, temps, active, remaining, eos, keys,
+              fault_mask):
+        def hook(lg):
+            return jnp.where(fault_mask[:, None],
+                             jnp.asarray(jnp.nan, lg.dtype), lg)
+
+        def step(carry, _):
+            def do(op):
+                cache, last, active, bad, remaining, keys = op
+                logits, cache = tfm.decode_step(params, cfg, cache,
+                                                tokens=last, active=active,
+                                                unroll=unroll,
+                                                paged=layout,
+                                                logit_hook=hook)
+                finite = jnp.all(jnp.isfinite(
+                    logits[:, :vocab].astype(jnp.float32)), axis=-1)
+                newly_bad = active & ~finite
+                # one _sample_token per slot: the same primitive (and
+                # key-split discipline) admission uses, so macro and
+                # per-token scheduling share one sampling definition
+                toks, keys2 = jax.vmap(
+                    lambda lg, t, kk: _sample_token(lg, t, kk, vocab))(
+                        logits, temps, keys)
+                emitted = active & ~newly_bad
+                # a slot's key advances ONLY when it emits: a bad slot
+                # keeps the pre-sample key for the rest of the scan
+                # (sticky — the quarantine replay depends on it), and
+                # drained slots stop consuming their stream
+                keys = jnp.where(emitted[:, None], keys2, keys)
+                toks = jnp.where(emitted, toks, last[:, 0])
+                bad = bad | newly_bad
+                remaining = remaining - emitted.astype(remaining.dtype)
+                hit_eos = (eos >= 0) & (toks == eos) & emitted
+                active = emitted & (remaining > 0) & ~hit_eos
+                return ((cache, toks[:, None], active, bad, remaining,
+                         keys),
+                        (toks, emitted, jnp.int32(1)))
+
+            def skip(op):
+                _, last, active, _, _, _ = op
+                return op, (last[:, 0], jnp.zeros_like(active),
+                            jnp.int32(0))
+
+            return jax.lax.cond(jnp.any(carry[2]), do, skip, carry)
+
+        carry = (cache, last, active, jnp.zeros_like(active), remaining,
+                 keys)
+        (cache, last, active, bad, remaining, keys), ys = jax.lax.scan(
+            step, carry, None, length=k)
+        toks_k, emitted_k, execd = ys                      # (k, B), .., (k,)
+        return (cache, last, active, bad, remaining, keys,
+                toks_k.T, emitted_k.T, jnp.sum(execd))
+
+    return macro
+
+def _spec_macro_body(cfg: ModelConfig, dcfg, layout, unroll, k: int,
+                     spec_len: int, all_greedy: bool):
+    """The k-iteration speculative macro (see
+    ``ServeEngine._spec_macro_fn``)."""
+    L = spec_len
+    mode = "model" if dcfg is not None else "ngram"
+    vocab = cfg.vocab_size
+
+    def macro(params, dparams, cache, aux, last, temps, active,
+              remaining, eos, keys, fault_mask):
+        def hook(lg):
+            return jnp.where(fault_mask[:, None, None],
+                             jnp.asarray(jnp.nan, lg.dtype), lg)
+
+        def step(carry, _):
+            def spec_it(op):
+                cache, aux, last, active, bad, remaining, keys = op
+                keys0 = keys       # pre-iteration streams (NaN freeze)
+                B = last.shape[0]
+                # ---- draft: propose L tokens per slot ----------------
+                if mode == "ngram":
+                    # bigram chain, unrolled (L is tiny and static):
+                    # d_{i+1} = table[b, d_i]
+                    ds = []
+                    cur = last[:, 0]
+                    for _i in range(L):
+                        cur = jnp.take_along_axis(
+                            aux, cur[:, None], axis=1)[:, 0]
+                        ds.append(cur)
+                    drafts = jnp.stack(ds, axis=1)              # (B, L)
+                    # deterministic draft: _spec_accept's q_dists=None
+                    # path — no (B, L, V) proposal tensor materialized
+                    q_dists = None
+                    new_aux = aux
+                else:
+                    # draft model decodes L+1 steps in-line: the extra
+                    # step writes the last draft's K/V row so a fully
+                    # accepted window leaves the draft cache dense (its
+                    # sample is discarded)
+                    dcache = aux
+                    dlens0 = dcache["len"]
+                    dlast = last
+                    ds, qs = [], []
+                    for i in range(L + 1):
+                        dlg, dcache = tfm.decode_step(
+                            dparams, dcfg, dcache, tokens=dlast,
+                            active=active)
+                        if i == L:
+                            break
+                        if all_greedy:
+                            toks_i = jnp.argmax(
+                                dlg[:, :vocab], -1).astype(jnp.int32)
+                        else:
+                            toks_i, keys = jax.vmap(
+                                lambda lg, t, kk: _sample_token(
+                                    lg, t, kk, vocab))(dlg, temps, keys)
+                            qd = jax.nn.softmax(
+                                dlg[:, :vocab].astype(jnp.float32)
+                                / jnp.maximum(temps, 1e-6)[:, None], -1)
+                            # greedy slots accept on argmax equality;
+                            # their q row is irrelevant but normalized
+                            qs.append(qd)
+                        ds.append(toks_i)
+                        dlast = toks_i[:, None]
+                    drafts = jnp.stack(ds, axis=1)              # (B, L)
+                    q_dists = None if all_greedy else jnp.stack(qs, 1)
+                    new_aux = dcache
+                # ---- one batched multi-position verify ---------------
+                ver_toks = jnp.concatenate([last, drafts], axis=1)
+                logits, cache = tfm.verify_step(params, cfg, cache,
+                                                ver_toks, active=active,
+                                                unroll=unroll,
+                                                paged=layout,
+                                                logit_hook=hook)
+                # logit guard (see _macro_fn): a non-finite verify row
+                # flags the slot sticky-bad — it commits NOTHING this
+                # iteration (c = 0 below: lens stay, no emission, last
+                # token unchanged) and its PRNG stream rewinds to the
+                # iteration start so the quarantine requeue replays it
+                finite = jnp.all(jnp.isfinite(
+                    logits[..., :vocab].astype(jnp.float32)),
+                    axis=(1, 2))
+                newly_bad = active & ~finite
+                if all_greedy:
+                    toks, n_acc = jax.vmap(
+                        lambda lg, d: _spec_accept_greedy(lg, d, vocab))(
+                        logits, drafts)
+                else:
+                    toks, n_acc, keys = jax.vmap(
+                        lambda lg, d, qd, t, kk: _spec_accept(
+                            lg, d, qd, t, kk, vocab))(
+                        logits, drafts, q_dists, temps, keys)
+                # ---- truncate to budget and first EOS ----------------
+                pos = jnp.arange(L + 1)[None, :]
+                c = jnp.minimum(n_acc + 1, remaining)
+                is_eos = (eos[:, None] >= 0) & (toks == eos[:, None]) \
+                    & (pos < c[:, None])
+                eos_idx = jnp.min(jnp.where(is_eos, pos, L + 1), axis=1)
+                c = jnp.minimum(c, eos_idx + 1)
+                c = jnp.where(active & ~newly_bad, c, 0)
+                # a slot's stream advances ONLY when it commits this
+                # iteration: bad slots rewind to the iteration start
+                # and STAY there for the rest of the scan (they are
+                # inactive from here on), so the quarantine requeue
+                # replays the faulted iteration from the exact key
+                keys = jnp.where((active & ~newly_bad)[:, None],
+                                 keys, keys0)
+                bad = bad | newly_bad
+                emitted = pos < c[:, None]                     # (B, L+1)
+                # ---- commit: the length bump IS the rollback ---------
+                lens = cache["len"] + c.astype(cache["len"].dtype)
+                cache = dict(cache, len=lens)
+                if mode == "model":
+                    new_aux = {"blocks": new_aux["blocks"],
+                               "len": dlens0 + c.astype(dlens0.dtype)}
+                new_last = jnp.take_along_axis(
+                    toks, jnp.maximum(c - 1, 0)[:, None], axis=1)
+                new_last = jnp.where((active & ~newly_bad)[:, None],
+                                     new_last, last)
+                remaining = remaining - c.astype(remaining.dtype)
+                active = active & ~newly_bad & (remaining > 0) \
+                    & ~jnp.any(is_eos, 1)
+                if mode == "ngram":
+                    # learn emitted transitions on device so repeated
+                    # phrases in the OUTPUT draft well too: ONE scatter
+                    # of all (prev -> next) pairs (uncommitted and
+                    # inactive positions index out of bounds and drop)
+                    seq = jnp.concatenate([last, toks], axis=1)
+                    prev = jnp.where(jnp.arange(L + 1)[None, :]
+                                     < c[:, None], seq[:, :-1], vocab)
+                    new_aux = new_aux.at[
+                        jnp.arange(B)[:, None], prev].set(
+                        seq[:, 1:], mode="drop")
+                # c > 0 marks slots that were active at step entry
+                accepted = jnp.sum(jnp.minimum(n_acc, c))
+                drafted = jnp.sum(jnp.where(c > 0, L, 0))
+                out_toks = jnp.where(emitted, toks, last[:, :1])
+                return ((cache, new_aux, new_last, active, bad,
+                         remaining, keys),
+                        (out_toks, emitted, accepted, drafted,
+                         jnp.int32(1)))
+
+            def skip(op):
+                last, active = op[2], op[3]
+                B, w = last.shape[0], L + 1
+                return op, (jnp.broadcast_to(last[:, :1], (B, w)),
+                            jnp.zeros((B, w), bool), jnp.int32(0),
+                            jnp.int32(0), jnp.int32(0))
+
+            return jax.lax.cond(jnp.any(carry[3]), spec_it, skip, carry)
+
+        carry = (cache, aux, last, active, jnp.zeros_like(active),
+                 remaining, keys)
+        (cache, aux, last, active, bad, remaining, keys), ys = \
+            jax.lax.scan(step, carry, None, length=k)
+        toks_k, emit_k, acc_k, drf_k, execd = ys   # (k,B,L+1) .. (k,)
+        w = k * (L + 1)
+        toks_flat = jnp.moveaxis(toks_k, 0, 1).reshape(-1, w)
+        emit_flat = jnp.moveaxis(emit_k, 0, 1).reshape(-1, w)
+        return (cache, aux, last, active, bad, remaining, keys,
+                toks_flat, emit_flat, jnp.sum(acc_k), jnp.sum(drf_k),
+                jnp.sum(execd))
+
+    return macro
 
 
 def throughput_tokens_per_s(engine: ServeEngine, batch: int, prompt_len: int,

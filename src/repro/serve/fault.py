@@ -133,13 +133,16 @@ class FaultInjector:
                     break
                 # mark referenced so no release path ever double-frees a
                 # held page (nothing owns it, so nothing unrefs it)
+                # repro: allow[engine-invariant] fault injection pins pages behind the allocator's back to simulate exhaustion
                 alloc.ref[pg] = 1
                 taken.append(pg)
             self.held.extend(taken)
             self.log.append((macro_idx, "exhaust", len(taken)))
         if p.restore_at == macro_idx and alloc is not None and self.held:
             for pg in self.held:
+                # repro: allow[engine-invariant] fault injection returns its pinned pages
                 alloc.ref[pg] = 0
+                # repro: allow[engine-invariant] fault injection returns its pinned pages
                 alloc.free.append(pg)
             self.log.append((macro_idx, "restore", len(self.held)))
             self.held = []
@@ -149,6 +152,7 @@ class FaultInjector:
                 live = [b for b in range(len(slots)) if slots[b] is not None]
                 tgt = live[0] if live else None
             if tgt is not None and alloc.owned[tgt]:
+                # repro: allow[engine-invariant] deliberate block-table corruption — the validation path under test must catch it
                 alloc.table[tgt, 0] = \
                     (int(alloc.table[tgt, 0]) + 1) % alloc.num_pages
                 self.log.append((macro_idx, "corrupt", tgt))

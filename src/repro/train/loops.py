@@ -140,13 +140,14 @@ def train_resnet_qat(config: Dict, depth: int = 20, wbits: int = 4,
                                            jnp.asarray(imgs),
                                            jnp.asarray(labels),
                                            lr_t, mom_t, wd_t)
-            epoch_losses.append(float(loss))
+            epoch_losses.append(float(jax.device_get(loss)))
         losses.append(float(np.mean(epoch_losses)))
         if not np.isfinite(losses[-1]):
             return {"accuracy": float("nan")}, losses
 
     imgs, labels = data.fixed_eval(scale.eval_samples)
-    acc = float(evaluate(params, state, jnp.asarray(imgs), jnp.asarray(labels)))
+    acc = float(jax.device_get(
+        evaluate(params, state, jnp.asarray(imgs), jnp.asarray(labels))))
     return {"accuracy": acc}, losses
 
 
@@ -221,7 +222,7 @@ def eval_lm_suite(params, n: int, seed: int = 99) -> Dict[str, float]:
         rng = np.random.default_rng(seed + seq)
         toks, labels = _transform_batch(kind, rng, n, seq, TINY_LM.vocab_size)
         logits = _lm_eval_fwd(seq)(params, jnp.asarray(toks))
-        pred = np.asarray(jnp.argmax(logits, -1))
+        pred = jax.device_get(jnp.argmax(logits, -1))
         mask = labels >= 0
         out[f"{kind}_{seq}"] = float((pred[mask] == labels[mask]).mean())
     return out
@@ -361,7 +362,7 @@ def train_qlora(config: Dict, scheme: QuantScheme = QuantScheme.NF4,
             qbase, trainable, m, v, count, jnp.asarray(toks),
             jnp.asarray(labels), jnp.asarray(lr_i), jnp.asarray(wd),
             jnp.asarray(gnorm), alpha_scale)
-        losses.append(float(loss))
+        losses.append(float(jax.device_get(loss)))
         if not np.isfinite(losses[-1]):
             return {f"{k}_{s}": float("nan") for k, s in LM_EVAL_SUITE}, losses
 

@@ -183,6 +183,8 @@ class Trainer:
         self.step += 1
         if (self.ckpt is not None and self.step % self.tc.ckpt_every == 0):
             self.save()
+        # one batched transfer instead of a blocking readback per metric
+        metrics = jax.device_get(metrics)
         return {k: float(v) for k, v in metrics.items()}
 
     def save(self):

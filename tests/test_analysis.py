@@ -1,0 +1,486 @@
+"""repro.analysis static checkers + runtime trace guard (ISSUE 9).
+
+True-positive / false-positive corpora for the four checkers (host-sync,
+recompile, kernel-contract, engine-invariant), the suppression syntax,
+the self-check that the repo's own ``src/`` tree is clean at HEAD, and
+the runtime half: trace-guard counters, the engine's
+``trace_events``/``jit_cache_misses`` stats, and the shared jit cache
+that lets a sibling engine reuse a warmed engine's executables.
+"""
+import os
+import pathlib
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis.__main__ import run as analysis_run
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.common import SourceTree, apply_suppressions
+from repro.analysis import (engine_invariants, hostsync, kernelcontract,
+                            recompile, trace_guard)
+
+REPO_SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+def _tree(**files):
+    """SourceTree from {filename: source} snippets (dedented)."""
+    return SourceTree((pathlib.Path(name), textwrap.dedent(src))
+                      for name, src in files.items())
+
+
+def _check(checker, **files):
+    tree = _tree(**files)
+    findings = checker.check(tree, CallGraph(tree))
+    return apply_suppressions(tree, findings)
+
+
+# ---------------------------------------------------------------- host-sync
+
+
+class TestHostSync:
+    def test_scalar_cast_on_device_value_flagged(self):
+        fs = _check(hostsync, **{"m.py": """
+            import jax.numpy as jnp
+
+            def f(x):
+                y = jnp.sum(x)
+                return int(y)
+            """})
+        assert any("int() on a device value" in f.message for f in fs)
+
+    def test_branch_on_device_value_flagged(self):
+        fs = _check(hostsync, **{"m.py": """
+            import jax.numpy as jnp
+
+            def f(x):
+                y = jnp.max(x)
+                if y > 0:
+                    return 1
+                return 0
+            """})
+        assert any("branching on a device value" in f.message for f in fs)
+
+    def test_iterating_device_array_flagged(self):
+        fs = _check(hostsync, **{"m.py": """
+            import jax.numpy as jnp
+
+            def f(x):
+                out = []
+                for v in jnp.cumsum(x):
+                    out.append(v)
+                return out
+            """})
+        assert any("iterating a device array" in f.message for f in fs)
+
+    def test_device_get_sanctioned_not_flagged(self):
+        # the explicit-transfer idiom: device_get result is a host value,
+        # so downstream int()/branching is clean
+        fs = _check(hostsync, **{"m.py": """
+            import jax
+            import jax.numpy as jnp
+
+            def f(x):
+                y = jax.device_get(jnp.sum(x))
+                if y > 0:
+                    return int(y)
+                return 0
+            """})
+        assert fs == []
+
+    def test_numpy_on_host_values_not_flagged(self):
+        fs = _check(hostsync, **{"m.py": """
+            import numpy as np
+
+            def f(n):
+                a = np.arange(n)
+                return int(np.sum(a))
+            """})
+        assert fs == []
+
+    def test_branch_inside_jitted_fn_flagged_as_traced(self):
+        fs = _check(hostsync, **{"m.py": """
+            import jax
+
+            def step(x):
+                if x > 0:
+                    return x
+                return -x
+
+            g = jax.jit(step)
+            """})
+        assert any("traced (jit) code" in f.message for f in fs)
+
+    def test_shared_cache_jit_attr_is_device_callable(self):
+        # self._decode assigned via a shared-cache indirection still marks
+        # the attribute as returning device values
+        fs = _check(hostsync, **{"m.py": """
+            import jax
+
+            def _cache(key, build):
+                return build()
+
+            class Eng:
+                def __init__(self, f):
+                    self._decode = _cache("k", lambda: jax.jit(f))
+
+                def loop(self, x):
+                    y = self._decode(x)
+                    return float(y)
+            """})
+        assert any("float() on a device value" in f.message for f in fs)
+
+
+# ---------------------------------------------------------------- recompile
+
+
+class TestRecompile:
+    def test_jit_inside_loop_flagged(self):
+        fs = _check(recompile, **{"m.py": """
+            import jax
+
+            def f(fns, x):
+                for fn in fns:
+                    x = jax.jit(fn)(x)
+                return x
+            """})
+        assert any("inside a loop body" in f.message for f in fs)
+
+    def test_immediately_invoked_jit_flagged(self):
+        fs = _check(recompile, **{"m.py": """
+            import jax
+
+            def f(g, x):
+                return jax.jit(g)(x)
+            """})
+        assert any("invoked immediately" in f.message for f in fs)
+
+    def test_unhashable_partial_static_flagged(self):
+        fs = _check(recompile, **{"m.py": """
+            import functools
+            import jax
+
+            def f(g, x):
+                h = jax.jit(functools.partial(g, sizes=[1, 2, 3]))
+                return h(x)
+            """})
+        assert any("unhashable" in f.message for f in fs)
+
+    def test_loop_variable_to_nonstatic_param_flagged(self):
+        fs = _check(recompile, **{"m.py": """
+            import jax
+
+            @jax.jit
+            def step(x, k):
+                return x * k
+
+            def f(x):
+                for k in range(8):
+                    x = step(x, k)
+                return x
+            """})
+        assert any("loop variable 'k'" in f.message for f in fs)
+
+    def test_static_loop_variable_not_flagged(self):
+        fs = _check(recompile, **{"m.py": """
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("k",))
+            def step(x, k):
+                return x * k
+
+            def f(x):
+                for k in range(8):
+                    x = step(x, k)
+                return x
+            """})
+        assert not any("loop variable" in f.message for f in fs)
+
+    def test_closure_over_mutable_attr_flagged(self):
+        fs = _check(recompile, **{"m.py": """
+            import jax
+
+            class Eng:
+                def __init__(self):
+                    self.temp = 1.0
+                    self.fn = jax.jit(lambda x: x * self.temp)
+
+                def set_temp(self, t):
+                    self.temp = t
+            """})
+        assert any("closes over self.temp" in f.message for f in fs)
+
+    def test_hoisted_jit_not_flagged(self):
+        fs = _check(recompile, **{"m.py": """
+            import jax
+
+            def f(g, xs):
+                step = jax.jit(g)
+                out = [step(x) for x in xs]
+                return out
+            """})
+        assert fs == []
+
+
+# ----------------------------------------------------------- kernel-contract
+
+
+class TestKernelContract:
+    def test_index_map_arity_mismatch_flagged(self):
+        fs = _check(kernelcontract, **{"kernels/k.py": """
+            import jax.experimental.pallas as pl
+
+            def launch(x):
+                return pl.pallas_call(
+                    kernel,
+                    grid=(4, 4),
+                    in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+                )(x)
+            """})
+        assert any("grid has rank 2" in f.message for f in fs)
+
+    def test_index_return_width_mismatch_flagged(self):
+        fs = _check(kernelcontract, **{"kernels/k.py": """
+            import jax.experimental.pallas as pl
+
+            def launch(x):
+                return pl.pallas_call(
+                    kernel,
+                    grid=(4,),
+                    in_specs=[pl.BlockSpec((8, 128), lambda i: (i,))],
+                )(x)
+            """})
+        assert any("1 indices for a 2-dimensional block" in f.message
+                   for f in fs)
+
+    def test_matching_blockspec_not_flagged(self):
+        fs = _check(kernelcontract, **{"kernels/k.py": """
+            import jax.experimental.pallas as pl
+
+            def launch(x):
+                return pl.pallas_call(
+                    kernel,
+                    grid=(4, 4),
+                    in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+                )(x)
+            """})
+        assert fs == []
+
+    def test_scalar_prefetch_args_allowed(self):
+        fs = _check(kernelcontract, **{"kernels/k.py": """
+            import jax.experimental.pallas as pl
+
+            def launch(x):
+                return pl.pallas_call(
+                    kernel,
+                    grid=(4,),
+                    num_scalar_prefetch=1,
+                    in_specs=[pl.BlockSpec((8, 128),
+                                           lambda i, ref: (i, 0))],
+                )(x)
+            """})
+        assert fs == []
+
+    def test_missing_scale_kwarg_flagged(self):
+        fs = _check(kernelcontract, **{"kernels/wrap.py": """
+            from repro.kernels.attention import kernel as K
+
+            def dispatch(q, k, v):
+                return K.flash_decode(q, k, v)
+            """})
+        assert any("without explicit scale=" in f.message for f in fs)
+
+    def test_scale_kwarg_present_not_flagged(self):
+        fs = _check(kernelcontract, **{"kernels/wrap.py": """
+            from repro.kernels.attention import kernel as K
+
+            def dispatch(q, k, v, scale):
+                return K.flash_decode(q, k, v, scale=scale)
+            """})
+        assert fs == []
+
+
+# ---------------------------------------------------------- engine-invariant
+
+
+class TestEngineInvariant:
+    def test_direct_refcount_mutation_flagged(self):
+        fs = _check(engine_invariants, **{"sched.py": """
+            def release(alloc, page):
+                alloc.ref[page] -= 1
+            """})
+        assert any("allocator .ref" in f.message for f in fs)
+
+    def test_free_list_append_flagged(self):
+        fs = _check(engine_invariants, **{"sched.py": """
+            def release(alloc, page):
+                alloc.free.append(page)
+            """})
+        assert any("mutating call .append() on allocator .free" in f.message
+                   for f in fs)
+
+    def test_constructed_allocator_tracked_by_assignment(self):
+        fs = _check(engine_invariants, **{"sched.py": """
+            from repro.serve.paged import PageAllocator
+
+            def build(n):
+                pool = PageAllocator(n, 32)
+                del pool.index["k"]
+                return pool
+            """})
+        assert any("del of allocator .index" in f.message for f in fs)
+
+    def test_mutation_inside_allocator_class_allowed(self):
+        fs = _check(engine_invariants, **{"paged.py": """
+            class PageAllocator:
+                def __init__(self, n, page_size):
+                    self.free = list(range(n))
+                    self.ref = [0] * n
+
+                def _take_page(self):
+                    p = self.free.pop()
+                    self.ref[p] = 1
+                    return p
+            """})
+        assert fs == []
+
+    def test_spill_hook_seam_allowed(self):
+        fs = _check(engine_invariants, **{"sched.py": """
+            def wire(alloc, tier):
+                alloc.spill_hook = tier.spill
+            """})
+        assert fs == []
+
+
+# -------------------------------------------------------------- suppression
+
+
+class TestSuppression:
+    def test_reasoned_suppression_drops_finding(self):
+        fs = _check(hostsync, **{"m.py": """
+            import jax.numpy as jnp
+
+            def f(x):
+                y = jnp.sum(x)
+                # repro: allow[host-sync] one deliberate readback per batch
+                return int(y)
+            """})
+        assert fs == []
+
+    def test_reasonless_suppression_is_itself_a_finding(self):
+        fs = _check(hostsync, **{"m.py": """
+            import jax.numpy as jnp
+
+            def f(x):
+                y = jnp.sum(x)
+                return int(y)  # repro: allow[host-sync]
+            """})
+        assert [f.checker for f in fs] == ["suppression"]
+        assert "needs a reason" in fs[0].message
+
+    def test_suppression_is_checker_scoped(self):
+        # an allow[recompile] does not silence a host-sync finding
+        fs = _check(hostsync, **{"m.py": """
+            import jax.numpy as jnp
+
+            def f(x):
+                y = jnp.sum(x)
+                # repro: allow[recompile] wrong checker on purpose
+                return int(y)
+            """})
+        assert any(f.checker == "host-sync" for f in fs)
+
+
+# ---------------------------------------------------------------- self-check
+
+
+class TestRepoIsClean:
+    def test_analysis_over_src_is_clean_at_head(self):
+        """The CI lint job in spirit: zero findings over the repo's src/."""
+        findings = analysis_run([str(REPO_SRC)],
+                                ["host-sync", "recompile", "kernel-contract",
+                                 "engine-invariant"])
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# ------------------------------------------------------------- trace guard
+
+
+class TestTraceGuard:
+    def test_enabled_reads_env(self, monkeypatch):
+        monkeypatch.delenv("REPRO_TRACE_GUARD", raising=False)
+        assert not trace_guard.enabled()
+        monkeypatch.setenv("REPRO_TRACE_GUARD", "0")
+        assert not trace_guard.enabled()
+        monkeypatch.setenv("REPRO_TRACE_GUARD", "1")
+        assert trace_guard.enabled()
+
+    def test_counters_observe_fresh_trace_and_compile(self):
+        import jax
+        import jax.numpy as jnp
+        assert trace_guard.install()
+        before = trace_guard.snapshot()
+
+        @jax.jit
+        def fresh(x):
+            return jnp.tanh(x) * 3
+
+        fresh(jnp.arange(4.0)).block_until_ready()
+        traces, compiles = trace_guard.delta(before)
+        assert traces >= 1 and compiles >= 1
+        # the warmed callable adds neither
+        before = trace_guard.snapshot()
+        fresh(jnp.arange(4.0)).block_until_ready()
+        assert trace_guard.delta(before) == (0, 0)
+
+
+class TestEngineTraceStats:
+    @pytest.fixture()
+    def pocket(self):
+        import jax
+        from repro.configs.paper_models import POCKET
+        from repro.models import transformer as tfm
+        return POCKET, tfm.init_params(jax.random.PRNGKey(0), POCKET)
+
+    def _engine(self, pocket, **kw):
+        from repro.serve import ServeEngine
+        cfg, params = pocket
+        return ServeEngine(cfg, params, scheme="bf16", max_batch=2,
+                           max_len=48, macro_steps=4, **kw)
+
+    def _reqs(self, cfg, uids):
+        from repro.serve import Request
+        return [Request(uid=u,
+                        prompt=(np.arange(8 + u, dtype=np.int32)
+                                % cfg.vocab_size),
+                        max_new_tokens=4) for u in uids]
+
+    def test_stats_zero_when_guard_off(self, pocket, monkeypatch):
+        monkeypatch.delenv("REPRO_TRACE_GUARD", raising=False)
+        eng = self._engine(pocket)
+        eng.serve_queue(self._reqs(pocket[0], [0, 1]))
+        assert eng.stats["trace_events"] == 0
+        assert eng.stats["jit_cache_misses"] == 0
+
+    def test_warmed_engine_adds_zero(self, pocket, monkeypatch):
+        monkeypatch.setenv("REPRO_TRACE_GUARD", "1")
+        eng = self._engine(pocket)
+        eng.serve_queue(self._reqs(pocket[0], [0, 1]))      # warmup
+        eng.stats["trace_events"] = 0
+        eng.stats["jit_cache_misses"] = 0
+        eng.serve_queue(self._reqs(pocket[0], [2, 3]))      # same shapes
+        assert eng.stats["trace_events"] == 0
+        assert eng.stats["jit_cache_misses"] == 0
+
+    def test_sibling_engine_reuses_shared_executables(self, pocket,
+                                                      monkeypatch):
+        """The shared jit cache: a same-geometry sibling engine must not
+        recompile the step functions the first engine already built."""
+        monkeypatch.setenv("REPRO_TRACE_GUARD", "1")
+        reqs = lambda uids: self._reqs(pocket[0], uids)
+        first = self._engine(pocket)
+        first.serve_queue(reqs([0, 1]))
+        sibling = self._engine(pocket)
+        sibling.serve_queue(reqs([2, 3]))
+        assert sibling.stats["jit_cache_misses"] == 0
