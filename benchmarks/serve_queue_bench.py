@@ -42,6 +42,14 @@ tokens per request):
   no crash, every faulted request carries a non-empty ``finish_reason``,
   unfaulted co-scheduled requests stay token-exact, and kill+restore
   completes the batch.
+* ``queue/cluster_*`` (``--chaos``) — the replicated serving cluster
+  (ISSUE 10): 1-worker vs 2-worker throughput on a shared-prefix workload
+  with the prefix-affinity router's hit rate, plus the failover gate — one
+  of two workers killed mid-batch must leave every request completed
+  EXACTLY once (token parity with the uninterrupted single-engine run),
+  zero duplicate commits, nonzero ``tier_rehydrates`` (the survivor
+  re-prefills warm off the shared durable tier), and the detection ->
+  recommit recovery latency is reported.
 * ``queue/trace_guard`` — hot-path hygiene (ISSUE 9): the queue runs twice
   under ``REPRO_TRACE_GUARD=1`` on one engine.  The cold run pays the jaxpr
   traces / XLA compiles of warmup; the second, identical run must add ZERO
@@ -628,6 +636,122 @@ def _chaos_section(bench: Dict, rows: List[Row], ci: bool) -> None:
                 + ("" if ok else " -- CHAOS SMOKE FAILED")))
 
 
+def _cluster_section(bench: Dict, rows: List[Row], ci: bool) -> None:
+    """Replicated serving cluster (ISSUE 10): what supervision buys.
+
+    * ``workers`` — the same shared-prefix workload on a 1-worker vs a
+      2-worker cluster (second wave measured, first wave warms the shared
+      tier + the router's page-ownership map); reports tokens/s and the
+      affinity router's hit rate.
+    * ``failover`` — one of two workers killed mid-batch: every request
+      must complete (exactly once — token parity with the uninterrupted
+      single-engine run proves nothing was dropped OR double-served), with
+      zero duplicate commits, nonzero ``tier_rehydrates`` (the survivor
+      re-prefilled WARM through the shared durable tier), and the
+      detection -> recommit recovery latency reported.
+    """
+    import shutil
+    import tempfile
+
+    from repro.serve.cluster import ServeCluster
+    from repro.serve.fault import parse_chaos
+
+    params32 = tfm.init_params(jax.random.PRNGKey(0), POCKET,
+                               dtype=jnp.float32)
+
+    def make_engine(**kw):
+        return ServeEngine(POCKET, params32, scheme="bf16", max_batch=4,
+                           max_len=64, page_size=16, **kw)
+
+    sys_ids = (np.arange(40, dtype=np.int32) * 3 + 1) % POCKET.vocab_size
+    n_reqs = 4 if ci else 8
+
+    def mk_shared(seed=17):
+        rng = np.random.default_rng(seed)
+        return [Request(uid=i,
+                        prompt=np.concatenate(
+                            [sys_ids,
+                             rng.integers(0, POCKET.vocab_size,
+                                          (int(rng.integers(2, 8)),))
+                             .astype(np.int32)]),
+                        max_new_tokens=16) for i in range(n_reqs)]
+
+    ref = make_engine().serve_queue(mk_shared())         # also warms the jit
+    ref2 = make_engine().serve_queue(mk_shared(seed=19))
+    out: Dict[str, object] = {"workers": {}}
+    bench["cluster"] = out
+
+    roots = []
+    try:
+        parity_ok = True
+        for n in (1, 2):
+            root = tempfile.mkdtemp(prefix=f"bench_cluster_{n}w_")
+            roots.append(root)
+            cl = ServeCluster(make_engine, workers=n, state_root=root)
+            parity_ok &= cl.serve_queue(mk_shared()) == ref   # warm wave
+            t0 = time.perf_counter()
+            got = cl.serve_queue(mk_shared(seed=19))
+            dt = time.perf_counter() - t0
+            parity_ok &= got == ref2
+            toks = sum(len(v) for v in got.values())
+            hits, misses = (cl.stats["affinity_hits"],
+                            cl.stats["affinity_misses"])
+            rec = {"tokens_per_s": toks / max(dt, 1e-9),
+                   "affinity_hits": hits,
+                   "affinity_misses": misses,
+                   "affinity_hit_rate": hits / max(hits + misses, 1),
+                   "worker_deaths": cl.stats["worker_deaths"]}
+            out["workers"][n] = rec
+            rows.append(Row(
+                name=f"serve_queue/cluster_{n}w",
+                us_per_call=1e6 / max(rec["tokens_per_s"], 1e-9),
+                derived=f"{rec['tokens_per_s']:.1f} tok/s; affinity hit "
+                        f"rate {rec['affinity_hit_rate']:.2f} "
+                        f"({hits}/{hits + misses})"))
+        out["healthy_parity_ok"] = bool(parity_ok)
+        out["affinity_hits_nonzero"] = bool(
+            out["workers"][2]["affinity_hits"] > 0)
+
+        # -- kill one of two workers mid-batch ------------------------------
+        root = tempfile.mkdtemp(prefix="bench_cluster_kill_")
+        roots.append(root)
+        cl = ServeCluster(make_engine, workers=2, state_root=root,
+                          breaker_cooldown_s=0.2,
+                          faults=parse_chaos("kill_worker@1:0"))
+        reqs = mk_shared()
+        t0 = time.perf_counter()
+        got = cl.serve_queue(reqs)
+        dt = time.perf_counter() - t0
+        es = cl.engine_stats()
+        lat = cl.recovery_latency_s()
+        fo = {"duration_s": dt,
+              "exact": bool(got == ref),
+              "all_complete": bool(all(r.done for r in reqs)),
+              "worker_deaths": cl.stats["worker_deaths"],
+              "failovers": cl.stats["failovers"],
+              "failed_over_requests": cl.stats["failed_over_requests"],
+              "duplicate_commits": es.get("duplicate_uids_dropped", 0),
+              "tier_rehydrates": es.get("tier_rehydrates", 0),
+              "recovery_latency_s": lat}
+        out["failover"] = fo
+        out["failover_ok"] = bool(
+            fo["exact"] and fo["all_complete"]
+            and fo["worker_deaths"] == 1
+            and fo["failed_over_requests"] == 0
+            and fo["tier_rehydrates"] > 0)
+        rows.append(Row(
+            name="serve_queue/cluster_failover",
+            us_per_call=lat["mean"] * 1e6,
+            derived=f"1 of 2 workers killed: recovery mean "
+                    f"{lat['mean'] * 1e3:.0f}ms max "
+                    f"{lat['max'] * 1e3:.0f}ms over {lat['count']} "
+                    f"requests; {fo['tier_rehydrates']} tier rehydrates; "
+                    f"parity={'ok' if fo['exact'] else 'FAIL'}"))
+    finally:
+        for root in roots:
+            shutil.rmtree(root, ignore_errors=True)
+
+
 def _tier_section(bench: Dict, rows: List[Row], ci: bool) -> None:
     """KV tiering (ISSUE 8): what the swap path buys.
 
@@ -1109,6 +1233,9 @@ def run(scale: str = None, ci: bool = False, spec_len: int = 4,
     # -- fault-injection smoke (deadlines/quarantine/kill+restore) ----------
     if chaos:
         _chaos_section(bench, rows, ci)
+        # replicated cluster: worker scaling, affinity hit rate, and the
+        # kill-one-of-two exactly-once failover gate
+        _cluster_section(bench, rows, ci)
 
     # -- prefix cache: warm vs cold TTFT on a 75%-shared-prompt workload ----
     _prefix_section(bench, rows, ci)
@@ -1371,6 +1498,28 @@ def main() -> None:
                     "swap-path chaos failed: a corrupted spill/store was "
                     "served, went undetected, or the killed engine's "
                     "sibling could not rehydrate (see chaos.runs)")
+        if "cluster" in bench:
+            cu = bench["cluster"]
+            if not cu["healthy_parity_ok"]:
+                failures.append("a healthy cluster run did not match the "
+                                "single-engine tokens exactly")
+            if not cu["affinity_hits_nonzero"]:
+                failures.append("the affinity router recorded ZERO hits on "
+                                "a repeated shared-prefix workload")
+            fo = cu["failover"]
+            if not cu["failover_ok"]:
+                failures.append(
+                    "cluster failover failed: killing 1 of 2 workers must "
+                    "complete every request exactly once, warm through the "
+                    f"shared tier (exact={fo['exact']}, "
+                    f"deaths={fo['worker_deaths']}, "
+                    f"failed_over={fo['failed_over_requests']}, "
+                    f"rehydrates={fo['tier_rehydrates']})")
+            if fo["duplicate_commits"] != 0:
+                failures.append(
+                    f"cluster failover produced {fo['duplicate_commits']} "
+                    f"duplicate uid submissions at worker engines — the "
+                    f"exactly-once guard is leaking")
         tg = bench["trace_guard"]
         if not tg["zero_recompile_ok"]:
             failures.append(

@@ -354,6 +354,44 @@ def serve_space() -> SearchSpace:
                          "instead of admitting work the pool cannot hold; "
                          "requests with progress (preempted/quarantined) "
                          "are never backpressure-rejected."),
+        UniformInt("cluster_workers", 1, 8, 2,
+                   doc="Replicated engine workers behind the cluster "
+                       "router.  Fleet sizing is the canonical "
+                       "hardware-aware knob: more workers buy decode "
+                       "parallelism and failover headroom, but split the "
+                       "per-worker KV pool and dilute prefix-cache "
+                       "locality."),
+        Categorical("cluster_router", ("affinity", "least_loaded",
+                                       "round_robin"), "affinity",
+                    doc="Request router policy: prefix-affinity (route "
+                        "shared-prefix traffic to the worker that served "
+                        "the prefix last, falling back to least-loaded), "
+                        "pure least-loaded, or round-robin.  Affinity wins "
+                        "on system-prompt-heavy traffic; least-loaded wins "
+                        "when prompts share nothing."),
+        UniformFloat("cluster_watchdog_s", 0.5, 300.0, 120.0,
+                     doc="Hung-macro-step watchdog: a busy worker whose "
+                         "heartbeat (scheduler-iteration progress) goes "
+                         "stale this long is declared hung and failed "
+                         "over.  Tight budgets bound hang detection "
+                         "latency but false-positive on slow hardware or "
+                         "cold jit compiles."),
+        UniformInt("cluster_retry_budget", 0, 5, 2,
+                   doc="Redispatch attempts per request after worker "
+                       "failures before it is committed with "
+                       "finish_reason='failed_over'; 0 fails over "
+                       "immediately on first loss."),
+        UniformFloat("cluster_hedge_ms", 0.0, 60000.0, 0.0,
+                     doc="Hedged-dispatch threshold: a dispatch still "
+                         "running after this many ms is duplicated onto "
+                         "an idle healthy worker (uid dedup keeps results "
+                         "exactly-once); 0 disables hedging.  Trades tail "
+                         "latency for duplicated decode work."),
+        UniformFloat("cluster_breaker_cooldown_s", 0.05, 60.0, 0.25,
+                     doc="Circuit-breaker open->half-open cooldown: how "
+                         "long a failed worker sits out before it is "
+                         "rebuilt (warm from its checkpoint when "
+                         "possible) and probed with one dispatch."),
     ], name="serve_deploy")
 
 

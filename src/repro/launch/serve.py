@@ -86,13 +86,26 @@ injects a deterministic fault schedule at the engine's seams
 (``exhaust@1:4,nan@2:7,kill@5``), and ``--state-dir`` makes a chaos kill
 checkpoint the engine state so the launcher restores into a fresh engine
 and resumes the batch.  Every request leaves with a ``finish_reason``
-(eos/budget/step_budget/deadline/cancelled/rejected/quarantined), printed
-as a histogram in the stats lines along with the fault counters.
+(eos/budget/step_budget/deadline/cancelled/rejected/quarantined/
+failed_over), printed as a histogram in the stats lines along with the
+fault counters.
+
+``--workers N`` (with ``--queue``) serves through a replicated
+``ServeCluster`` instead of one engine: N health-checked workers behind a
+``--router`` policy (prefix-affinity by default), exactly-once failover
+through the shared durable tier under ``--retry-budget`` redispatches,
+``--watchdog-s`` hang detection, and optional ``--hedge-ms`` hedged
+dispatches.  Cluster chaos events (``kill_worker@M[:W]``,
+``hang_worker@M:S``, ``corrupt_worker_state@M[:W]``) target individual
+workers; the cluster stats line reports
+deaths/failovers/retries/hedges/breaker/watchdog/affinity counters plus
+failover recovery latency.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import time
 
 import jax
 import numpy as np
@@ -102,6 +115,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import adaptive, get_hardware
 from repro.models import transformer as tfm
 from repro.serve import Request, ServeEngine, throughput_tokens_per_s
+from repro.serve.cluster import ROUTERS, ServeCluster
 from repro.serve.engine import queue_throughput
 from repro.serve.fault import ServeKilled, parse_chaos
 
@@ -198,7 +212,25 @@ def main():
                     help="checkpoint the engine state here when a kill "
                          "fault fires, then restore into a fresh engine "
                          "and resume the batch (also exercised by "
-                         "--chaos '...,kill@M')")
+                         "--chaos '...,kill@M'); with --workers it is the "
+                         "cluster state root (per-worker checkpoints + "
+                         "the shared durable tier)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="serve --queue through a replicated ServeCluster "
+                         "of this many engine workers (1 = single engine)")
+    ap.add_argument("--router", default="affinity", choices=list(ROUTERS),
+                    help="cluster request router: prefix-affinity, "
+                         "least-loaded, or round-robin")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="failover redispatches per request before it is "
+                         "committed with finish_reason='failed_over'")
+    ap.add_argument("--hedge-ms", type=float, default=0,
+                    help="hedge a dispatch still running after this many "
+                         "ms onto an idle healthy worker (0 = off)")
+    ap.add_argument("--watchdog-s", type=float, default=120.0,
+                    help="hung-worker watchdog: fail a busy worker over "
+                         "when its macro-step heartbeat goes stale this "
+                         "long")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -256,6 +288,51 @@ def main():
                                 max_new_tokens=args.new_tokens))
         faults = parse_chaos(args.chaos) if args.chaos else None
         state_dir = args.state_dir or None
+        if args.workers > 1:
+            cluster = ServeCluster(
+                make_engine, workers=args.workers, router=args.router,
+                state_root=state_dir, watchdog_s=args.watchdog_s,
+                retry_budget=args.retry_budget,
+                hedge_ms=args.hedge_ms or None, faults=faults,
+                seed=args.seed)
+            t0 = time.perf_counter()
+            results = cluster.serve_queue(reqs)
+            dt = time.perf_counter() - t0
+            total = sum(len(v) for v in results.values())
+            reasons: dict = {}
+            for r in reqs:
+                reasons[r.finish_reason or "none"] = \
+                    reasons.get(r.finish_reason or "none", 0) + 1
+            cs, es = cluster.stats, cluster.engine_stats()
+            lat = cluster.recovery_latency_s()
+            print(f"{cfg.name} [{scheme}, kv={args.kv_dtype}] cluster: "
+                  f"{total / max(dt, 1e-9):.1f} tokens/s over "
+                  f"{args.queue} requests ({args.workers} workers x "
+                  f"{args.batch} slots, router={args.router})")
+            print("  finish_reasons: "
+                  + ", ".join(f"{k}={v}"
+                              for k, v in sorted(reasons.items())))
+            print(f"  cluster: deaths={cs['worker_deaths']}, "
+                  f"failovers={cs['failovers']}, retries={cs['retries']}, "
+                  f"hedges={cs['hedges']}, "
+                  f"breaker_opens={cs['breaker_opens']}, "
+                  f"watchdog_trips={cs['watchdog_trips']}, "
+                  f"affinity(hit/miss)={cs['affinity_hits']}/"
+                  f"{cs['affinity_misses']}, "
+                  f"duplicates_dropped={cs['duplicates_dropped']}, "
+                  f"checkpoint_corrupt={cs['checkpoint_corrupt']}, "
+                  f"restarts(warm/cold)={cs['warm_restores']}/"
+                  f"{cs['cold_starts']}, "
+                  f"failed_over={cs['failed_over_requests']}")
+            print(f"  recovery: count={lat['count']}, "
+                  f"mean={lat['mean'] * 1e3:.0f} ms, "
+                  f"max={lat['max'] * 1e3:.0f} ms; fleet tier: "
+                  f"rehydrates={es.get('tier_rehydrates', 0)}, "
+                  f"disk(w/r)={es.get('tier_disk_writes', 0)}/"
+                  f"{es.get('tier_disk_loads', 0)}, "
+                  f"duplicate_uids_dropped="
+                  f"{es.get('duplicate_uids_dropped', 0)}")
+            return
         try:
             stats = queue_throughput(engine, reqs, faults=faults,
                                      state_dir=state_dir)

@@ -1,11 +1,13 @@
+from repro.serve.cluster import ServeCluster
 from repro.serve.engine import (
-    PageAllocator, Request, ServeEngine, queue_throughput,
-    throughput_tokens_per_s,
+    CorruptStateError, PageAllocator, Request, ServeEngine,
+    queue_throughput, throughput_tokens_per_s,
 )
 from repro.serve.fault import (
-    FaultInjector, FaultPlan, ServeKilled, parse_chaos,
+    FaultInjector, FaultPlan, ServeKilled, WorkerAborted, parse_chaos,
 )
 
-__all__ = ["PageAllocator", "Request", "ServeEngine", "queue_throughput",
-           "throughput_tokens_per_s",
-           "FaultInjector", "FaultPlan", "ServeKilled", "parse_chaos"]
+__all__ = ["CorruptStateError", "PageAllocator", "Request", "ServeCluster",
+           "ServeEngine", "queue_throughput", "throughput_tokens_per_s",
+           "FaultInjector", "FaultPlan", "ServeKilled", "WorkerAborted",
+           "parse_chaos"]

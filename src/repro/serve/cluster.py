@@ -1,0 +1,732 @@
+"""Replicated serving cluster: N health-checked engine workers behind a
+prefix-affinity router, with exactly-once failover through the shared
+durable KV tier.
+
+``ServeCluster`` supervises N ``ServeEngine`` workers — thread-hosted, so
+every same-geometry worker reuses the process-wide ``_shared_jit``
+executables and the fleet compiles ONCE — each with a private ``state_dir``
+(its ``serve_state.npz`` kill-checkpoints) and one SHARED durable tier
+directory (``tier_dir``), which is the warm-recovery bus: a dying worker's
+kill path flushes its cached pages there, and any survivor rehydrates them
+on admission (``stats["tier_rehydrates"]``) instead of re-prefilling.
+
+Routing (``router=``):
+
+* ``"affinity"`` (default) — hash each prompt's full-page chain with the
+  PR-5 ``prefix_block_hashes`` machinery and score eligible workers by the
+  LEADING run of chain hashes they most recently served; shared-prefix
+  traffic lands on the worker whose device pool most likely still holds
+  the pages (``affinity_hits``), everything else falls back to
+  least-loaded (``affinity_misses``).
+* ``"least_loaded"`` — route to the worker with the fewest uncommitted
+  requests (queued + in flight).
+* ``"round_robin"`` — cycle.
+
+Health & failure semantics:
+
+* **Heartbeats** — each worker's engine calls ``progress_cb(macro_idx)``
+  at the top of every scheduler iteration.  A busy worker whose heartbeat
+  goes stale past ``watchdog_s`` is declared HUNG (``watchdog_trips``):
+  its abort event is set (the engine raises ``WorkerAborted`` at the next
+  iteration — checkpoint + tier flush, so even a hung worker dies warm)
+  and its requests fail over immediately; the supervisor does not wait.
+* **Failure classification** — crash (``ServeKilled``/unexpected
+  exception out of a dispatch), hang (watchdog), repeated-quarantine (a
+  completed dispatch whose engine quarantined ``>= quarantine_threshold``
+  requests), checkpoint-corrupt (``CorruptStateError`` out of
+  ``load_state`` on restart — counted, then cold start).  Each class
+  drives the per-worker circuit breaker: closed -> open on failure
+  (``breaker_opens``), open -> half-open after ``breaker_cooldown_s``
+  (the worker is rebuilt via ``make_engine`` + ``load_state``), and the
+  half-open worker's first dispatch is the probe — success closes the
+  breaker, failure re-opens it.
+* **Exactly-once failover** — the supervisor owns result commitment:
+  every request is committed AT MOST ONCE, keyed by uid, first result
+  wins (late results from abandoned/hedged dispatches are counted under
+  ``duplicates_dropped`` and discarded; dispatch payloads are CLONES, so
+  a zombie thread can never mutate a committed result).  On worker death
+  the uncommitted requests of its dispatches are re-routed to survivors
+  under ``retry_budget`` redispatches per request with exponential
+  backoff (``backoff_base_s * 2**attempt``) and seeded jitter; exhaustion
+  COMMITS the request with ``finish_reason="failed_over"`` — an unlucky
+  request degrades to a labeled failure, never an exception.  Failed-over
+  requests restart from token zero on the survivor, so greedy f32 output
+  is bit-exact vs an uninterrupted run (the bf16 caveat of
+  ``load_state`` applies identically here), and the restarted prefill is
+  warm through the shared tier.
+* **Hedging** (optional, ``hedge_ms``) — a dispatch still running after
+  ``hedge_ms`` with an idle healthy sibling gets duplicated there
+  (``hedges``); uid dedup makes the race safe.
+
+Chaos (``serve/fault.py``): ``kill_worker@M[:W]`` / ``hang_worker@M:S`` /
+``corrupt_worker_state@M[:W]`` target worker W's OWN macro clock —
+translated into that worker's private ``FaultPlan`` (kill / ``slow_at``
+stall / kill-then-flip-a-checkpoint-byte respectively); engine-level
+events in the same plan are given to worker 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import os
+import queue
+import random
+import tempfile
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import (CorruptStateError, Request, ServeEngine,
+                                prefix_block_hashes)
+from repro.serve.fault import (FaultInjector, FaultPlan, ServeKilled,
+                               WorkerAborted)
+
+ROUTERS = ("affinity", "least_loaded", "round_robin")
+
+
+@dataclasses.dataclass
+class _Dispatch:
+    """One serve_queue call in flight on one worker."""
+    worker: int
+    gen: int                       # worker generation — stale gen = zombie
+    requests: List[Request]        # CLONES, never the caller's objects
+    started_at: float = 0.0
+    hedged: bool = False           # at most one hedge per dispatch
+    probe: bool = False            # half-open breaker probe
+
+
+class _Worker:
+    """Supervisor-side record of one engine worker (engine + health)."""
+
+    def __init__(self, idx: int, engine: ServeEngine, state_dir: str,
+                 injector: FaultInjector):
+        self.idx = idx
+        self.engine = engine
+        self.state_dir = state_dir
+        self.injector = injector
+        self.gen = 0
+        self.alive = True
+        self.busy: Optional[_Dispatch] = None
+        self.backlog: List[Request] = []
+        self.abort = threading.Event()
+        self.heartbeat = 0.0
+        self.macro_idx = -1
+        self.breaker = "closed"        # closed | open | half_open
+        self.opened_at = 0.0
+        self.probing = False
+        # engine.stats of retired engines (crashed generations), so
+        # aggregate stats survive restarts
+        self.retired_stats: Dict[str, int] = {}
+
+    def eligible(self) -> bool:
+        """May NEW work be routed here right now?"""
+        return (self.alive and self.breaker != "open"
+                and not (self.breaker == "half_open"
+                         and (self.probing or self.busy is not None)))
+
+    def load(self) -> int:
+        n = len(self.backlog)
+        if self.busy is not None:
+            n += len(self.busy.requests)
+        return n
+
+
+class ServeCluster:
+    """Supervise N ``ServeEngine`` workers behind one ``serve_queue``.
+
+    ``make_engine`` is a zero-arg factory producing identically-configured
+    engines (same geometry — they share jit executables and the durable
+    tier format).  ``state_root`` holds ``worker<i>/`` checkpoint dirs and
+    the SHARED ``kv_tier`` durable store.
+
+    ``serve_queue(requests, **kwargs)`` has the engine's contract: returns
+    ``{uid: tokens}``, mutates the caller's ``Request`` objects with
+    tokens/finish_reason/latency fields, never raises for per-request
+    failures.  Every request gets exactly one result."""
+
+    def __init__(self, make_engine: Callable[[], ServeEngine],
+                 workers: int = 2,
+                 state_root: Optional[str] = None,
+                 router: str = "affinity",
+                 watchdog_s: float = 120.0,
+                 poll_s: float = 0.02,
+                 retry_budget: int = 2,
+                 backoff_base_s: float = 0.05,
+                 backoff_jitter: float = 0.5,
+                 hedge_ms: Optional[float] = None,
+                 breaker_cooldown_s: float = 0.25,
+                 quarantine_threshold: int = 2,
+                 wall_budget_s: Optional[float] = None,
+                 seed: int = 0,
+                 faults: Any = None):
+        if router not in ROUTERS:
+            raise ValueError(f"unknown router {router!r} (want "
+                             f"{'|'.join(ROUTERS)})")
+        if workers < 1:
+            raise ValueError(f"need at least one worker, got {workers}")
+        self.make_engine = make_engine
+        self.router = router
+        # mutable on purpose: benches/tests warm the jit caches with a
+        # generous budget, then tighten before injecting hangs
+        self.watchdog_s = float(watchdog_s)
+        self.poll_s = float(poll_s)
+        self.retry_budget = max(0, int(retry_budget))
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_jitter = float(backoff_jitter)
+        self.hedge_ms = hedge_ms
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.quarantine_threshold = max(1, int(quarantine_threshold))
+        self.wall_budget_s = wall_budget_s
+        self._rng = random.Random(seed)
+        self.state_root = state_root or tempfile.mkdtemp(prefix="cluster_")
+        os.makedirs(self.state_root, exist_ok=True)
+        plan = faults.plan if isinstance(faults, FaultInjector) else faults
+        # corrupt_worker_state: fires as a kill on the target worker; the
+        # supervisor then flips a byte in the checkpoint that kill wrote,
+        # so the restart path exercises CorruptStateError -> cold start
+        self._corrupt_after_kill = set(
+            (plan.corrupt_worker_state_at or {}).values()) if plan else set()
+        self.workers: List[_Worker] = []
+        for i in range(int(workers)):
+            self.workers.append(self._make_worker(i, plan))
+        self._page_size = self.workers[0].engine.page_size
+        self._results_q: "queue.Queue" = queue.Queue()
+        self._rr = 0                   # round-robin cursor
+        # prefix-affinity map: chain hash -> worker idx that served it last
+        self._page_owner: Dict[bytes, int] = {}
+        self.recovery_latencies: List[float] = []
+        self.events: List[str] = []
+        self.stats: Dict[str, int] = {
+            "worker_deaths": 0, "failovers": 0, "retries": 0, "hedges": 0,
+            "breaker_opens": 0, "breaker_closes": 0, "watchdog_trips": 0,
+            "affinity_hits": 0, "affinity_misses": 0,
+            "duplicates_dropped": 0, "checkpoint_corrupt": 0,
+            "worker_restarts": 0, "cold_starts": 0, "warm_restores": 0,
+            "crash_failures": 0, "hang_failures": 0,
+            "quarantine_failures": 0, "failed_over_requests": 0,
+            "requests_served": 0, "probe_successes": 0, "probe_failures": 0,
+        }
+
+    # -- construction -------------------------------------------------------
+
+    def _worker_plan(self, idx: int, plan: Optional[FaultPlan]) \
+            -> FaultPlan:
+        """Split the cluster chaos plan into worker ``idx``'s private plan.
+        Cluster events keyed to this worker become engine-level events on
+        its own macro clock; plain engine-level events go to worker 0."""
+        if plan is None:
+            return FaultPlan()
+        if idx == 0:
+            mine = dataclasses.replace(plan)
+        else:
+            mine = FaultPlan()
+        mine.kill_worker_at = {}
+        mine.hang_worker_at = {}
+        mine.corrupt_worker_state_at = {}
+        for m, w in (plan.kill_worker_at or {}).items():
+            if w == idx:
+                mine.kill_at = m if mine.kill_at is None \
+                    else min(mine.kill_at, m)
+        for m, (w, seconds) in (plan.hang_worker_at or {}).items():
+            if w == idx:
+                mine.slow_at = dict(mine.slow_at)
+                mine.slow_at[m] = seconds
+        for m, w in (plan.corrupt_worker_state_at or {}).items():
+            if w == idx:
+                mine.kill_at = m if mine.kill_at is None \
+                    else min(mine.kill_at, m)
+        return mine
+
+    def _make_worker(self, idx: int, plan: Optional[FaultPlan]) -> _Worker:
+        eng = self.make_engine()
+        state_dir = os.path.join(self.state_root, f"worker{idx}")
+        os.makedirs(state_dir, exist_ok=True)
+        # every worker's durable tier binds to the SHARED root — the
+        # failover warmth bus — while checkpoints stay private
+        eng.tier_dir = self.state_root
+        return _Worker(idx, eng, state_dir, FaultInjector(
+            self._worker_plan(idx, plan)))
+
+    # -- routing ------------------------------------------------------------
+
+    def _eligible(self) -> List[_Worker]:
+        return [w for w in self.workers if w.eligible()]
+
+    def _route(self, req: Request) -> Optional[_Worker]:
+        """Pick a worker for one request among the currently-eligible set
+        (None when no worker may accept work right now)."""
+        elig = self._eligible()
+        if not elig:
+            return None
+        if self.router == "round_robin":
+            w = elig[self._rr % len(elig)]
+            self._rr += 1
+            return w
+        if self.router == "affinity":
+            best, best_run = None, 0
+            idx_to_worker = {w.idx: w for w in elig}
+            runs: Dict[int, int] = {}
+            for h in prefix_block_hashes(np.asarray(req.prompt, np.int32),
+                                         self._page_size):
+                owner = self._page_owner.get(h)
+                if owner is None or owner not in idx_to_worker:
+                    break              # leading run only — that's what the
+                runs[owner] = runs.get(owner, 0) + 1   # prefix cache saves
+            for owner, run in runs.items():
+                if run > best_run:
+                    best, best_run = idx_to_worker[owner], run
+            if best is not None:
+                self.stats["affinity_hits"] += 1
+                return best
+            self.stats["affinity_misses"] += 1
+        return min(elig, key=lambda w: (w.load(), w.idx))
+
+    def _record_affinity(self, w: _Worker, req: Request) -> None:
+        for h in prefix_block_hashes(np.asarray(req.prompt, np.int32),
+                                     self._page_size):
+            self._page_owner[h] = w.idx
+
+    # -- dispatch machinery -------------------------------------------------
+
+    @staticmethod
+    def _clone(req: Request) -> Request:
+        return Request(uid=req.uid,
+                       prompt=np.array(req.prompt, np.int32),
+                       max_new_tokens=req.max_new_tokens,
+                       temperature=req.temperature,
+                       eos_id=req.eos_id,
+                       deadline_ms=req.deadline_ms,
+                       ttft_deadline_ms=req.ttft_deadline_ms)
+
+    def _beat(self, w: _Worker, gen: int):
+        def beat(macro_idx: int) -> None:
+            if w.gen == gen:           # a zombie generation may not pump
+                w.heartbeat = time.monotonic()     # the live heartbeat
+                w.macro_idx = macro_idx
+        return beat
+
+    def _pump(self, w: _Worker, kwargs: Dict[str, Any]) -> None:
+        """Start the worker's backlog as one dispatch, if it may run."""
+        if (not w.alive or w.busy is not None or not w.backlog
+                or w.breaker == "open"):
+            return
+        probe = w.breaker == "half_open"
+        d = _Dispatch(worker=w.idx, gen=w.gen, requests=w.backlog,
+                      started_at=time.monotonic(), probe=probe)
+        w.backlog = []
+        w.busy = d
+        w.probing = probe
+        w.heartbeat = d.started_at
+        # a FRESH abort event per dispatch: a zombie thread holding the
+        # previous (set) event must not be able to abort this one
+        w.abort = threading.Event()
+        eng = w.engine
+        eng.progress_cb = self._beat(w, w.gen)
+        eng.abort_event = w.abort
+
+        def run(worker=w, disp=d, engine=eng):
+            try:
+                engine.serve_queue(disp.requests,
+                                   state_dir=worker.state_dir,
+                                   faults=worker.injector, **kwargs)
+                self._results_q.put((worker.idx, disp, None))
+            except BaseException as e:      # noqa: BLE001 - supervisor seam
+                self._results_q.put((worker.idx, disp, e))
+
+        threading.Thread(target=run, daemon=True,
+                         name=f"serve-worker-{w.idx}-g{w.gen}").start()
+
+    # -- failure handling ---------------------------------------------------
+
+    def _open_breaker(self, w: _Worker) -> None:
+        if w.breaker != "open":
+            self.stats["breaker_opens"] += 1
+        w.breaker = "open"
+        w.opened_at = time.monotonic()
+        w.probing = False
+
+    def _corrupt_checkpoint(self, w: _Worker) -> None:
+        """corrupt_worker_state chaos: flip one byte in the checkpoint the
+        dying worker just wrote, so the restart finds torn state."""
+        path = os.path.join(w.state_dir, "serve_state.npz")
+        try:
+            with open(path, "r+b") as f:
+                f.seek(max(0, os.path.getsize(path) // 2))
+                b = f.read(1)
+                f.seek(-1, os.SEEK_CUR)
+                f.write(bytes([(b[0] if b else 0) ^ 0xFF]))
+            self.events.append(f"corrupted checkpoint of worker {w.idx}")
+        except OSError:
+            pass
+
+    def _handle_worker_failure(self, ctx: "_RunState", w: _Worker,
+                               kind: str, exc: Optional[BaseException]) \
+            -> None:
+        """A worker died (crash) or was declared hung: open its breaker,
+        abandon its in-flight work, and fail the uncommitted requests over
+        to survivors (or the retry queue)."""
+        self.stats["worker_deaths"] += 1
+        self.stats[f"{kind}_failures"] += 1
+        self.events.append(
+            f"worker {w.idx} {kind}"
+            + (f": {type(exc).__name__}: {exc}" if exc is not None else ""))
+        w.alive = False
+        self._open_breaker(w)
+        if w.idx in self._corrupt_after_kill:
+            self._corrupt_after_kill.discard(w.idx)
+            self._corrupt_checkpoint(w)
+        # one-shot chaos hygiene: a restarted worker must not replay the
+        # stall that killed this generation
+        if kind == "hang":
+            w.injector.plan.slow_at = {}
+        # affinity entries pointing at a dead worker would just bounce to
+        # least-loaded; drop them so the next dispatch re-learns owners
+        self._page_owner = {h: i for h, i in self._page_owner.items()
+                            if i != w.idx}
+        uids = [c.uid for c in (w.busy.requests if w.busy else [])]
+        uids += [c.uid for c in w.backlog]
+        w.busy = None
+        w.backlog = []
+        w.gen += 1                     # late reports become zombies
+        now = time.monotonic()
+        for uid in uids:
+            if uid in ctx.committed:
+                continue
+            ctx.detect_t.setdefault(uid, now)
+            self._requeue(ctx, uid)
+
+    def _requeue(self, ctx: "_RunState", uid: int) -> None:
+        """Failover one request: redispatch under the retry budget, or
+        commit it as failed_over when the budget is spent."""
+        attempt = ctx.attempts.get(uid, 0)
+        if attempt >= self.retry_budget:
+            orig = ctx.originals[uid]
+            orig.done = True
+            orig.finish_reason = "failed_over"
+            orig.error = (f"retry budget ({self.retry_budget}) exhausted "
+                          f"after {attempt + 1} worker failures")
+            orig.finished_at = time.perf_counter()
+            if orig.tokens is None:
+                orig.tokens = []
+            ctx.committed.add(uid)
+            self.stats["failed_over_requests"] += 1
+            ctx.detect_t.pop(uid, None)
+            return
+        ctx.attempts[uid] = attempt + 1
+        self.stats["failovers"] += 1
+        self.stats["retries"] += 1
+        delay = (self.backoff_base_s * (2 ** attempt)
+                 * (1.0 + self.backoff_jitter * self._rng.random()))
+        heapq.heappush(ctx.retry_q, (time.monotonic() + delay, uid))
+
+    def _restart_worker(self, w: _Worker) -> None:
+        """open -> half_open: rebuild the engine and try a warm restore
+        from the worker's own checkpoint (its prefix pools), falling back
+        to a cold start on a missing or corrupt one."""
+        self.stats["worker_restarts"] += 1
+        for k, v in w.engine.stats.items():
+            if isinstance(v, int):
+                w.retired_stats[k] = w.retired_stats.get(k, 0) + v
+        eng = self.make_engine()
+        eng.tier_dir = self.state_root
+        try:
+            eng.load_state(w.state_dir)
+            # the supervisor already owns these uids' failover — a restored
+            # request must never be double-served, and fresh redispatches
+            # must not inherit checkpointed PRNG streams
+            eng._restored_keys.clear()
+            eng._restored_folded.clear()
+            self.stats["warm_restores"] += 1
+            self.events.append(f"worker {w.idx} restarted warm")
+        except FileNotFoundError:
+            self.stats["cold_starts"] += 1
+            self.events.append(f"worker {w.idx} restarted cold "
+                               f"(no checkpoint)")
+        except (CorruptStateError, ValueError) as e:
+            self.stats["checkpoint_corrupt"] += 1
+            self.stats["cold_starts"] += 1
+            self.events.append(f"worker {w.idx} checkpoint corrupt "
+                               f"({type(e).__name__}) — cold start")
+        w.engine = eng
+        w.alive = True
+        w.breaker = "half_open"
+        w.probing = False
+        w.abort = threading.Event()
+        w.gen += 1
+        w.macro_idx = -1
+
+    # -- the supervisor loop ------------------------------------------------
+
+    def serve_queue(self, requests: List[Request],
+                    **kwargs: Any) -> Dict[int, List[int]]:
+        """Serve a batch across the worker fleet (see class docstring).
+        ``kwargs`` are forwarded to every worker's ``serve_queue``
+        (``step_budget``, ``macro_steps``, ``prefill_chunk``, ...);
+        ``state_dir``/``faults`` are cluster-owned and may not be passed."""
+        for banned in ("state_dir", "faults"):
+            if banned in kwargs:
+                raise ValueError(f"{banned!r} is managed by ServeCluster")
+        ctx = _RunState()
+        now = time.perf_counter()
+        for req in requests:
+            if req.uid in ctx.originals:
+                # same exactly-once answer as everywhere else: first one
+                # wins, the duplicate is dropped, never served twice
+                self.stats["duplicates_dropped"] += 1
+                continue
+            if not req.submitted_at:
+                req.submitted_at = now
+            ctx.originals[req.uid] = req
+        if not ctx.originals:
+            return {}
+        self.stats["requests_served"] += len(ctx.originals)
+        for uid, orig in ctx.originals.items():
+            w = self._route(orig)
+            if w is None:
+                ctx.detect_t.setdefault(uid, time.monotonic())
+                self._requeue(ctx, uid)
+                continue
+            self._assign(ctx, w, uid)
+        for w in self.workers:
+            self._pump(w, kwargs)
+        deadline = (None if self.wall_budget_s is None
+                    else time.monotonic() + self.wall_budget_s)
+        while len(ctx.committed) < len(ctx.originals):
+            self._drain_reports(ctx, kwargs)
+            self._scan_watchdog(ctx)
+            self._scan_breakers()
+            self._scan_retries(ctx, kwargs)
+            self._scan_hedges(ctx, kwargs)
+            self._propagate_cancels(ctx)
+            if deadline is not None and time.monotonic() > deadline:
+                self.events.append("wall budget exhausted — failing over "
+                                   "all uncommitted requests")
+                for uid in list(ctx.originals):
+                    if uid not in ctx.committed:
+                        ctx.attempts[uid] = self.retry_budget
+                        self._requeue(ctx, uid)
+                break
+        # wind down: a dispatch whose every request is already committed is
+        # abandoned work (hedge loser / watchdog false positive) — tell it
+        # to stop at its next scheduler iteration (it checkpoints + flushes
+        # on the way out) and wait for the fleet's engines to settle so the
+        # NEXT serve_queue call never races a zombie over an engine
+        for w in self.workers:
+            if (w.alive and w.busy is not None
+                    and all(c.uid in ctx.committed
+                            for c in w.busy.requests)):
+                w.abort.set()
+        settle = time.monotonic() + max(5.0, self.watchdog_s)
+        while (any(w.busy is not None for w in self.workers if w.alive)
+                and time.monotonic() < settle):
+            self._drain_reports(ctx, kwargs)
+        for w in self.workers:
+            if w.alive and w.busy is not None:
+                # refused to settle: retire this generation; the breaker
+                # scan of a later call rebuilds the worker from checkpoint
+                self.events.append(f"worker {w.idx} failed to settle — "
+                                   f"retiring its generation")
+                w.alive = False
+                self._open_breaker(w)
+                w.busy = None
+                w.backlog = []
+                w.gen += 1
+        return {uid: list(ctx.originals[uid].tokens or [])
+                for uid in ctx.originals}
+
+    def _assign(self, ctx: "_RunState", w: _Worker, uid: int) -> None:
+        clone = self._clone(ctx.originals[uid])
+        w.backlog.append(clone)
+        ctx.inflight[uid] = clone
+        self._record_affinity(w, clone)
+
+    def _commit(self, ctx: "_RunState", clone: Request) -> None:
+        uid = clone.uid
+        if uid in ctx.committed:
+            self.stats["duplicates_dropped"] += 1
+            return
+        orig = ctx.originals[uid]
+        orig.tokens = (list(clone.tokens)
+                       if clone.tokens is not None else None)
+        orig.done = clone.done
+        orig.error = clone.error
+        orig.finish_reason = clone.finish_reason
+        orig.admitted_at = clone.admitted_at
+        orig.first_token_at = clone.first_token_at
+        orig.finished_at = clone.finished_at
+        orig.preemptions += clone.preemptions
+        orig.quarantines += clone.quarantines
+        ctx.committed.add(uid)
+        ctx.inflight.pop(uid, None)
+        t0 = ctx.detect_t.pop(uid, None)
+        if t0 is not None:
+            self.recovery_latencies.append(time.monotonic() - t0)
+
+    def _drain_reports(self, ctx: "_RunState",
+                       kwargs: Dict[str, Any]) -> None:
+        try:
+            idx, disp, err = self._results_q.get(timeout=self.poll_s)
+        except queue.Empty:
+            return
+        while True:
+            w = self.workers[idx]
+            stale = disp.gen != w.gen
+            if err is None:
+                # results are valid even from a zombie (hedge loser /
+                # watchdog false-positive) — commit is idempotent
+                for clone in disp.requests:
+                    self._commit(ctx, clone)
+                if not stale:
+                    w.busy = None
+                    quarantined = self._dispatch_quarantines(w, disp)
+                    if disp.probe:
+                        w.probing = False
+                        w.breaker = "closed"
+                        self.stats["breaker_closes"] += 1
+                        self.stats["probe_successes"] += 1
+                        self.events.append(f"worker {w.idx} probe ok — "
+                                           f"breaker closed")
+                    if quarantined >= self.quarantine_threshold:
+                        # completed, but sickly: repeated quarantines take
+                        # the worker out of rotation until a probe passes
+                        self.stats["quarantine_failures"] += 1
+                        self._open_breaker(w)
+                        self.events.append(
+                            f"worker {w.idx} quarantined {quarantined} "
+                            f"requests — breaker opened")
+                    self._pump(w, kwargs)
+            elif isinstance(err, WorkerAborted) or stale:
+                # WorkerAborted is always supervisor-initiated (watchdog or
+                # shutdown): the failure was already handled when the abort
+                # was requested, this report is just the zombie winding
+                # down.  A CURRENT-generation abort (shutdown of a fully-
+                # committed hedge loser) frees the worker for the next call.
+                if not stale:
+                    w.busy = None
+                    w.probing = False
+            elif isinstance(err, ServeKilled):
+                if disp.probe:
+                    self.stats["probe_failures"] += 1
+                self._handle_worker_failure(ctx, w, "crash", err)
+            else:
+                if disp.probe:
+                    self.stats["probe_failures"] += 1
+                self._handle_worker_failure(ctx, w, "crash", err)
+            try:
+                idx, disp, err = self._results_q.get_nowait()
+            except queue.Empty:
+                return
+
+    def _dispatch_quarantines(self, w: _Worker, disp: _Dispatch) -> int:
+        return sum(1 for c in disp.requests
+                   if c.finish_reason == "quarantined")
+
+    def _scan_watchdog(self, ctx: "_RunState") -> None:
+        now = time.monotonic()
+        for w in self.workers:
+            if (w.alive and w.busy is not None
+                    and now - w.heartbeat > self.watchdog_s):
+                self.stats["watchdog_trips"] += 1
+                self.events.append(
+                    f"worker {w.idx} hung at macro {w.macro_idx} "
+                    f"({now - w.heartbeat:.2f}s since heartbeat)")
+                w.abort.set()
+                self._handle_worker_failure(ctx, w, "hang", None)
+
+    def _scan_breakers(self) -> None:
+        now = time.monotonic()
+        for w in self.workers:
+            if (w.breaker == "open"
+                    and now - w.opened_at >= self.breaker_cooldown_s):
+                self._restart_worker(w)
+
+    def _scan_retries(self, ctx: "_RunState",
+                      kwargs: Dict[str, Any]) -> None:
+        now = time.monotonic()
+        pumped = set()
+        while ctx.retry_q and ctx.retry_q[0][0] <= now:
+            _, uid = heapq.heappop(ctx.retry_q)
+            if uid in ctx.committed:
+                continue
+            w = self._route(ctx.originals[uid])
+            if w is None:
+                # no healthy worker yet — breaker cooldown will produce one;
+                # park the retry a poll away rather than spinning
+                heapq.heappush(ctx.retry_q, (now + self.poll_s, uid))
+                break
+            self._assign(ctx, w, uid)
+            pumped.add(w.idx)
+        for idx in pumped:
+            self._pump(self.workers[idx], kwargs)
+
+    def _scan_hedges(self, ctx: "_RunState",
+                     kwargs: Dict[str, Any]) -> None:
+        if not self.hedge_ms:
+            return
+        now = time.monotonic()
+        for w in self.workers:
+            d = w.busy
+            if (d is None or d.hedged or d.probe
+                    or (now - d.started_at) * 1000.0 < self.hedge_ms):
+                continue
+            idle = [o for o in self._eligible()
+                    if o is not w and o.busy is None and not o.backlog]
+            if not idle:
+                continue
+            target = min(idle, key=lambda o: o.idx)
+            uids = [c.uid for c in d.requests if c.uid not in ctx.committed]
+            if not uids:
+                continue
+            d.hedged = True
+            self.stats["hedges"] += 1
+            self.events.append(f"hedging {len(uids)} requests from worker "
+                               f"{w.idx} onto worker {target.idx}")
+            for uid in uids:
+                target.backlog.append(self._clone(ctx.originals[uid]))
+            self._pump(target, kwargs)
+
+    def _propagate_cancels(self, ctx: "_RunState") -> None:
+        for uid, clone in list(ctx.inflight.items()):
+            if uid not in ctx.committed and ctx.originals[uid].cancelled:
+                clone.cancelled = True
+
+    # -- introspection ------------------------------------------------------
+
+    def engine_stats(self) -> Dict[str, int]:
+        """Aggregate engine stats across the fleet (live + retired
+        generations) — ``tier_rehydrates`` here is the cluster's
+        warm-failover evidence."""
+        agg: Dict[str, int] = {}
+        for w in self.workers:
+            for src in (w.retired_stats, w.engine.stats):
+                for k, v in src.items():
+                    if isinstance(v, int):
+                        agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def reset_stats(self) -> None:
+        for k in self.stats:
+            self.stats[k] = 0
+        self.recovery_latencies = []
+        self.events = []
+
+    def recovery_latency_s(self) -> Dict[str, float]:
+        lat = self.recovery_latencies
+        if not lat:
+            return {"mean": 0.0, "max": 0.0, "count": 0}
+        return {"mean": float(sum(lat) / len(lat)),
+                "max": float(max(lat)), "count": len(lat)}
+
+
+class _RunState:
+    """Per-``serve_queue``-call supervisor bookkeeping."""
+
+    def __init__(self):
+        self.originals: Dict[int, Request] = {}
+        self.inflight: Dict[int, Request] = {}   # uid -> current clone
+        self.committed: set = set()
+        self.attempts: Dict[int, int] = {}       # uid -> redispatch count
+        self.retry_q: List = []                  # heap of (due_t, uid)
+        self.detect_t: Dict[int, float] = {}     # uid -> failure detect time

@@ -144,6 +144,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import threading
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
@@ -156,7 +157,7 @@ from repro.analysis import trace_guard
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.quant import PTQConfig, QuantScheme, quantize_tree
-from repro.serve.fault import ServeKilled
+from repro.serve.fault import ServeKilled, WorkerAborted
 from repro.serve.tier import KVTier, tile_header
 from repro.train.checkpoint import _flatten, _unflatten_into
 
@@ -202,6 +203,16 @@ class Request:
         the next scheduler iteration, keeps whatever tokens were emitted,
         and sets ``finish_reason='cancelled'``."""
         self.cancelled = True
+
+
+class CorruptStateError(RuntimeError):
+    """``load_state`` found a checkpoint it cannot trust: torn, truncated,
+    bit-flipped, or structurally inconsistent ``serve_state.npz``/``.json``.
+    Deliberately NOT a ``ValueError`` (geometry mismatches keep that — the
+    caller picked the wrong checkpoint, the file itself is fine) and never
+    a raw numpy/zipfile traceback: callers like ``ServeCluster`` catch this
+    one name, count it (``checkpoint_corrupt``), and fall back to a cold
+    start."""
 
 
 def _prompt_buckets(max_len: int, smallest: int = 16) -> List[int]:
@@ -685,20 +696,26 @@ class _CompiledLRU:
 _SHARED_JIT_CAP = 512
 _shared_jit_cache: "collections.OrderedDict[Any, Any]" = \
     collections.OrderedDict()
+# ServeCluster runs N engines on threads; the cache is their rendezvous
+# point, so get/build/insert must be atomic or two same-geometry workers
+# race to double-compile (and OrderedDict mutation itself isn't safe
+# under concurrent move_to_end/popitem).
+_shared_jit_lock = threading.Lock()
 
 
 def _shared_jit(key, build):
     """Return the process-wide jitted callable for ``key``, building (and
     LRU-bounding the cache) on first use."""
-    fn = _shared_jit_cache.get(key)
-    if fn is not None:
-        _shared_jit_cache.move_to_end(key)
+    with _shared_jit_lock:
+        fn = _shared_jit_cache.get(key)
+        if fn is not None:
+            _shared_jit_cache.move_to_end(key)
+            return fn
+        fn = build()
+        _shared_jit_cache[key] = fn
+        while len(_shared_jit_cache) > _SHARED_JIT_CAP:
+            _shared_jit_cache.popitem(last=False)
         return fn
-    fn = build()
-    _shared_jit_cache[key] = fn
-    while len(_shared_jit_cache) > _SHARED_JIT_CAP:
-        _shared_jit_cache.popitem(last=False)
-    return fn
 
 
 def _decode_body(cfg: ModelConfig, unroll):
@@ -875,6 +892,7 @@ class ServeEngine:
                  ladder_reject_util: float = 1.0,
                  host_tier_frac: float = 1.0,
                  state_dir: Optional[str] = None,
+                 tier_dir: Optional[str] = None,
                  faults: Any = None):
         self.cfg = cfg
         self.scheme = scheme
@@ -957,7 +975,19 @@ class ServeEngine:
         self.ladder_prefix_util = float(ladder_prefix_util)
         self.ladder_reject_util = float(ladder_reject_util)
         self.state_dir = state_dir
+        # durable KV-tier directory, when it should NOT live under this
+        # engine's private state_dir — ServeCluster points every worker at
+        # one shared dir so a survivor rehydrates pages a dead sibling
+        # flushed, while serve_state.npz checkpoints stay per-worker
+        self.tier_dir = tier_dir
         self.faults = faults
+        # cluster hooks: progress_cb(macro_idx) fires at the top of every
+        # scheduler iteration (the supervisor's heartbeat), abort_event is
+        # a threading.Event the supervisor sets to make a hung-but-alive
+        # worker raise WorkerAborted (checkpoint + tier flush) instead of
+        # finishing a dispatch whose requests were already failed over
+        self.progress_cb: Optional[Callable[[int], None]] = None
+        self.abort_event: Optional[threading.Event] = None
         # KV tier (serve/tier.py): bounded host memory + optional durable
         # disk under <state_dir>/kv_tier.  Preemption swaps committed pages
         # out instead of losing them (requeue swaps them back in, skipping
@@ -1084,7 +1114,13 @@ class ServeEngine:
                       "tier_swap_ins": 0, "tier_evictions": 0,
                       "tier_disk_writes": 0, "tier_disk_loads": 0,
                       "tier_integrity_failures": 0, "tier_io_errors": 0,
-                      "tier_host_pages": 0,
+                      "tier_host_pages": 0, "tier_manifest_reloads": 0,
+                      # cluster hygiene: serve_queue inputs carrying a uid
+                      # already present in the same call are dropped here as
+                      # a belt-and-braces guard under failover redispatch
+                      # (the supervisor's first-commit-wins dedup is the
+                      # primary exactly-once mechanism)
+                      "duplicate_uids_dropped": 0,
                       # hot-path hygiene (REPRO_TRACE_GUARD=1): jaxpr traces
                       # and XLA backend compiles observed across serve_queue
                       # calls — a warmed-up steady-state queue must add zero
@@ -1435,6 +1471,19 @@ class ServeEngine:
             if not req.submitted_at:
                 req.submitted_at = now
         results: Dict[int, List[int]] = {}
+        # uid-idempotent intake: under cluster failover the same uid can
+        # reach one dispatch twice (requeue racing a hedge); serving both
+        # would burn slots AND make results[uid] ambiguous, so only the
+        # first instance of each uid is admitted
+        seen_uids: set = set()
+        deduped = []
+        for req in requests:
+            if req.uid in seen_uids:
+                self.stats["duplicate_uids_dropped"] += 1
+                continue
+            seen_uids.add(req.uid)
+            deduped.append(req)
+        requests = deduped
         # terminal Request objects by uid — what a kill-checkpoint persists
         # so a restored process can return results for requests that had
         # already finished before the crash
@@ -1500,8 +1549,13 @@ class ServeEngine:
                                               self.page_size),
                     stats=self.stats)
             tier = self._tier
-            if state_dir:
-                tier.attach_dir(state_dir)
+            # the durable store binds to tier_dir when set (cluster mode:
+            # one shared dir across workers) and the per-engine state_dir
+            # otherwise — checkpoints and the tier only share a directory
+            # in the single-engine layout
+            tdir = self.tier_dir or state_dir
+            if tdir:
+                tier.attach_dir(tdir)
         slot_rows = np.zeros((B,), np.int64)
         order = [0] * B
         admit_seq = 0
@@ -1843,6 +1897,17 @@ class ServeEngine:
           while (pending or any(s is not None for s in slots)) \
                 and steps < step_budget:
             progressed = False
+            # -- cluster hooks: heartbeat + cooperative abort ---------------
+            # progress_cb is ServeCluster's liveness signal (a worker whose
+            # macro index stops advancing inside its wall-clock budget is
+            # declared hung); abort_event makes an abandoned worker exit
+            # through the ServeKilled checkpoint path so its pages reach
+            # the shared tier instead of dying warm-but-private
+            if self.progress_cb is not None:
+                self.progress_cb(macro_idx)
+            if self.abort_event is not None and self.abort_event.is_set():
+                raise WorkerAborted(
+                    "serve_queue aborted by cluster supervisor")
             # -- deadlines & cancellation (host-side, once per scheduler
             #    iteration — granularity is one macro-step; a hung macro
             #    cannot be interrupted, only observed on return) -----------
@@ -2500,61 +2565,107 @@ class ServeEngine:
         an interrupted f32 run completes bit-exact vs an uninterrupted one
         (bf16 caches re-prefill under different reassociation; see
         serve/README).  Deadlines restart: ``submitted_at`` is re-stamped
-        on resume, since wall-clocks don't survive processes."""
+        on resume, since wall-clocks don't survive processes.
+
+        A torn/truncated/bit-flipped checkpoint raises
+        ``CorruptStateError`` (a missing checkpoint still raises
+        ``FileNotFoundError``, a geometry mismatch ``ValueError``) — never
+        a raw numpy/zipfile traceback, so recovery paths can branch on one
+        name."""
         json_path = os.path.join(state_dir, "serve_state.json")
-        with open(json_path) as f:
-            meta = json.load(f)
+        try:
+            with open(json_path) as f:
+                meta = json.load(f)
+        except FileNotFoundError:
+            raise
+        except Exception as e:
+            raise CorruptStateError(
+                f"load_state: unreadable checkpoint manifest {json_path}: "
+                f"{type(e).__name__}: {e}") from e
+        try:
+            fields = {f: meta[f] for f in
+                      ("cfg_name", "max_batch", "max_len", "page_size",
+                       "kv_pages", "paged", "pool_saved", "alloc",
+                       "pending", "done", "folded")}
+        except (KeyError, TypeError) as e:
+            raise CorruptStateError(
+                f"load_state: checkpoint manifest {json_path} is missing "
+                f"field {e}") from e
         for field in ("cfg_name", "max_batch", "max_len", "page_size",
                       "kv_pages", "paged"):
             want = {"cfg_name": self.cfg.name, "max_batch": self.max_batch,
                     "max_len": self.max_len, "page_size": self.page_size,
                     "kv_pages": self.kv_pages, "paged": self.paged}[field]
-            if meta[field] != want:
+            if fields[field] != want:
                 raise ValueError(
                     f"load_state: checkpoint {field}={meta[field]!r} does "
                     f"not match this engine's {want!r}")
-        arrays = np.load(os.path.join(state_dir, "serve_state.npz"))
-        if meta["pool_saved"] and self.prefix_cache:
-            a = meta["alloc"]
-            alloc = PageAllocator(self.kv_pages, self.page_size,
-                                  self.max_batch, self.pages_per_slot,
-                                  prefix_cache=self.prefix_cache,
-                                  cache_frac=self.prefix_cache_frac,
-                                  min_shared_pages=self.min_shared_pages)
-            alloc.load_snapshot(a)
-            template = jax.device_get(self._empty_batched_cache())
-            flat = {k[len("cache/"):]: arrays[k] for k in arrays.files
-                    if k.startswith("cache/")}
-            cache = jax.tree.map(jnp.asarray,
-                                 _unflatten_into(template, flat))
-            self._pc_state = (cache, alloc)
+        npz_path = os.path.join(state_dir, "serve_state.npz")
+        # materialize every array EAGERLY: np.load returns a lazy NpzFile
+        # whose zip/CRC errors would otherwise surface as raw zipfile
+        # tracebacks deep inside mk() below — decompressing everything here
+        # makes truncation and bit-flips fail at one choke point
+        try:
+            with np.load(npz_path, allow_pickle=False) as data:
+                arrays = {k: np.array(data[k]) for k in data.files}
+        except FileNotFoundError:
+            raise
+        except Exception as e:
+            raise CorruptStateError(
+                f"load_state: corrupt checkpoint {npz_path}: "
+                f"{type(e).__name__}: {e}") from e
+        try:
+            if meta["pool_saved"] and self.prefix_cache:
+                a = meta["alloc"]
+                alloc = PageAllocator(self.kv_pages, self.page_size,
+                                      self.max_batch, self.pages_per_slot,
+                                      prefix_cache=self.prefix_cache,
+                                      cache_frac=self.prefix_cache_frac,
+                                      min_shared_pages=self.min_shared_pages)
+                alloc.load_snapshot(a)
+                template = jax.device_get(self._empty_batched_cache())
+                flat = {k[len("cache/"):]: arrays[k] for k in arrays
+                        if k.startswith("cache/")}
+                cache = jax.tree.map(jnp.asarray,
+                                     _unflatten_into(template, flat))
+                self._pc_state = (cache, alloc)
 
-        def mk(r: Dict[str, Any]) -> Request:
-            req = Request(uid=int(r["uid"]),
-                          prompt=np.asarray(arrays[f"req{r['uid']}/prompt"],
-                                            np.int32),
-                          max_new_tokens=int(r["max_new_tokens"]),
-                          temperature=float(r["temperature"]),
-                          eos_id=r["eos_id"])
-            toks = arrays[f"req{r['uid']}/tokens"]
-            if len(toks) or r.get("had_tokens"):
-                req.tokens = [int(t) for t in toks]
-            req.preemptions = int(r["preemptions"])
-            req.quarantines = int(r["quarantines"])
-            req.deadline_ms = r["deadline_ms"]
-            req.ttft_deadline_ms = r["ttft_deadline_ms"]
-            req.error = r["error"]
-            req.finish_reason = r["finish_reason"]
-            req.done = bool(r["done"])
-            if f"req{r['uid']}/key" in arrays.files:
-                self._restored_keys[req.uid] = \
-                    np.asarray(arrays[f"req{r['uid']}/key"])
-            return req
+            def mk(r: Dict[str, Any]) -> Request:
+                req = Request(
+                    uid=int(r["uid"]),
+                    prompt=np.asarray(arrays[f"req{r['uid']}/prompt"],
+                                      np.int32),
+                    max_new_tokens=int(r["max_new_tokens"]),
+                    temperature=float(r["temperature"]),
+                    eos_id=r["eos_id"])
+                toks = arrays[f"req{r['uid']}/tokens"]
+                if len(toks) or r.get("had_tokens"):
+                    req.tokens = [int(t) for t in toks]
+                req.preemptions = int(r["preemptions"])
+                req.quarantines = int(r["quarantines"])
+                req.deadline_ms = r["deadline_ms"]
+                req.ttft_deadline_ms = r["ttft_deadline_ms"]
+                req.error = r["error"]
+                req.finish_reason = r["finish_reason"]
+                req.done = bool(r["done"])
+                if f"req{r['uid']}/key" in arrays:
+                    self._restored_keys[req.uid] = \
+                        np.asarray(arrays[f"req{r['uid']}/key"])
+                return req
 
-        self._restored_folded.update(
-            {int(u): int(n) for u, n in meta["folded"].items()})
-        reqs = [mk(r) for r in meta["done"]] + \
-            [mk(r) for r in meta["pending"]]
+            restored_folded = {int(u): int(n)
+                               for u, n in meta["folded"].items()}
+            reqs = [mk(r) for r in meta["done"]] + \
+                [mk(r) for r in meta["pending"]]
+        except (KeyError, ValueError, TypeError, AttributeError) as e:
+            # manifest/array disagreement (a req record whose arrays are
+            # gone, a malformed snapshot, ...) is corruption too — the two
+            # files were written under one commit, so skew means torn state
+            self._pc_state = None
+            raise CorruptStateError(
+                f"load_state: checkpoint under {state_dir} is internally "
+                f"inconsistent: {type(e).__name__}: {e}") from e
+        self._restored_folded.update(restored_folded)
         self.stats["state_restores"] += 1
         return reqs
 

@@ -43,6 +43,21 @@ would:
                 guards: puts lose the spill, gets miss — recompute covers
                 both, the engine never crashes.
 
+Cluster-level events (interpreted by ``serve/cluster.py``, which translates
+them into per-worker schedules — a plain single-engine run ignores them):
+
+``kill_worker_at``  worker W dies (``ServeKilled`` in its engine) before ITS
+                macro ``i``.  Exercises the supervisor's failure
+                classification, circuit breaker, and exactly-once failover.
+``hang_worker_at``  worker W's scheduler sleeps S seconds before its macro
+                ``i`` — long enough to trip the hung-macro-step watchdog,
+                which must detect (not wait out) the stall and fail the
+                worker's in-flight requests over to survivors.
+``corrupt_worker_state_at``  worker W dies AND its freshly-written
+                ``serve_state.npz`` checkpoint gets a flipped byte, so the
+                supervisor's warm-restart hits ``CorruptStateError`` and
+                must fall back to a cold start (counted, never a crash).
+
 All events are keyed by MACRO-STEP index (the engine's unit of host-visible
 progress): fault ``i`` fires immediately before the ``i``-th decode
 macro-step of the run.  The injector is deliberately dumb — pure schedule
@@ -65,6 +80,15 @@ class ServeKilled(RuntimeError):
     re-runs ``serve_queue`` on the returned requests."""
 
 
+class WorkerAborted(ServeKilled):
+    """A cluster worker told to stop mid-run (its supervisor declared it
+    hung and failed its requests over).  Subclassing ``ServeKilled`` reuses
+    the engine's kill path — live slots preempt, cached pages flush to the
+    tier, state checkpoints — so even an abandoned worker leaves a warm,
+    restorable trail while the supervisor's uid dedup guarantees it can
+    never double-commit a result."""
+
+
 @dataclasses.dataclass
 class FaultPlan:
     """Deterministic fault schedule, keyed by macro-step index.
@@ -78,7 +102,13 @@ class FaultPlan:
     ``ServeKilled`` before macro ``i`` (once).  ``corrupt_spill_at[i] = n``
     flips a byte in ``n`` spilled KV-tier entries; ``tear_manifest_at = i``
     truncates the durable tier manifest; ``tier_fail_at[i] = n`` makes the
-    next ``n`` tier operations fail with an internal I/O error."""
+    next ``n`` tier operations fail with an internal I/O error.
+
+    Cluster-level (consumed by ``ServeCluster``, inert on a bare engine):
+    ``kill_worker_at[i] = w`` kills worker ``w`` before its macro ``i``;
+    ``hang_worker_at[i] = (w, s)`` hangs worker ``w`` for ``s`` seconds
+    before its macro ``i``; ``corrupt_worker_state_at[i] = w`` kills worker
+    ``w`` and flips a byte in its checkpoint on the way down."""
     nan_at: Dict[int, Optional[int]] = dataclasses.field(default_factory=dict)
     corrupt_at: Dict[int, Optional[int]] = \
         dataclasses.field(default_factory=dict)
@@ -91,6 +121,11 @@ class FaultPlan:
         dataclasses.field(default_factory=dict)
     tear_manifest_at: Optional[int] = None
     tier_fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    kill_worker_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    hang_worker_at: Dict[int, Tuple[int, float]] = \
+        dataclasses.field(default_factory=dict)
+    corrupt_worker_state_at: Dict[int, int] = \
+        dataclasses.field(default_factory=dict)
 
 
 class FaultInjector:
@@ -192,47 +227,111 @@ class FaultInjector:
         return mask
 
 
+# event name -> whether the ``:arg`` suffix is required / allowed.  The
+# strict parser rejects anything outside this table BY NAME, so a typo'd
+# chaos spec fails the launch instead of silently injecting nothing.
+_CHAOS_EVENTS: Dict[str, str] = {
+    "nan": "optional", "corrupt": "optional", "exhaust": "optional",
+    "restore": "none", "slow": "optional", "cancel": "required",
+    "kill": "none", "corrupt_spill": "optional", "tear_manifest": "none",
+    "tier_fail": "optional", "kill_worker": "optional",
+    "hang_worker": "required", "corrupt_worker_state": "optional",
+}
+
+
+def _chaos_int(value: str, what: str, part: str) -> int:
+    try:
+        return int(value)
+    except ValueError:
+        raise ValueError(f"malformed chaos event {part!r}: {what} "
+                         f"{value!r} is not an integer") from None
+
+
+def _chaos_float(value: str, what: str, part: str) -> float:
+    try:
+        return float(value)
+    except ValueError:
+        raise ValueError(f"malformed chaos event {part!r}: {what} "
+                         f"{value!r} is not a number") from None
+
+
 def parse_chaos(spec: str) -> FaultInjector:
     """Build a ``FaultInjector`` from a launcher ``--chaos`` spec string:
     comma-separated ``kind@macro[:arg]`` events —
 
     ``nan@M[:UID]``, ``corrupt@M[:SLOT]``, ``exhaust@M:N``, ``restore@M``,
     ``slow@M:SECONDS``, ``cancel@M:UID``, ``kill@M``,
-    ``corrupt_spill@M[:N]``, ``tear_manifest@M``, ``tier_fail@M[:N]``
+    ``corrupt_spill@M[:N]``, ``tear_manifest@M``, ``tier_fail@M[:N]``,
+    ``kill_worker@M[:W]``, ``hang_worker@M:SECONDS`` (worker 0),
+    ``corrupt_worker_state@M[:W]``
 
     e.g. ``--chaos "exhaust@1:4,nan@2:7,kill@5"`` steals 4 pages before
     macro 1, poisons request 7's logits in macro 2, and kills the process
-    before macro 5."""
+    before macro 5.  Validation is strict: an unknown event name or a
+    malformed ``event@k:n`` shape raises ``ValueError`` naming the bad
+    token (and listing the valid events) instead of being ignored."""
     plan = FaultPlan()
+    valid = "|".join(sorted(_CHAOS_EVENTS))
     for part in spec.split(","):
         part = part.strip()
         if not part:
             continue
-        kind, _, rest = part.partition("@")
-        at, _, arg = rest.partition(":")
-        kind, m = kind.strip(), int(at)
+        kind, sep, rest = part.partition("@")
+        kind = kind.strip()
+        if kind not in _CHAOS_EVENTS:
+            raise ValueError(f"unknown chaos event {kind!r} in {part!r} "
+                             f"(valid events: {valid})")
+        if not sep or not rest.strip():
+            raise ValueError(f"malformed chaos event {part!r}: missing "
+                             f"macro index — want '{kind}@MACRO"
+                             + (":ARG'" if _CHAOS_EVENTS[kind] == "required"
+                                else "[:ARG]'"))
+        at, asep, arg = rest.partition(":")
+        arg = arg.strip()
+        m = _chaos_int(at.strip(), "macro index", part)
+        if _CHAOS_EVENTS[kind] == "none" and asep:
+            raise ValueError(f"malformed chaos event {part!r}: {kind!r} "
+                             f"takes no ':ARG' suffix")
+        if _CHAOS_EVENTS[kind] == "required" and not arg:
+            raise ValueError(f"malformed chaos event {part!r}: {kind!r} "
+                             f"requires an ':ARG' suffix "
+                             f"('{kind}@MACRO:ARG')")
+        if asep and not arg:
+            raise ValueError(f"malformed chaos event {part!r}: empty "
+                             f"argument after ':'")
         if kind == "nan":
-            plan.nan_at[m] = int(arg) if arg else None
+            plan.nan_at[m] = _chaos_int(arg, "request uid", part) \
+                if arg else None
         elif kind == "corrupt":
-            plan.corrupt_at[m] = int(arg) if arg else None
+            plan.corrupt_at[m] = _chaos_int(arg, "slot index", part) \
+                if arg else None
         elif kind == "exhaust":
-            plan.exhaust_at[m] = int(arg) if arg else 1
+            plan.exhaust_at[m] = _chaos_int(arg, "page count", part) \
+                if arg else 1
         elif kind == "restore":
             plan.restore_at = m
         elif kind == "slow":
-            plan.slow_at[m] = float(arg) if arg else 0.1
+            plan.slow_at[m] = _chaos_float(arg, "seconds", part) \
+                if arg else 0.1
         elif kind == "cancel":
-            plan.cancel_at[m] = int(arg)
+            plan.cancel_at[m] = _chaos_int(arg, "request uid", part)
         elif kind == "kill":
             plan.kill_at = m
         elif kind == "corrupt_spill":
-            plan.corrupt_spill_at[m] = int(arg) if arg else 1
+            plan.corrupt_spill_at[m] = _chaos_int(arg, "entry count", part) \
+                if arg else 1
         elif kind == "tear_manifest":
             plan.tear_manifest_at = m
         elif kind == "tier_fail":
-            plan.tier_fail_at[m] = int(arg) if arg else 1
-        else:
-            raise ValueError(f"unknown chaos event {part!r} (want "
-                             "nan|corrupt|exhaust|restore|slow|cancel|kill"
-                             "|corrupt_spill|tear_manifest|tier_fail)")
+            plan.tier_fail_at[m] = _chaos_int(arg, "op count", part) \
+                if arg else 1
+        elif kind == "kill_worker":
+            plan.kill_worker_at[m] = _chaos_int(arg, "worker index", part) \
+                if arg else 0
+        elif kind == "hang_worker":
+            plan.hang_worker_at[m] = (0, _chaos_float(arg, "hang seconds",
+                                                      part))
+        elif kind == "corrupt_worker_state":
+            plan.corrupt_worker_state_at[m] = \
+                _chaos_int(arg, "worker index", part) if arg else 0
     return FaultInjector(plan)

@@ -28,13 +28,22 @@ is a miss — the engine recomputes, it never crashes.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import hashlib
 import json
 import os
-from typing import Dict, List, Optional
+import threading
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+try:                       # POSIX only; the no-flock fallback still works
+    import fcntl           # single-process (atomic os.replace keeps readers
+    _HAVE_FLOCK = True     # safe — concurrent WRITERS may then lose a merge)
+except ImportError:        # pragma: no cover - non-POSIX
+    fcntl = None
+    _HAVE_FLOCK = False
 
 from repro.train.checkpoint import _BF16, _key_str
 
@@ -105,7 +114,8 @@ class KVTier:
     never a crash."""
 
     COUNTERS = ("tier_evictions", "tier_disk_writes", "tier_disk_loads",
-                "tier_integrity_failures", "tier_io_errors")
+                "tier_integrity_failures", "tier_io_errors",
+                "tier_manifest_reloads")
 
     def __init__(self, page_size: int, host_pages: int,
                  directory: Optional[str] = None,
@@ -122,9 +132,17 @@ class KVTier:
         self.fail_ops = 0
         self.dir: Optional[str] = None
         # disk manifest cache: hash hex -> {"file", "digest", "header"};
-        # None = not yet read (lazy, so a sibling sees our writes and we see
-        # a predecessor's)
+        # None = not yet read.  The cache is validated against the manifest
+        # file's (mtime_ns, size) stamp on every consult, so N tier
+        # instances sharing one durable dir (cluster workers) see each
+        # other's writes — a survivor's lookup observes pages a dying
+        # sibling flushed moments earlier.
         self._disk_index: Optional[Dict[str, Dict]] = None
+        self._manifest_stamp: Optional[Tuple[int, int]] = None
+        # intra-process guard for the cached index + stamp (thread workers
+        # share nothing else; each engine owns its tier instance, but the
+        # supervisor may probe inventory from its own thread)
+        self._lock = threading.RLock()
         if directory:
             self.attach_dir(directory)
 
@@ -142,52 +160,108 @@ class KVTier:
         """Bind (or rebind) the durable store to ``<directory>/kv_tier``."""
         path = os.path.join(directory, "kv_tier")
         if path != self.dir:
-            self.dir = path
-            self._disk_index = None
+            with self._lock:
+                self.dir = path
+                self._disk_index = None
+                self._manifest_stamp = None
 
     def _manifest_path(self) -> str:
         return os.path.join(self.dir, "tier_index.json")
 
-    def _load_disk_index(self) -> Dict[str, Dict]:
-        """Read (and cache) the manifest.  A torn/corrupt manifest counts as
-        ONE integrity failure and yields an empty store — the tier keeps
-        serving, admission falls back to prefill, and the next write-through
-        replaces the manifest wholesale."""
-        if self._disk_index is not None:
-            return self._disk_index
-        self._disk_index = {}
-        if self.dir is None:
-            return self._disk_index
-        path = self._manifest_path()
-        if os.path.exists(path):
-            try:
-                with open(path) as f:
-                    manifest = json.load(f)
-                if manifest.get("version") != TIER_FORMAT_VERSION \
-                        or manifest.get("page_size") != self.page_size:
-                    raise ValueError(
-                        f"tier manifest geometry mismatch: "
-                        f"{manifest.get('version')}/"
-                        f"{manifest.get('page_size')} vs "
-                        f"{TIER_FORMAT_VERSION}/{self.page_size}")
-                self._disk_index = dict(manifest.get("entries", {}))
-            except Exception:
-                # torn write / bitrot / version skew: quarantine the whole
-                # manifest (its entries are unreachable anyway) — never crash
-                self._bump("tier_integrity_failures")
-                self._disk_index = {}
-        return self._disk_index
+    def _stat_stamp(self) -> Optional[Tuple[int, int]]:
+        try:
+            st = os.stat(self._manifest_path())
+        except OSError:
+            return None
+        return (st.st_mtime_ns, st.st_size)
 
-    def _write_manifest(self) -> None:
+    @contextlib.contextmanager
+    def _dir_lock(self):
+        """Cross-process exclusive lock over the shared durable dir (flock
+        on ``tier_index.lock``), serializing manifest read-modify-write so
+        concurrent cluster workers merge their deltas instead of clobbering
+        each other.  Page files themselves never need it — they are
+        immutable once published by ``os.replace``."""
         os.makedirs(self.dir, exist_ok=True)
-        manifest = {"version": TIER_FORMAT_VERSION,
-                    "page_size": self.page_size,
-                    "entries": self._load_disk_index()}
-        path = self._manifest_path()
-        tmp = path + f".tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(manifest, f)
-        os.replace(tmp, path)                      # atomic publish
+        f = open(os.path.join(self.dir, "tier_index.lock"), "a+b")
+        try:
+            if _HAVE_FLOCK:
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            yield
+        finally:
+            if _HAVE_FLOCK:
+                fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+            f.close()
+
+    def _read_entries(self, count_failures: bool = True) \
+            -> Tuple[Dict[str, Dict], Optional[Tuple[int, int]]]:
+        """Fresh read of the on-disk manifest -> (entries, stat stamp).  A
+        torn/corrupt manifest yields an empty store (counted as ONE
+        integrity failure when ``count_failures``) — the tier keeps
+        serving, admission falls back to prefill, and the next
+        write-through replaces the manifest wholesale."""
+        stamp = self._stat_stamp()
+        if stamp is None:
+            return {}, None
+        try:
+            with open(self._manifest_path()) as f:
+                manifest = json.load(f)
+            if manifest.get("version") != TIER_FORMAT_VERSION \
+                    or manifest.get("page_size") != self.page_size:
+                raise ValueError(
+                    f"tier manifest geometry mismatch: "
+                    f"{manifest.get('version')}/"
+                    f"{manifest.get('page_size')} vs "
+                    f"{TIER_FORMAT_VERSION}/{self.page_size}")
+            return dict(manifest.get("entries", {})), stamp
+        except Exception:
+            # torn write / bitrot / version skew: quarantine the whole
+            # manifest (its entries are unreachable anyway) — never crash
+            if count_failures:
+                self._bump("tier_integrity_failures")
+            return {}, stamp
+
+    def _load_disk_index(self) -> Dict[str, Dict]:
+        """Return the manifest entries, re-reading from disk whenever the
+        file's stamp moved since the cached read (another worker published
+        a delta)."""
+        with self._lock:
+            if self.dir is None:
+                if self._disk_index is None:
+                    self._disk_index = {}
+                return self._disk_index
+            if self._disk_index is not None \
+                    and self._stat_stamp() == self._manifest_stamp:
+                return self._disk_index
+            was_cached = self._disk_index is not None
+            self._disk_index, self._manifest_stamp = self._read_entries()
+            if was_cached:
+                self._bump("tier_manifest_reloads")
+            return self._disk_index
+
+    def _manifest_update(self, add: Optional[Dict[str, Dict]] = None,
+                         remove: Optional[List[str]] = None) -> None:
+        """Publish a manifest DELTA: under the cross-process lock, re-read
+        the current on-disk entries, merge this worker's add/remove, and
+        atomically replace.  Whole-manifest overwrites from the cached view
+        (the pre-cluster behavior) would silently drop entries a sibling
+        worker published between our read and our write."""
+        with self._lock:
+            with self._dir_lock():
+                entries, _ = self._read_entries(count_failures=False)
+                entries.update(add or {})
+                for hexh in (remove or ()):
+                    entries.pop(hexh, None)
+                manifest = {"version": TIER_FORMAT_VERSION,
+                            "page_size": self.page_size,
+                            "entries": entries}
+                path = self._manifest_path()
+                tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+                with open(tmp, "w") as f:
+                    json.dump(manifest, f)
+                os.replace(tmp, path)              # atomic publish
+                self._disk_index = entries
+                self._manifest_stamp = self._stat_stamp()
 
     # -- inventory ----------------------------------------------------------
 
@@ -251,10 +325,9 @@ class KVTier:
         with open(tmp, "wb") as f:
             np.savez(f, **entry.flat)
         os.replace(tmp, final)
-        index = self._load_disk_index()
-        index[hexh] = {"file": fname, "digest": entry.digest.hex(),
-                       "header": entry.header}
-        self._write_manifest()
+        self._manifest_update(add={hexh: {"file": fname,
+                                          "digest": entry.digest.hex(),
+                                          "header": entry.header}})
         self._bump("tier_disk_writes")
 
     # -- rehydrate (get) ----------------------------------------------------
@@ -347,14 +420,13 @@ class KVTier:
         if self.dir is None:
             return
         try:
-            index = self._load_disk_index()
-            rec = index.pop(chain_hash.hex(), None)
+            rec = self._load_disk_index().get(chain_hash.hex())
             if rec is not None:
                 try:
                     os.remove(os.path.join(self.dir, rec["file"]))
                 except OSError:
                     pass
-                self._write_manifest()
+                self._manifest_update(remove=[chain_hash.hex()])
         except Exception:
             pass
 
@@ -364,8 +436,10 @@ class KVTier:
         """Forget the in-memory tier (mirrors ``reset_prefix_cache``).  The
         durable store is left intact — deleting it is an operator action,
         not a cache reset."""
-        self.host.clear()
-        self._disk_index = None
+        with self._lock:
+            self.host.clear()
+            self._disk_index = None
+            self._manifest_stamp = None
 
     def corrupt_entries(self, n: int = 1) -> int:
         """Fault injection: flip one byte in up to ``n`` entries — in the
@@ -416,4 +490,6 @@ class KVTier:
             size = os.path.getsize(path)
             with open(path, "r+b") as f:
                 f.truncate(max(1, size // 2))
-        self._disk_index = None
+        with self._lock:
+            self._disk_index = None
+            self._manifest_stamp = None

@@ -1,0 +1,187 @@
+"""Replicated serving cluster (ISSUE 10): health-checked engine workers,
+prefix-affinity routing, and exactly-once failover with warm-tier recovery.
+
+The correctness bar is the same as the single-engine fault suite: every
+failover path must finish with EXACTLY the tokens of an uninterrupted
+single-engine run (f32 weights, greedy — restarted requests replay from
+token zero, which is deterministic), and every request must leave with an
+accurate ``finish_reason``.  On top of that the cluster adds its own
+guarantees under test here: exactly-once commits (uid dedup, first commit
+wins — a zombie worker can never double-emit), failure classification
+(crash vs hang vs corrupt checkpoint) feeding the per-worker circuit
+breaker, and warm recovery through the shared durable KV tier
+(``tier_rehydrates`` > 0 is the evidence that failover re-prefill hit disk
+instead of recomputing from scratch).
+
+Workers are threads sharing the process-wide jit cache, so the whole suite
+compiles each macro geometry once.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import POCKET
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+from repro.serve.cluster import ROUTERS, ServeCluster
+from repro.serve.fault import parse_chaos
+
+PARAMS32 = tfm.init_params(jax.random.PRNGKey(0), POCKET, dtype=jnp.float32)
+SYS = (np.arange(40, dtype=np.int32) * 3 + 1) % POCKET.vocab_size
+
+
+def make_engine(**kw):
+    base = dict(scheme="bf16", max_batch=4, max_len=64, page_size=16)
+    base.update(kw)
+    return ServeEngine(POCKET, PARAMS32, **base)
+
+
+def mk_shared(n=4, max_new=16, seed=2):
+    """Requests sharing the SYS prefix — page-aligned, so the affinity
+    router has real hash chains to score and the tier has real pages to
+    rehydrate after a failover."""
+    rng = np.random.default_rng(seed)
+    return [Request(
+        uid=i,
+        prompt=np.concatenate([SYS,
+                               rng.integers(0, POCKET.vocab_size,
+                                            (int(rng.integers(2, 8)),))
+                               .astype(np.int32)]),
+        max_new_tokens=max_new, temperature=0.0) for i in range(n)]
+
+
+_REF = None
+
+
+def ref_tokens():
+    """Uninterrupted single-engine reference, computed once per session.
+    Also warms the shared jit cache so the hang test's tight watchdog
+    can't false-positive on first-call compilation."""
+    global _REF
+    if _REF is None:
+        _REF = make_engine().serve_queue(mk_shared())
+    return _REF
+
+
+def _cluster(**kw):
+    base = dict(workers=2, state_root=tempfile.mkdtemp(prefix="clu_test_"),
+                watchdog_s=120.0, breaker_cooldown_s=0.2)
+    base.update(kw)
+    return ServeCluster(make_engine, **base)
+
+
+# ---------------------------------------------------------------------------
+# configuration validation
+# ---------------------------------------------------------------------------
+
+def test_cluster_rejects_bad_config():
+    with pytest.raises(ValueError, match="unknown router"):
+        _cluster(router="hash_ring")
+    with pytest.raises(ValueError, match="at least one worker"):
+        _cluster(workers=0)
+    cl = _cluster(workers=1)
+    for banned in ("state_dir", "faults"):
+        with pytest.raises(ValueError, match="managed by ServeCluster"):
+            cl.serve_queue(mk_shared(n=1, max_new=2), **{banned: None})
+
+
+# ---------------------------------------------------------------------------
+# parity + prefix-affinity routing
+# ---------------------------------------------------------------------------
+
+def test_two_worker_parity_and_affinity():
+    """A healthy 2-worker cluster returns the single-engine run's exact
+    tokens; a second wave of same-prefix requests routes by affinity
+    (the router scores leading prefix-page ownership, not load)."""
+    cl = _cluster()
+    assert cl.serve_queue(mk_shared()) == ref_tokens()
+    assert cl.stats["requests_served"] == 4
+    assert cl.stats["worker_deaths"] == 0
+    assert cl.stats["failed_over_requests"] == 0
+    cl.serve_queue(mk_shared(seed=3))
+    assert cl.stats["affinity_hits"] > 0
+
+
+@pytest.mark.parametrize("router", [r for r in ROUTERS if r != "affinity"])
+def test_fallback_routers_keep_parity(router):
+    cl = _cluster(router=router)
+    assert cl.serve_queue(mk_shared()) == ref_tokens()
+    assert cl.stats["affinity_hits"] == 0             # policy not consulted
+
+
+# ---------------------------------------------------------------------------
+# failure classification + exactly-once failover
+# ---------------------------------------------------------------------------
+
+def test_kill_worker_failover_bitexact_and_warm():
+    """Worker 0 dies mid-batch: the supervisor classifies the crash, opens
+    its breaker, and fails its in-flight requests over to the survivor —
+    exactly once (token parity proves no request was dropped OR
+    double-served) and WARM: the survivor re-prefills through the shared
+    durable tier the dying worker flushed on the way down."""
+    cl = _cluster(faults=parse_chaos("kill_worker@1:0"))
+    assert cl.serve_queue(mk_shared()) == ref_tokens()
+    assert cl.stats["worker_deaths"] == 1
+    assert cl.stats["crash_failures"] == 1
+    assert cl.stats["breaker_opens"] >= 1
+    assert cl.stats["failovers"] > 0
+    assert cl.stats["failed_over_requests"] == 0      # all recovered
+    assert cl.engine_stats()["tier_rehydrates"] > 0   # warm, not recompute
+    lat = cl.recovery_latency_s()
+    assert lat["count"] > 0 and lat["max"] > 0.0
+
+
+def test_hang_worker_watchdog_detects_stall():
+    """A hung macro-step (injected 4 s sleep vs a 1 s watchdog) must be
+    DETECTED — classified as a hang, requests failed over to the survivor
+    — not waited out.  Output still matches the uninterrupted run."""
+    ref = ref_tokens()                                # warm jit first
+    cl = _cluster(watchdog_s=1.0,
+                  faults=parse_chaos("hang_worker@1:4"))
+    assert cl.serve_queue(mk_shared()) == ref
+    assert cl.stats["watchdog_trips"] >= 1
+    assert cl.stats["hang_failures"] >= 1
+    assert cl.stats["worker_deaths"] >= 1
+
+
+def test_corrupt_worker_state_falls_back_to_cold_start():
+    """The killed worker's checkpoint is bit-flipped on the way down: the
+    supervisor's warm restart hits ``CorruptStateError``, counts it, and
+    cold-starts the worker instead of crashing.  A second wave proves the
+    restarted worker rejoins the fleet."""
+    cl = _cluster(breaker_cooldown_s=0.1,
+                  faults=parse_chaos("corrupt_worker_state@1:0"))
+    assert cl.serve_queue(mk_shared()) == ref_tokens()
+    cl.serve_queue(mk_shared(seed=3))                 # restarted worker probes
+    assert cl.stats["checkpoint_corrupt"] >= 1
+    assert cl.stats["cold_starts"] >= 1
+    assert cl.stats["worker_restarts"] >= 1
+
+
+def test_retry_budget_exhaustion_is_failed_over_not_raised():
+    """A single worker with no retries left: the cluster commits the
+    casualties with ``finish_reason='failed_over'`` and an error message —
+    never an exception out of ``serve_queue``, never a silent drop."""
+    cl = _cluster(workers=1, retry_budget=0, breaker_cooldown_s=0.1,
+                  faults=parse_chaos("kill_worker@1:0"))
+    reqs = mk_shared()
+    res = cl.serve_queue(reqs)
+    assert set(res) == {r.uid for r in reqs}          # everyone answered
+    for r in reqs:
+        assert r.finish_reason == "failed_over"
+        assert r.error
+    assert cl.stats["failed_over_requests"] == len(reqs)
+
+
+def test_duplicate_uids_dropped_at_the_door():
+    """Input dedup is the first half of exactly-once: the same uid
+    submitted twice is served once and counted."""
+    cl = _cluster(workers=1)
+    reqs = mk_shared(n=2, max_new=4)
+    dup = mk_shared(n=1, max_new=4)                   # same uid 0 again
+    res = cl.serve_queue(reqs + dup)
+    assert cl.stats["duplicates_dropped"] == 1
+    assert set(res) == {0, 1}

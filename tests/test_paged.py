@@ -224,6 +224,34 @@ def _prefix_op_sequence(alloc: PageAllocator, prompts, ops):
                 assert p not in alloc.free and p not in alloc.lru
             for p in private:
                 assert p in alloc.free
+        elif op == 4:
+            # cancel MID-CHUNKED-ADMISSION: shared prefix pages are mapped
+            # and a PARTIAL private page holds the first chunk(s), but the
+            # prompt never finishes admitting (no register).  The release
+            # must return the partial pages to the pool immediately while
+            # shared pages only decrement — and the un-registered partial
+            # page must never have entered the hash index
+            if alloc.owned[slot]:
+                alloc.release(slot)
+            toks = prompts[arg % len(prompts)]
+            hashes = prefix_block_hashes(toks, page)
+            pages = alloc.match_prefix(hashes)
+            alloc.map_shared(slot, pages)
+            rows = min(len(pages) * page + arg % page + 1, len(toks))
+            if alloc.ensure(slot, rows):
+                shared_refs = {p: alloc.ref[p] for p in pages
+                               if alloc.ref[p] > 1}
+                partial = [p for p in alloc.owned[slot]
+                           if alloc.ref[p] == 1 and p not in alloc.hash_of]
+                alloc.release(slot)
+                for p, r in shared_refs.items():
+                    assert alloc.ref[p] == r - 1 >= 1
+                    assert p not in alloc.free and p not in alloc.lru
+                for p in partial:
+                    assert p in alloc.free       # no leak, no index entry
+                    assert p not in alloc.hash_of
+            else:
+                alloc.release(slot)              # exhausted: plain requeue
         _check_invariants(alloc)
     for s in range(len(alloc.owned)):
         alloc.release(s)
@@ -235,8 +263,9 @@ def _prefix_op_sequence(alloc: PageAllocator, prompts, ops):
 if HAVE_HYPOTHESIS:
     @settings(max_examples=50, deadline=None)
     @given(st.lists(st.tuples(st.integers(0, 3),      # slot
-                              st.integers(0, 3),      # admit / grow /
-                              #                         release / deadline
+                              st.integers(0, 4),      # admit / grow /
+                              #                         release / deadline /
+                              #                         cancel-mid-admission
                               st.integers(0, 40)),    # prompt pick / rows
                     min_size=1, max_size=50))
     def test_prefix_allocator_random_ops_keep_invariants(ops):
@@ -249,14 +278,15 @@ if HAVE_HYPOTHESIS:
 
 def test_prefix_allocator_fixed_seed_op_sequences():
     """Hypothesis-free fallback: long pseudo-random admit/match/release/
-    evict sequences over several pool geometries and cache fractions."""
+    evict/cancel-mid-admission sequences over several pool geometries and
+    cache fractions."""
     for seed in range(8):
         rng = np.random.default_rng(seed)
         alloc = PageAllocator(num_pages=int(rng.integers(4, 12)),
                               page_size=8, max_batch=4, pages_per_slot=6,
                               prefix_cache=True,
                               cache_frac=float(rng.uniform(0.3, 1.0)))
-        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 4)),
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 5)),
                 int(rng.integers(0, 41))) for _ in range(100)]
         _prefix_op_sequence(alloc, _prefix_library(8), ops)
 
@@ -498,6 +528,49 @@ def test_engine_paged_chunked_admission_matches_contiguous():
     b = contig.serve_queue(_mixed_requests(5, seed=3), prefill_chunk=6)
     assert a == b
     assert paged.stats["chunked_prefills"] > 0
+
+
+def test_cancel_mid_chunked_admission_releases_partial_pages():
+    """Cancellation landing BETWEEN prefill chunks: the half-admitted slot
+    holds partial pages that were never registered; release must return
+    them to the pool (no leak, no hash-index entry) and co-scheduled slots
+    must still finish with the uncancelled run's exact tokens.  The
+    bystanders decode 24 tokens (3 macros), so macro 1 fires while the
+    40-token prompt is still only 2 chunks (16 rows) into admission —
+    one chunk per scheduler iteration when no admit_budget is set."""
+    from repro.serve.fault import FaultInjector, FaultPlan
+    mk = lambda: [Request(uid=0,
+                          prompt=(np.arange(40, dtype=np.int32) * 5 + 3)
+                          % POCKET.vocab_size, max_new_tokens=24),
+                  Request(uid=1,
+                          prompt=np.arange(6, dtype=np.int32) + 11,
+                          max_new_tokens=24),
+                  Request(uid=2,
+                          prompt=np.arange(8, dtype=np.int32) * 2 + 3,
+                          max_new_tokens=24)]
+    base = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=3,
+                       max_len=64, page_size=16).serve_queue(
+        mk(), prefill_chunk=8)
+    eng = ServeEngine(POCKET, PARAMS32, scheme="bf16", max_batch=3,
+                      max_len=64, page_size=16)
+    faults = FaultInjector(FaultPlan(cancel_at={1: 0}))
+    reqs = mk()
+    got = eng.serve_queue(reqs, prefill_chunk=8, faults=faults)
+    assert (1, "cancel", 0) in faults.log
+    assert reqs[0].finish_reason == "cancelled"
+    # admission never completed, so the cancelled slot emitted NOTHING —
+    # the release tore down partial pages, not a live decode
+    assert got[0] == []
+    for r in reqs[1:]:                                # bystanders unharmed
+        assert got[r.uid] == base[r.uid]
+        assert r.finish_reason == "budget"
+    # the partial pages went back: pool fully accounted, nothing leaked
+    # into the hash index from the aborted admission
+    _, alloc = eng._pc_state
+    _check_invariants(alloc)
+    assert alloc.pages_in_use() == 0
+    assert eng.stats["pages_in_use"] == 0
+    assert eng.stats["cancelled_requests"] == 1
 
 
 def test_engine_paged_spec_decode_matches_contiguous():

@@ -356,6 +356,64 @@ def test_kill_without_state_dir_saves_nothing(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# load_state hardening: corruption is ONE catchable name, never a traceback
+# ---------------------------------------------------------------------------
+
+def _killed_checkpoint(tmp_path):
+    """A real checkpoint written by the kill path (json + npz)."""
+    eng = _engine(state_dir=str(tmp_path),
+                  faults=FaultInjector(FaultPlan(kill_at=2)))
+    with pytest.raises(ServeKilled):
+        eng.serve_queue(_requests(4, max_new=12, plen=10))
+    return tmp_path / "serve_state.json", tmp_path / "serve_state.npz"
+
+
+def test_load_state_truncated_npz_raises_corrupt_state(tmp_path):
+    """A torn write (truncated array file) surfaces as CorruptStateError
+    naming the file — not a zipfile traceback — so ``ServeCluster`` can
+    count it and cold-start."""
+    from repro.serve import CorruptStateError
+    _, npz = _killed_checkpoint(tmp_path)
+    npz.write_bytes(npz.read_bytes()[:max(1, npz.stat().st_size // 3)])
+    with pytest.raises(CorruptStateError, match="serve_state.npz"):
+        _engine().load_state(str(tmp_path))
+
+
+def test_load_state_bitflipped_npz_raises_corrupt_state(tmp_path):
+    from repro.serve import CorruptStateError
+    _, npz = _killed_checkpoint(tmp_path)
+    raw = bytearray(npz.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    npz.write_bytes(bytes(raw))
+    with pytest.raises(CorruptStateError):
+        _engine().load_state(str(tmp_path))
+
+
+def test_load_state_garbled_manifest_raises_corrupt_state(tmp_path):
+    from repro.serve import CorruptStateError
+    meta, _ = _killed_checkpoint(tmp_path)
+    meta.write_text("{not json")
+    with pytest.raises(CorruptStateError, match="unreadable"):
+        _engine().load_state(str(tmp_path))
+    # a structurally-valid manifest missing required fields is corruption
+    # too (torn commit skew), not a KeyError
+    meta.write_text('{"cfg_name": "pocket"}')
+    with pytest.raises(CorruptStateError, match="missing"):
+        _engine().load_state(str(tmp_path))
+
+
+def test_load_state_missing_and_mismatched_keep_their_types(tmp_path):
+    """The taxonomy stays three-way: absent checkpoint is still
+    FileNotFoundError, wrong geometry is still ValueError — only untrusted
+    bytes map to CorruptStateError."""
+    with pytest.raises(FileNotFoundError):
+        _engine().load_state(str(tmp_path / "nowhere"))
+    _killed_checkpoint(tmp_path)
+    with pytest.raises(ValueError, match="page_size"):
+        _engine(page_size=32).load_state(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
 # satellites: reset_prefix_cache bookkeeping, chaos parsing, HAQA knobs
 # ---------------------------------------------------------------------------
 
@@ -391,6 +449,38 @@ def test_parse_chaos_roundtrip_and_errors():
     assert p.tier_fail_at == {11: 3}
     with pytest.raises(ValueError, match="unknown chaos event"):
         parse_chaos("frobnicate@1")
+
+
+def test_parse_chaos_cluster_events_roundtrip():
+    p = parse_chaos("kill_worker@2:1, hang_worker@3:0.5, "
+                    "corrupt_worker_state@4, kill_worker@7").plan
+    assert p.kill_worker_at == {2: 1, 7: 0}           # worker defaults to 0
+    assert p.hang_worker_at == {3: (0, 0.5)}
+    assert p.corrupt_worker_state_at == {4: 0}
+
+
+@pytest.mark.parametrize("spec,msg", [
+    ("bogus@1", "unknown chaos event 'bogus'"),
+    ("nan", "missing macro index"),
+    ("kill@", "missing macro index"),
+    ("nan@x:7", "macro index 'x' is not an integer"),
+    ("cancel@2", "'cancel' requires an ':ARG' suffix"),
+    ("hang_worker@2", "'hang_worker' requires an ':ARG' suffix"),
+    ("restore@1:3", "'restore' takes no ':ARG' suffix"),
+    ("slow@1:abc", "seconds 'abc' is not a number"),
+    ("hang_worker@1:fast", "hang seconds 'fast' is not a number"),
+    ("kill_worker@1:", "empty argument after ':'"),
+    ("exhaust@1:1.5", "page count '1.5' is not an integer"),
+], ids=["unknown", "no-at", "no-macro", "macro-not-int", "cancel-no-arg",
+        "hang-no-arg", "restore-stray-arg", "slow-not-float",
+        "hang-not-float", "empty-arg", "count-not-int"])
+def test_parse_chaos_rejects_malformed_specs(spec, msg):
+    """Strict validation: every malformed shape fails the launch with a
+    message naming the bad token — a typo'd chaos spec must never
+    silently inject nothing."""
+    import re
+    with pytest.raises(ValueError, match=re.escape(msg)):
+        parse_chaos(spec)
 
 
 def test_serve_space_exposes_fault_knobs():
